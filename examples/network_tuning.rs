@@ -1,0 +1,71 @@
+//! Network-level tuning: tune every distinct 3x3 conv of a whole model
+//! (ResNet50 / ResNet18 / VGG16) and report per-layer and end-to-end
+//! speedup — the "convolution operations of popular neural networks" of
+//! the paper's abstract.
+//!
+//! ```bash
+//! cargo run --release --example network_tuning            # resnet18
+//! MODEL=vgg16 TRIALS=256 cargo run --release --example network_tuning
+//! ```
+
+use tcconv::explore::ExplorerKind;
+use tcconv::searchspace::SpaceOptions;
+use tcconv::sim::Simulator;
+use tcconv::tuner::{exhaustive_best, Tuner, TunerOptions};
+use tcconv::zoo;
+
+fn main() {
+    let model = std::env::var("MODEL").unwrap_or_else(|_| "resnet18".into());
+    let trials: usize =
+        std::env::var("TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(192);
+    let net = zoo::by_name(&model, 8).unwrap_or_else(|| {
+        eprintln!("unknown model '{model}' (resnet50|resnet18|vgg16)");
+        std::process::exit(1);
+    });
+
+    println!(
+        "network tuning: {} (batch 8), {} distinct 3x3 convs, {:.1} GOPs/forward, {trials} trials/conv\n",
+        net.name,
+        net.layers.len(),
+        net.total_ops() as f64 / 1e9
+    );
+
+    let sim = Simulator::default();
+    println!(
+        "{:<22} {:>4} {:>12} {:>12} {:>9}  schedule",
+        "layer", "reps", "baseline us", "tuned us", "speedup"
+    );
+    let mut base_total = 0.0;
+    let mut tuned_total = 0.0;
+    for l in &net.layers {
+        let (_, base_us, _) = exhaustive_best(&l.workload, SpaceOptions::baseline(), &sim);
+        let mut tuner = Tuner::new(
+            &l.workload,
+            TunerOptions {
+                n_trials: trials,
+                explorer: ExplorerKind::DiversityAware,
+                simulator: sim.clone(),
+                ..Default::default()
+            },
+        );
+        let res = tuner.tune();
+        base_total += base_us * l.repeats as f64;
+        tuned_total += res.runtime_us * l.repeats as f64;
+        println!(
+            "{:<22} {:>4} {:>12.2} {:>12.2} {:>8.2}x  {}",
+            l.workload.name,
+            l.repeats,
+            base_us,
+            res.runtime_us,
+            base_us / res.runtime_us,
+            res.config.brief()
+        );
+    }
+    println!(
+        "\n{} end-to-end 3x3-conv time: {:.1} us -> {:.1} us  ({:.2}x network-level speedup)",
+        net.name,
+        base_total,
+        tuned_total,
+        base_total / tuned_total
+    );
+}

@@ -1,0 +1,62 @@
+//! Quickstart: tune one convolution and inspect the result.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Tunes the ResNet50 stage-2 3x3 convolution (batch 8, the paper's
+//! Table 1 target) with the diversity-aware explorer for 128 trials and
+//! prints the best schedule, its simulated runtime, and the tuning curve.
+
+use tcconv::conv::ConvWorkload;
+use tcconv::explore::ExplorerKind;
+use tcconv::tuner::{Tuner, TunerOptions};
+
+fn main() {
+    // 1. pick a workload: ResNet50 stage-2 3x3 conv, batch 8
+    let wl = ConvWorkload::resnet50_stage(2, 8);
+    println!(
+        "workload: {} — {}x{}x{} conv, im2col GEMM {}x{}x{} ({:.2} GOPs)",
+        wl.name,
+        wl.height,
+        wl.width,
+        wl.in_channels,
+        wl.gemm_m(),
+        wl.gemm_n(),
+        wl.gemm_k(),
+        wl.ops() as f64 / 1e9
+    );
+
+    // 2. tune: 4 rounds of 32 measurements, diversity-aware exploration
+    let mut tuner = Tuner::new(
+        &wl,
+        TunerOptions {
+            n_trials: 128,
+            explorer: ExplorerKind::DiversityAware,
+            seed: 42,
+            ..Default::default()
+        },
+    );
+    let res = tuner.tune();
+
+    // 3. results
+    println!("\nbest schedule: {}", res.config.brief());
+    println!(
+        "simulated runtime: {:.2} us  ({:.1} GFLOPS)",
+        res.runtime_us,
+        wl.ops() as f64 / res.runtime_us / 1e3
+    );
+    println!("\ntuning curve (best-so-far, every 16 trials):");
+    for r in res.history.records().iter().step_by(16) {
+        println!(
+            "  trial {:>4}: best {:>8.2} us   {}",
+            r.trial,
+            r.best_so_far_us,
+            "#".repeat(((2000.0 / r.best_so_far_us) as usize).min(60))
+        );
+    }
+
+    // 4. export for AOT baking: the schedule JSON round-trips into
+    //    python/compile/schedules.py (aot.py --schedule-json)
+    println!("\nschedule JSON: {}", res.config.to_json());
+}

@@ -1,0 +1,94 @@
+//! Serving demo: the L3 coordinator routing and batching quantized-conv
+//! inference requests across a worker pool.
+//!
+//! ```bash
+//! cargo run --release --example serving
+//! WORKERS=8 REQUESTS=200 cargo run --release --example serving
+//! ```
+//!
+//! Workload: a mixed stream of edge-sized quantized convolutions (the
+//! small-feature-map regime the paper's INT4 deployment targets), arriving
+//! in bursts. Reports per-kind latency percentiles, batching behaviour and
+//! sustained throughput, plus backpressure events under overload.
+
+use std::time::Instant;
+
+use tcconv::conv::{ConvInstance, ConvWorkload};
+use tcconv::quant::Epilogue;
+use tcconv::serve::{Server, ServerConfig, SubmitError};
+use tcconv::util::Rng;
+
+fn main() {
+    let workers: usize = std::env::var("WORKERS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let n_requests: usize =
+        std::env::var("REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(120);
+
+    // edge-inference conv kinds (INT4 domain)
+    let kinds = vec![
+        ("edge_28x28x32", ConvWorkload::new("edge_28x28x32", 1, 28, 28, 32, 32)),
+        ("edge_14x14x64", ConvWorkload::new("edge_14x14x64", 1, 14, 14, 64, 64)),
+        ("edge_7x7x128", ConvWorkload::new("edge_7x7x128", 1, 7, 7, 128, 128)),
+    ];
+
+    println!("serving demo: {workers} workers, {n_requests} requests, kinds:");
+    for (k, wl) in &kinds {
+        println!("  {k}: {}x{} C{}->{} ({:.1} MOPs)", wl.height, wl.width, wl.in_channels, wl.out_channels, wl.ops() as f64 / 1e6);
+    }
+
+    let server = Server::start(ServerConfig { workers, queue_depth: 64, max_batch: 8 });
+    let epi = Epilogue::default();
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    let mut busy_events = 0usize;
+    let t0 = Instant::now();
+
+    let mut submitted = 0usize;
+    while submitted < n_requests {
+        // bursty arrivals: 1-8 requests per burst, same kind (spatial
+        // locality of real traffic -> gives the batcher something to do)
+        let burst = 1 + rng.gen_range(8);
+        let (kind, wl) = &kinds[rng.gen_range(kinds.len())];
+        for _ in 0..burst.min(n_requests - submitted) {
+            let inst = ConvInstance::synthetic(wl, rng.next_u64());
+            match server.submit(kind, inst, epi) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    submitted += 1;
+                }
+                Err(SubmitError::Busy) => {
+                    busy_events += 1;
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => panic!("{e:?}"),
+            }
+        }
+    }
+
+    // collect all responses
+    let mut total_batch = 0usize;
+    for rx in pending {
+        let r = rx.recv().expect("worker died");
+        total_batch += r.batch_size;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = server.shutdown();
+
+    println!("\nper-kind latency (us):");
+    println!(
+        "{:<18} {:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "kind", "n", "queue p50", "queue p95", "exec p50", "exec p95", "mean batch"
+    );
+    for kind in metrics.kinds() {
+        let s = metrics.summary(&kind).unwrap();
+        println!(
+            "{:<18} {:>6} {:>12.0} {:>12.0} {:>12.0} {:>12.0} {:>10.2}",
+            s.kind, s.count, s.queue_p50_us, s.queue_p95_us, s.exec_p50_us, s.exec_p95_us, s.mean_batch
+        );
+    }
+    println!(
+        "\nthroughput: {:.0} requests/s over {:.2} s wall | mean co-batch {:.2} | backpressure events: {busy_events}",
+        n_requests as f64 / wall,
+        wall,
+        total_batch as f64 / n_requests as f64,
+    );
+}

@@ -1,0 +1,202 @@
+"""AOT lowering: jax -> HLO *text* artifacts the rust runtime loads.
+
+Emits HLO text, NOT ``.serialize()``: jax >= 0.5 writes HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``).  The text
+parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/load_hlo/ and its README.
+
+Run once at build time (``make artifacts``):
+
+    python -m compile.aot --out-dir ../artifacts [--batch 1]
+        [--schedule-json path]   # rust-found schedule to bake in
+
+Outputs, per ResNet50 stage conv:
+    conv_<stage>.hlo.txt        the lowered quantized conv (x, w, bias) -> y
+    conv_<stage>.meta.json      shapes/dtypes + schedule, for the rust loader
+    golden_<stage>.bin          x||w||bias||y flat little-endian dump so the
+                                rust integration tests can verify PJRT
+                                numerics without python present
+plus pack_demo.hlo.txt (standalone packing kernel) used by runtime tests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .schedules import Schedule
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the interchange that
+    survives the 0.5.1 proto-id limit)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dump_golden(path: str, arrays: list[np.ndarray]) -> None:
+    """Flat binary: for each array, u32 header = byte length, then raw
+    little-endian bytes.  Mirrors ``rust/src/runtime/golden.rs``."""
+    with open(path, "wb") as f:
+        for a in arrays:
+            raw = np.ascontiguousarray(a).tobytes()
+            f.write(struct.pack("<I", len(raw)))
+            f.write(raw)
+
+
+def pick_schedule(wl: model.ConvWorkload, schedule: Schedule) -> Schedule:
+    """Shrink the requested schedule until it is legal for the workload's
+    GEMM (small stages can't fit large block tiles)."""
+    import dataclasses as dc
+
+    s = schedule
+    while not s.is_legal_for(wl.gemm_m, wl.gemm_n, wl.gemm_k):
+        if s.chunk > 1 and wl.gemm_k % s.block_k != 0:
+            s = dc.replace(s, chunk=s.chunk // 2)
+        elif s.block_n > 8 and wl.gemm_n % s.block_n != 0:
+            if s.warp_col_tiles > 1:
+                s = dc.replace(s, warp_col_tiles=s.warp_col_tiles // 2)
+            else:
+                s = dc.replace(s, blk_col_warps=s.blk_col_warps // 2)
+        elif s.block_m > 8 and wl.gemm_m % s.block_m != 0:
+            if s.warp_row_tiles > 1:
+                s = dc.replace(s, warp_row_tiles=s.warp_row_tiles // 2)
+            else:
+                s = dc.replace(s, blk_row_warps=s.blk_row_warps // 2)
+        else:
+            raise ValueError(f"cannot legalize schedule for {wl}")
+    return s
+
+
+def build_stage_artifacts(
+    wl: model.ConvWorkload, schedule: Schedule, out_dir: str
+) -> dict:
+    sched = pick_schedule(wl, schedule)
+    fn = model.make_stage_fn(wl, sched)
+    x, w, bias = model.example_args(wl)
+    lowered = jax.jit(fn).lower(x, w, bias)
+    hlo = to_hlo_text(lowered)
+
+    stage = wl.name.replace("resnet50_", "")
+    hlo_path = os.path.join(out_dir, f"conv_{stage}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    # golden: run the *oracle* (independent path), not the kernel, so the
+    # rust-side check validates kernel + AOT + PJRT all at once.
+    from .kernels import ref
+
+    y = np.asarray(model.qconv2d_fwd(x, w, bias, wl, sched))
+    y_ref = np.asarray(ref.qconv2d(x, w, bias))
+    assert (y == y_ref).all(), f"kernel/oracle divergence on {wl.name}"
+    _dump_golden(
+        os.path.join(out_dir, f"golden_{stage}.bin"),
+        [np.asarray(x), np.asarray(w), np.asarray(bias), y],
+    )
+
+    meta = {
+        "workload": {
+            "name": wl.name,
+            "batch": wl.batch,
+            "height": wl.height,
+            "width": wl.width,
+            "in_channels": wl.in_channels,
+            "out_channels": wl.out_channels,
+            "kernel": wl.kernel,
+            "stride": wl.stride,
+            "padding": wl.padding,
+            "gemm": [wl.gemm_m, wl.gemm_n, wl.gemm_k],
+            "ops": wl.ops,
+        },
+        "schedule": json.loads(sched.to_json()),
+        "inputs": [
+            {"shape": list(x.shape), "dtype": "s8"},
+            {"shape": list(w.shape), "dtype": "s8"},
+            {"shape": list(bias.shape), "dtype": "s32"},
+        ],
+        "output": {"shape": list(y.shape), "dtype": "s32"},
+        "hlo": os.path.basename(hlo_path),
+        "golden": f"golden_{stage}.bin",
+    }
+    with open(os.path.join(out_dir, f"conv_{stage}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    return meta
+
+
+def build_pack_demo(out_dir: str) -> None:
+    """Standalone pack-kernel artifact (runtime smoke test target)."""
+    from .kernels import conv_mma
+
+    def fn(x):
+        return (conv_mma.pack_int4_kernel(x),)
+
+    spec = jax.ShapeDtypeStruct((16, 64), jnp.int32)
+    hlo = to_hlo_text(jax.jit(fn).lower(spec))
+    with open(os.path.join(out_dir, "pack_demo.hlo.txt"), "w") as f:
+        f.write(hlo)
+    x = (jnp.arange(16 * 64, dtype=jnp.int32).reshape(16, 64) % 23) - 11
+    y = np.asarray(fn(x)[0])
+    _dump_golden(
+        os.path.join(out_dir, "golden_pack_demo.bin"),
+        [np.asarray(x), y],
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--batch", type=int, default=8,
+        help="batch baked into the artifacts (default 8, the paper's "
+        "setting — also keeps every stage's GEMM M divisible by the WMMA "
+        "atom: stage5 at batch 1 would have M = 49)",
+    )
+    ap.add_argument(
+        "--schedule-json", default=None,
+        help="JSON file with a rust-found Schedule to bake into the kernels",
+    )
+    ap.add_argument(
+        "--stages", default="stage2,stage3,stage4,stage5",
+        help="comma-separated stage list",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    if args.schedule_json:
+        with open(args.schedule_json) as f:
+            schedule = Schedule.from_json(f.read())
+    else:
+        schedule = Schedule()  # default (untuned) schedule
+
+    manifest = {"batch": args.batch, "stages": {}}
+    for wl in model.resnet50_stage_convs(batch=args.batch):
+        stage = wl.name.replace("resnet50_", "")
+        if stage not in args.stages.split(","):
+            continue
+        meta = build_stage_artifacts(wl, schedule, args.out_dir)
+        manifest["stages"][stage] = f"conv_{stage}.meta.json"
+        print(f"lowered {wl.name}: gemm={meta['workload']['gemm']} "
+              f"block=({meta['schedule']['blk_row_warps']}x"
+              f"{meta['schedule']['warp_row_tiles']}x8, "
+              f"{meta['schedule']['blk_col_warps']}x"
+              f"{meta['schedule']['warp_col_tiles']}x8)")
+    build_pack_demo(args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"artifacts written to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""L1 Pallas kernel: schedule-parameterized reduced-precision GEMM with
+fused epilogue and INT4 output packing.
+
+This is the compute hot-spot of the paper — the im2col GEMM of a quantized
+convolution, tiled onto an MMA execution hierarchy.  The schedule knobs of
+the search space (``schedules.Schedule``) map directly onto the Pallas grid
+and BlockSpecs:
+
+    block_m = BLK_ROW_WARPS * WARP_ROW_TILES * 8   -> out_spec block rows
+    block_n = BLK_COL_WARPS * WARP_COL_TILES * 8   -> out_spec block cols
+    block_k = CHUNK * 32                           -> K-grid step
+    reorder_inner                                  -> grid axis order (K-major
+                                                      vs N-major inner loop)
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA kernel's
+threadblock/warp decomposition becomes the Pallas grid + block shape; the
+shared-memory staging the paper tunes becomes the HBM->VMEM schedule the
+BlockSpecs express; warp-shuffle packing becomes vectorized bit ops on the
+register tile.  Kernels are lowered with ``interpret=True`` (CPU PJRT cannot
+run Mosaic custom-calls) — structure, not CPU wallclock, is what the
+schedule controls; the rust simulator models the T4-side cost.
+
+All arithmetic is integer, so kernel-vs-ref checks are exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import pack
+from ..schedules import Schedule
+
+INTERPRET = True  # CPU PJRT: Mosaic lowering unavailable (see module doc)
+
+
+def _gemm_kernel(
+    x_ref, w_ref, bias_ref, o_ref, acc_ref, *, nk: int, relu: bool,
+    requant_shift: int, pack_output: bool
+):
+    """One (block_m x block_n) output tile; grid axis 2 walks K chunks.
+
+    The accumulator lives in scratch across the K walk (the paper's
+    register-tile accumulator); the epilogue + packing run on the final K
+    step *before* the tile is stored (paper §3.2.2: epilogue reordered ahead
+    of the shared-memory store).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = acc_ref[...] + bias_ref[...].astype(jnp.int32)[None, :]
+        if relu:
+            out = jnp.maximum(out, 0)
+        out = pack.requantize(out, requant_shift)
+        if pack_output:
+            o_ref[...] = pack.pack_int4(out)
+        else:
+            o_ref[...] = out
+
+
+def qgemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    schedule: Schedule | None = None,
+    *,
+    relu: bool = True,
+    requant_shift: int = 6,
+    pack_output: bool = True,
+) -> jnp.ndarray:
+    """Reduced-precision GEMM + epilogue + packing as one Pallas kernel.
+
+    x: (M, K) int8 (values in the INT4 domain [-8, 7])
+    w: (K, N) int8
+    bias: (N,) int32
+    -> (M, N // 8) int32 packed, or (M, N) int32 when ``pack_output=False``.
+    """
+    schedule = schedule or Schedule()
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    bm, bn, bk = schedule.block_m, schedule.block_n, schedule.block_k
+    if not schedule.is_legal_for(m, n, k):
+        raise ValueError(
+            f"schedule {schedule} illegal for GEMM ({m}, {n}, {k}): "
+            f"tiles ({bm}, {bn}, {bk}) must divide the problem"
+        )
+    nk = k // bk
+    pack_div = pack.PACK_FACTOR if pack_output else 1
+    out_cols = n // pack_div
+    bn_out = bn // pack_div
+    if pack_output and bn % pack.PACK_FACTOR != 0:
+        raise ValueError(f"block_n {bn} not divisible by pack factor")
+
+    kernel = functools.partial(
+        _gemm_kernel,
+        nk=nk,
+        relu=relu,
+        requant_shift=requant_shift,
+        pack_output=pack_output,
+    )
+    # REORDER_INNER: axis order of the sequential grid walk.  0 = K
+    # innermost (channel chunks swept inside an output tile — best reuse of
+    # the accumulator); 1 = N innermost (kernel-height-style sweep).  Both
+    # orders are legal because the accumulator scratch persists across grid
+    # steps of the same output tile only when K is innermost; for the
+    # reordered variant we keep K innermost in the grid but swap the M/N
+    # walk, which is the component of the loop order observable at the
+    # Pallas level.
+    if schedule.reorder_inner:
+        grid = (n // bn, m // bm, nk)
+        x_spec = pl.BlockSpec((bm, bk), lambda j, i, kk: (i, kk))
+        w_spec = pl.BlockSpec((bk, bn), lambda j, i, kk: (kk, j))
+        b_spec = pl.BlockSpec((bn,), lambda j, i, kk: (j,))
+        o_spec = pl.BlockSpec((bm, bn_out), lambda j, i, kk: (i, j))
+    else:
+        grid = (m // bm, n // bn, nk)
+        x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+        w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+        b_spec = pl.BlockSpec((bn,), lambda i, j, kk: (j,))
+        o_spec = pl.BlockSpec((bm, bn_out), lambda i, j, kk: (i, j))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, out_cols), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=INTERPRET,
+    )(x, w, bias)
+
+
+def _pack_kernel(x_ref, o_ref):
+    """Standalone INT4 packing kernel (paper Fig. 9): clip a tile of int32
+    values to the INT4 domain and pack 8-per-word along the last axis."""
+    o_ref[...] = pack.pack_int4(pack.clip_int4(x_ref[...]))
+
+
+def _largest_divisor(n: int, cap: int, multiple_of: int = 1) -> int:
+    """Largest d <= cap with d | n and multiple_of | d (>= multiple_of)."""
+    for d in range(min(cap, n), multiple_of - 1, -1):
+        if n % d == 0 and d % multiple_of == 0:
+            return d
+    return multiple_of
+
+
+def pack_int4_kernel(
+    x: jnp.ndarray, *, block_m: int | None = None, block_n: int | None = None
+) -> jnp.ndarray:
+    """Pallas version of the register-level packing step, usable on its own
+    (e.g. to re-pack activations between layers when the producer did not
+    fuse packing).  x: (M, N) int32 -> (M, N // 8) int32."""
+    m, n = x.shape
+    block_m = block_m or _largest_divisor(m, 8)
+    block_n = block_n or _largest_divisor(n, 64, pack.PACK_FACTOR)
+    if m % block_m or n % block_n or block_n % pack.PACK_FACTOR:
+        raise ValueError(f"bad pack tiling for ({m}, {n})")
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec(
+            (block_m, block_n // pack.PACK_FACTOR), lambda i, j: (i, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (m, n // pack.PACK_FACTOR), jnp.int32
+        ),
+        interpret=INTERPRET,
+    )(x)
+
+
+def _unpack_kernel(x_ref, o_ref):
+    o_ref[...] = pack.unpack_int4(x_ref[...]).astype(jnp.int8)
+
+
+def unpack_int4_kernel(
+    x: jnp.ndarray, *, block_m: int | None = None, block_n: int | None = None
+) -> jnp.ndarray:
+    """Inverse packing kernel: (M, W) int32 -> (M, W * 8) int8 in [-8, 7].
+    Used at layer boundaries when the consumer needs unpacked operands."""
+    m, w = x.shape
+    block_m = block_m or _largest_divisor(m, 8)
+    block_n = block_n or _largest_divisor(w, 8)
+    if m % block_m or w % block_n:
+        raise ValueError(f"bad unpack tiling for ({m}, {w})")
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(m // block_m, w // block_n),
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec(
+            (block_m, block_n * pack.PACK_FACTOR), lambda i, j: (i, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (m, w * pack.PACK_FACTOR), jnp.int8
+        ),
+        interpret=INTERPRET,
+    )(x)

@@ -1,0 +1,79 @@
+"""INT4 <-> int32 register packing, expressed as jnp bit ops.
+
+Paper §3.2: after the epilogue (bias/BN/ReLU), the INT4 outputs are clipped
+and packed eight-per-32-bit-register *before* the shared-memory store.  On
+Tensor Cores this is done with warp shuffles; here the same bit layout is
+produced with vectorized integer ops so it lowers into the AOT HLO.  The
+rust substrate (``rust/src/quant``) implements the identical layout
+bit-exactly (lane-by-lane warp-shuffle emulation) and the two are checked
+against each other through golden vectors (``python/tests/golden_pack``).
+
+Bit layout (matches NVIDIA's packed-s4 convention): element ``j`` of a group
+of 8 occupies bits ``[4*j, 4*j+4)`` of the int32 word, two's-complement.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT4_MIN = -8
+INT4_MAX = 7
+PACK_FACTOR = 8  # int4 values per int32 word
+
+
+def clip_int4(x: jnp.ndarray) -> jnp.ndarray:
+    """Clip/saturate to the signed 4-bit range (paper: 'clipped to lower
+    bits')."""
+    return jnp.clip(x, INT4_MIN, INT4_MAX)
+
+
+def pack_int4(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack the last axis (length divisible by 8) of int32 values already in
+    [-8, 7] into int32 words, 8 per word.
+
+    x: (..., L) int32  ->  (..., L // 8) int32
+    """
+    if x.shape[-1] % PACK_FACTOR != 0:
+        raise ValueError(
+            f"last axis {x.shape[-1]} not divisible by {PACK_FACTOR}"
+        )
+    g = x.reshape(*x.shape[:-1], x.shape[-1] // PACK_FACTOR, PACK_FACTOR)
+    nibbles = jnp.bitwise_and(g.astype(jnp.int32), 0xF)
+    shifts = jnp.arange(PACK_FACTOR, dtype=jnp.int32) * 4
+    # The shifted nibbles occupy disjoint bit ranges, so their wrapping sum
+    # is exactly their bitwise OR (no carries) — and sum lowers to a single
+    # reduce, which XLA fuses better than a chain of ORs.
+    return jnp.sum(
+        jnp.left_shift(nibbles, shifts), axis=-1, dtype=jnp.int32
+    )
+
+
+def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4` with sign extension.
+
+    p: (..., W) int32  ->  (..., W * 8) int32 in [-8, 7]
+    """
+    shifts = jnp.arange(PACK_FACTOR, dtype=jnp.int32) * 4
+    nib = jnp.bitwise_and(
+        jnp.right_shift(p[..., None], shifts), 0xF
+    ).astype(jnp.int32)
+    # sign-extend 4-bit two's complement
+    nib = jnp.where(nib >= 8, nib - 16, nib)
+    return nib.reshape(*p.shape[:-1], p.shape[-1] * PACK_FACTOR)
+
+
+def requantize(acc: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """Requantize an int32 accumulator back to the INT4 domain with a
+    power-of-two scale (arithmetic right shift with round-to-nearest-even
+    tie-away avoided: we use round-half-up which matches the rust side),
+    then saturate.
+
+    This is the integer-only epilogue of HAWQ-V3-style inference the paper
+    assumes ('integer-only inference without any floating point').
+    """
+    if shift < 0:
+        raise ValueError("shift must be >= 0")
+    if shift == 0:
+        return clip_int4(acc)
+    rounding = jnp.int32(1 << (shift - 1))
+    return clip_int4(jnp.right_shift(acc + rounding, shift))

@@ -1,0 +1,139 @@
+"""Pure-jnp correctness oracle for the Pallas kernels.
+
+Everything here is written with plain ``jax.numpy`` / ``lax`` ops, no Pallas,
+so it is an independent implementation the kernels are validated against at
+build time (pytest + hypothesis).  Integer arithmetic throughout — results
+must match the Pallas kernel *exactly*, not within a tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import pack
+
+
+def gemm_i32(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(M, K) int8  x  (K, N) int8  ->  (M, N) int32 accumulator."""
+    return jnp.dot(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def epilogue(
+    acc: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    relu: bool = True,
+    requant_shift: int = 6,
+) -> jnp.ndarray:
+    """Post-GEMM epilogue: bias add -> ReLU -> requantize to INT4 domain.
+
+    Mirrors the paper §3.2.2: these are the operations that must complete
+    before the low-bit clip, and which the optimized kernel computes in
+    registers before the shared-memory store.
+    """
+    out = acc + bias.astype(jnp.int32)[None, :]
+    if relu:
+        out = jnp.maximum(out, 0)
+    return pack.requantize(out, requant_shift)
+
+
+def qconv_gemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    relu: bool = True,
+    requant_shift: int = 6,
+    pack_output: bool = True,
+) -> jnp.ndarray:
+    """Full reduced-precision GEMM pipeline: int8(int4-valued) GEMM ->
+    epilogue -> optional INT4 output packing.
+
+    Returns (M, N // 8) int32 when ``pack_output`` else (M, N) int32
+    (values in [-8, 7]).
+    """
+    acc = gemm_i32(x, w)
+    out = epilogue(acc, bias, relu=relu, requant_shift=requant_shift)
+    if pack_output:
+        return pack.pack_int4(out)
+    return out
+
+
+def im2col_nhwc(
+    x: jnp.ndarray, kh: int, kw: int, stride: int = 1, padding: int = 1
+) -> jnp.ndarray:
+    """Lower an NHWC feature map to the im2col matrix (paper Fig. 1a /
+    Fig. 3).
+
+    x: (N, H, W, C)  ->  (N * OH * OW, KH * KW * C)
+
+    Row r corresponds to output pixel r (row-major over N, OH, OW); its
+    KH*KW*C entries are the receptive-field values, kernel-position-major —
+    exactly the layout whose pixel-wise duplicates §3.1 exploits.
+    """
+    n, h, w_, c = x.shape
+    xp = jnp.pad(
+        x, ((0, 0), (padding, padding), (padding, padding), (0, 0))
+    )
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w_ + 2 * padding - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = xp[
+                :, i : i + oh * stride : stride, j : j + ow * stride : stride, :
+            ]
+            patches.append(sl.reshape(n * oh * ow, c))
+    return jnp.concatenate(patches, axis=1)
+
+
+def conv2d_int(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+) -> jnp.ndarray:
+    """Direct (non-im2col) integer convolution via lax.conv — the
+    independent-path oracle for the full conv pipeline.
+
+    x: (N, H, W, C) int8, w: (KH, KW, C, O) int8 -> (N, OH, OW, O) int32
+    """
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def qconv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+    relu: bool = True,
+    requant_shift: int = 6,
+    pack_output: bool = True,
+) -> jnp.ndarray:
+    """End-to-end quantized conv oracle: direct conv -> epilogue -> pack.
+
+    Returns (N, OH, OW, O // 8) int32 if packed else (N, OH, OW, O) int32.
+    """
+    acc = conv2d_int(x, w, stride=stride, padding=padding)
+    n, oh, ow, o = acc.shape
+    flat = epilogue(
+        acc.reshape(-1, o), bias, relu=relu, requant_shift=requant_shift
+    )
+    if pack_output:
+        return pack.pack_int4(flat).reshape(n, oh, ow, o // pack.PACK_FACTOR)
+    return flat.reshape(n, oh, ow, o)

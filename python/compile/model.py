@@ -1,0 +1,219 @@
+"""L2: the JAX compute graph — quantized convolutions of ResNet50's 3x3
+stage layers, built on the L1 Pallas kernels.
+
+The paper evaluates the 3x3 spatial convolutions of each ResNet50 stage at
+batch 8 (Table 1: OPs = 1,849,688,064 = 2 * 8 * H * W * 3*3 * C * O for
+every stage — constant because each stage halves H/W and doubles C/O).
+
+This module is build-time only: ``aot.py`` lowers the jitted functions here
+to HLO text once, and the rust coordinator executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_mma, pack, ref
+from .schedules import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvWorkload:
+    """High-level convolution definition (mirrors ``rust/src/conv``)."""
+
+    name: str
+    batch: int
+    height: int
+    width: int
+    in_channels: int
+    out_channels: int
+    kernel: int = 3
+    stride: int = 1
+    padding: int = 1
+
+    @property
+    def out_height(self) -> int:
+        return (self.height + 2 * self.padding - self.kernel) // self.stride + 1
+
+    @property
+    def out_width(self) -> int:
+        return (self.width + 2 * self.padding - self.kernel) // self.stride + 1
+
+    # im2col GEMM dimensions (paper §2.1):
+    #   M = N*OH*OW rows, N = O columns, K = KH*KW*I accumulation.
+    @property
+    def gemm_m(self) -> int:
+        return self.batch * self.out_height * self.out_width
+
+    @property
+    def gemm_n(self) -> int:
+        return self.out_channels
+
+    @property
+    def gemm_k(self) -> int:
+        return self.kernel * self.kernel * self.in_channels
+
+    @property
+    def ops(self) -> int:
+        """Multiply-accumulate op count (2 ops per MAC), Table 1's OPs row."""
+        return 2 * self.gemm_m * self.gemm_n * self.gemm_k
+
+    def x_shape(self) -> tuple[int, int, int, int]:
+        return (self.batch, self.height, self.width, self.in_channels)
+
+    def w_shape(self) -> tuple[int, int, int, int]:
+        return (self.kernel, self.kernel, self.in_channels, self.out_channels)
+
+
+def resnet50_stage_convs(batch: int = 8) -> list[ConvWorkload]:
+    """The four target convolutions of Table 1: the 3x3 conv of each
+    residual stage.  Feature size halves and channels double per stage, so
+    the op count is constant."""
+    return [
+        ConvWorkload("resnet50_stage2", batch, 56, 56, 64, 64),
+        ConvWorkload("resnet50_stage3", batch, 28, 28, 128, 128),
+        ConvWorkload("resnet50_stage4", batch, 14, 14, 256, 256),
+        ConvWorkload("resnet50_stage5", batch, 7, 7, 512, 512),
+    ]
+
+
+def stage_by_name(name: str, batch: int = 8) -> ConvWorkload:
+    for w in resnet50_stage_convs(batch):
+        if w.name == name or w.name.endswith(name):
+            return w
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# layout: NHWC <-> NHWCnc (paper §3.3)
+# ---------------------------------------------------------------------------
+
+WMMA_N_ROWS = 8  # 'n' of NHWCnc: WMMA register-tile row count
+WMMA_C_COLS = 16  # 'c' of NHWCnc: WMMA register-tile column count (16B lane)
+
+
+def nhwc_to_nhwcnc(x: jnp.ndarray) -> jnp.ndarray:
+    """Reshape NHWC into the NHWCnc tiled layout the paper stores globally
+    so WMMA-tile loads coalesce: split batch into n-tiles of 8 and channels
+    into c-tiles of 16, moving both to the minor dimensions.
+
+    (N, H, W, C) -> (N/8, H, W, C/16, 8, 16)
+    """
+    n, h, w, c = x.shape
+    if n % WMMA_N_ROWS or c % WMMA_C_COLS:
+        raise ValueError(f"NHWCnc needs N%{WMMA_N_ROWS}==0, C%{WMMA_C_COLS}==0")
+    return (
+        x.reshape(n // WMMA_N_ROWS, WMMA_N_ROWS, h, w, c // WMMA_C_COLS, WMMA_C_COLS)
+        .transpose(0, 2, 3, 4, 1, 5)
+    )
+
+
+def nhwcnc_to_nhwc(x: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`nhwc_to_nhwcnc`."""
+    nt, h, w, ct, nr, cc = x.shape
+    return (
+        x.transpose(0, 4, 1, 2, 3, 5)
+        .reshape(nt * nr, h, w, ct * cc)
+    )
+
+
+# ---------------------------------------------------------------------------
+# the conv forward pass
+# ---------------------------------------------------------------------------
+
+
+def qconv2d_fwd(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    wl: ConvWorkload,
+    schedule: Schedule | None = None,
+    *,
+    relu: bool = True,
+    requant_shift: int = 6,
+    pack_output: bool = True,
+) -> jnp.ndarray:
+    """Quantized conv forward: im2col lowering -> Pallas MMA GEMM kernel
+    with fused epilogue + packing -> spatial reshape.
+
+    x: (N, H, W, C) int8 (INT4-valued), w: (KH, KW, C, O) int8,
+    bias: (O,) int32.
+    Returns (N, OH, OW, O/8) int32 packed (or (N, OH, OW, O) int32).
+    """
+    cols = ref.im2col_nhwc(x, wl.kernel, wl.kernel, wl.stride, wl.padding)
+    wmat = w.reshape(wl.gemm_k, wl.gemm_n)
+    out = conv_mma.qgemm(
+        cols,
+        wmat,
+        bias,
+        schedule,
+        relu=relu,
+        requant_shift=requant_shift,
+        pack_output=pack_output,
+    )
+    o = wl.gemm_n // (pack.PACK_FACTOR if pack_output else 1)
+    return out.reshape(wl.batch, wl.out_height, wl.out_width, o)
+
+
+def qconv_chain_fwd(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    wl: ConvWorkload,
+    schedule: Schedule | None = None,
+    *,
+    requant_shift: int = 6,
+) -> jnp.ndarray:
+    """Two chained quantized convs (the layout-consistency scenario of
+    §3.3: layer L's packed output is layer L+1's input).  The intermediate
+    stays in the INT4 domain; the unpack at the boundary is the 'single
+    extra warp shuffle' of the paper, expressed as the unpack kernel."""
+    y1 = qconv2d_fwd(
+        x, w1, b1, wl, schedule, requant_shift=requant_shift, pack_output=True
+    )
+    n, oh, ow, wpk = y1.shape
+    y1_unpacked = conv_mma.unpack_int4_kernel(
+        y1.reshape(n * oh * ow, wpk)
+    ).reshape(n, oh, ow, wpk * pack.PACK_FACTOR)
+    wl2 = dataclasses.replace(
+        wl,
+        height=wl.out_height,
+        width=wl.out_width,
+        in_channels=wpk * pack.PACK_FACTOR,
+    )
+    return qconv2d_fwd(
+        y1_unpacked, w2, b2, wl2, schedule,
+        requant_shift=requant_shift, pack_output=True,
+    )
+
+
+def make_stage_fn(
+    wl: ConvWorkload,
+    schedule: Schedule | None = None,
+    *,
+    pack_output: bool = True,
+) -> Callable:
+    """Build the jit-able per-stage function AOT lowers.  Returns a 1-tuple
+    (the rust loader unwraps with ``to_tuple1``)."""
+
+    def fn(x, w, bias):
+        return (
+            qconv2d_fwd(x, w, bias, wl, schedule, pack_output=pack_output),
+        )
+
+    return fn
+
+
+def example_args(wl: ConvWorkload, seed: int = 0):
+    """Deterministic INT4-domain sample inputs for lowering and goldens."""
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.randint(kx, wl.x_shape(), -8, 8, dtype=jnp.int8)
+    w = jax.random.randint(kw, wl.w_shape(), -8, 8, dtype=jnp.int8)
+    bias = jax.random.randint(kb, (wl.out_channels,), -64, 64, dtype=jnp.int32)
+    return x, w, bias

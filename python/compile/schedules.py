@@ -1,0 +1,133 @@
+"""Schedule (configuration) definition — the tuning knobs of the paper.
+
+This mirrors ``rust/src/searchspace/config.rs`` one-to-one.  A Schedule fixes
+how the im2col GEMM of a reduced-precision convolution is tiled onto the
+Tensor-Core-style execution hierarchy:
+
+    output matrix (M x N)
+      -> thread-block tiles   (block_m x block_n)
+        -> warp tiles         (warp_m  x warp_n)
+          -> WMMA atoms       (MMA_M   x MMA_N)   with K-group MMA_K
+
+Knobs (paper §4.1):
+  blk_row_warps   warps along M per thread block      (BLK-ROW-WARPS)
+  blk_col_warps   warps along N per thread block      (BLK-COL-WARPS)
+  warp_row_tiles  WMMA tiles along M per warp         (WARP-ROW-TILES)
+  warp_col_tiles  WMMA tiles along N per warp         (WARP-COL-TILES)
+  chunk           K-loop split factor                 (CHUNK)
+  reorder_inner   loop order: channel-outer vs KH     (REORDER-INNER)
+
+Optimization flags (paper §3.1-3.3, the ablation axes of Fig. 15/16):
+  dup_aware       duplicate-aware feature-map load
+  reg_packing     register-level epilogue + INT4 output packing
+  nhwcnc_layout   NHWCnc global layout for coalesced WMMA loads
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterator
+
+# WMMA atom for INT4 MMA on Tensor Cores (paper §1: T4 INT4 MMA takes an
+# 8x32 K-group; the atomic output tile is 8x8).
+MMA_M = 8
+MMA_N = 8
+MMA_K = 32
+
+# INT8 MMA halves the K-group (8x16 operand).
+MMA_K_INT8 = 16
+
+KNOB_VALUES = {
+    "blk_row_warps": (1, 2, 4, 8),
+    "blk_col_warps": (1, 2, 4, 8),
+    "warp_row_tiles": (1, 2, 4, 8),
+    "warp_col_tiles": (1, 2, 4, 8),
+    "chunk": (1, 2, 4, 8),
+    "reorder_inner": (0, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One point of the search space.  Immutable and hashable."""
+
+    blk_row_warps: int = 2
+    blk_col_warps: int = 2
+    warp_row_tiles: int = 2
+    warp_col_tiles: int = 2
+    chunk: int = 2
+    reorder_inner: int = 0
+    # optimization flags
+    dup_aware: bool = True
+    reg_packing: bool = True
+    nhwcnc_layout: bool = True
+
+    # --- derived tile geometry ------------------------------------------
+    @property
+    def warp_m(self) -> int:
+        return self.warp_row_tiles * MMA_M
+
+    @property
+    def warp_n(self) -> int:
+        return self.warp_col_tiles * MMA_N
+
+    @property
+    def block_m(self) -> int:
+        return self.blk_row_warps * self.warp_m
+
+    @property
+    def block_n(self) -> int:
+        return self.blk_col_warps * self.warp_n
+
+    @property
+    def block_k(self) -> int:
+        return self.chunk * MMA_K
+
+    @property
+    def warps_per_block(self) -> int:
+        return self.blk_row_warps * self.blk_col_warps
+
+    @property
+    def threads_per_block(self) -> int:
+        return self.warps_per_block * 32
+
+    # --- legality --------------------------------------------------------
+    def is_legal_for(self, m: int, n: int, k: int) -> bool:
+        """A schedule is legal for an (M, N, K) GEMM iff the tile hierarchy
+        divides the problem exactly (the paper pads im2col M to a multiple of
+        the block; we require divisibility like the TVM template does)."""
+        return (
+            m % self.block_m == 0
+            and n % self.block_n == 0
+            and k % self.block_k == 0
+        )
+
+    # --- serde (interchange with the rust coordinator) -------------------
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "Schedule":
+        return Schedule(**json.loads(text))
+
+
+def enumerate_schedules(
+    m: int, n: int, k: int, *, legal_only: bool = True
+) -> Iterator[Schedule]:
+    """Enumerate the knob cross-product (optionally restricted to legal
+    schedules for an (M, N, K) problem).  Optimization flags are held at
+    their defaults; the rust side owns the full 8-dimensional walk."""
+    for brw in KNOB_VALUES["blk_row_warps"]:
+        for bcw in KNOB_VALUES["blk_col_warps"]:
+            for wrt in KNOB_VALUES["warp_row_tiles"]:
+                for wct in KNOB_VALUES["warp_col_tiles"]:
+                    for ch in KNOB_VALUES["chunk"]:
+                        for ro in KNOB_VALUES["reorder_inner"]:
+                            s = Schedule(brw, bcw, wrt, wct, ch, ro)
+                            if not legal_only or s.is_legal_for(m, n, k):
+                                yield s
+
+
+# Default schedule used for AOT artifacts when no tuned schedule is supplied.
+DEFAULT_SCHEDULE = Schedule()

@@ -1,0 +1,65 @@
+"""L1 perf profile: VMEM footprint + MXU-utilization *estimates* per
+schedule (DESIGN.md §Perf L1).
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the L1
+optimization target is structural: do the blocks fit VMEM comfortably, is
+the contraction MXU-shaped, how much of the staged data is compute-useful.
+
+Run: cd python && python -m compile.vmem_report
+"""
+
+from __future__ import annotations
+
+from . import model
+from .schedules import Schedule, MMA_K
+
+# TPU-ish envelope used for the estimates (the repo's CPU runs interpret
+# mode; these numbers contextualize the BlockSpec choices, DESIGN.md
+# §Hardware-Adaptation).
+VMEM_BYTES = 16 * 2**20
+MXU_DIM = 128
+
+
+def block_vmem_bytes(s: Schedule, dtype_bytes: int = 1, acc_bytes: int = 4) -> int:
+    """Resident bytes for one grid step of the qgemm kernel: x tile +
+    w tile + bias + accumulator scratch + packed output tile."""
+    bm, bn, bk = s.block_m, s.block_n, s.block_k
+    x = bm * bk * dtype_bytes
+    w = bk * bn * dtype_bytes
+    bias = bn * 4
+    acc = bm * bn * acc_bytes
+    out = bm * (bn // 8) * 4
+    return x + w + bias + acc + out
+
+
+def mxu_utilization(s: Schedule) -> float:
+    """Fraction of an MXU_DIM x MXU_DIM systolic pass the block tile
+    fills (both operand dims), per K-group."""
+    fill_m = min(s.block_m, MXU_DIM) / MXU_DIM
+    fill_n = min(s.block_n, MXU_DIM) / MXU_DIM
+    fill_k = min(s.block_k, MXU_DIM) / MXU_DIM
+    return fill_m * fill_n * fill_k
+
+
+def main() -> None:
+    print(f"L1 structural profile (VMEM budget {VMEM_BYTES >> 20} MiB, MXU {MXU_DIM}x{MXU_DIM})")
+    print(f"{'stage':<8} {'schedule (bm,bn,bk)':<22} {'VMEM/step':>10} {'fit':>5} "
+          f"{'MXU fill':>9} {'K%{}'.format(MMA_K):>6}")
+    from .aot import pick_schedule
+
+    for wl in model.resnet50_stage_convs(batch=8):
+        s = pick_schedule(wl, Schedule())
+        vmem = block_vmem_bytes(s)
+        print(
+            f"{wl.name.replace('resnet50_', ''):<8} "
+            f"({s.block_m:>3},{s.block_n:>3},{s.block_k:>3}){'':<8} "
+            f"{vmem:>9}B {'ok' if vmem < VMEM_BYTES else 'NO':>5} "
+            f"{mxu_utilization(s):>8.2f} "
+            f"{'yes' if s.block_k % MMA_K == 0 else 'no':>6}"
+        )
+    print("\nlarger tiles raise MXU fill until VMEM double-buffering caps them;")
+    print("the rust-side tuner explores exactly this trade on the T4 cost model.")
+
+
+if __name__ == "__main__":
+    main()

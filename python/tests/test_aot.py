@@ -1,0 +1,76 @@
+"""AOT lowering: HLO text emission, schedule legalization, golden dumps."""
+
+import dataclasses
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.schedules import Schedule
+
+TINY = model.ConvWorkload("resnet50_tinytest", 1, 8, 8, 32, 16)
+
+
+def test_to_hlo_text_entry_computation():
+    fn = model.make_stage_fn(TINY, Schedule(1, 1, 1, 1, 1, 0))
+    x, w, bias = model.example_args(TINY)
+    hlo = aot.to_hlo_text(jax.jit(fn).lower(x, w, bias))
+    assert "ENTRY" in hlo
+    assert "s32" in hlo  # integer pipeline
+    # tuple return (rust unwraps with to_tuple1)
+    assert "tuple" in hlo.lower()
+
+
+def test_pick_schedule_legalizes_small_stage():
+    # stage2 at batch 1: N(gemm)=64 -> block_n must divide 64
+    wl = model.stage_by_name("stage2", batch=1)
+    big = Schedule(8, 8, 8, 8, 8, 0)  # block 512x512, way too big
+    s = aot.pick_schedule(wl, big)
+    assert s.is_legal_for(wl.gemm_m, wl.gemm_n, wl.gemm_k)
+
+
+def test_pick_schedule_keeps_legal_untouched():
+    # stage3 at batch 1: gemm_m = 784 = 16 * 49, so block_m must be 8 or 16
+    wl = model.stage_by_name("stage3", batch=1)
+    s = Schedule(2, 2, 1, 2, 2, 0)  # block 16x32, chunk 64
+    assert aot.pick_schedule(wl, s) == s
+
+
+def test_golden_dump_format():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "g.bin")
+        a = np.arange(6, dtype=np.int32).reshape(2, 3)
+        b = np.arange(4, dtype=np.int8)
+        aot._dump_golden(path, [a, b])
+        with open(path, "rb") as f:
+            raw = f.read()
+        n0 = struct.unpack_from("<I", raw, 0)[0]
+        assert n0 == 24
+        assert raw[4 : 4 + 24] == a.tobytes()
+        n1 = struct.unpack_from("<I", raw, 4 + 24)[0]
+        assert n1 == 4
+        assert raw[4 + 24 + 4 :] == b.tobytes()
+
+
+@pytest.mark.slow
+def test_build_stage_artifacts_end_to_end():
+    """Full artifact build for a shrunken stage — exercises lowering, the
+    kernel/oracle cross-check, and the meta schema the rust loader reads."""
+    wl = dataclasses.replace(
+        model.stage_by_name("stage2", batch=1), height=16, width=16,
+        name="resnet50_stage2",
+    )
+    with tempfile.TemporaryDirectory() as d:
+        meta = aot.build_stage_artifacts(wl, Schedule(1, 1, 1, 1, 1, 0), d)
+        assert os.path.exists(os.path.join(d, "conv_stage2.hlo.txt"))
+        assert os.path.exists(os.path.join(d, "golden_stage2.bin"))
+        with open(os.path.join(d, "conv_stage2.meta.json")) as f:
+            loaded = json.load(f)
+        assert loaded == json.loads(json.dumps(meta, sort_keys=True))
+        assert loaded["workload"]["gemm"] == [wl.gemm_m, wl.gemm_n, wl.gemm_k]
+        assert loaded["output"]["dtype"] == "s32"

@@ -1,0 +1,155 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+Integer arithmetic end to end, so every comparison is exact equality.
+Hypothesis sweeps the GEMM/conv shapes and the schedule knobs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_mma, pack, ref
+from compile.schedules import MMA_K, MMA_M, MMA_N, Schedule
+
+
+def rand_int4(key, shape, dtype=jnp.int8):
+    return jax.random.randint(key, shape, -8, 8, dtype=dtype)
+
+
+def gemm_case(seed, m, n, k):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand_int4(kx, (m, k))
+    w = rand_int4(kw, (k, n))
+    bias = jax.random.randint(kb, (n,), -128, 128, dtype=jnp.int32)
+    return x, w, bias
+
+
+# --------------------------------------------------------------------------
+# qgemm vs oracle
+# --------------------------------------------------------------------------
+
+SMALL = Schedule(1, 1, 1, 1, 1, 0)  # 8x8 blocks, K chunk 32
+
+
+@pytest.mark.parametrize("pack_output", [True, False])
+@pytest.mark.parametrize("relu", [True, False])
+def test_qgemm_basic(pack_output, relu):
+    x, w, bias = gemm_case(0, 32, 16, 64)
+    got = conv_mma.qgemm(x, w, bias, SMALL, relu=relu, pack_output=pack_output)
+    want = ref.qconv_gemm(x, w, bias, relu=relu, pack_output=pack_output)
+    assert got.shape == want.shape
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+schedule_strategy = st.builds(
+    Schedule,
+    blk_row_warps=st.sampled_from([1, 2]),
+    blk_col_warps=st.sampled_from([1, 2]),
+    warp_row_tiles=st.sampled_from([1, 2]),
+    warp_col_tiles=st.sampled_from([1, 2]),
+    chunk=st.sampled_from([1, 2]),
+    reorder_inner=st.sampled_from([0, 1]),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sched=schedule_strategy,
+    mtiles=st.integers(1, 3),
+    ntiles=st.integers(1, 3),
+    ktiles=st.integers(1, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_qgemm_schedule_sweep(sched, mtiles, ntiles, ktiles, seed):
+    """Every legal schedule computes the identical result: schedules change
+    the walk, never the math."""
+    m = sched.block_m * mtiles
+    n = sched.block_n * ntiles
+    k = sched.block_k * ktiles
+    if n % pack.PACK_FACTOR or sched.block_n % pack.PACK_FACTOR:
+        n = ((n + 7) // 8) * 8
+    x, w, bias = gemm_case(seed, m, n, k)
+    got = conv_mma.qgemm(x, w, bias, sched)
+    want = ref.qconv_gemm(x, w, bias)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_qgemm_schedules_agree_with_each_other():
+    """Two very different schedules -> bit-identical outputs."""
+    x, w, bias = gemm_case(3, 64, 32, 128)
+    a = conv_mma.qgemm(x, w, bias, Schedule(1, 1, 2, 2, 1, 0))
+    b = conv_mma.qgemm(x, w, bias, Schedule(2, 2, 1, 1, 2, 1))
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_qgemm_rejects_illegal_schedule():
+    x, w, bias = gemm_case(0, 24, 16, 32)  # M=24 not divisible by 16
+    with pytest.raises(ValueError):
+        conv_mma.qgemm(x, w, bias, Schedule(2, 1, 1, 1, 1, 0))
+
+
+def test_qgemm_requant_shift_zero():
+    x, w, bias = gemm_case(1, 16, 8, 32)
+    got = conv_mma.qgemm(x, w, bias, SMALL, requant_shift=0)
+    want = ref.qconv_gemm(x, w, bias, requant_shift=0)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# --------------------------------------------------------------------------
+# pack / unpack kernels
+# --------------------------------------------------------------------------
+
+
+def test_pack_kernel_matches_ref():
+    key = jax.random.PRNGKey(7)
+    x = jax.random.randint(key, (16, 64), -200, 200, dtype=jnp.int32)
+    got = conv_mma.pack_int4_kernel(x)
+    want = pack.pack_int4(pack.clip_int4(x))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_unpack_kernel_roundtrip():
+    key = jax.random.PRNGKey(8)
+    vals = jax.random.randint(key, (8, 64), -8, 8, dtype=jnp.int32)
+    packed = pack.pack_int4(vals)
+    got = conv_mma.unpack_int4_kernel(packed)
+    assert got.dtype == jnp.int8
+    assert (np.asarray(got, dtype=np.int32) == np.asarray(vals)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 24]),
+    wtiles=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_pack_unpack_kernels_inverse(m, wtiles, seed):
+    key = jax.random.PRNGKey(seed)
+    n = 64 * wtiles
+    vals = jax.random.randint(key, (m, n), -8, 8, dtype=jnp.int32)
+    rt = conv_mma.unpack_int4_kernel(conv_mma.pack_int4_kernel(vals))
+    assert (np.asarray(rt, dtype=np.int32) == np.asarray(vals)).all()
+
+
+# --------------------------------------------------------------------------
+# WMMA atom constants sanity (shared with the rust side)
+# --------------------------------------------------------------------------
+
+
+def test_mma_atom_matches_paper():
+    # T4 INT4 MMA: 8x8 output atom, K-group 32 (8x32 operand, 2x the INT8
+    # 8x16 operand — paper §1)
+    assert (MMA_M, MMA_N, MMA_K) == (8, 8, 32)
+
+
+def test_schedule_tile_arithmetic():
+    s = Schedule(2, 4, 2, 1, 4, 0)
+    assert s.block_m == 2 * 2 * 8
+    assert s.block_n == 4 * 1 * 8
+    assert s.block_k == 4 * 32
+    assert s.threads_per_block == 2 * 4 * 32
+    assert dataclasses.asdict(s)["chunk"] == 4

@@ -1,0 +1,154 @@
+"""L2 model: conv-as-GEMM pipeline, layouts, workloads, chained layers."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import pack, ref
+from compile.schedules import Schedule
+
+TINY = model.ConvWorkload("tiny", 1, 8, 8, 32, 32)
+TINY_SCHED = Schedule(1, 1, 1, 1, 1, 0)
+
+
+# --------------------------------------------------------------------------
+# workload arithmetic (Table 1 invariants)
+# --------------------------------------------------------------------------
+
+
+def test_resnet50_stage_ops_match_table1():
+    """All four stage convs have the paper's constant op count
+    1,849,688,064 at batch 8."""
+    for wl in model.resnet50_stage_convs(batch=8):
+        assert wl.ops == 1_849_688_064, wl
+
+
+def test_stage_gemm_dims():
+    s2 = model.stage_by_name("stage2", batch=8)
+    assert (s2.gemm_m, s2.gemm_n, s2.gemm_k) == (8 * 56 * 56, 64, 576)
+    s5 = model.stage_by_name("stage5", batch=8)
+    assert (s5.gemm_m, s5.gemm_n, s5.gemm_k) == (8 * 7 * 7, 512, 4608)
+
+
+def test_same_padding_preserves_spatial():
+    for wl in model.resnet50_stage_convs():
+        assert (wl.out_height, wl.out_width) == (wl.height, wl.width)
+
+
+# --------------------------------------------------------------------------
+# im2col vs direct conv
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    hw=st.sampled_from([4, 5, 8]),
+    c=st.sampled_from([8, 16]),
+    o=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_im2col_gemm_equals_direct_conv(n, hw, c, o, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.randint(kx, (n, hw, hw, c), -8, 8, dtype=jnp.int8)
+    w = jax.random.randint(kw, (3, 3, c, o), -8, 8, dtype=jnp.int8)
+    cols = ref.im2col_nhwc(x, 3, 3, 1, 1)
+    acc_gemm = ref.gemm_i32(cols, w.reshape(9 * c, o))
+    acc_direct = ref.conv2d_int(x, w).reshape(-1, o)
+    assert (np.asarray(acc_gemm) == np.asarray(acc_direct)).all()
+
+
+def test_im2col_duplicate_structure():
+    """Adjacent output pixels share kernel-window columns: row r at kernel
+    col j+1 equals row r+1 at kernel col j (stride 1) — the §3.1 duplicates."""
+    x = jnp.arange(1 * 6 * 6 * 2, dtype=jnp.int8).reshape(1, 6, 6, 2)
+    cols = np.asarray(ref.im2col_nhwc(x, 3, 3, 1, 1))
+    c = 2
+    # output pixel (r=2, col=2) vs (r=2, col=3): window shifted by 1 in W.
+    row_a = cols[2 * 6 + 2]
+    row_b = cols[2 * 6 + 3]
+    # kernel position (i, j) occupies block [(i*3+j)*c, (i*3+j+1)*c)
+    for i in range(3):
+        for j in range(2):
+            a = row_a[(i * 3 + (j + 1)) * c : (i * 3 + j + 2) * c]
+            b = row_b[(i * 3 + j) * c : (i * 3 + j + 1) * c]
+            assert (a == b).all()
+
+
+# --------------------------------------------------------------------------
+# full conv fwd vs oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pack_output", [True, False])
+def test_qconv2d_fwd_matches_oracle(pack_output):
+    x, w, bias = model.example_args(TINY)
+    got = model.qconv2d_fwd(x, w, bias, TINY, TINY_SCHED, pack_output=pack_output)
+    want = ref.qconv2d(x, w, bias, pack_output=pack_output)
+    assert got.shape == want.shape
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_qconv2d_fwd_stage_shape_small_batch():
+    wl = dataclasses.replace(
+        model.stage_by_name("stage2", batch=1), height=16, width=16
+    )
+    x, w, bias = model.example_args(wl)
+    y = model.qconv2d_fwd(x, w, bias, wl, TINY_SCHED)
+    assert y.shape == (1, 16, 16, wl.out_channels // pack.PACK_FACTOR)
+
+
+def test_qconv_chain_stays_in_int4_domain():
+    wl = TINY
+    x, w1, b1 = model.example_args(wl, seed=0)
+    _, w2, b2 = model.example_args(wl, seed=1)
+    y = model.qconv_chain_fwd(x, w1, b1, w2, b2, wl, TINY_SCHED)
+    assert y.shape == (1, 8, 8, wl.out_channels // pack.PACK_FACTOR)
+    vals = np.asarray(
+        pack.unpack_int4(y.reshape(-1, y.shape[-1]))
+    )
+    assert vals.min() >= -8 and vals.max() <= 7
+
+
+def test_qconv_chain_matches_composed_oracle():
+    wl = TINY
+    x, w1, b1 = model.example_args(wl, seed=0)
+    _, w2, b2 = model.example_args(wl, seed=1)
+    got = model.qconv_chain_fwd(x, w1, b1, w2, b2, wl, TINY_SCHED)
+    y1 = ref.qconv2d(x, w1, b1, pack_output=False)
+    y2 = ref.qconv2d(y1.astype(jnp.int8), w2, b2, pack_output=True)
+    assert (np.asarray(got) == np.asarray(y2)).all()
+
+
+# --------------------------------------------------------------------------
+# NHWCnc layout
+# --------------------------------------------------------------------------
+
+
+def test_nhwcnc_roundtrip():
+    x = jnp.arange(8 * 4 * 4 * 32, dtype=jnp.int8).reshape(8, 4, 4, 32)
+    rt = model.nhwcnc_to_nhwc(model.nhwc_to_nhwcnc(x))
+    assert (np.asarray(rt) == np.asarray(x)).all()
+
+
+def test_nhwcnc_tile_is_contiguous_wmma_tile():
+    """The two minor dims of NHWCnc are exactly one WMMA register tile:
+    8 batch rows x 16 channel bytes."""
+    x = jnp.arange(8 * 2 * 2 * 16, dtype=jnp.int8).reshape(8, 2, 2, 16)
+    t = model.nhwc_to_nhwcnc(x)
+    assert t.shape == (1, 2, 2, 1, 8, 16)
+    tile = np.asarray(t)[0, 1, 0, 0]
+    want = np.asarray(x)[:, 1, 0, :]
+    assert (tile == want).all()
+
+
+def test_nhwcnc_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        model.nhwc_to_nhwcnc(jnp.zeros((3, 4, 4, 16), jnp.int8))
+    with pytest.raises(ValueError):
+        model.nhwc_to_nhwcnc(jnp.zeros((8, 4, 4, 12), jnp.int8))

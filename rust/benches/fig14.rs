@@ -1,0 +1,75 @@
+//! Bench: regenerate Fig. 14 (diversity-aware vs original explorer) and
+//! time one explorer round of each kind.
+//!
+//! `cargo bench --bench fig14`
+
+use std::collections::HashSet;
+
+use tcconv::conv::ConvWorkload;
+use tcconv::costmodel::{featurize, CostModel, Gbt, GbtParams};
+use tcconv::explore::{AnnealingParams, DiversityAware, Explorer, SimulatedAnnealing};
+use tcconv::report::experiments;
+use tcconv::searchspace::{SearchSpace, SpaceOptions};
+use tcconv::sim::{GpuSpec, ProfileCache, Simulator};
+use tcconv::util::bench::{bench, quick, section};
+use tcconv::util::Rng;
+
+fn trained_model(wl: &ConvWorkload, space: &SearchSpace) -> Gbt {
+    let sim = Simulator::noiseless(GpuSpec::t4());
+    let mut cache = ProfileCache::default();
+    let mut rng = Rng::new(3);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..128 {
+        let g = space.random_legal(&mut rng);
+        let cfg = space.decode(&g);
+        xs.push(featurize(wl, &cfg));
+        ys.push(sim.measure(wl, &cfg, &mut cache).runtime_us);
+    }
+    let mut m = Gbt::new(GbtParams::default());
+    m.train(&xs, &ys);
+    m
+}
+
+fn main() {
+    let wl = ConvWorkload::resnet50_stage(2, 8);
+    let space = SearchSpace::for_workload(&wl, SpaceOptions::autotvm_original());
+    let model = trained_model(&wl, &space);
+    let params = AnnealingParams {
+        n_iters: if quick() { 50 } else { 150 },
+        parallel: 64,
+        ..Default::default()
+    };
+
+    section("Fig. 14 — explorer-round microbenches (model-scored proposals)");
+    let measured = HashSet::new();
+    bench("simulated-annealing propose(32)", || {
+        let mut rng = Rng::new(7);
+        let mut sa = SimulatedAnnealing::new(space.clone(), params);
+        std::hint::black_box(sa.propose(&model, &measured, 32, &mut rng));
+    });
+    bench("diversity-aware propose(32)", || {
+        let mut rng = Rng::new(7);
+        let mut da = DiversityAware::new(space.clone(), params);
+        std::hint::black_box(da.propose(&model, &measured, 32, &mut rng));
+    });
+
+    let trials = if quick() { 96 } else { 500 };
+    let seeds: Vec<u64> = if quick() { vec![101] } else { vec![101, 138, 175] };
+    section(&format!("Fig. 14 — full regeneration ({trials} trials, {} seeds)", seeds.len()));
+    let t = std::time::Instant::now();
+    let curves = experiments::run_fig14(trials, &seeds, &Simulator::default());
+    let sa = experiments::mean_curve(&curves[0].1);
+    let da = experiments::mean_curve(&curves[1].1);
+    println!("trial,{},{}", curves[0].0, curves[1].0);
+    for i in (0..sa.len()).step_by((trials / 10).max(1)) {
+        println!("{},{:.1},{:.1}", sa[i].0, sa[i].1, da[i].1);
+    }
+    let last = sa.len() - 1;
+    println!("{},{:.1},{:.1}  <- final", sa[last].0, sa[last].1, da[last].1);
+    println!(
+        "diversity-aware vs original at equal trials: {:+.1}% GFLOPS  ({:.1} s total)",
+        (da[last].1 / sa[last].1 - 1.0) * 100.0,
+        t.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate Fig. 15 — accumulated speedup as the paper's three
+//! optimizations are stacked on each stage conv (tiling re-tuned at every
+//! step).
+//!
+//! `cargo bench --bench fig15`
+
+use tcconv::report::{self, experiments};
+use tcconv::sim::{GpuSpec, Simulator};
+use tcconv::util::bench::section;
+
+fn main() {
+    section("Fig. 15 — accumulated speedup (exhaustive tiling per flag set)");
+    let t = std::time::Instant::now();
+    let sim = Simulator::noiseless(GpuSpec::t4());
+    let rows = experiments::run_ablation(&sim);
+    report::print_ablation(&rows, true);
+
+    println!("\nruntimes (us) per step:");
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>10}",
+        "stage", "base", "+dup", "+pack", "+layout"
+    );
+    for r in &rows {
+        println!(
+            "{:<8} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+            format!("stage{}", r.stage),
+            r.base_us,
+            r.plus_dup_us,
+            r.plus_pack_us,
+            r.plus_layout_us
+        );
+    }
+
+    // terminal bar chart, one group per stage (paper's bar figure)
+    println!("\naccumulated speedup bars:");
+    let max = rows
+        .iter()
+        .map(|r| r.accumulated()[2])
+        .fold(1.0f64, f64::max);
+    for r in &rows {
+        let a = r.accumulated();
+        println!("stage{}", r.stage);
+        println!("  +dup     {:<40} {:.2}x", report::bar(a[0], max, 36), a[0]);
+        println!("  +pack    {:<40} {:.2}x", report::bar(a[1], max, 36), a[1]);
+        println!("  +layout  {:<40} {:.2}x", report::bar(a[2], max, 36), a[2]);
+    }
+    println!(
+        "\nshape check (paper): larger H/W convs accumulate more speedup; \
+         regenerated in {:.1} s",
+        t.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,44 @@
+//! Bench: GPU-architecture sensitivity — the §2.2 claim that "the optimal
+//! parallelization option would depend on ... GPU architecture and
+//! specification". Tunes the same convs on three simulated GPUs and shows
+//! that the best schedule changes (so per-target tuning is necessary).
+//!
+//! `cargo bench --bench gpu_sensitivity`
+
+use tcconv::conv::ConvWorkload;
+use tcconv::searchspace::SpaceOptions;
+use tcconv::sim::{GpuSpec, Simulator};
+use tcconv::tuner::exhaustive_best;
+use tcconv::util::bench::section;
+
+fn main() {
+    section("GPU sensitivity — exhaustive-best schedule per target");
+    let gpus = [GpuSpec::t4(), GpuSpec::rtx2080ti(), GpuSpec::edge_small()];
+    for stage in [2usize, 5] {
+        let wl = ConvWorkload::resnet50_stage(stage, 8);
+        println!("\nstage{stage} (gemm {}x{}x{}):", wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
+        let mut best_cfgs = Vec::new();
+        for gpu in &gpus {
+            let sim = Simulator::noiseless(gpu.clone());
+            let (cfg, us, _) = exhaustive_best(&wl, SpaceOptions::default(), &sim);
+            println!("  {:<26} {:>9.2} us   {}", gpu.name, us, cfg.brief());
+            best_cfgs.push(cfg);
+        }
+        let all_same = best_cfgs.windows(2).all(|w| w[0] == w[1]);
+        println!(
+            "  -> optimal schedule {} across GPUs (paper §2.2: no universal schedule)",
+            if all_same { "UNCHANGED" } else { "CHANGES" }
+        );
+        // cross-cost: how much the T4-optimal schedule loses on the edge part
+        let edge = Simulator::noiseless(GpuSpec::edge_small());
+        let mut cache = tcconv::sim::ProfileCache::default();
+        let t4_cfg_on_edge = edge.measure(&wl, &best_cfgs[0], &mut cache).runtime_us;
+        let edge_best = edge.measure(&wl, &best_cfgs[2], &mut cache).runtime_us;
+        println!(
+            "  T4-optimal schedule run on edge-small: {:.2} us vs edge-optimal {:.2} us ({:+.1}%)",
+            t4_cfg_on_edge,
+            edge_best,
+            (t4_cfg_on_edge / edge_best - 1.0) * 100.0
+        );
+    }
+}

@@ -1,0 +1,125 @@
+//! Bench: L3 hot-path microbenchmarks — the §Perf targets of DESIGN.md.
+//!
+//! Targets: cost-model inference < 10 us/config, simulator < 30 us/config
+//! (cached), full 500-trial tune of one conv < 10 s.
+//!
+//! `cargo bench --bench hotpath`
+
+use std::collections::HashSet;
+
+use tcconv::conv::ConvWorkload;
+use tcconv::costmodel::{featurize, CostModel, Gbt, GbtParams};
+use tcconv::explore::ExplorerKind;
+use tcconv::quant::{pack_int4_into, warp_pack_int4, WARP_SIZE};
+use tcconv::searchspace::{ScheduleConfig, SearchSpace, SpaceOptions};
+use tcconv::sim::{analyze, GpuSpec, ProfileCache, Simulator};
+use tcconv::tuner::{Tuner, TunerOptions};
+use tcconv::util::bench::{bench, quick, section};
+use tcconv::util::Rng;
+
+fn main() {
+    let wl = ConvWorkload::resnet50_stage(2, 8);
+    let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
+    let sim = Simulator::noiseless(GpuSpec::t4());
+    let mut rng = Rng::new(5);
+
+    section("schedule featurization + cost model");
+    let cfg = ScheduleConfig::default();
+    bench("featurize(config)", || {
+        std::hint::black_box(featurize(&wl, &cfg));
+    });
+    // train a model of realistic size (500 measured configs)
+    let mut cache = ProfileCache::default();
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..500 {
+        let g = space.random_legal(&mut rng);
+        let c = space.decode(&g);
+        xs.push(featurize(&wl, &c));
+        ys.push(sim.measure(&wl, &c, &mut cache).runtime_us);
+    }
+    let mut model = Gbt::new(GbtParams::default());
+    let stats = bench("gbt.train (500 samples)", || {
+        let mut m = Gbt::new(GbtParams::default());
+        m.train(&xs, &ys);
+        std::hint::black_box(&m);
+    });
+    let _ = stats;
+    model.train(&xs, &ys);
+    let feats = featurize(&wl, &cfg);
+    let s = bench("gbt.predict", || {
+        std::hint::black_box(model.predict(&feats));
+    });
+    println!(
+        "  -> target <10 us/config: {}",
+        if s.mean_us() < 10.0 { "MET" } else { "MISSED" }
+    );
+
+    section("simulator");
+    let s = bench("simulator.measure (cached)", || {
+        std::hint::black_box(sim.measure(&wl, &cfg, &mut cache));
+    });
+    println!(
+        "  -> target <30 us/config: {}",
+        if s.mean_us() < 30.0 { "MET" } else { "MISSED" }
+    );
+    bench("traffic analyze (cached)", || {
+        std::hint::black_box(analyze(&wl, &cfg, &mut cache));
+    });
+
+    section("search-space ops");
+    let g0 = space.random_legal(&mut rng);
+    bench("space.random_legal", || {
+        let mut r = Rng::new(1);
+        std::hint::black_box(space.random_legal(&mut r));
+    });
+    bench("space.mutate_one_knob", || {
+        let mut r = Rng::new(2);
+        std::hint::black_box(space.mutate_one_knob(&g0, &mut r));
+    });
+    bench("space.decode", || {
+        std::hint::black_box(space.decode(&g0));
+    });
+
+    section("quant substrate");
+    let vals: Vec<i32> = (0..4096).map(|i| (i % 16) - 8).collect();
+    let mut out = Vec::with_capacity(512);
+    bench("pack_int4_into (4096 values)", || {
+        out.clear();
+        pack_int4_into(&vals, &mut out);
+        std::hint::black_box(&out);
+    });
+    let mut warp = [0i32; WARP_SIZE];
+    for (i, v) in warp.iter_mut().enumerate() {
+        *v = (i as i32 % 16) - 8;
+    }
+    bench("warp_pack_int4 (shuffle-tree emulation)", || {
+        std::hint::black_box(warp_pack_int4(&warp));
+    });
+
+    section("explorer round + end-to-end tune");
+    let mut ex = ExplorerKind::DiversityAware.build(&space);
+    let measured = HashSet::new();
+    bench("diversity-aware propose(32) [trained model]", || {
+        let mut r = Rng::new(3);
+        std::hint::black_box(ex.propose(&model, &measured, 32, &mut r));
+    });
+
+    let trials = if quick() { 96 } else { 500 };
+    let t = std::time::Instant::now();
+    let mut tuner = Tuner::new(
+        &wl,
+        TunerOptions { n_trials: trials, ..Default::default() },
+    );
+    let res = tuner.tune();
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "\nfull tune: {trials} trials in {dt:.2} s ({:.1} ms/trial) -> best {:.2} us",
+        dt * 1e3 / trials as f64,
+        res.runtime_us
+    );
+    println!(
+        "  -> target 500-trial tune <10 s: {}",
+        if dt / trials as f64 * 500.0 < 10.0 { "MET" } else { "MISSED" }
+    );
+}

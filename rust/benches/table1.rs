@@ -1,0 +1,38 @@
+//! Bench: regenerate Table 1 and time its building blocks.
+//!
+//! `cargo bench --bench table1` (env `BENCH_QUICK=1` for a fast pass,
+//! `TRIALS=n` to change the search budget).
+
+use tcconv::conv::ConvWorkload;
+use tcconv::report::{self, experiments};
+use tcconv::searchspace::ScheduleConfig;
+use tcconv::sim::{GpuSpec, ProfileCache, Simulator};
+use tcconv::util::bench::{bench, quick, section};
+
+fn main() {
+    let trials: usize = std::env::var("TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick() { 128 } else { 500 });
+
+    section("Table 1 — measurement-substrate microbenches");
+    let sim = Simulator::noiseless(GpuSpec::t4());
+    let wl = ConvWorkload::resnet50_stage(2, 8);
+    let mut cache = ProfileCache::default();
+    sim.measure(&wl, &ScheduleConfig::default(), &mut cache); // warm cache
+    bench("simulator.measure (cached profile)", || {
+        std::hint::black_box(sim.measure(&wl, &ScheduleConfig::default(), &mut cache));
+    });
+    bench("simulator.measure (cold profile)", || {
+        let mut c = ProfileCache::default();
+        std::hint::black_box(sim.measure(&wl, &ScheduleConfig::default(), &mut c));
+    });
+
+    section(&format!("Table 1 — full regeneration ({trials} trials/conv)"));
+    let t = std::time::Instant::now();
+    let rows = experiments::run_table1(trials, 0, &Simulator::default());
+    let dt = t.elapsed().as_secs_f64();
+    report::print_table1(&rows);
+    println!("\nregenerated in {dt:.1} s ({trials} trials x 4 convs + 2 exhaustive sweeps)");
+    println!("paper reference speedups: 3.85x 3.59x 3.66x 2.80x (T4 hardware)");
+}

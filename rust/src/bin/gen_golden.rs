@@ -1,0 +1,50 @@
+//! Generate cross-language golden vectors for the INT4 packing layout:
+//! writes `python/tests/golden_pack.json`, which `test_pack.py` checks the
+//! jnp implementation against. Run once: `cargo run --bin gen_golden`.
+
+use tcconv::quant::{pack_int4, PACK_FACTOR};
+use tcconv::util::{Json, Rng};
+
+fn main() {
+    let mut rng = Rng::new(0xBEEF);
+    let mut cases = Vec::new();
+
+    // edge cases first
+    let fixed: Vec<Vec<i32>> = vec![
+        vec![0; 8],
+        vec![7; 8],
+        vec![-8; 8],
+        vec![-1; 8],
+        vec![1, 2, 3, 4, 5, 6, 7, -8],
+        (0..16).map(|i| (i % 16) - 8).collect(),
+    ];
+    for vals in fixed {
+        cases.push(case(&vals));
+    }
+    for len_groups in 1..=4 {
+        for _ in 0..6 {
+            let vals: Vec<i32> = (0..len_groups * PACK_FACTOR)
+                .map(|_| rng.gen_range(16) as i32 - 8)
+                .collect();
+            cases.push(case(&vals));
+        }
+    }
+
+    let out = Json::Arr(cases);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/python/tests/golden_pack.json");
+    std::fs::write(path, out.to_string()).expect("writing golden_pack.json");
+    println!("wrote {path}");
+}
+
+fn case(vals: &[i32]) -> Json {
+    Json::obj(vec![
+        (
+            "values",
+            Json::Arr(vals.iter().map(|&v| Json::Num(v as f64)).collect()),
+        ),
+        (
+            "packed",
+            Json::Arr(pack_int4(vals).iter().map(|&w| Json::Num(w as f64)).collect()),
+        ),
+    ])
+}

@@ -1,0 +1,314 @@
+//! im2col index algebra and the static duplicates analysis of §3.1.
+//!
+//! Lowering a conv to a GEMM replicates feature-map elements: the 3x3
+//! kernel sweeping the map means adjacent output pixels share most of their
+//! receptive fields (paper Fig. 3/4). The position of every duplicate is a
+//! pure function of the conv configuration, so the compiler can map any
+//! *duplicate index* to its *genuine index* ahead of time and generate
+//! loads only for genuine data (Algorithm 1). This module is that analysis.
+
+use super::ConvWorkload;
+
+/// A coordinate in the im2col matrix: `row` indexes the output pixel
+/// (row-major over batch, out-height, out-width), `col` indexes the
+/// receptive-field slot (kernel-position-major, channel-minor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GemmCoord {
+    pub row: usize,
+    pub col: usize,
+}
+
+/// What an im2col cell refers to in the original feature map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SourceElem {
+    /// Zero-padding halo — never loaded from memory.
+    Pad,
+    /// Linear index into the NHWC feature map.
+    Feat(u64),
+}
+
+/// Aggregate statistics for a (row-range x col-range) im2col tile — the
+/// quantities the duplicate-aware load changes (paper §3.1.2, Fig. 15/16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileStats {
+    /// Total cells in the tile (`rows * cols`).
+    pub total: usize,
+    /// Cells referring to the zero-padding halo (no load either way).
+    pub padding: usize,
+    /// Distinct feature-map elements behind the non-padding cells — the
+    /// loads a duplicate-aware schedule issues.
+    pub unique: usize,
+}
+
+impl TileStats {
+    /// Loads issued without duplicate awareness: every non-pad cell.
+    pub fn naive_loads(&self) -> usize {
+        self.total - self.padding
+    }
+
+    /// naive / duplicate-aware load ratio (>= 1); the tile's reuse headroom.
+    pub fn duplicate_factor(&self) -> f64 {
+        if self.unique == 0 {
+            1.0
+        } else {
+            self.naive_loads() as f64 / self.unique as f64
+        }
+    }
+}
+
+/// Whole-matrix duplicates summary for a workload (used in reports).
+#[derive(Debug, Clone, Copy)]
+pub struct DuplicatesInfo {
+    pub gemm_cells: usize,
+    pub padding_cells: usize,
+    pub unique_elements: usize,
+}
+
+impl DuplicatesInfo {
+    pub fn duplicate_factor(&self) -> f64 {
+        (self.gemm_cells - self.padding_cells) as f64 / self.unique_elements as f64
+    }
+}
+
+/// The im2col index algebra for one conv configuration. All methods are
+/// O(1) index arithmetic — the "compiler's static awareness" of Fig. 4.
+#[derive(Debug, Clone)]
+pub struct Im2colIndex {
+    batch: usize,
+    height: usize,
+    width: usize,
+    in_channels: usize,
+    kernel: usize,
+    stride: usize,
+    padding: usize,
+    out_h: usize,
+    out_w: usize,
+}
+
+impl Im2colIndex {
+    pub fn new(wl: &ConvWorkload) -> Self {
+        Self {
+            batch: wl.batch,
+            height: wl.height,
+            width: wl.width,
+            in_channels: wl.in_channels,
+            kernel: wl.kernel,
+            stride: wl.stride,
+            padding: wl.padding,
+            out_h: wl.out_height(),
+            out_w: wl.out_width(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.batch * self.out_h * self.out_w
+    }
+
+    pub fn cols(&self) -> usize {
+        self.kernel * self.kernel * self.in_channels
+    }
+
+    /// Decompose a row index into (batch, out_y, out_x).
+    fn row_pixel(&self, row: usize) -> (usize, usize, usize) {
+        let per_img = self.out_h * self.out_w;
+        (row / per_img, (row % per_img) / self.out_w, row % self.out_w)
+    }
+
+    /// Decompose a col index into (kernel_y, kernel_x, channel).
+    fn col_slot(&self, col: usize) -> (usize, usize, usize) {
+        let c = col % self.in_channels;
+        let kpos = col / self.in_channels;
+        (kpos / self.kernel, kpos % self.kernel, c)
+    }
+
+    /// Resolve an im2col cell to its source feature element (or padding).
+    pub fn source(&self, at: GemmCoord) -> SourceElem {
+        let (n, oy, ox) = self.row_pixel(at.row);
+        let (ky, kx, c) = self.col_slot(at.col);
+        let y = (oy * self.stride + ky) as isize - self.padding as isize;
+        let x = (ox * self.stride + kx) as isize - self.padding as isize;
+        if y < 0 || x < 0 || y >= self.height as isize || x >= self.width as isize {
+            return SourceElem::Pad;
+        }
+        let (y, x) = (y as u64, x as u64);
+        let (h, w, ci) = (self.width as u64, self.in_channels as u64, c as u64);
+        SourceElem::Feat(((n as u64 * self.height as u64 + y) * h + x) * w + ci)
+    }
+
+    /// The *genuine index* of a cell (§3.1.2): the lexicographically first
+    /// im2col coordinate referring to the same feature element. Padding
+    /// cells are their own genuine index (they are never loaded).
+    pub fn genuine(&self, at: GemmCoord) -> GemmCoord {
+        let (n, oy, ox) = self.row_pixel(at.row);
+        let (ky, kx, c) = self.col_slot(at.col);
+        let y = (oy * self.stride + ky) as isize - self.padding as isize;
+        let x = (ox * self.stride + kx) as isize - self.padding as isize;
+        if y < 0 || x < 0 || y >= self.height as isize || x >= self.width as isize {
+            return at; // padding: no genuine remap
+        }
+        // Smallest output pixel (oy0, ox0) whose receptive field covers
+        // (y, x): maximize the kernel offset, i.e. minimize the pixel.
+        //   oy0 = max(0, ceil((y + p - (kh-1)) / s)), clamped to valid range
+        let min_pix = |v: isize| -> usize {
+            let lo = v + self.padding as isize - (self.kernel as isize - 1);
+            let lo = if lo <= 0 { 0 } else { (lo as usize + self.stride - 1) / self.stride };
+            lo
+        };
+        let oy0 = min_pix(y).min(self.out_h - 1);
+        let ox0 = min_pix(x).min(self.out_w - 1);
+        let ky0 = (y + self.padding as isize - (oy0 * self.stride) as isize) as usize;
+        let kx0 = (x + self.padding as isize - (ox0 * self.stride) as isize) as usize;
+        debug_assert!(ky0 < self.kernel && kx0 < self.kernel);
+        GemmCoord {
+            row: (n * self.out_h + oy0) * self.out_w + ox0,
+            col: (ky0 * self.kernel + kx0) * self.in_channels + c,
+        }
+    }
+
+    /// Exact tile statistics for a `rows x cols` tile at the given origin —
+    /// the per-thread-block numbers the simulator charges for global->shared
+    /// staging. Exact enumeration; interior tiles are cached upstream.
+    pub fn tile_stats(
+        &self,
+        row0: usize,
+        rows: usize,
+        col0: usize,
+        cols: usize,
+    ) -> TileStats {
+        let mut keys: Vec<u64> = Vec::with_capacity(rows * cols);
+        let mut padding = 0usize;
+        for r in row0..(row0 + rows).min(self.rows()) {
+            for c in col0..(col0 + cols).min(self.cols()) {
+                match self.source(GemmCoord { row: r, col: c }) {
+                    SourceElem::Pad => padding += 1,
+                    SourceElem::Feat(k) => keys.push(k),
+                }
+            }
+        }
+        let total = keys.len() + padding;
+        keys.sort_unstable();
+        keys.dedup();
+        TileStats { total, padding, unique: keys.len() }
+    }
+
+    /// Whole-matrix duplicates summary (paper Fig. 3: how much of the
+    /// lowered feature map is redundant).
+    pub fn duplicates_info(&self) -> DuplicatesInfo {
+        let gemm_cells = self.rows() * self.cols();
+        // unique = all feature elements (every input element is used by at
+        // least one output pixel for same-padding convs); padding counted
+        // analytically per kernel offset.
+        let mut padding_cells = 0usize;
+        for ky in 0..self.kernel {
+            for kx in 0..self.kernel {
+                let valid_y = self.valid_out_positions(ky, self.height, self.out_h);
+                let valid_x = self.valid_out_positions(kx, self.width, self.out_w);
+                padding_cells += (self.out_h * self.out_w - valid_y * valid_x)
+                    * self.in_channels
+                    * self.batch;
+            }
+        }
+        DuplicatesInfo {
+            gemm_cells,
+            padding_cells,
+            unique_elements: self.batch * self.height * self.width * self.in_channels,
+        }
+    }
+
+    /// Number of output positions along one axis for which kernel offset
+    /// `k` hits inside the (unpadded) feature map.
+    fn valid_out_positions(&self, k: usize, extent: usize, out: usize) -> usize {
+        (0..out)
+            .filter(|&o| {
+                let v = (o * self.stride + k) as isize - self.padding as isize;
+                v >= 0 && (v as usize) < extent
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Im2colIndex {
+        ConvWorkload::new("t", 1, 6, 6, 2, 4).im2col()
+    }
+
+    #[test]
+    fn genuine_is_idempotent_and_source_preserving() {
+        let ix = tiny();
+        for row in 0..ix.rows() {
+            for col in 0..ix.cols() {
+                let at = GemmCoord { row, col };
+                let g = ix.genuine(at);
+                assert_eq!(ix.genuine(g), g, "idempotence at {at:?}");
+                assert_eq!(ix.source(g), ix.source(at), "source at {at:?}");
+                assert!(g <= at, "genuine not canonical-first at {at:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_fig4_duplicate_example() {
+        // 3x3 stride-1: pixel p and pixel p+1 in the same output row share
+        // the window shifted by one column; the element at kernel col j+1
+        // of pixel p is the element at kernel col j of pixel p+1.
+        let ix = tiny();
+        let c = 2;
+        let a = GemmCoord { row: 7, col: (0 * 3 + 1) * c }; // ky=0, kx=1
+        let b = GemmCoord { row: 8, col: (0 * 3 + 0) * c }; // ky=0, kx=0
+        assert_eq!(ix.source(a), ix.source(b));
+        assert_eq!(ix.genuine(a), ix.genuine(b));
+    }
+
+    #[test]
+    fn whole_matrix_duplicate_factor_near_kernel_area() {
+        // For large maps the 3x3 im2col replicates each element ~9x.
+        let ix = ConvWorkload::resnet50_stage(2, 1).im2col();
+        let info = ix.duplicates_info();
+        let f = info.duplicate_factor();
+        assert!(f > 8.0 && f <= 9.0, "duplicate factor {f}");
+    }
+
+    #[test]
+    fn tile_stats_consistency() {
+        let ix = tiny();
+        let full = ix.tile_stats(0, ix.rows(), 0, ix.cols());
+        let info = ix.duplicates_info();
+        assert_eq!(full.total, info.gemm_cells);
+        assert_eq!(full.padding, info.padding_cells);
+        assert_eq!(full.unique, info.unique_elements);
+    }
+
+    #[test]
+    fn tile_stats_single_cell() {
+        let ix = tiny();
+        // corner cell row 0 col 0 is padding (ky=kx=0 at output (0,0))
+        let s = ix.tile_stats(0, 1, 0, 1);
+        assert_eq!(s.total, 1);
+        assert_eq!(s.padding, 1);
+        assert_eq!(s.unique, 0);
+    }
+
+    #[test]
+    fn duplicate_factor_of_row_tile_exceeds_one() {
+        // A tile covering a full output row at kernel-row granularity has
+        // heavy column-wise duplication.
+        let ix = tiny();
+        let s = ix.tile_stats(0, 6, 0, ix.cols());
+        assert!(s.duplicate_factor() > 1.5, "{:?}", s);
+    }
+
+    #[test]
+    fn stride_two_less_duplication() {
+        let mut wl = ConvWorkload::new("s2", 1, 8, 8, 4, 4);
+        wl.stride = 2;
+        let lo = wl.im2col().duplicates_info().duplicate_factor();
+        let hi = ConvWorkload::new("s1", 1, 8, 8, 4, 4)
+            .im2col()
+            .duplicates_info()
+            .duplicate_factor();
+        assert!(lo < hi, "stride2 {lo} vs stride1 {hi}");
+    }
+}

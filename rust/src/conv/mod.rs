@@ -1,0 +1,216 @@
+//! Convolution workload definitions and the im2col index algebra.
+//!
+//! The paper's unit of work is a 2-D convolution executed as an im2col GEMM
+//! on Tensor Cores (§2.1): a conv with batch `N`, feature map `H x W`,
+//! input channels `I`, output channels `O` and kernel `KH x KW` becomes
+//! a `(N*OH*OW) x (KH*KW*I)` by `(KH*KW*I) x O` matrix multiplication.
+//!
+//! [`im2col`] implements the *static duplicates analysis* of §3.1: given
+//! only the conv configuration, it computes the duplicate-index →
+//! genuine-index mapping the compiler uses to elide redundant loads.
+
+pub mod execute;
+mod im2col;
+
+pub use execute::{qconv2d, ConvInstance};
+pub use im2col::{DuplicatesInfo, GemmCoord, Im2colIndex, SourceElem};
+
+/// Reduced-precision data type of a convolution (paper §1: the MMA
+/// operand group doubles as the bit width halves — T4 INT4 MMA takes an
+/// 8x32 operand, twice INT8's 8x16 — doubling peak throughput).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    #[default]
+    Int4,
+    Int8,
+}
+
+impl Precision {
+    /// Bytes per element (INT4 packs two per byte).
+    pub fn element_bytes(self) -> f64 {
+        match self {
+            Precision::Int4 => 0.5,
+            Precision::Int8 => 1.0,
+        }
+    }
+
+    /// K-group of one MMA instruction.
+    pub fn mma_k(self) -> usize {
+        match self {
+            Precision::Int4 => 32,
+            Precision::Int8 => 16,
+        }
+    }
+
+    /// Values packed per 32-bit register.
+    pub fn pack_factor(self) -> usize {
+        match self {
+            Precision::Int4 => 8,
+            Precision::Int8 => 4,
+        }
+    }
+}
+
+/// High-level convolution definition (paper §2.2: the "algorithm-level
+/// convolution configuration" the compiler statically knows).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ConvWorkload {
+    pub name: String,
+    pub batch: usize,
+    pub height: usize,
+    pub width: usize,
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub precision: Precision,
+}
+
+impl ConvWorkload {
+    pub fn new(
+        name: impl Into<String>,
+        batch: usize,
+        height: usize,
+        width: usize,
+        in_channels: usize,
+        out_channels: usize,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            batch,
+            height,
+            width,
+            in_channels,
+            out_channels,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+            precision: Precision::Int4,
+        }
+    }
+
+    /// Same conv at a different precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Same conv with a different stride (e.g. the stride-2 3x3 of a
+    /// ResNet stage-transition block).
+    pub fn with_stride(mut self, stride: usize) -> Self {
+        self.stride = stride;
+        self
+    }
+
+    /// The four 3x3 convolutions of Table 1: one per ResNet50 residual
+    /// stage. Feature size halves and channels double per stage, so the op
+    /// count is constant (1,849,688,064 at batch 8).
+    pub fn resnet50_stage(stage: usize, batch: usize) -> Self {
+        assert!((2..=5).contains(&stage), "ResNet50 stages are 2..=5");
+        let shrink = 1 << (stage - 2);
+        Self::new(
+            format!("resnet50_stage{stage}"),
+            batch,
+            56 / shrink,
+            56 / shrink,
+            64 * shrink,
+            64 * shrink,
+        )
+    }
+
+    /// All Table 1 workloads at the paper's batch size.
+    pub fn table1_workloads() -> Vec<Self> {
+        (2..=5).map(|s| Self::resnet50_stage(s, 8)).collect()
+    }
+
+    pub fn out_height(&self) -> usize {
+        (self.height + 2 * self.padding - self.kernel) / self.stride + 1
+    }
+
+    pub fn out_width(&self) -> usize {
+        (self.width + 2 * self.padding - self.kernel) / self.stride + 1
+    }
+
+    /// im2col GEMM rows: one per output pixel.
+    pub fn gemm_m(&self) -> usize {
+        self.batch * self.out_height() * self.out_width()
+    }
+
+    /// im2col GEMM columns: one per output channel.
+    pub fn gemm_n(&self) -> usize {
+        self.out_channels
+    }
+
+    /// im2col GEMM accumulation depth.
+    pub fn gemm_k(&self) -> usize {
+        self.kernel * self.kernel * self.in_channels
+    }
+
+    /// Multiply-accumulate operation count (2 ops/MAC) — Table 1's OPs row.
+    pub fn ops(&self) -> u64 {
+        2 * self.gemm_m() as u64 * self.gemm_n() as u64 * self.gemm_k() as u64
+    }
+
+    /// Bytes of the (unpadded) input feature map at this precision.
+    pub fn input_bytes(&self) -> usize {
+        (self.batch as f64
+            * self.height as f64
+            * self.width as f64
+            * self.in_channels as f64
+            * self.precision.element_bytes()) as usize
+    }
+
+    /// Paper §4.4 taxonomy: "larger height & width" vs "larger channels &
+    /// filters" convolutions. Duplicate-awareness favors the former.
+    pub fn is_spatial_heavy(&self) -> bool {
+        self.height * self.width >= self.in_channels
+    }
+
+    /// The im2col index algebra for this conv.
+    pub fn im2col(&self) -> Im2colIndex {
+        Im2colIndex::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_ops_constant() {
+        for wl in ConvWorkload::table1_workloads() {
+            assert_eq!(wl.ops(), 1_849_688_064, "{}", wl.name);
+        }
+    }
+
+    #[test]
+    fn stage_shapes() {
+        let s2 = ConvWorkload::resnet50_stage(2, 8);
+        assert_eq!((s2.height, s2.in_channels), (56, 64));
+        let s5 = ConvWorkload::resnet50_stage(5, 8);
+        assert_eq!((s5.height, s5.in_channels), (7, 512));
+        assert_eq!(s5.gemm_k(), 4608);
+    }
+
+    #[test]
+    fn same_padding_preserves_spatial() {
+        for wl in ConvWorkload::table1_workloads() {
+            assert_eq!(wl.out_height(), wl.height);
+            assert_eq!(wl.out_width(), wl.width);
+        }
+    }
+
+    #[test]
+    fn spatial_heavy_taxonomy() {
+        assert!(ConvWorkload::resnet50_stage(2, 8).is_spatial_heavy());
+        assert!(ConvWorkload::resnet50_stage(3, 8).is_spatial_heavy());
+        assert!(!ConvWorkload::resnet50_stage(5, 8).is_spatial_heavy());
+    }
+
+    #[test]
+    #[should_panic]
+    fn stage_out_of_range_panics() {
+        ConvWorkload::resnet50_stage(6, 8);
+    }
+}

@@ -1,0 +1,110 @@
+//! Static schedule features for the cost model — AutoTVM-style loop/tile
+//! descriptors derivable without running anything.
+//!
+//! Deliberately *not* the simulator's traffic analysis: the model has to
+//! learn the cost structure from measurements, as in the paper. Only index
+//! arithmetic on (workload, schedule) appears here.
+
+use crate::conv::ConvWorkload;
+use crate::searchspace::ScheduleConfig;
+
+/// Number of features [`featurize`] emits.
+pub const FEATURE_DIM: usize = 24;
+
+fn lg(x: usize) -> f64 {
+    (x.max(1) as f64).log2()
+}
+
+/// Feature vector for one (workload, schedule) pair.
+pub fn featurize(wl: &ConvWorkload, cfg: &ScheduleConfig) -> Vec<f64> {
+    let (m, n, k) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
+    let (bm, bn, bk) = (cfg.block_m(), cfg.block_n(), cfg.block_k());
+    let m_pad = cfg.padded_m(m);
+    let nm = m_pad / bm;
+    let nn = n / bn;
+    let n_blocks = nm * nn;
+    let threads = cfg.threads_per_block();
+
+    // naive per-block byte estimates (im2col tile + weight tile + output)
+    let in_tile = (bm * bk) as f64 * 0.5;
+    let w_tile = (bk * bn) as f64 * 0.5;
+    let out_tile_packed = (bm * bn) as f64 * 0.5;
+    let out_tile_unpacked = (bm * bn) as f64 * 4.0;
+
+    // arithmetic intensity of a block: MACs per staged byte
+    let macs_per_block = (bm * bn * k) as f64;
+    let staged = (in_tile + w_tile) * (k / bk) as f64;
+
+    let v = vec![
+        // raw knobs (log2 for the tree splits)
+        lg(cfg.blk_row_warps),
+        lg(cfg.blk_col_warps),
+        lg(cfg.warp_row_tiles),
+        lg(cfg.warp_col_tiles),
+        lg(cfg.chunk),
+        cfg.reorder_inner as f64,
+        cfg.dup_aware as u8 as f64,
+        cfg.reg_packing as u8 as f64,
+        cfg.nhwcnc_layout as u8 as f64,
+        // tile geometry
+        lg(bm),
+        lg(bn),
+        lg(bk),
+        lg(threads),
+        lg(cfg.warps_per_block()),
+        lg(cfg.mma_per_block_step()),
+        // grid shape & utilization proxies
+        lg(n_blocks),
+        (n_blocks as f64 / 40.0).min(8.0), // blocks per SM if evenly spread
+        (m_pad - m) as f64 / m_pad as f64, // padding waste fraction
+        // memory-shape proxies
+        (in_tile + w_tile) / 1024.0,
+        out_tile_packed / 1024.0,
+        out_tile_unpacked / 1024.0,
+        macs_per_block / staged.max(1.0) / 1024.0,
+        // workload context (lets one model generalize across stages)
+        lg(wl.height * wl.width),
+        lg(wl.in_channels),
+    ];
+    debug_assert_eq!(v.len(), FEATURE_DIM);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::searchspace::{MMA_K, MMA_M, MMA_N};
+
+    #[test]
+    fn feature_dim_consistent() {
+        let wl = ConvWorkload::resnet50_stage(3, 8);
+        assert_eq!(featurize(&wl, &ScheduleConfig::default()).len(), FEATURE_DIM);
+    }
+
+    #[test]
+    fn different_configs_have_different_features() {
+        let wl = ConvWorkload::resnet50_stage(2, 8);
+        let a = featurize(&wl, &ScheduleConfig::default());
+        let b = featurize(
+            &wl,
+            &ScheduleConfig { warp_row_tiles: 8, dup_aware: false, ..Default::default() },
+        );
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn finite_for_all_stage_defaults() {
+        for s in 2..=5 {
+            let wl = ConvWorkload::resnet50_stage(s, 8);
+            for f in featurize(&wl, &ScheduleConfig::default()) {
+                assert!(f.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn mma_atoms_constants() {
+        assert_eq!(MMA_M * MMA_N, 64);
+        assert_eq!(MMA_K, 32);
+    }
+}

@@ -1,0 +1,320 @@
+//! Gradient-boosted regression trees with a pairwise ranking objective —
+//! our XGBoost stand-in (AutoTVM trains its cost model "with ranking loss
+//! objective function").
+//!
+//! Boosting round: compute pairwise-logistic gradients/hessians of the
+//! current scores against the measured ordering (faster runtime = should
+//! score higher), then fit a depth-limited regression tree to the
+//! Newton targets and add it with shrinkage. Trees use exact greedy splits
+//! — sample counts here are tuning-trial sized (<= a few thousand).
+
+use crate::util::Rng;
+
+/// One split node / leaf of a regression tree (flattened storage).
+#[derive(Debug, Clone)]
+enum Node {
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+    Leaf { value: f64 },
+}
+
+/// A fitted regression tree.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    i = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+/// Boosting hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct GbtParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub learning_rate: f64,
+    pub min_samples_leaf: usize,
+    /// L2 regularization on leaf values (XGBoost lambda).
+    pub lambda: f64,
+    /// Pairs sampled per example per round for the rank gradients.
+    pub pairs_per_example: usize,
+    pub seed: u64,
+}
+
+impl Default for GbtParams {
+    fn default() -> Self {
+        Self {
+            n_trees: 50,
+            max_depth: 5,
+            learning_rate: 0.2,
+            min_samples_leaf: 4,
+            lambda: 1.0,
+            pairs_per_example: 8,
+            seed: 0,
+        }
+    }
+}
+
+/// The boosted ensemble.
+#[derive(Debug, Clone)]
+pub struct Gbt {
+    params: GbtParams,
+    trees: Vec<Tree>,
+    base_score: f64,
+}
+
+impl Gbt {
+    pub fn new(params: GbtParams) -> Self {
+        Self { params, trees: Vec::new(), base_score: 0.0 }
+    }
+
+    pub fn trees(&self) -> &[Tree] {
+        &self.trees
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut s = self.base_score;
+        for t in &self.trees {
+            s += self.params.learning_rate * t.predict(x);
+        }
+        s
+    }
+
+    /// Fit with the pairwise ranking objective: for examples i faster than
+    /// j we want score_i > score_j; gradients follow the logistic pairwise
+    /// loss log(1 + exp(-(s_i - s_j))).
+    pub fn fit_rank(&mut self, xs: &[Vec<f64>], runtime_us: &[f64]) {
+        assert_eq!(xs.len(), runtime_us.len());
+        self.trees.clear();
+        self.base_score = 0.0;
+        let n = xs.len();
+        if n < 4 {
+            return;
+        }
+        let mut rng = Rng::new(self.params.seed ^ n as u64);
+        let mut scores = vec![0.0f64; n];
+
+        // presort each feature once; nodes filter these global orders by a
+        // membership mask in O(n) instead of re-sorting per node (§Perf:
+        // cut fit time ~3x at 500 samples)
+        let n_feats = xs[0].len();
+        // column-major copy: split scans read one feature contiguously
+        // (§Perf iteration 3)
+        let cols: Vec<Vec<f64>> = (0..n_feats)
+            .map(|f| xs.iter().map(|x| x[f]).collect())
+            .collect();
+        let sorted_orders: Vec<Vec<usize>> = (0..n_feats)
+            .map(|f| {
+                let mut ord: Vec<usize> = (0..n).collect();
+                ord.sort_by(|&a, &b| cols[f][a].partial_cmp(&cols[f][b]).unwrap());
+                ord
+            })
+            .collect();
+
+        for _round in 0..self.params.n_trees {
+            // pairwise gradients/hessians
+            let mut grad = vec![0.0f64; n];
+            let mut hess = vec![0.0f64; n];
+            for i in 0..n {
+                for _ in 0..self.params.pairs_per_example {
+                    let j = rng.gen_range(n);
+                    if i == j || runtime_us[i] == runtime_us[j] {
+                        continue;
+                    }
+                    // w = winner (faster), l = loser
+                    let (w, l) = if runtime_us[i] < runtime_us[j] { (i, j) } else { (j, i) };
+                    let d = scores[w] - scores[l];
+                    let p = 1.0 / (1.0 + d.exp()); // dL/dd = -p
+                    let h = (p * (1.0 - p)).max(1e-6);
+                    grad[w] += p;
+                    grad[l] -= p;
+                    hess[w] += h;
+                    hess[l] += h;
+                }
+            }
+
+            // Newton targets: g / (h + lambda); fit tree to those
+            let idx: Vec<usize> = (0..n).collect();
+            let mut nodes = Vec::new();
+            self.build_node(&cols, &sorted_orders, &grad, &hess, idx, 0, &mut nodes);
+            let tree = Tree { nodes };
+            for i in 0..n {
+                scores[i] += self.params.learning_rate * tree.predict(&xs[i]);
+            }
+            self.trees.push(tree);
+        }
+    }
+
+    /// Recursively grow one node; returns its index in `nodes`.
+    #[allow(clippy::too_many_arguments)]
+    fn build_node(
+        &self,
+        cols: &[Vec<f64>], // column-major: cols[feature][sample]
+        sorted_orders: &[Vec<usize>],
+        grad: &[f64],
+        hess: &[f64],
+        idx: Vec<usize>,
+        depth: usize,
+        nodes: &mut Vec<Node>,
+    ) -> usize {
+        let g_sum: f64 = idx.iter().map(|&i| grad[i]).sum();
+        let h_sum: f64 = idx.iter().map(|&i| hess[i]).sum();
+        let leaf_value = g_sum / (h_sum + self.params.lambda);
+
+        if depth >= self.params.max_depth || idx.len() < 2 * self.params.min_samples_leaf {
+            nodes.push(Node::Leaf { value: leaf_value });
+            return nodes.len() - 1;
+        }
+
+        // exact greedy split: maximize gain = GL^2/(HL+λ) + GR^2/(HR+λ)
+        let parent_score = g_sum * g_sum / (h_sum + self.params.lambda);
+        let mut best: Option<(f64, usize, f64)> = None; // (gain, feature, threshold)
+        let n_feats = cols.len();
+        // membership mask for O(n) filtering of the presorted orders
+        let mut member = vec![false; cols[0].len()];
+        for &i in &idx {
+            member[i] = true;
+        }
+        let mut order: Vec<usize> = Vec::with_capacity(idx.len());
+        for f in 0..n_feats {
+            order.clear();
+            order.extend(sorted_orders[f].iter().copied().filter(|&i| member[i]));
+            let mut gl = 0.0;
+            let mut hl = 0.0;
+            for w in 0..order.len().saturating_sub(1) {
+                let i = order[w];
+                gl += grad[i];
+                hl += hess[i];
+                // can't split between equal feature values
+                if cols[f][order[w]] == cols[f][order[w + 1]] {
+                    continue;
+                }
+                let nl = w + 1;
+                let nr = order.len() - nl;
+                if nl < self.params.min_samples_leaf || nr < self.params.min_samples_leaf {
+                    continue;
+                }
+                let gr = g_sum - gl;
+                let hr = h_sum - hl;
+                let gain = gl * gl / (hl + self.params.lambda)
+                    + gr * gr / (hr + self.params.lambda)
+                    - parent_score;
+                if best.map_or(true, |(bg, _, _)| gain > bg) {
+                    let thr = 0.5 * (cols[f][order[w]] + cols[f][order[w + 1]]);
+                    best = Some((gain, f, thr));
+                }
+            }
+        }
+
+        match best {
+            Some((gain, feature, threshold)) if gain > 1e-9 => {
+                let (li, ri): (Vec<usize>, Vec<usize>) =
+                    idx.into_iter().partition(|&i| cols[feature][i] <= threshold);
+                let slot = nodes.len();
+                nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+                let left = self.build_node(cols, sorted_orders, grad, hess, li, depth + 1, nodes);
+                let right = self.build_node(cols, sorted_orders, grad, hess, ri, depth + 1, nodes);
+                nodes[slot] = Node::Split { feature, threshold, left, right };
+                slot
+            }
+            _ => {
+                nodes.push(Node::Leaf { value: leaf_value });
+                nodes.len() - 1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic ranking task: runtime is a noisy function of 3 features.
+    fn synth(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let f: Vec<f64> = (0..6).map(|_| rng.gen_f64() * 4.0).collect();
+            let y = 10.0 + 5.0 * f[0] - 3.0 * f[1] + f[2] * f[2] + 0.3 * rng.gen_gauss();
+            xs.push(f);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn learns_synthetic_ranking() {
+        let (xs, ys) = synth(300, 1);
+        let (hx, hy) = synth(80, 2);
+        let mut m = Gbt::new(GbtParams::default());
+        m.fit_rank(&xs, &ys);
+
+        let mut ok = 0;
+        let mut tot = 0;
+        for i in 0..hx.len() {
+            for j in (i + 1)..hx.len() {
+                if (hy[i] - hy[j]).abs() < 0.5 {
+                    continue;
+                }
+                tot += 1;
+                // lower runtime should get the higher score
+                if (m.predict(&hx[i]) > m.predict(&hx[j])) == (hy[i] < hy[j]) {
+                    ok += 1;
+                }
+            }
+        }
+        let acc = ok as f64 / tot as f64;
+        assert!(acc > 0.85, "synthetic rank accuracy {acc}");
+    }
+
+    #[test]
+    fn untrained_predicts_constant() {
+        let m = Gbt::new(GbtParams::default());
+        assert_eq!(m.predict(&[1.0; 6]), m.predict(&[9.0; 6]));
+        assert!(m.trees().is_empty());
+    }
+
+    #[test]
+    fn tiny_dataset_is_noop() {
+        let mut m = Gbt::new(GbtParams::default());
+        m.fit_rank(&[vec![1.0], vec![2.0]], &[1.0, 2.0]);
+        assert!(m.trees().is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (xs, ys) = synth(100, 3);
+        let mut a = Gbt::new(GbtParams::default());
+        let mut b = Gbt::new(GbtParams::default());
+        a.fit_rank(&xs, &ys);
+        b.fit_rank(&xs, &ys);
+        for x in xs.iter().take(10) {
+            assert_eq!(a.predict(x), b.predict(x));
+        }
+    }
+
+    #[test]
+    fn respects_min_samples_leaf() {
+        let (xs, ys) = synth(40, 5);
+        let mut m = Gbt::new(GbtParams { min_samples_leaf: 10, max_depth: 3, ..Default::default() });
+        m.fit_rank(&xs, &ys);
+        assert!(m.is_fitted_sane());
+    }
+
+    impl Gbt {
+        fn is_fitted_sane(&self) -> bool {
+            !self.trees.is_empty() && self.trees.iter().all(|t| !t.nodes.is_empty())
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! The diversity-aware exploration module — the paper's §3.4 contribution
+//! (Fig. 13).
+//!
+//! AutoTVM's weakness: the young cost model overestimates configs similar
+//! to the previous best and underestimates the rest, so the annealer keeps
+//! proposing near-duplicates that teach the model nothing. The fix, per
+//! the paper:
+//!
+//! 1. create **two** mutant candidates from each previous candidate,
+//! 2. select **half of the entire mutant pool considering configuration
+//!    diversity** (we use greedy max–min Hamming distance, seeded by the
+//!    best-scored mutant, so the best candidate always survives),
+//! 3. let the selected mutants **compete with the previous candidates**
+//!    (annealing acceptance), "improving the quality of the competition".
+//!
+//! The rest of the loop (energy = cost-model score, temperature schedule,
+//! final top-31 + 1 random batch) is identical to [`super::sa`].
+
+use std::collections::HashSet;
+
+use super::sa::{featurize_geno, population_ranked};
+use super::{fill_random, AnnealingParams, Explorer};
+use crate::costmodel::CostModel;
+use crate::searchspace::{Genotype, SearchSpace};
+use crate::util::Rng;
+
+/// Exploration module with diversity-aware mutant selection.
+pub struct DiversityAware {
+    space: SearchSpace,
+    params: AnnealingParams,
+    chains: Vec<Genotype>,
+}
+
+impl DiversityAware {
+    pub fn new(space: SearchSpace, params: AnnealingParams) -> Self {
+        Self { space, params, chains: Vec::new() }
+    }
+
+    fn ensure_chains(&mut self, rng: &mut Rng) {
+        while self.chains.len() < self.params.parallel {
+            let g = self.space.random_legal(rng);
+            self.chains.push(g);
+        }
+    }
+
+    /// Greedy max–min selection: pick `k` genotypes maximizing the minimum
+    /// pairwise Hamming distance to what is already picked. Seeded with
+    /// the best-scored candidate so selection never discards the top
+    /// mutant. O(k * n) with incremental min-distance updates.
+    pub fn select_diverse(
+        pool: &[(Genotype, f64)],
+        k: usize,
+    ) -> Vec<(Genotype, f64)> {
+        if pool.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let seed = pool
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let mut picked = vec![seed];
+        let mut min_dist: Vec<usize> = pool
+            .iter()
+            .map(|(g, _)| SearchSpace::distance(g, &pool[seed].0))
+            .collect();
+        while picked.len() < k.min(pool.len()) {
+            // farthest-first; break distance ties by higher score
+            let next = (0..pool.len())
+                .filter(|i| !picked.contains(i))
+                .max_by(|&a, &b| {
+                    min_dist[a]
+                        .cmp(&min_dist[b])
+                        .then(pool[a].1.partial_cmp(&pool[b].1).unwrap())
+                })
+                .unwrap();
+            picked.push(next);
+            for i in 0..pool.len() {
+                let d = SearchSpace::distance(&pool[i].0, &pool[next].0);
+                min_dist[i] = min_dist[i].min(d);
+            }
+        }
+        picked.into_iter().map(|i| pool[i].clone()).collect()
+    }
+
+    /// The diversity-aware annealing walk (Fig. 13): two mutants per
+    /// parent -> diversity-select half -> compete with parents. Proposals
+    /// come from the final population, as in [`super::sa`] — the point of
+    /// diversity selection is precisely that this population stays spread
+    /// out instead of collapsing around the model's current favourite.
+    pub(crate) fn anneal(
+        &mut self,
+        model: &dyn CostModel,
+        _elite_size: usize,
+        rng: &mut Rng,
+    ) -> Vec<(Genotype, f64)> {
+        self.ensure_chains(rng);
+        // memoize model scores: annealing revisits the same genotypes
+        // heavily near convergence (§Perf iteration 2)
+        let mut memo: std::collections::HashMap<Genotype, f64> = std::collections::HashMap::new();
+        let space = &self.space;
+        let mut score_of = move |g: &Genotype, model: &dyn CostModel| -> f64 {
+            if let Some(&s) = memo.get(g) {
+                return s;
+            }
+            let s = model.predict(&featurize_geno(space, g));
+            memo.insert(g.clone(), s);
+            s
+        };
+        let mut scores: Vec<f64> = self
+            .chains
+            .iter()
+            .map(|g| score_of(g, model))
+            .collect();
+
+        let mut temp = self.params.temp_start;
+        let mut best_seen = f64::NEG_INFINITY;
+        let mut stale = 0usize;
+        for _iter in 0..self.params.n_iters {
+            // 1. two mutants per parent
+            let mut pool: Vec<(usize, Genotype, f64)> = Vec::with_capacity(2 * self.chains.len());
+            for (c, parent) in self.chains.iter().enumerate() {
+                for _ in 0..2 {
+                    let m = self.space.mutate_one_knob(parent, rng);
+                    let s = score_of(&m, model);
+                    pool.push((c, m, s));
+                }
+            }
+            // 2. keep half the mutant pool by configuration diversity
+            let flat: Vec<(Genotype, f64)> =
+                pool.iter().map(|(_, g, s)| (g.clone(), *s)).collect();
+            let kept = Self::select_diverse(&flat, flat.len() / 2);
+            let kept_set: HashSet<&Genotype> = kept.iter().map(|(g, _)| g).collect();
+
+            // 3. survivors compete with their parents (annealing rule)
+            let mut changed = false;
+            for (c, m, s) in pool.into_iter() {
+                if !kept_set.contains(&m) {
+                    continue;
+                }
+                let accept = s > scores[c] || {
+                    let p = ((s - scores[c]) / temp.max(1e-9)).exp();
+                    rng.gen_f64() < p
+                };
+                if accept {
+                    self.chains[c] = m;
+                    scores[c] = s;
+                    if s > best_seen {
+                        best_seen = s;
+                        changed = true;
+                    }
+                }
+            }
+            temp = (temp - self.params.cooling).max(0.0);
+            stale = if changed { 0 } else { stale + 1 };
+            if stale >= self.params.stop_stale {
+                break;
+            }
+        }
+        population_ranked(&self.chains, &scores)
+    }
+}
+
+impl Explorer for DiversityAware {
+    fn propose(
+        &mut self,
+        model: &dyn CostModel,
+        measured: &HashSet<Genotype>,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Vec<Genotype> {
+        let mut out = Vec::with_capacity(batch);
+        if model.is_trained() {
+            let elite = self.anneal(model, batch * 4, rng);
+            for (g, _) in elite {
+                if out.len() + self.params.n_random_per_batch >= batch {
+                    break;
+                }
+                if !measured.contains(&g) {
+                    out.push(g);
+                }
+            }
+        }
+        fill_random(&self.space, &mut out, measured, batch, rng);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "diversity-aware"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::searchspace::SpaceOptions;
+
+    fn geno(bits: &[u8]) -> Genotype {
+        bits.to_vec()
+    }
+
+    #[test]
+    fn select_diverse_keeps_best() {
+        let pool = vec![
+            (geno(&[0, 0, 0]), 1.0),
+            (geno(&[0, 0, 1]), 5.0), // best
+            (geno(&[3, 3, 3]), 0.5),
+            (geno(&[0, 1, 0]), 2.0),
+        ];
+        let kept = DiversityAware::select_diverse(&pool, 2);
+        assert!(kept.iter().any(|(_, s)| *s == 5.0), "best must survive");
+    }
+
+    #[test]
+    fn select_diverse_prefers_far_points() {
+        // best at origin; a near-duplicate with high score vs a distant
+        // point with low score: diversity keeps the distant one
+        let pool = vec![
+            (geno(&[0, 0, 0, 0]), 10.0),
+            (geno(&[0, 0, 0, 1]), 9.9), // near duplicate
+            (geno(&[3, 3, 3, 3]), 0.1), // far away
+        ];
+        let kept = DiversityAware::select_diverse(&pool, 2);
+        assert!(kept.iter().any(|(g, _)| g == &geno(&[3, 3, 3, 3])));
+        assert!(!kept.iter().any(|(g, _)| g == &geno(&[0, 0, 0, 1])));
+    }
+
+    #[test]
+    fn select_diverse_handles_degenerate_sizes() {
+        assert!(DiversityAware::select_diverse(&[], 4).is_empty());
+        let one = vec![(geno(&[1]), 1.0)];
+        assert_eq!(DiversityAware::select_diverse(&one, 0).len(), 0);
+        assert_eq!(DiversityAware::select_diverse(&one, 3).len(), 1);
+    }
+
+    #[test]
+    fn kept_half_is_more_diverse_than_pool_average() {
+        // mutant pools concentrated around two modes: selection's min
+        // pairwise distance must beat a random half's
+        let mut rng = Rng::new(7);
+        let mut pool = Vec::new();
+        for i in 0..64u8 {
+            let mut g = vec![0u8; 6];
+            if i % 2 == 0 {
+                g[5] = i % 3;
+            } else {
+                g[0] = 3;
+                g[1] = i % 2;
+            }
+            pool.push((g, rng.gen_f64()));
+        }
+        let kept = DiversityAware::select_diverse(&pool, 32);
+        let min_pairwise = |set: &[(Genotype, f64)]| -> usize {
+            let mut m = usize::MAX;
+            for i in 0..set.len() {
+                for j in (i + 1)..set.len() {
+                    m = m.min(SearchSpace::distance(&set[i].0, &set[j].0));
+                }
+            }
+            m
+        };
+        // a contiguous half of the pool (random order) for comparison
+        let naive_half: Vec<_> = pool.iter().take(32).cloned().collect();
+        assert!(min_pairwise(&kept) >= min_pairwise(&naive_half));
+    }
+
+    #[test]
+    fn proposes_legal_batch_with_untrained_model() {
+        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
+        let mut ex = DiversityAware::new(space.clone(), AnnealingParams::default());
+        let model = crate::costmodel::Gbt::new(crate::costmodel::GbtParams::default());
+        let mut rng = Rng::new(11);
+        let batch = ex.propose(&model, &HashSet::new(), 32, &mut rng);
+        assert_eq!(batch.len(), 32);
+        for g in &batch {
+            assert!(space.is_legal(g));
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Exploration modules: how the tuner picks which configurations to
+//! measure next (paper Fig. 12b / Fig. 13).
+//!
+//! * [`SimulatedAnnealing`] — the original AutoTVM module: a population of
+//!   parallel annealing chains over the cost-model score, one random-knob
+//!   mutation per step.
+//! * [`DiversityAware`] — the paper's §3.4 contribution: **two mutants per
+//!   parent**, keep **half of the mutants by configuration diversity**
+//!   (greedy max-min Hamming distance), then let survivors compete with
+//!   their parents. Improves the diversity of what the cost model gets
+//!   trained on, which is where AutoTVM stalls.
+//! * [`Exhaustive`] — enumerate every legal config (Table 1's
+//!   "Exhaustive" row; tractable because the knob space is ~2k-8k points).
+//! * [`RandomSearch`] — uniform random baseline for ablations.
+
+mod diversity;
+mod exhaustive;
+mod random;
+mod sa;
+
+pub use diversity::DiversityAware;
+pub use exhaustive::Exhaustive;
+pub use random::RandomSearch;
+pub use sa::{AnnealingParams, SimulatedAnnealing};
+
+use std::collections::HashSet;
+
+use crate::costmodel::CostModel;
+use crate::searchspace::{Genotype, SearchSpace};
+use crate::util::Rng;
+
+/// Which explorer to instantiate (CLI / bench selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExplorerKind {
+    SimulatedAnnealing,
+    DiversityAware,
+    Random,
+    Exhaustive,
+}
+
+impl ExplorerKind {
+    pub fn build(self, space: &SearchSpace) -> Box<dyn Explorer> {
+        match self {
+            ExplorerKind::SimulatedAnnealing => {
+                Box::new(SimulatedAnnealing::new(space.clone(), AnnealingParams::default()))
+            }
+            ExplorerKind::DiversityAware => {
+                Box::new(DiversityAware::new(space.clone(), AnnealingParams::default()))
+            }
+            ExplorerKind::Random => Box::new(RandomSearch::new(space.clone())),
+            ExplorerKind::Exhaustive => Box::new(Exhaustive::new(space.clone())),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExplorerKind::SimulatedAnnealing => "simulated-annealing",
+            ExplorerKind::DiversityAware => "diversity-aware",
+            ExplorerKind::Random => "random",
+            ExplorerKind::Exhaustive => "exhaustive",
+        }
+    }
+}
+
+/// An exploration module: proposes the next batch of configurations to
+/// measure, given the current cost model and the set already measured.
+pub trait Explorer {
+    /// Propose up to `batch` *distinct, unmeasured, legal* genotypes.
+    /// (§4.1: "The exploration module only picks candidates that have not
+    /// been measured before. If there are less than 31 new candidates,
+    /// randomly generated configurations fill in the rest.")
+    fn propose(
+        &mut self,
+        model: &dyn CostModel,
+        measured: &HashSet<Genotype>,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Vec<Genotype>;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Shared helper: top-up a proposal batch with random unmeasured configs
+/// (the "+1 random" and shortfall-fill rules of §4.1).
+pub(crate) fn fill_random(
+    space: &SearchSpace,
+    out: &mut Vec<Genotype>,
+    measured: &HashSet<Genotype>,
+    target: usize,
+    rng: &mut Rng,
+) {
+    let mut guard = 0;
+    while out.len() < target && guard < 10_000 {
+        guard += 1;
+        let g = space.random_legal(rng);
+        if !measured.contains(&g) && !out.contains(&g) {
+            out.push(g);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::costmodel::{Gbt, GbtParams};
+    use crate::searchspace::SpaceOptions;
+
+    fn space() -> SearchSpace {
+        SearchSpace::for_workload(&ConvWorkload::resnet50_stage(2, 8), SpaceOptions::default())
+    }
+
+    #[test]
+    fn every_explorer_returns_distinct_unmeasured_legal() {
+        let sp = space();
+        let model = Gbt::new(GbtParams::default()); // untrained
+        let mut measured = HashSet::new();
+        // pre-measure a few to verify exclusion
+        let mut rng = Rng::new(1);
+        for _ in 0..5 {
+            measured.insert(sp.random_legal(&mut rng));
+        }
+        for kind in [
+            ExplorerKind::SimulatedAnnealing,
+            ExplorerKind::DiversityAware,
+            ExplorerKind::Random,
+            ExplorerKind::Exhaustive,
+        ] {
+            let mut ex = kind.build(&sp);
+            let batch = ex.propose(&model, &measured, 32, &mut rng);
+            assert!(!batch.is_empty(), "{}", kind.name());
+            assert!(batch.len() <= 32);
+            let mut uniq: Vec<_> = batch.clone();
+            uniq.sort();
+            uniq.dedup();
+            assert_eq!(uniq.len(), batch.len(), "{} dupes", kind.name());
+            for g in &batch {
+                assert!(sp.is_legal(g), "{} illegal", kind.name());
+                assert!(!measured.contains(g), "{} re-measures", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fill_random_respects_exclusions() {
+        let sp = space();
+        let mut rng = Rng::new(3);
+        let mut measured = HashSet::new();
+        for _ in 0..10 {
+            measured.insert(sp.random_legal(&mut rng));
+        }
+        let mut out = Vec::new();
+        fill_random(&sp, &mut out, &measured, 16, &mut rng);
+        assert_eq!(out.len(), 16);
+        for g in &out {
+            assert!(!measured.contains(g));
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Uniform random search — the no-model baseline the learned explorers
+//! must beat (ablation companion to Fig. 14).
+
+use std::collections::HashSet;
+
+use super::{fill_random, Explorer};
+use crate::costmodel::CostModel;
+use crate::searchspace::{Genotype, SearchSpace};
+use crate::util::Rng;
+
+pub struct RandomSearch {
+    space: SearchSpace,
+}
+
+impl RandomSearch {
+    pub fn new(space: SearchSpace) -> Self {
+        Self { space }
+    }
+}
+
+impl Explorer for RandomSearch {
+    fn propose(
+        &mut self,
+        _model: &dyn CostModel,
+        measured: &HashSet<Genotype>,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Vec<Genotype> {
+        let mut out = Vec::with_capacity(batch);
+        fill_random(&self.space, &mut out, measured, batch, rng);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::costmodel::{Gbt, GbtParams};
+    use crate::searchspace::SpaceOptions;
+
+    #[test]
+    fn proposals_are_distinct_and_legal() {
+        let space = SearchSpace::for_workload(
+            &ConvWorkload::resnet50_stage(4, 8),
+            SpaceOptions::default(),
+        );
+        let mut ex = RandomSearch::new(space.clone());
+        let model = Gbt::new(GbtParams::default());
+        let mut rng = Rng::new(2);
+        let batch = ex.propose(&model, &HashSet::new(), 48, &mut rng);
+        assert_eq!(batch.len(), 48);
+        let mut set = HashSet::new();
+        for g in batch {
+            assert!(space.is_legal(&g));
+            assert!(set.insert(g));
+        }
+    }
+}

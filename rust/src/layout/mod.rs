@@ -1,0 +1,218 @@
+//! Data-layout engine: NHWC vs NHWCnc and the coalescing analysis of §3.3.
+//!
+//! Tensor Core WMMA consumes the feature map in register tiles of
+//! `n = 8` rows by `c = 16` bytes. Staging such a tile from an NHWC
+//! global layout makes each 16-byte row a separate, batch-divergent access
+//! — smaller than the GPU's atomic 32-byte transaction, so half of every
+//! transaction is wasted (Fig. 11). Storing the map as NHWCnc (the WMMA
+//! tile contiguous in memory) makes the same staging fully coalesced.
+//!
+//! Rather than hard-coding "2x worse", this module *derives* transaction
+//! counts from byte addresses, so the simulator's numbers follow from the
+//! same first principles the paper argues from.
+
+/// Atomic global-memory transaction size on modern NVIDIA GPUs (§3.3.1).
+pub const TRANSACTION_BYTES: usize = 32;
+
+/// WMMA register-tile geometry for reduced precision: 8 rows x 16 bytes.
+pub const WMMA_TILE_ROWS: usize = 8;
+pub const WMMA_TILE_BYTES_PER_ROW: usize = 16;
+
+/// Global-memory layout of a feature map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Rows of a WMMA tile are `H*W*C` bytes apart (batch-major).
+    Nhwc,
+    /// WMMA tiles are contiguous: NHWC split into (N/8, H, W, C/16, 8, 16).
+    Nhwcnc,
+}
+
+/// Logical tensor dims (byte-sized elements; INT4 halves `c` upstream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorDims {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl TensorDims {
+    pub fn bytes(&self) -> usize {
+        self.n * self.h * self.w * self.c
+    }
+
+    /// Byte address of element (n, y, x, c) in NHWC.
+    pub fn nhwc_addr(&self, n: usize, y: usize, x: usize, c: usize) -> usize {
+        ((n * self.h + y) * self.w + x) * self.c + c
+    }
+
+    /// Byte address of element (n, y, x, c) in NHWCnc with 8x16 tiles.
+    pub fn nhwcnc_addr(&self, n: usize, y: usize, x: usize, c: usize) -> usize {
+        let (nt, nr) = (n / WMMA_TILE_ROWS, n % WMMA_TILE_ROWS);
+        let (ct, cc) = (c / WMMA_TILE_BYTES_PER_ROW, c % WMMA_TILE_BYTES_PER_ROW);
+        let c_tiles = self.c / WMMA_TILE_BYTES_PER_ROW;
+        ((((nt * self.h + y) * self.w + x) * c_tiles + ct) * WMMA_TILE_ROWS + nr)
+            * WMMA_TILE_BYTES_PER_ROW
+            + cc
+    }
+
+    pub fn addr(&self, layout: Layout, n: usize, y: usize, x: usize, c: usize) -> usize {
+        match layout {
+            Layout::Nhwc => self.nhwc_addr(n, y, x, c),
+            Layout::Nhwcnc => self.nhwcnc_addr(n, y, x, c),
+        }
+    }
+}
+
+/// Count the distinct 32-byte transactions covering `addrs` (one warp's
+/// coalescer view: duplicate segments within the access are merged).
+pub fn count_transactions(addrs: &[usize]) -> usize {
+    let mut segs: Vec<usize> = addrs.iter().map(|a| a / TRANSACTION_BYTES).collect();
+    segs.sort_unstable();
+    segs.dedup();
+    segs.len()
+}
+
+/// The byte addresses one warp touches to load a WMMA register tile
+/// (8 batch rows x 16 channel bytes) at spatial position (y, x), batch
+/// tile `n0`, channel-byte offset `c0`.
+pub fn wmma_tile_addresses(
+    dims: &TensorDims,
+    layout: Layout,
+    n0: usize,
+    y: usize,
+    x: usize,
+    c0: usize,
+) -> Vec<usize> {
+    let mut addrs = Vec::with_capacity(WMMA_TILE_ROWS * WMMA_TILE_BYTES_PER_ROW);
+    for r in 0..WMMA_TILE_ROWS {
+        for b in 0..WMMA_TILE_BYTES_PER_ROW {
+            addrs.push(dims.addr(layout, n0 + r, y, x, c0 + b));
+        }
+    }
+    addrs
+}
+
+/// Per-tile coalescing summary the simulator charges.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoalescingStats {
+    pub useful_bytes: usize,
+    pub transactions: usize,
+}
+
+impl CoalescingStats {
+    /// Fraction of transferred bytes that are useful (1.0 = coalesced).
+    pub fn efficiency(&self) -> f64 {
+        self.useful_bytes as f64 / (self.transactions * TRANSACTION_BYTES) as f64
+    }
+}
+
+/// Analyze one WMMA-tile load under the given layout.
+pub fn wmma_tile_coalescing(dims: &TensorDims, layout: Layout) -> CoalescingStats {
+    // interior position — representative of the steady state
+    let (y, x) = (dims.h / 2, dims.w / 2);
+    let addrs = wmma_tile_addresses(dims, layout, 0, y, x, 0);
+    CoalescingStats {
+        useful_bytes: addrs.len(),
+        transactions: count_transactions(&addrs),
+    }
+}
+
+/// Bytes moved to convert a full map between layouts (the re-layout cost a
+/// mismatched producer/consumer pair pays, §3.3.2). Read + write.
+pub fn relayout_bytes(dims: &TensorDims) -> usize {
+    2 * dims.bytes()
+}
+
+/// The layout-maintenance cost when the producing kernel keeps NHWCnc
+/// *itself*: one extra warp shuffle per output register tile (§3.3.2),
+/// instead of a full re-layout pass.
+pub const MAINTENANCE_SHUFFLES_PER_TILE: usize = 1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn dims() -> TensorDims {
+        TensorDims { n: 8, h: 14, w: 14, c: 64 }
+    }
+
+    #[test]
+    fn nhwcnc_tile_fully_coalesced() {
+        let s = wmma_tile_coalescing(&dims(), Layout::Nhwcnc);
+        assert_eq!(s.useful_bytes, 128);
+        assert_eq!(s.transactions, 4); // 128 / 32
+        assert!((s.efficiency() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nhwc_tile_wastes_half_bandwidth() {
+        // Fig. 11: 16-byte rows diverge across the batch dimension -> one
+        // 32B transaction per row, half wasted.
+        let s = wmma_tile_coalescing(&dims(), Layout::Nhwc);
+        assert_eq!(s.useful_bytes, 128);
+        assert_eq!(s.transactions, 8);
+        assert!((s.efficiency() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nhwcnc_addresses_are_contiguous() {
+        let d = dims();
+        let addrs = wmma_tile_addresses(&d, Layout::Nhwcnc, 0, 3, 5, 16);
+        let base = addrs[0];
+        for (i, &a) in addrs.iter().enumerate() {
+            assert_eq!(a, base + i);
+        }
+    }
+
+    #[test]
+    fn layouts_are_bijections_over_the_tensor() {
+        let d = TensorDims { n: 8, h: 3, w: 3, c: 32 };
+        for layout in [Layout::Nhwc, Layout::Nhwcnc] {
+            let mut seen = vec![false; d.bytes()];
+            for n in 0..d.n {
+                for y in 0..d.h {
+                    for x in 0..d.w {
+                        for c in 0..d.c {
+                            let a = d.addr(layout, n, y, x, c);
+                            assert!(!seen[a], "{layout:?} collision at {a}");
+                            seen[a] = true;
+                        }
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&b| b), "{layout:?} not surjective");
+        }
+    }
+
+    #[test]
+    fn relayout_cost_is_two_passes() {
+        let d = dims();
+        assert_eq!(relayout_bytes(&d), 2 * 8 * 14 * 14 * 64);
+    }
+
+    #[test]
+    fn prop_transactions_bounded() {
+        check::forall(200, |rng| {
+            let offsets: Vec<usize> =
+                (0..1 + rng.gen_range(63)).map(|_| rng.gen_range(4096)).collect();
+            let t = count_transactions(&offsets);
+            // at least 1, at most one per address
+            assert!(t >= 1 && t <= offsets.len());
+        });
+    }
+
+    #[test]
+    fn prop_coalesced_run_is_optimal() {
+        check::forall(200, |rng| {
+            let start = rng.gen_range(1024);
+            let len = 1 + rng.gen_range(255);
+            let addrs: Vec<usize> = (start..start + len).collect();
+            let t = count_transactions(&addrs);
+            // contiguous run: ceil(len/32) segments, +1 when misaligned
+            let lo = (len + TRANSACTION_BYTES - 1) / TRANSACTION_BYTES;
+            assert!(t >= lo.max(1) - 1 && t <= lo + 1, "len {len} t {t}");
+        });
+    }
+}

@@ -1,0 +1,58 @@
+//! `tcconv` — reproduction of *Learning from Distinctive Candidates to
+//! Optimize Reduced-Precision Convolution Program on Tensor Cores*
+//! (Choi et al., 2022).
+//!
+//! The paper's contribution is an AutoTVM-style auto-scheduler for INT4/INT8
+//! MMA convolutions on NVIDIA Tensor Cores: a 6-knob search space over the
+//! thread-block/warp/WMMA tile hierarchy plus three code-generation
+//! optimizations (duplicate-aware im2col loads, register-level epilogue +
+//! INT4 output packing, NHWCnc coalesced layout), searched by simulated
+//! annealing over a learned ranking cost model with a **diversity-aware
+//! exploration module** (two mutants per parent, keep half by configuration
+//! diversity).
+//!
+//! Layering (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the scheduler/tuner: [`searchspace`],
+//!   [`costmodel`], [`explore`], [`tuner`], the T4-class Tensor Core
+//!   simulator [`sim`] used as the measurement substrate (no GPU in this
+//!   environment), the bit-exact quantization/packing substrate [`quant`],
+//!   the layout/coalescing engine [`layout`], and the PJRT [`runtime`] that
+//!   executes the AOT-lowered JAX/Pallas convolutions for numeric
+//!   validation.
+//! * **L2/L1 (build time, `python/compile/`)** — JAX conv model calling the
+//!   Pallas MMA GEMM kernel, lowered once to `artifacts/*.hlo.txt`.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use tcconv::conv::ConvWorkload;
+//! use tcconv::tuner::{Tuner, TunerOptions};
+//! use tcconv::explore::ExplorerKind;
+//!
+//! let wl = ConvWorkload::resnet50_stage(2, 8);
+//! let mut tuner = Tuner::new(&wl, TunerOptions {
+//!     n_trials: 128,
+//!     explorer: ExplorerKind::DiversityAware,
+//!     ..Default::default()
+//! });
+//! let best = tuner.tune();
+//! println!("best schedule {:?} -> {:.2} us", best.config, best.runtime_us);
+//! ```
+
+pub mod conv;
+pub mod costmodel;
+pub mod util;
+pub mod explore;
+pub mod layout;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod searchspace;
+pub mod serve;
+pub mod zoo;
+pub mod sim;
+pub mod tuner;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

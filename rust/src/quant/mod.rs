@@ -1,0 +1,48 @@
+//! Reduced-precision (INT4/INT8) quantization and register-packing
+//! substrate — the bit-exact twin of `python/compile/kernels/pack.py`.
+//!
+//! The paper's §3.2 moves the epilogue (bias/BN/ReLU + clip to INT4) ahead
+//! of the shared-memory store and packs eight 4-bit outputs per 32-bit
+//! register using warp shuffles. [`pack`] implements the packed layout and
+//! integer epilogue; [`warp`] emulates the 32-lane warp register file and
+//! the shuffle-based packing algorithm of Fig. 9/10 lane-for-lane, which is
+//! how we validate the *algorithm* (not just the layout) without CUDA.
+
+mod pack;
+mod warp;
+
+pub use pack::{
+    clip_int4, pack_int4, pack_int4_into, requantize, unpack_int4, Epilogue,
+    INT4_MAX, INT4_MIN, PACK_FACTOR,
+};
+pub use warp::{warp_pack_int4, warp_shuffle_down, WarpRegisterFile, WARP_SIZE};
+
+/// Number of data bits actually required to accumulate a 4-bit x 4-bit
+/// convolution over `k` accumulation steps (paper §3.2.1: 16 bits suffice
+/// for 128 channels; NVIDIA's 32-bit accumulator wastes the rest).
+pub fn accumulator_bits_required(k: usize) -> u32 {
+    // the paper's §3.2.1 bound: 2^4 * 2^4 = 2^8 product magnitude per
+    // step; k steps -> 8 + ceil(log2 k) magnitude bits, +1 sign bit.
+    let mag = 8 + (k as f64).log2().ceil() as u32;
+    mag + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_accumulator_bits_example() {
+        // §3.2.1: 4-bit conv, 128 input channels of accumulation ->
+        // 2^4 * 2^4 * 128 = 2^15 -> 16 bits with sign.
+        assert_eq!(accumulator_bits_required(128), 16);
+    }
+
+    #[test]
+    fn million_channels_to_fill_32_bits() {
+        // §3.2.1: "about 1 million input convolution channels ... to fully
+        // utilize the 32-bit accumulator on 4-bit 3x3 convolution"
+        assert!(accumulator_bits_required(9 * 1_000_000) > 30);
+        assert!(accumulator_bits_required(9 * 100_000) <= 32);
+    }
+}

@@ -1,0 +1,192 @@
+//! Packed-INT4 layout and the integer epilogue — bit-exact with
+//! `python/compile/kernels/pack.py` (validated through golden vectors, see
+//! `gen_golden` and `python/tests/test_pack.py`).
+
+pub const INT4_MIN: i32 = -8;
+pub const INT4_MAX: i32 = 7;
+/// int4 values per packed int32 word.
+pub const PACK_FACTOR: usize = 8;
+
+/// Saturate to the signed 4-bit range.
+#[inline]
+pub fn clip_int4(v: i32) -> i32 {
+    v.clamp(INT4_MIN, INT4_MAX)
+}
+
+/// Requantize an int32 accumulator to the INT4 domain with a power-of-two
+/// scale: round-half-up arithmetic shift, then saturate. Matches
+/// `pack.requantize` on the python side exactly.
+#[inline]
+pub fn requantize(acc: i32, shift: u32) -> i32 {
+    if shift == 0 {
+        return clip_int4(acc);
+    }
+    let rounded = acc.wrapping_add(1 << (shift - 1)) >> shift;
+    clip_int4(rounded)
+}
+
+/// Pack groups of 8 int4-domain values (each in [-8, 7]) into int32 words:
+/// element `j` occupies bits `[4j, 4j+4)`, two's complement.
+pub fn pack_int4(values: &[i32]) -> Vec<i32> {
+    assert!(
+        values.len() % PACK_FACTOR == 0,
+        "length {} not divisible by {}",
+        values.len(),
+        PACK_FACTOR
+    );
+    let mut out = Vec::with_capacity(values.len() / PACK_FACTOR);
+    pack_int4_into(values, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`pack_int4`] for hot paths.
+pub fn pack_int4_into(values: &[i32], out: &mut Vec<i32>) {
+    debug_assert!(values.len() % PACK_FACTOR == 0);
+    for group in values.chunks_exact(PACK_FACTOR) {
+        let mut word: u32 = 0;
+        for (j, &v) in group.iter().enumerate() {
+            word |= ((v as u32) & 0xF) << (4 * j);
+        }
+        out.push(word as i32);
+    }
+}
+
+/// Unpack int32 words back to int4-domain values (sign-extended).
+pub fn unpack_int4(words: &[i32]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(words.len() * PACK_FACTOR);
+    for &w in words {
+        let w = w as u32;
+        for j in 0..PACK_FACTOR {
+            let nib = ((w >> (4 * j)) & 0xF) as i32;
+            out.push(if nib >= 8 { nib - 16 } else { nib });
+        }
+    }
+    out
+}
+
+/// The post-convolution epilogue of §3.2.2: bias add -> optional ReLU ->
+/// requantize to INT4. The *placement* of this epilogue (before vs after
+/// the shared-memory store) is what the `reg_packing` schedule flag moves;
+/// the arithmetic itself is fixed and shared with the L1 Pallas kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Epilogue {
+    pub relu: bool,
+    pub requant_shift: u32,
+}
+
+impl Default for Epilogue {
+    fn default() -> Self {
+        Self { relu: true, requant_shift: 6 }
+    }
+}
+
+impl Epilogue {
+    /// Apply to one accumulator value.
+    #[inline]
+    pub fn apply(&self, acc: i32, bias: i32) -> i32 {
+        let mut v = acc.wrapping_add(bias);
+        if self.relu {
+            v = v.max(0);
+        }
+        requantize(v, self.requant_shift)
+    }
+
+    /// Apply to a row-major accumulator tile with per-column bias, packing
+    /// the result (the fused register-level path).
+    pub fn apply_tile_packed(
+        &self,
+        acc: &[i32],
+        bias: &[i32],
+        cols: usize,
+    ) -> Vec<i32> {
+        assert_eq!(acc.len() % cols, 0);
+        assert_eq!(bias.len(), cols);
+        let vals: Vec<i32> = acc
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| self.apply(a, bias[i % cols]))
+            .collect();
+        pack_int4(&vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn pack_layout_golden() {
+        let vals = [1, 2, 3, 4, 5, 6, 7, -8];
+        let w = pack_int4(&vals)[0] as u32;
+        for (j, &v) in vals.iter().enumerate() {
+            let nib = (w >> (4 * j)) & 0xF;
+            assert_eq!(nib, (v as u32) & 0xF, "slot {j}");
+        }
+    }
+
+    #[test]
+    fn all_negative_ones_pack_to_minus_one() {
+        assert_eq!(pack_int4(&[-1; 8]), vec![-1]);
+    }
+
+    #[test]
+    fn requantize_matches_python_semantics() {
+        // round-half-up at the midpoint
+        assert_eq!(requantize(96, 6), 2); // 96+32 >> 6 = 2
+        assert_eq!(requantize(-96, 6), -1); // -96+32 >> 6 = -64>>6 = -1
+        assert_eq!(requantize(1_000_000, 2), INT4_MAX);
+        assert_eq!(requantize(-1_000_000, 2), INT4_MIN);
+        assert_eq!(requantize(5, 0), 5);
+        assert_eq!(requantize(50, 0), INT4_MAX);
+    }
+
+    #[test]
+    fn epilogue_relu_then_requant() {
+        let e = Epilogue { relu: true, requant_shift: 2 };
+        assert_eq!(e.apply(-100, 10), 0); // relu clamps before requant
+        assert_eq!(e.apply(10, 2), 3); // (12+2)>>2 = 3
+    }
+
+    #[test]
+    fn epilogue_tile_packed_shape() {
+        let e = Epilogue::default();
+        let acc = vec![0i32; 4 * 8];
+        let bias = vec![1i32; 8];
+        let packed = e.apply_tile_packed(&acc, &bias, 8);
+        assert_eq!(packed.len(), 4);
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip() {
+        check::forall(200, |rng| {
+            let groups = 1 + rng.gen_range(16);
+            let vals: Vec<i32> =
+                (0..groups * 8).map(|_| rng.gen_range(16) as i32 - 8).collect();
+            assert_eq!(unpack_int4(&pack_int4(&vals)), vals);
+        });
+    }
+
+    #[test]
+    fn prop_requantize_scalar_model() {
+        check::forall(500, |rng| {
+            let v = rng.gen_range(1 << 21) as i32 - (1 << 20);
+            let shift = rng.gen_range(12) as u32;
+            let got = requantize(v, shift);
+            let want = if shift == 0 { v } else { (v + (1 << (shift - 1))) >> shift }
+                .clamp(INT4_MIN, INT4_MAX);
+            assert_eq!(got, want, "v={v} shift={shift}");
+        });
+    }
+
+    #[test]
+    fn prop_packed_values_always_in_domain() {
+        check::forall(200, |rng| {
+            let words: Vec<i32> =
+                (0..1 + rng.gen_range(31)).map(|_| rng.next_u64() as i32).collect();
+            for v in unpack_int4(&words) {
+                assert!((INT4_MIN..=INT4_MAX).contains(&v));
+            }
+        });
+    }
+}

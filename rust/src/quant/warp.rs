@@ -1,0 +1,192 @@
+//! Lane-exact emulation of the warp-shuffle packing algorithm (Fig. 8-10).
+//!
+//! A CUDA warp is 32 threads operating as an atomic unit; a programmer
+//! cannot address another thread's registers directly but can exchange them
+//! with the `__shfl_*_sync` intrinsics. The paper packs eight INT4 outputs
+//! per 32-bit register *inside the warp* with a log-tree of shuffles, then
+//! redistributes the packed words so every lane's store is useful
+//! (Fig. 10). This module reproduces that algorithm lane-for-lane so its
+//! result can be checked against the plain [`super::pack_int4`] layout —
+//! validating the algorithm, not just the output format — and so the
+//! simulator can charge an exact shuffle-instruction count.
+
+use super::pack::PACK_FACTOR;
+#[cfg(test)]
+use super::pack::pack_int4;
+
+/// Threads per warp on every CUDA architecture the paper targets.
+pub const WARP_SIZE: usize = 32;
+
+/// `__shfl_down_sync(0xffffffff, v, offset, width)`: lane `i` receives the
+/// value of lane `i + offset` when that lane is within the same
+/// `width`-sized segment, else keeps its own value.
+pub fn warp_shuffle_down(regs: &[i32; WARP_SIZE], offset: usize, width: usize) -> [i32; WARP_SIZE] {
+    assert!(width.is_power_of_two() && width <= WARP_SIZE);
+    let mut out = [0i32; WARP_SIZE];
+    for i in 0..WARP_SIZE {
+        let lane_in_seg = i % width;
+        out[i] = if lane_in_seg + offset < width { regs[i + offset] } else { regs[i] };
+    }
+    out
+}
+
+/// One warp's view of a register file: `regs[r][lane]`.
+#[derive(Debug, Clone)]
+pub struct WarpRegisterFile {
+    regs: Vec<[i32; WARP_SIZE]>,
+    /// Shuffle instructions issued so far (charged by the simulator).
+    pub shuffles: usize,
+}
+
+impl WarpRegisterFile {
+    pub fn new(n_regs: usize) -> Self {
+        Self { regs: vec![[0; WARP_SIZE]; n_regs], shuffles: 0 }
+    }
+
+    pub fn from_tiles(tiles: &[[i32; WARP_SIZE]]) -> Self {
+        Self { regs: tiles.to_vec(), shuffles: 0 }
+    }
+
+    pub fn reg(&self, r: usize) -> &[i32; WARP_SIZE] {
+        &self.regs[r]
+    }
+
+    pub fn set_reg(&mut self, r: usize, v: [i32; WARP_SIZE]) {
+        self.regs[r] = v;
+    }
+
+    /// Shuffle-down on register `r`, counting the instruction.
+    pub fn shfl_down(&mut self, r: usize, offset: usize, width: usize) -> [i32; WARP_SIZE] {
+        self.shuffles += 1;
+        warp_shuffle_down(&self.regs[r], offset, width)
+    }
+
+    /// Fig. 9: pack the INT4-domain value held by each lane of register `r`
+    /// into 32-bit words with a log-tree of shuffles (width 8). Afterwards
+    /// lanes 0, 8, 16, 24 hold the packed words of their 8-lane group; the
+    /// other lanes hold partially-packed garbage ("don't care").
+    pub fn pack_tree(&mut self, r: usize) {
+        let mut step = 1usize;
+        while step < PACK_FACTOR {
+            let shifted = self.shfl_down(r, step, PACK_FACTOR);
+            for lane in 0..WARP_SIZE {
+                // keep own nibbles, OR in the neighbour's `step` nibbles
+                let own = self.regs[r][lane] as u32 & ((1u32 << (4 * step)) - 1);
+                let other = (shifted[lane] as u32) << (4 * step);
+                self.regs[r][lane] = (own | other) as i32;
+            }
+            step *= 2;
+        }
+    }
+
+    /// Fig. 10: after packing several output register tiles, gather the
+    /// useful words (lanes 0/8/16/24 of each tile) into a single register
+    /// so that *all 32 lanes* hold meaningful data and every store request
+    /// is useful. `tile_regs` must name 8 packed registers; returns the
+    /// index of the register holding the gathered words.
+    pub fn gather_packed(&mut self, tile_regs: &[usize]) -> usize {
+        assert_eq!(tile_regs.len(), PACK_FACTOR, "need 8 tiles to fill a warp");
+        let dst = self.regs.len();
+        let mut gathered = [0i32; WARP_SIZE];
+        for (t, &r) in tile_regs.iter().enumerate() {
+            // move word at lane 8k of tile t to lane 4t + k (one shuffle
+            // per tile: a single `__shfl_sync` with computed source lane)
+            self.shuffles += 1;
+            for k in 0..(WARP_SIZE / PACK_FACTOR) {
+                gathered[4 * t + k] = self.regs[r][PACK_FACTOR * k];
+            }
+        }
+        self.regs.push(gathered);
+        dst
+    }
+}
+
+/// Pack one warp-register of 32 INT4-domain values via the Fig. 9 shuffle
+/// tree; returns the four packed words (groups of 8 lanes) and the shuffle
+/// count. The result must equal [`pack_int4`] of the same values.
+pub fn warp_pack_int4(values: &[i32; WARP_SIZE]) -> (Vec<i32>, usize) {
+    let mut rf = WarpRegisterFile::from_tiles(&[*values]);
+    rf.pack_tree(0);
+    let words = (0..WARP_SIZE / PACK_FACTOR)
+        .map(|k| rf.regs[0][PACK_FACTOR * k])
+        .collect();
+    (words, rf.shuffles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn shuffle_down_matches_cuda_semantics() {
+        let mut regs = [0i32; WARP_SIZE];
+        for (i, r) in regs.iter_mut().enumerate() {
+            *r = i as i32;
+        }
+        let out = warp_shuffle_down(&regs, 4, 8);
+        // Fig. 8: offset 4, width 8 — lane 0 gets lane 4, lane 5 keeps own
+        assert_eq!(out[0], 4);
+        assert_eq!(out[1], 5);
+        assert_eq!(out[3], 7);
+        assert_eq!(out[4], 4); // 4%8 + 4 >= 8 -> keeps own
+        assert_eq!(out[8], 12); // next segment
+        assert_eq!(out[31], 31);
+    }
+
+    #[test]
+    fn pack_tree_matches_flat_pack() {
+        let mut vals = [0i32; WARP_SIZE];
+        for (i, v) in vals.iter_mut().enumerate() {
+            *v = (i as i32 % 16) - 8;
+        }
+        let (words, shuffles) = warp_pack_int4(&vals);
+        assert_eq!(words, pack_int4(&vals));
+        // log2(8) = 3 shuffle instructions
+        assert_eq!(shuffles, 3);
+    }
+
+    #[test]
+    fn gather_fills_all_lanes() {
+        // 8 packed tiles -> one register where every lane is useful
+        let mut rf = WarpRegisterFile::new(0);
+        let mut expected = Vec::new();
+        for t in 0..8 {
+            let mut vals = [0i32; WARP_SIZE];
+            for (i, v) in vals.iter_mut().enumerate() {
+                *v = ((i + t * 31) as i32 % 16) - 8;
+            }
+            expected.extend(pack_int4(&vals));
+            let r = rf.regs.len();
+            rf.regs.push(vals);
+            rf.pack_tree(r);
+        }
+        let dst = rf.gather_packed(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        // gathered register: lanes 4t..4t+4 hold tile t's words
+        let got: Vec<i32> = rf.regs[dst].to_vec();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn prop_warp_pack_equals_layout_pack() {
+        check::forall(200, |rng| {
+            let mut arr = [0i32; WARP_SIZE];
+            for v in arr.iter_mut() {
+                *v = rng.gen_range(16) as i32 - 8;
+            }
+            let (words, _) = warp_pack_int4(&arr);
+            assert_eq!(words, pack_int4(&arr));
+        });
+    }
+
+    #[test]
+    fn prop_shuffle_down_identity_at_zero_offset() {
+        check::forall(100, |rng| {
+            let mut arr = [0i32; WARP_SIZE];
+            for v in arr.iter_mut() {
+                *v = rng.next_u64() as i32;
+            }
+            assert_eq!(warp_shuffle_down(&arr, 0, 8), arr);
+        });
+    }
+}

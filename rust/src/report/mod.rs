@@ -1,0 +1,182 @@
+//! Report printers and experiment drivers: regenerate the paper's tables
+//! and figures as aligned text tables / CSV series (the benches and CLI
+//! call these).
+
+pub mod experiments;
+
+use crate::searchspace::ScheduleConfig;
+use crate::tuner::History;
+
+/// One row of Table 1.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub stage: usize,
+    pub ops: u64,
+    pub baseline_us: f64,
+    pub exhaustive_us: f64,
+    pub searched_us: f64,
+    pub searched_cfg: ScheduleConfig,
+    pub trials: usize,
+}
+
+impl Table1Row {
+    pub fn speedup(&self) -> f64 {
+        self.baseline_us / self.searched_us
+    }
+}
+
+/// Print Table 1 in the paper's layout.
+pub fn print_table1(rows: &[Table1Row]) {
+    println!("\nTable 1. Performance of 3x3 convolutions in ResNet50 (simulated T4)");
+    print!("{:<16}", "Stage");
+    for r in rows {
+        print!("{:>12}", r.stage);
+    }
+    println!();
+    print!("{:<16}", "OPs");
+    for r in rows {
+        print!("{:>12}", r.ops);
+    }
+    println!();
+    let line = |name: &str, f: &dyn Fn(&Table1Row) -> f64| {
+        print!("{name:<16}");
+        for r in rows {
+            print!("{:>12.2}", f(r));
+        }
+        println!();
+    };
+    line("Baseline (us)", &|r| r.baseline_us);
+    line("Exhaustive (us)", &|r| r.exhaustive_us);
+    line("Searched (us)", &|r| r.searched_us);
+    print!("{:<16}", "Speed-up");
+    for r in rows {
+        print!("{:>11.2}x", r.speedup());
+    }
+    println!();
+    for r in rows {
+        println!("  stage{} searched config: {}", r.stage, r.searched_cfg.brief());
+    }
+}
+
+/// Print a Fig. 14-style tuning-curve comparison as CSV (trial, then one
+/// best-GFLOPS column per curve).
+pub fn print_fig14_csv(curves: &[(&str, &History)]) {
+    print!("trial");
+    for (name, _) in curves {
+        print!(",{name}");
+    }
+    println!();
+    let n = curves.iter().map(|(_, h)| h.len()).max().unwrap_or(0);
+    for t in 1..=n {
+        print!("{t}");
+        for (_, h) in curves {
+            let v = h
+                .records()
+                .get(t.min(h.len()).saturating_sub(1))
+                .map(|r| r.best_gflops)
+                .unwrap_or(0.0);
+            print!(",{v:.1}");
+        }
+        println!();
+    }
+}
+
+/// Marginal/accumulated ablation rows (Fig. 15 / Fig. 16).
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub stage: usize,
+    pub base_us: f64,
+    pub plus_dup_us: f64,
+    pub plus_pack_us: f64,
+    pub plus_layout_us: f64,
+}
+
+impl AblationRow {
+    /// Fig. 15: accumulated speedup after each added optimization.
+    pub fn accumulated(&self) -> [f64; 3] {
+        [
+            self.base_us / self.plus_dup_us,
+            self.base_us / self.plus_pack_us,
+            self.base_us / self.plus_layout_us,
+        ]
+    }
+
+    /// Fig. 16: marginal speedup of each optimization.
+    pub fn marginal(&self) -> [f64; 3] {
+        [
+            self.base_us / self.plus_dup_us,
+            self.plus_dup_us / self.plus_pack_us,
+            self.plus_pack_us / self.plus_layout_us,
+        ]
+    }
+}
+
+pub fn print_ablation(rows: &[AblationRow], accumulated: bool) {
+    let title = if accumulated {
+        "Fig. 15: accumulated speedup (x) as optimizations are stacked"
+    } else {
+        "Fig. 16: marginal speedup (x) of each optimization"
+    };
+    println!("\n{title}");
+    println!(
+        "{:<8} {:>14} {:>14} {:>14}",
+        "stage", "+dup-aware", "+reg-packing", "+nhwcnc"
+    );
+    for r in rows {
+        let v = if accumulated { r.accumulated() } else { r.marginal() };
+        println!(
+            "{:<8} {:>13.2}x {:>13.2}x {:>13.2}x",
+            format!("stage{}", r.stage),
+            v[0],
+            v[1],
+            v[2]
+        );
+    }
+}
+
+/// Simple horizontal bar for terminal figures.
+pub fn bar(value: f64, max: f64, width: usize) -> String {
+    let n = ((value / max) * width as f64).round() as usize;
+    "#".repeat(n.min(width))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_speedup() {
+        let r = Table1Row {
+            stage: 2,
+            ops: 100,
+            baseline_us: 196.06,
+            exhaustive_us: 50.78,
+            searched_us: 50.98,
+            searched_cfg: ScheduleConfig::default(),
+            trials: 500,
+        };
+        assert!((r.speedup() - 3.845).abs() < 0.01);
+    }
+
+    #[test]
+    fn ablation_marginal_times_out_to_accumulated() {
+        let r = AblationRow {
+            stage: 3,
+            base_us: 100.0,
+            plus_dup_us: 80.0,
+            plus_pack_us: 60.0,
+            plus_layout_us: 50.0,
+        };
+        let m = r.marginal();
+        let a = r.accumulated();
+        assert!((m[0] * m[1] * m[2] - a[2]).abs() < 1e-9);
+        assert!((a[2] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bar_clamps() {
+        assert_eq!(bar(10.0, 10.0, 20).len(), 20);
+        assert_eq!(bar(20.0, 10.0, 20).len(), 20);
+        assert_eq!(bar(0.0, 10.0, 20).len(), 0);
+    }
+}

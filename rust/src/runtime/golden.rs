@@ -1,0 +1,120 @@
+//! Golden-file verification: `aot.py` dumps (x, w, bias, y_oracle) per
+//! stage as length-prefixed little-endian blobs; the rust side re-executes
+//! the artifact via PJRT and compares bit-for-bit. This closes the loop
+//! across all three layers: Pallas kernel == jnp oracle (pytest) and
+//! PJRT(HLO) == oracle (here), so rust serving is exactly the python
+//! numerics.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Engine;
+
+/// Arrays from one golden file, still as raw bytes.
+pub fn read_golden(path: &Path) -> Result<Vec<Vec<u8>>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while at < raw.len() {
+        if at + 4 > raw.len() {
+            bail!("truncated golden header at {at}");
+        }
+        let len = u32::from_le_bytes(raw[at..at + 4].try_into().unwrap()) as usize;
+        at += 4;
+        if at + len > raw.len() {
+            bail!("truncated golden payload at {at} (want {len})");
+        }
+        out.push(raw[at..at + len].to_vec());
+        at += len;
+    }
+    Ok(out)
+}
+
+fn as_i8(bytes: &[u8]) -> Vec<i8> {
+    bytes.iter().map(|&b| b as i8).collect()
+}
+
+fn as_i32(bytes: &[u8]) -> Vec<i32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Outcome of one artifact verification.
+#[derive(Debug)]
+pub struct GoldenReport {
+    pub stage: String,
+    pub matches: bool,
+    pub elements: usize,
+    pub first_mismatch: Option<(usize, i32, i32)>,
+    pub exec_us: f64,
+}
+
+/// Load stage artifact, run it on the golden inputs, compare to the golden
+/// oracle output.
+pub fn verify_artifact(dir: &Path, stage: &str) -> Result<GoldenReport> {
+    let engine = Engine::cpu()?;
+    let conv = engine.load_conv(dir, stage)?;
+    let arrays = read_golden(&conv.meta.golden_path)?;
+    if arrays.len() != 4 {
+        bail!("golden file has {} arrays, want 4", arrays.len());
+    }
+    let x = as_i8(&arrays[0]);
+    let w = as_i8(&arrays[1]);
+    let bias = as_i32(&arrays[2]);
+    let want = as_i32(&arrays[3]);
+
+    let t = std::time::Instant::now();
+    let got = conv.run(&x, &w, &bias)?;
+    let exec_us = t.elapsed().as_secs_f64() * 1e6;
+
+    let mut first_mismatch = None;
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        if a != b {
+            first_mismatch = Some((i, *a, *b));
+            break;
+        }
+    }
+    let matches = got.len() == want.len() && first_mismatch.is_none();
+    Ok(GoldenReport { stage: stage.to_string(), matches, elements: want.len(), first_mismatch, exec_us })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn read_golden_parses_length_prefixed_blobs() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("tcconv_golden_test.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        f.write_all(&[1, 2, 3]).unwrap();
+        f.write_all(&8u32.to_le_bytes()).unwrap();
+        f.write_all(&42i32.to_le_bytes()).unwrap();
+        f.write_all(&(-7i32).to_le_bytes()).unwrap();
+        drop(f);
+        let arrays = read_golden(&path).unwrap();
+        assert_eq!(arrays.len(), 2);
+        assert_eq!(arrays[0], vec![1, 2, 3]);
+        assert_eq!(as_i32(&arrays[1]), vec![42, -7]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn read_golden_rejects_truncation() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("tcconv_golden_trunc.bin");
+        std::fs::write(&path, 100u32.to_le_bytes()).unwrap();
+        assert!(read_golden(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn i8_reinterpretation_is_twos_complement() {
+        assert_eq!(as_i8(&[0xFF, 0x7F]), vec![-1, 127]);
+    }
+}

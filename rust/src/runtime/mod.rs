@@ -1,0 +1,233 @@
+//! PJRT runtime: loads the AOT-lowered HLO artifacts (`artifacts/*.hlo.txt`
+//! produced once by `python/compile/aot.py`) and executes them from rust.
+//! Python is never on this path.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+mod golden;
+
+pub use golden::{read_golden, verify_artifact, GoldenReport};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::searchspace::ScheduleConfig;
+use crate::util::Json;
+
+/// Tensor metadata from the artifact manifest.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "s8" | "s32"
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        let per = match self.dtype.as_str() {
+            "s8" => 1,
+            "s32" => 4,
+            other => panic!("unsupported dtype {other}"),
+        };
+        self.elements() * per
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.req("dtype")?.as_str().ok_or_else(|| anyhow!("bad dtype"))?.to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// Parsed `conv_<stage>.meta.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub stage: String,
+    pub hlo_path: PathBuf,
+    pub golden_path: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub output: TensorMeta,
+    pub schedule: ScheduleConfig,
+    pub gemm: (usize, usize, usize),
+    pub ops: u64,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path, stage: &str) -> Result<Self> {
+        let meta_path = dir.join(format!("conv_{stage}.meta.json"));
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text)?;
+        let wl = j.req("workload")?;
+        let gemm_arr = wl.req("gemm")?.as_arr().ok_or_else(|| anyhow!("gemm not array"))?;
+        let gemm = (
+            gemm_arr[0].as_usize().unwrap_or(0),
+            gemm_arr[1].as_usize().unwrap_or(0),
+            gemm_arr[2].as_usize().unwrap_or(0),
+        );
+        let inputs = j
+            .req("inputs")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("inputs not array"))?
+            .iter()
+            .map(TensorMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let output = TensorMeta::from_json(j.req("output")?)?;
+        let hlo = j.req("hlo")?.as_str().ok_or_else(|| anyhow!("bad hlo"))?;
+        let golden = j.req("golden")?.as_str().ok_or_else(|| anyhow!("bad golden"))?;
+        Ok(Self {
+            stage: stage.to_string(),
+            hlo_path: dir.join(hlo),
+            golden_path: dir.join(golden),
+            inputs,
+            output,
+            schedule: ScheduleConfig::from_json(j.req("schedule")?)?,
+            gemm,
+            ops: wl.req("ops")?.as_usize().unwrap_or(0) as u64,
+        })
+    }
+}
+
+/// The PJRT engine: one CPU client, many loaded executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client (the rust-side "hardware").
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one stage's conv artifact.
+    pub fn load_conv(&self, dir: &Path, stage: &str) -> Result<LoadedConv> {
+        let meta = ArtifactMeta::load(dir, stage)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {:?}: {e:?}", meta.hlo_path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        Ok(LoadedConv { exe, meta })
+    }
+}
+
+/// One compiled convolution: executes (x, w, bias) -> packed-INT4 output.
+pub struct LoadedConv {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl LoadedConv {
+    /// Execute with raw tensors. `x` and `w` are int8 (INT4-valued), bias
+    /// is int32; returns the int32 output (packed INT4 words), row-major.
+    pub fn run(&self, x: &[i8], w: &[i8], bias: &[i32]) -> Result<Vec<i32>> {
+        if x.len() != self.meta.inputs[0].elements() {
+            bail!("x has {} elements, artifact wants {}", x.len(), self.meta.inputs[0].elements());
+        }
+        if w.len() != self.meta.inputs[1].elements() {
+            bail!("w has {} elements, artifact wants {}", w.len(), self.meta.inputs[1].elements());
+        }
+        if bias.len() != self.meta.inputs[2].elements() {
+            bail!("bias has {} elements, wants {}", bias.len(), self.meta.inputs[2].elements());
+        }
+        let lit_x = literal_s8(x, &self.meta.inputs[0].shape);
+        let lit_w = literal_s8(w, &self.meta.inputs[1].shape);
+        let lit_b = xla::Literal::vec1(bias)
+            .reshape(&to_i64(&self.meta.inputs[2].shape))
+            .map_err(|e| anyhow!("bias reshape: {e:?}"))?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit_x, lit_w, lit_b])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Wall-clock one execution (after a warmup call), in microseconds.
+    pub fn time_once(&self, x: &[i8], w: &[i8], bias: &[i32]) -> Result<f64> {
+        self.run(x, w, bias)?; // warmup / numerics check path
+        let t = std::time::Instant::now();
+        self.run(x, w, bias)?;
+        Ok(t.elapsed().as_secs_f64() * 1e6)
+    }
+}
+
+/// Build an s8 literal from raw bytes (the crate's `vec1` has no i8
+/// NativeType impl; go through untyped data).
+fn literal_s8(data: &[i8], shape: &[usize]) -> xla::Literal {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        shape,
+        bytes,
+    )
+    .expect("s8 literal")
+}
+
+fn to_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn meta_parses_for_all_stages() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        for stage in ["stage2", "stage3", "stage4", "stage5"] {
+            let m = ArtifactMeta::load(&dir, stage).unwrap();
+            assert_eq!(m.inputs.len(), 3);
+            assert_eq!(m.inputs[0].dtype, "s8");
+            assert_eq!(m.output.dtype, "s32");
+            assert!(m.hlo_path.exists(), "{:?}", m.hlo_path);
+            assert!(m.golden_path.exists());
+            assert_eq!(m.ops, 1_849_688_064);
+        }
+    }
+
+    #[test]
+    fn engine_loads_and_reproduces_golden_stage5() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // stage5 is the smallest HLO to execute (M = 392)
+        let report = verify_artifact(&dir, "stage5").unwrap();
+        assert!(report.matches, "PJRT output != python golden: {report:?}");
+        assert!(report.elements > 0);
+    }
+}

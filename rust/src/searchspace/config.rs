@@ -1,0 +1,248 @@
+//! [`ScheduleConfig`]: one point of the search space. Mirrors
+//! `python/compile/schedules.py` field-for-field (the JSON forms are
+//! interchangeable, which is how rust-found schedules are handed to
+//! `aot.py --schedule-json`).
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+/// WMMA output atom rows (INT4 and INT8 MMA alike).
+pub const MMA_M: usize = 8;
+/// WMMA output atom columns.
+pub const MMA_N: usize = 8;
+/// K-group of one INT4 MMA instruction (T4: an 8x32 operand, §1).
+pub const MMA_K: usize = 32;
+/// K-group of one INT8 MMA instruction (8x16 operand).
+pub const MMA_K_INT8: usize = 16;
+
+/// A complete schedule: the six tiling knobs plus the three optimization
+/// flags of §3.1–3.3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ScheduleConfig {
+    pub blk_row_warps: usize,
+    pub blk_col_warps: usize,
+    pub warp_row_tiles: usize,
+    pub warp_col_tiles: usize,
+    pub chunk: usize,
+    /// 0 = input-channel outer loop, 1 = kernel-height outer loop.
+    pub reorder_inner: usize,
+    pub dup_aware: bool,
+    pub reg_packing: bool,
+    pub nhwcnc_layout: bool,
+}
+
+impl Default for ScheduleConfig {
+    /// The untuned default baked into artifacts when no schedule is given.
+    fn default() -> Self {
+        Self {
+            blk_row_warps: 2,
+            blk_col_warps: 2,
+            warp_row_tiles: 2,
+            warp_col_tiles: 2,
+            chunk: 2,
+            reorder_inner: 0,
+            dup_aware: true,
+            reg_packing: true,
+            nhwcnc_layout: true,
+        }
+    }
+}
+
+impl ScheduleConfig {
+    /// The *baseline* schedule of Table 1: a fair mid-sized tiling with all
+    /// of the paper's optimizations disabled — standing in for the TVM
+    /// main-branch implementation the paper compares against.
+    pub fn tvm_baseline() -> Self {
+        Self {
+            dup_aware: false,
+            reg_packing: false,
+            nhwcnc_layout: false,
+            ..Self::default()
+        }
+    }
+
+    // --- derived tile geometry -------------------------------------------
+
+    /// Output rows computed per warp.
+    pub fn warp_m(&self) -> usize {
+        self.warp_row_tiles * MMA_M
+    }
+
+    /// Output columns computed per warp.
+    pub fn warp_n(&self) -> usize {
+        self.warp_col_tiles * MMA_N
+    }
+
+    /// Output rows per thread block.
+    pub fn block_m(&self) -> usize {
+        self.blk_row_warps * self.warp_m()
+    }
+
+    /// Output columns per thread block.
+    pub fn block_n(&self) -> usize {
+        self.blk_col_warps * self.warp_n()
+    }
+
+    /// K elements staged per main-loop iteration.
+    pub fn block_k(&self) -> usize {
+        self.chunk * MMA_K
+    }
+
+    pub fn warps_per_block(&self) -> usize {
+        self.blk_row_warps * self.blk_col_warps
+    }
+
+    pub fn threads_per_block(&self) -> usize {
+        self.warps_per_block() * 32
+    }
+
+    /// WMMA atoms computed per block per K-group step.
+    pub fn mma_per_block_step(&self) -> usize {
+        (self.block_m() / MMA_M) * (self.block_n() / MMA_N)
+    }
+
+    // --- legality ---------------------------------------------------------
+
+    /// Legal iff the tile hierarchy divides the (M, N, K) GEMM exactly —
+    /// the TVM template's divisibility constraint. This constraint is
+    /// *load-bearing for Fig. 16*: shrinking feature maps shrink M
+    /// (stage5: M = 392 = 2^3·7^2 admits only block_m = 8), which is
+    /// precisely how "a massive number of channels obstructs [the]
+    /// execution schedule [from] cover[ing] a sufficient number of width
+    /// in a single thread block" (§4.4) — and why duplicate-aware loading
+    /// pays off less on channel-heavy convolutions.
+    pub fn is_legal_for(&self, m: usize, n: usize, k: usize) -> bool {
+        m % self.block_m() == 0 && n % self.block_n() == 0 && k % self.block_k() == 0
+    }
+
+    /// M after padding to a block_m multiple (= M for legal schedules;
+    /// kept for cost formulas).
+    pub fn padded_m(&self, m: usize) -> usize {
+        m.div_ceil(self.block_m()) * self.block_m()
+    }
+
+    // --- JSON interchange with python/compile/schedules.py ----------------
+
+    /// Serialize to the JSON schema `Schedule.from_json` (python) accepts —
+    /// how rust-found schedules are handed to `aot.py --schedule-json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("blk_row_warps", Json::Num(self.blk_row_warps as f64)),
+            ("blk_col_warps", Json::Num(self.blk_col_warps as f64)),
+            ("warp_row_tiles", Json::Num(self.warp_row_tiles as f64)),
+            ("warp_col_tiles", Json::Num(self.warp_col_tiles as f64)),
+            ("chunk", Json::Num(self.chunk as f64)),
+            ("reorder_inner", Json::Num(self.reorder_inner as f64)),
+            ("dup_aware", Json::Bool(self.dup_aware)),
+            ("reg_packing", Json::Bool(self.reg_packing)),
+            ("nhwcnc_layout", Json::Bool(self.nhwcnc_layout)),
+        ])
+    }
+
+    /// Parse the same schema back (e.g. from artifact metadata).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let num = |k: &str| -> Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("schedule key '{k}' not an integer"))
+        };
+        let flag = |k: &str| -> Result<bool> {
+            j.req(k)?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("schedule key '{k}' not a bool"))
+        };
+        Ok(Self {
+            blk_row_warps: num("blk_row_warps")?,
+            blk_col_warps: num("blk_col_warps")?,
+            warp_row_tiles: num("warp_row_tiles")?,
+            warp_col_tiles: num("warp_col_tiles")?,
+            chunk: num("chunk")?,
+            reorder_inner: num("reorder_inner")?,
+            dup_aware: flag("dup_aware")?,
+            reg_packing: flag("reg_packing")?,
+            nhwcnc_layout: flag("nhwcnc_layout")?,
+        })
+    }
+
+    /// Compact display for logs/reports.
+    pub fn brief(&self) -> String {
+        format!(
+            "blk({}x{}) warp({}x{}) chunk{} ro{}{}{}{}",
+            self.blk_row_warps,
+            self.blk_col_warps,
+            self.warp_row_tiles,
+            self.warp_col_tiles,
+            self.chunk,
+            self.reorder_inner,
+            if self.dup_aware { " +dup" } else { "" },
+            if self.reg_packing { " +pack" } else { "" },
+            if self.nhwcnc_layout { " +nc" } else { "" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_arithmetic() {
+        let c = ScheduleConfig {
+            blk_row_warps: 2,
+            blk_col_warps: 4,
+            warp_row_tiles: 2,
+            warp_col_tiles: 1,
+            chunk: 4,
+            ..Default::default()
+        };
+        assert_eq!(c.block_m(), 32);
+        assert_eq!(c.block_n(), 32);
+        assert_eq!(c.block_k(), 128);
+        assert_eq!(c.threads_per_block(), 256);
+        assert_eq!(c.mma_per_block_step(), 16);
+    }
+
+    #[test]
+    fn legality() {
+        let c = ScheduleConfig::default(); // 32x32, k64
+        assert!(c.is_legal_for(25088, 64, 576));
+        assert!(!c.is_legal_for(25088, 8, 576)); // N not divisible
+        assert!(!c.is_legal_for(25088, 64, 100)); // K not divisible
+        assert!(!c.is_legal_for(392, 512, 4608)); // stage5 M: only bm=8
+        assert!(ScheduleConfig {
+            blk_row_warps: 1,
+            warp_row_tiles: 1,
+            ..c
+        }
+        .is_legal_for(392, 512, 4608));
+        assert_eq!(c.padded_m(25088), 25088);
+    }
+
+    #[test]
+    fn json_matches_python_schema() {
+        let c = ScheduleConfig::default();
+        let j = c.to_json();
+        for key in [
+            "blk_row_warps",
+            "blk_col_warps",
+            "warp_row_tiles",
+            "warp_col_tiles",
+            "chunk",
+            "reorder_inner",
+            "dup_aware",
+            "reg_packing",
+            "nhwcnc_layout",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        let rt = ScheduleConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(rt, c);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_keys() {
+        let j = Json::parse(r#"{"chunk": 2}"#).unwrap();
+        assert!(ScheduleConfig::from_json(&j).is_err());
+    }
+}

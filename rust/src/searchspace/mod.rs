@@ -1,0 +1,23 @@
+//! The schedule search space of the paper (§4.1).
+//!
+//! Six knobs tile the im2col GEMM onto the Tensor Core execution
+//! hierarchy, and three optimization flags toggle the code-generation
+//! techniques of §3.1–3.3 (the ablation axes of Fig. 15/16):
+//!
+//! | knob             | meaning                                   | values |
+//! |------------------|-------------------------------------------|--------|
+//! | `BLK-ROW-WARPS`  | warps along M per thread block            | 1,2,4,8 |
+//! | `BLK-COL-WARPS`  | warps along N per thread block            | 1,2,4,8 |
+//! | `WARP-ROW-TILES` | WMMA tiles along M per warp               | 1,2,4,8 |
+//! | `WARP-COL-TILES` | WMMA tiles along N per warp               | 1,2,4,8 |
+//! | `CHUNK`          | input-channel (K) loop split factor       | 1,2,4,8 |
+//! | `REORDER-INNER`  | channel-outer vs kernel-height loop order | 0,1 |
+//! | `dup_aware`      | §3.1 duplicate-aware load                 | off,on |
+//! | `reg_packing`    | §3.2 register-level epilogue + packing    | off,on |
+//! | `nhwcnc_layout`  | §3.3 NHWCnc coalesced global layout       | off,on |
+
+mod config;
+mod space;
+
+pub use config::{ScheduleConfig, MMA_K, MMA_K_INT8, MMA_M, MMA_N};
+pub use space::{Genotype, Knob, SearchSpace, SpaceOptions};

@@ -1,0 +1,273 @@
+//! [`SearchSpace`]: the knob cross-product, genotype encoding, legality
+//! filtering, mutation, and the configuration-distance metric the
+//! diversity-aware explorer uses.
+
+use super::config::ScheduleConfig;
+use crate::conv::ConvWorkload;
+use crate::util::Rng;
+
+/// A schedule encoded as per-knob value *indices* — the representation the
+/// explorers mutate (AutoTVM's "knob" view of a config).
+pub type Genotype = Vec<u8>;
+
+/// One tunable dimension.
+#[derive(Debug, Clone)]
+pub struct Knob {
+    pub name: &'static str,
+    pub values: Vec<usize>,
+}
+
+/// Options controlling which dimensions are searched.
+#[derive(Debug, Clone, Copy)]
+pub struct SpaceOptions {
+    /// Include the §3.1–3.3 optimization flags as searchable knobs. When
+    /// false (the paper's §4.3 setting: "the search space of the original
+    /// AutoTVM"), the flags are pinned to `pinned_flags`.
+    pub search_opt_flags: bool,
+    pub pinned_flags: [bool; 3], // dup_aware, reg_packing, nhwcnc_layout
+}
+
+impl Default for SpaceOptions {
+    fn default() -> Self {
+        Self { search_opt_flags: true, pinned_flags: [true, true, true] }
+    }
+}
+
+impl SpaceOptions {
+    /// The original-AutoTVM space of §4.3 (tiling knobs only, all
+    /// optimizations on).
+    pub fn autotvm_original() -> Self {
+        Self { search_opt_flags: false, pinned_flags: [true, true, true] }
+    }
+
+    /// Baseline space: tiling knobs only, all optimizations off.
+    pub fn baseline() -> Self {
+        Self { search_opt_flags: false, pinned_flags: [false, false, false] }
+    }
+}
+
+/// The search space for one convolution workload.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    knobs: Vec<Knob>,
+    opts: SpaceOptions,
+    gemm: (usize, usize, usize),
+    wl: ConvWorkload,
+}
+
+const POW2: [usize; 4] = [1, 2, 4, 8];
+
+impl SearchSpace {
+    pub fn for_workload(wl: &ConvWorkload, opts: SpaceOptions) -> Self {
+        let mut knobs = vec![
+            Knob { name: "blk_row_warps", values: POW2.to_vec() },
+            Knob { name: "blk_col_warps", values: POW2.to_vec() },
+            Knob { name: "warp_row_tiles", values: POW2.to_vec() },
+            Knob { name: "warp_col_tiles", values: POW2.to_vec() },
+            Knob { name: "chunk", values: POW2.to_vec() },
+            Knob { name: "reorder_inner", values: vec![0, 1] },
+        ];
+        if opts.search_opt_flags {
+            knobs.push(Knob { name: "dup_aware", values: vec![0, 1] });
+            knobs.push(Knob { name: "reg_packing", values: vec![0, 1] });
+            knobs.push(Knob { name: "nhwcnc_layout", values: vec![0, 1] });
+        }
+        Self { knobs, opts, gemm: (wl.gemm_m(), wl.gemm_n(), wl.gemm_k()), wl: wl.clone() }
+    }
+
+    pub fn knobs(&self) -> &[Knob] {
+        &self.knobs
+    }
+
+    /// The workload this space was built for.
+    pub fn workload(&self) -> &ConvWorkload {
+        &self.wl
+    }
+
+    pub fn n_knobs(&self) -> usize {
+        self.knobs.len()
+    }
+
+    /// Cross-product cardinality (before legality filtering).
+    pub fn cardinality(&self) -> usize {
+        self.knobs.iter().map(|k| k.values.len()).product()
+    }
+
+    /// Decode a genotype into a concrete schedule.
+    pub fn decode(&self, g: &Genotype) -> ScheduleConfig {
+        debug_assert_eq!(g.len(), self.knobs.len());
+        let v = |i: usize| self.knobs[i].values[g[i] as usize];
+        let flags = if self.opts.search_opt_flags {
+            [v(6) == 1, v(7) == 1, v(8) == 1]
+        } else {
+            self.opts.pinned_flags
+        };
+        ScheduleConfig {
+            blk_row_warps: v(0),
+            blk_col_warps: v(1),
+            warp_row_tiles: v(2),
+            warp_col_tiles: v(3),
+            chunk: v(4),
+            reorder_inner: v(5),
+            dup_aware: flags[0],
+            reg_packing: flags[1],
+            nhwcnc_layout: flags[2],
+        }
+    }
+
+    /// Genotype from a flat index (row-major over knob values).
+    pub fn from_index(&self, mut idx: usize) -> Genotype {
+        let mut g = vec![0u8; self.knobs.len()];
+        for (i, k) in self.knobs.iter().enumerate().rev() {
+            g[i] = (idx % k.values.len()) as u8;
+            idx /= k.values.len();
+        }
+        g
+    }
+
+    pub fn is_legal(&self, g: &Genotype) -> bool {
+        let (m, n, k) = self.gemm;
+        self.decode(g).is_legal_for(m, n, k)
+    }
+
+    /// Every legal genotype (exhaustive search / Table 1's "Exhaustive").
+    pub fn enumerate_legal(&self) -> Vec<Genotype> {
+        (0..self.cardinality())
+            .map(|i| self.from_index(i))
+            .filter(|g| self.is_legal(g))
+            .collect()
+    }
+
+    /// Uniform random *legal* genotype (rejection sampling; every workload
+    /// admits the all-minimum genotype so this terminates).
+    pub fn random_legal(&self, rng: &mut Rng) -> Genotype {
+        for _ in 0..10_000 {
+            let g: Genotype = self
+                .knobs
+                .iter()
+                .map(|k| rng.gen_range(k.values.len()) as u8)
+                .collect();
+            if self.is_legal(&g) {
+                return g;
+            }
+        }
+        // fall back to the minimal schedule, always legal for our workloads
+        vec![0u8; self.knobs.len()]
+    }
+
+    /// AutoTVM's proposal move: mutate exactly one random knob to a
+    /// different random value, re-rolling until legal.
+    pub fn mutate_one_knob(&self, g: &Genotype, rng: &mut Rng) -> Genotype {
+        for _ in 0..1_000 {
+            let mut out = g.clone();
+            let i = rng.gen_range(self.knobs.len());
+            let n_vals = self.knobs[i].values.len();
+            if n_vals < 2 {
+                continue;
+            }
+            let mut nv = rng.gen_range(n_vals) as u8;
+            if nv == g[i] {
+                nv = (nv + 1) % n_vals as u8;
+            }
+            out[i] = nv;
+            if self.is_legal(&out) {
+                return out;
+            }
+        }
+        g.clone()
+    }
+
+    /// Configuration distance: number of differing knobs (Hamming). This is
+    /// the diversity measure of §3.4 — "not all knobs of configuration are
+    /// critical", so distance counts *which* knobs differ, not how much.
+    pub fn distance(a: &Genotype, b: &Genotype) -> usize {
+        a.iter().zip(b).filter(|(x, y)| x != y).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> SearchSpace {
+        SearchSpace::for_workload(
+            &ConvWorkload::resnet50_stage(2, 8),
+            SpaceOptions::default(),
+        )
+    }
+
+    #[test]
+    fn cardinality_counts_flags() {
+        assert_eq!(space().cardinality(), 4 * 4 * 4 * 4 * 4 * 2 * 2 * 2 * 2);
+        let tvm = SearchSpace::for_workload(
+            &ConvWorkload::resnet50_stage(2, 8),
+            SpaceOptions::autotvm_original(),
+        );
+        assert_eq!(tvm.cardinality(), 4usize.pow(5) * 2);
+    }
+
+    #[test]
+    fn from_index_roundtrip_decode() {
+        let s = space();
+        let g = s.from_index(12345 % s.cardinality());
+        assert_eq!(g.len(), s.n_knobs());
+        let _ = s.decode(&g); // must not panic
+    }
+
+    #[test]
+    fn enumerate_legal_all_divide() {
+        let s = space();
+        let legal = s.enumerate_legal();
+        assert!(!legal.is_empty());
+        for g in &legal {
+            let c = s.decode(g);
+            // stage2 gemm: 25088 x 64 x 576
+            assert_eq!(25088 % c.block_m(), 0);
+            assert_eq!(64 % c.block_n(), 0);
+            assert_eq!(576 % c.block_k(), 0);
+        }
+        // and nothing illegal sneaks in: count against a direct filter
+        let direct = (0..s.cardinality())
+            .filter(|&i| s.is_legal(&s.from_index(i)))
+            .count();
+        assert_eq!(legal.len(), direct);
+    }
+
+    #[test]
+    fn random_legal_is_legal() {
+        let s = space();
+        let mut rng = Rng::new(7);
+        for _ in 0..64 {
+            assert!(s.is_legal(&s.random_legal(&mut rng)));
+        }
+    }
+
+    #[test]
+    fn mutation_changes_at_most_one_knob_and_stays_legal() {
+        let s = space();
+        let mut rng = Rng::new(11);
+        let g = s.random_legal(&mut rng);
+        for _ in 0..64 {
+            let m = s.mutate_one_knob(&g, &mut rng);
+            assert!(s.is_legal(&m));
+            assert!(SearchSpace::distance(&g, &m) <= 1);
+        }
+    }
+
+    #[test]
+    fn pinned_flags_apply() {
+        let s = SearchSpace::for_workload(
+            &ConvWorkload::resnet50_stage(2, 8),
+            SpaceOptions::baseline(),
+        );
+        let c = s.decode(&s.from_index(0));
+        assert!(!c.dup_aware && !c.reg_packing && !c.nhwcnc_layout);
+    }
+
+    #[test]
+    fn distance_is_hamming() {
+        let a = vec![0, 1, 2, 3, 0, 1, 0, 0, 0];
+        let b = vec![0, 1, 0, 3, 0, 0, 0, 0, 1];
+        assert_eq!(SearchSpace::distance(&a, &b), 3);
+    }
+}

@@ -1,0 +1,115 @@
+//! Per-kind serving metrics: queue/exec latency percentiles, batch sizes.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+#[derive(Debug, Default, Clone)]
+struct KindStats {
+    queue_us: Vec<f64>,
+    exec_us: Vec<f64>,
+    batch_sizes: Vec<usize>,
+}
+
+/// Aggregated view of one conv kind's serving behaviour.
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    pub kind: String,
+    pub count: u64,
+    pub queue_p50_us: f64,
+    pub queue_p95_us: f64,
+    pub exec_p50_us: f64,
+    pub exec_p95_us: f64,
+    pub mean_batch: f64,
+}
+
+/// Thread-safe metrics sink shared by the workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<HashMap<String, KindStats>>,
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx]
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&self, kind: &str, queue_us: f64, exec_us: f64, batch: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let s = m.entry(kind.to_string()).or_default();
+        s.queue_us.push(queue_us);
+        s.exec_us.push(exec_us);
+        s.batch_sizes.push(batch);
+    }
+
+    pub fn total_count(&self) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| s.exec_us.len() as u64)
+            .sum()
+    }
+
+    pub fn kinds(&self) -> Vec<String> {
+        let mut k: Vec<String> = self.inner.lock().unwrap().keys().cloned().collect();
+        k.sort();
+        k
+    }
+
+    pub fn summary(&self, kind: &str) -> Option<LatencySummary> {
+        let m = self.inner.lock().unwrap();
+        let s = m.get(kind)?;
+        let mut q = s.queue_us.clone();
+        let mut e = s.exec_us.clone();
+        q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(LatencySummary {
+            kind: kind.to_string(),
+            count: e.len() as u64,
+            queue_p50_us: pct(&q, 0.5),
+            queue_p95_us: pct(&q, 0.95),
+            exec_p50_us: pct(&e, 0.5),
+            exec_p95_us: pct(&e, 0.95),
+            mean_batch: s.batch_sizes.iter().sum::<usize>() as f64
+                / s.batch_sizes.len().max(1) as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_counts() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("k", i as f64, (101 - i) as f64, 2);
+        }
+        let s = m.summary("k").unwrap();
+        assert_eq!(s.count, 100);
+        assert!((s.queue_p50_us - 50.0).abs() <= 1.0);
+        assert!((s.queue_p95_us - 95.0).abs() <= 1.0);
+        assert!((s.exec_p95_us - 95.0).abs() <= 1.0);
+        assert_eq!(s.mean_batch, 2.0);
+        assert_eq!(m.total_count(), 100);
+    }
+
+    #[test]
+    fn missing_kind_is_none() {
+        assert!(Metrics::new().summary("nope").is_none());
+    }
+
+    #[test]
+    fn pct_on_empty_is_zero() {
+        assert_eq!(pct(&[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,336 @@
+//! L3 serving coordinator: request router + dynamic batcher + worker pool
+//! over the quantized-conv executors.
+//!
+//! After tuning, a deployment serves quantized convolutions; this module
+//! is the coordination layer a T4 inference box would run (structured
+//! after the vLLM-style router: bounded queue, head-of-line same-kind
+//! batching, worker pool, per-kind latency metrics). Workers execute with
+//! the pure-rust executor ([`crate::conv::execute`]) whose numerics are
+//! verified against the Pallas/PJRT path, so coordinator latencies are
+//! not polluted by interpret-mode XLA overhead.
+
+mod metrics;
+
+pub use metrics::{LatencySummary, Metrics};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::conv::{qconv2d, ConvInstance};
+use crate::quant::Epilogue;
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    /// Max queued requests before `submit` returns Busy.
+    pub queue_depth: usize,
+    /// Max requests a worker pulls per batch (same conv kind only —
+    /// batching across kinds would need separate executables anyway).
+    pub max_batch: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { workers: 4, queue_depth: 256, max_batch: 8 }
+    }
+}
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    /// Conv kind key (e.g. "stage2"); batching groups by this.
+    pub kind: String,
+    pub instance: ConvInstance,
+    pub epilogue: Epilogue,
+    enqueued: Instant,
+    respond: Sender<Response>,
+}
+
+/// One completed inference.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub kind: String,
+    pub packed_output: Vec<i32>,
+    pub queue_us: f64,
+    pub exec_us: f64,
+    /// How many requests shared the worker batch.
+    pub batch_size: usize,
+}
+
+/// Submission outcome.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity — backpressure (caller retries / sheds).
+    Busy,
+    /// Server stopping.
+    ShuttingDown,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Request>>,
+    available: Condvar,
+    running: AtomicBool,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+}
+
+/// The serving coordinator.
+pub struct Server {
+    shared: Arc<Shared>,
+    cfg: ServerConfig,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    pub fn start(cfg: ServerConfig) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            running: AtomicBool::new(true),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let workers = (0..cfg.workers)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                let mx = Arc::clone(&metrics);
+                let max_batch = cfg.max_batch;
+                std::thread::spawn(move || worker_loop(sh, mx, max_batch))
+            })
+            .collect();
+        Self { shared, cfg, workers, metrics, next_id: AtomicU64::new(1) }
+    }
+
+    /// Submit one request; the response arrives on the returned channel.
+    pub fn submit(
+        &self,
+        kind: &str,
+        instance: ConvInstance,
+        epilogue: Epilogue,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        if !self.shared.running.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let (tx, rx) = channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.len() >= self.cfg.queue_depth {
+                return Err(SubmitError::Busy); // backpressure
+            }
+            q.push_back(Request {
+                id: self.next_id.fetch_add(1, Ordering::SeqCst),
+                kind: kind.to_string(),
+                instance,
+                epilogue,
+                enqueued: Instant::now(),
+                respond: tx,
+            });
+        }
+        self.shared.submitted.fetch_add(1, Ordering::SeqCst);
+        self.shared.available.notify_one();
+        Ok(rx)
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.shared.completed.load(Ordering::SeqCst)
+    }
+
+    /// Drain the queue and stop the workers.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        // wait for queue drain
+        loop {
+            let empty = self.shared.queue.lock().unwrap().is_empty();
+            if empty {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        self.shared.running.store(false, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        Arc::clone(&self.metrics)
+    }
+}
+
+/// Worker: pull a head-of-line batch of same-kind requests, execute, time.
+fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize) {
+    loop {
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if !shared.running.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+            // head-of-line batching: take the first request's kind, then
+            // greedily pull queued requests of the same kind (preserving
+            // order of the rest)
+            let head = q.pop_front().unwrap();
+            let kind = head.kind.clone();
+            let mut batch = vec![head];
+            let mut i = 0;
+            while batch.len() < max_batch && i < q.len() {
+                if q[i].kind == kind {
+                    batch.push(q.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
+            batch
+        };
+
+        let bsize = batch.len();
+        for req in batch {
+            let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+            let t = Instant::now();
+            let out = qconv2d(&req.instance, &req.epilogue);
+            let exec_us = t.elapsed().as_secs_f64() * 1e6;
+            metrics.observe(&req.kind, queue_us, exec_us, bsize);
+            shared.completed.fetch_add(1, Ordering::SeqCst);
+            let _ = req.respond.send(Response {
+                id: req.id,
+                kind: req.kind,
+                packed_output: out,
+                queue_us,
+                exec_us,
+                batch_size: bsize,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvWorkload;
+
+    fn tiny_wl() -> ConvWorkload {
+        ConvWorkload::new("edge", 1, 8, 8, 8, 8)
+    }
+
+    #[test]
+    fn serves_requests_with_correct_numerics() {
+        let server = Server::start(ServerConfig { workers: 2, ..Default::default() });
+        let wl = tiny_wl();
+        let epi = Epilogue::default();
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for seed in 0..8u64 {
+            let inst = ConvInstance::synthetic(&wl, seed);
+            expected.push(qconv2d(&inst, &epi));
+            rxs.push(server.submit("edge", inst, epi).unwrap());
+        }
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.packed_output, want);
+            assert!(resp.exec_us > 0.0);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.summary("edge").unwrap().count, 8);
+    }
+
+    #[test]
+    fn backpressure_when_queue_full() {
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 2,
+            max_batch: 1,
+        });
+        let wl = ConvWorkload::new("big", 1, 24, 24, 32, 32); // slow enough to pile up
+        let epi = Epilogue::default();
+        let mut busy = false;
+        let mut rxs = Vec::new();
+        for seed in 0..64u64 {
+            match server.submit("big", ConvInstance::synthetic(&wl, seed), epi) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::Busy) => {
+                    busy = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(busy, "queue_depth=2 must eventually reject");
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn batches_group_same_kind() {
+        // one worker, burst of same-kind requests -> batches > 1
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 4,
+        });
+        let wl = tiny_wl();
+        let epi = Epilogue::default();
+        let rxs: Vec<_> = (0..16u64)
+            .map(|s| server.submit("edge", ConvInstance::synthetic(&wl, s), epi).unwrap())
+            .collect();
+        let mut max_batch_seen = 0;
+        for rx in rxs {
+            max_batch_seen = max_batch_seen.max(rx.recv().unwrap().batch_size);
+        }
+        assert!(max_batch_seen > 1, "burst should batch (saw {max_batch_seen})");
+        assert!(max_batch_seen <= 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_everything() {
+        let server = Server::start(ServerConfig { workers: 3, ..Default::default() });
+        let wl = tiny_wl();
+        let epi = Epilogue::default();
+        let n = 24u64;
+        let _rxs: Vec<_> = (0..n)
+            .map(|s| server.submit("edge", ConvInstance::synthetic(&wl, s), epi).unwrap())
+            .collect();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.total_count(), n);
+    }
+
+    #[test]
+    fn mixed_kinds_tracked_separately() {
+        let server = Server::start(ServerConfig::default());
+        let epi = Epilogue::default();
+        let a = ConvWorkload::new("a", 1, 8, 8, 8, 8);
+        let b = ConvWorkload::new("b", 1, 6, 6, 16, 8);
+        let mut rxs = Vec::new();
+        for s in 0..6u64 {
+            rxs.push(server.submit("a", ConvInstance::synthetic(&a, s), epi).unwrap());
+            rxs.push(server.submit("b", ConvInstance::synthetic(&b, s), epi).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let m = server.shutdown();
+        assert_eq!(m.summary("a").unwrap().count, 6);
+        assert_eq!(m.summary("b").unwrap().count, 6);
+    }
+}

@@ -1,0 +1,359 @@
+//! Static analysis of one (workload, schedule) pair: memory traffic,
+//! shared-memory footprint, register pressure — everything the timing
+//! model charges. All quantities are *counted* from the same index algebra
+//! the code generator would use (exact im2col duplicate analysis, exact
+//! packing widths, address-derived coalescing), not fitted.
+
+use std::collections::HashMap;
+
+use crate::conv::{ConvWorkload, Im2colIndex};
+use crate::layout::{self, Layout, TensorDims};
+use crate::searchspace::{ScheduleConfig, MMA_M, MMA_N};
+
+/// INT4 element size in bytes (packed two per byte). Workloads carry
+/// their own [`crate::conv::Precision`]; this constant remains for INT4
+/// call sites and tests.
+pub const INT4_BYTES: f64 = 0.5;
+/// int32 accumulator size.
+pub const ACC_BYTES: f64 = 4.0;
+
+/// Duplicate/padding statistics of one M-row-block's feature data.
+///
+/// The im2col duplicates live *across kernel positions* (paper Fig. 3): the
+/// same feature element appears at columns `p*C + c` for several kernel
+/// positions `p`. A duplicate-aware block therefore loads its pixels'
+/// *receptive-field patch* once (`unique_per_row_block` elements over the
+/// whole K walk), where a naive im2col load touches every non-padding cell
+/// (`naive_per_row_block`).
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureTileProfile {
+    /// Non-padding im2col cells across a (block_m x K) row-block.
+    pub naive_per_row_block: f64,
+    /// Distinct feature elements across the row-block — what a
+    /// duplicate-aware block loads, and what DRAM serves cold.
+    pub unique_per_row_block: f64,
+    /// Distinct (pixel) positions behind the row-block, i.e.
+    /// `unique_per_row_block / C` — sizes the raw-patch staging buffer.
+    pub unique_pixels: f64,
+}
+
+/// Everything the timing model needs, counted per block and aggregated.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficAnalysis {
+    pub n_blocks: usize,
+    pub k_steps: usize,
+    /// DRAM bytes (whole kernel): cold feature + weight + output store.
+    pub dram_bytes: f64,
+    /// L2 bytes served to repeat readers (whole kernel).
+    pub l2_bytes: f64,
+    /// Shared-memory traffic, bytes (whole kernel): staging writes +
+    /// operand reads + (if unpacked epilogue) the int32 output roundtrip.
+    pub smem_traffic_bytes: f64,
+    /// Shared memory footprint per block (occupancy input).
+    pub smem_bytes_per_block: usize,
+    /// Registers per thread (occupancy input).
+    pub regs_per_thread: usize,
+    /// Warp-shuffle instructions (whole kernel) for packing + layout
+    /// maintenance.
+    pub shuffle_instructions: f64,
+    /// Coalescing efficiency of global accesses (1.0 = perfect).
+    pub coalesce_efficiency: f64,
+    /// Feature-tile duplicate factor actually exploited (1.0 if off).
+    pub dup_factor: f64,
+}
+
+/// Cache of feature-tile profiles: keyed by block_m and the number of
+/// channels — the only schedule inputs the im2col row-block stats depend on.
+#[derive(Default)]
+pub struct ProfileCache {
+    map: HashMap<usize, FeatureTileProfile>,
+}
+
+impl ProfileCache {
+    pub fn profile(&mut self, ix: &Im2colIndex, block_m: usize, channels: usize) -> FeatureTileProfile {
+        *self
+            .map
+            .entry(block_m)
+            .or_insert_with(|| compute_profile(ix, block_m, channels))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Exact row-block statistics, sampled at the first / middle / last block
+/// rows and averaged (interior blocks dominate and are
+/// translation-invariant, so three samples suffice).
+fn compute_profile(ix: &Im2colIndex, block_m: usize, channels: usize) -> FeatureTileProfile {
+    let rows = ix.rows();
+    let cols = ix.cols();
+    let n_row_blocks = rows.div_ceil(block_m).max(1);
+    let row_samples = [0, n_row_blocks / 2, n_row_blocks.saturating_sub(1)];
+
+    let mut naive = 0.0;
+    let mut unique = 0.0;
+    for &rb in row_samples.iter() {
+        let s = ix.tile_stats(rb * block_m, block_m, 0, cols);
+        naive += s.naive_loads() as f64;
+        unique += s.unique as f64;
+    }
+    let n = row_samples.len() as f64;
+    FeatureTileProfile {
+        naive_per_row_block: naive / n,
+        unique_per_row_block: unique / n,
+        unique_pixels: unique / n / channels as f64,
+    }
+}
+
+/// Round shared memory to the allocation granule (256 B on Turing).
+fn smem_granule(bytes: f64) -> usize {
+    ((bytes / 256.0).ceil() as usize) * 256
+}
+
+/// Count everything the schedule moves. This is the single source of truth
+/// both for the timing model and for the reports.
+pub fn analyze(
+    wl: &ConvWorkload,
+    cfg: &ScheduleConfig,
+    cache: &mut ProfileCache,
+) -> TrafficAnalysis {
+    let (m, n, k) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
+    let (bm, bn, bk) = (cfg.block_m(), cfg.block_n(), cfg.block_k());
+    debug_assert!(cfg.is_legal_for(m, n, k));
+    let m_pad = cfg.padded_m(m); // ragged M-tiles padded like TVM
+    let nm = m_pad / bm;
+    let nn = n / bn;
+    let n_blocks = nm * nn;
+    let k_steps = k / bk;
+
+    let eb = wl.precision.element_bytes();
+    let ix = wl.im2col();
+    let prof = cache.profile(&ix, bm, wl.in_channels);
+
+    // --- coalescing: derived from WMMA-tile byte addresses (layout mod) --
+    let dims = TensorDims {
+        n: wl.batch.max(layout::WMMA_TILE_ROWS),
+        h: wl.height,
+        w: wl.width,
+        // channel bytes at the workload's precision
+        c: ((wl.in_channels as f64 * eb) as usize).max(layout::WMMA_TILE_BYTES_PER_ROW),
+    };
+    let lay = if cfg.nhwcnc_layout { Layout::Nhwcnc } else { Layout::Nhwc };
+    let coalesce_efficiency = layout::wmma_tile_coalescing(&dims, lay).efficiency();
+
+    // --- feature traffic -------------------------------------------------
+    // global->smem loads issued by one block over the whole K loop:
+    // duplicate-aware blocks fetch their receptive-field patch once;
+    // naive im2col touches every non-padding cell (kernel-position
+    // duplicates included).
+    let feat_loads_per_block = if cfg.dup_aware {
+        prof.unique_per_row_block
+    } else {
+        prof.naive_per_row_block
+    };
+    // DRAM sees each M-row-block's distinct elements once (first N-block
+    // cold-misses); the other nn-1 N-blocks are L2 hits. Without duplicate
+    // awareness the *L2* absorbs the intra-block repeats too.
+    let dram_feature = nm as f64 * prof.unique_per_row_block * eb;
+    let l2_feature = (nn as f64 * feat_loads_per_block * nm as f64) * eb - dram_feature;
+
+    // --- weight traffic ---------------------------------------------------
+    let w_total = (k * n) as f64 * eb; // whole filter, cold
+    let w_per_block = (k * bn) as f64 * eb;
+    let dram_weight = w_total;
+    let l2_weight = (n_blocks as f64 * w_per_block) - dram_weight;
+
+    // --- output traffic ---------------------------------------------------
+    // final global store is packed INT4 either way (§3.2.2); the unpacked
+    // path additionally roundtrips int32 through shared memory.
+    let out_store = (m_pad * n) as f64 * eb;
+
+    // --- shared-memory traffic & footprint --------------------------------
+    // staging buffer per K step: duplicate-aware keeps the raw
+    // receptive-field patch for the current channel chunk (unique pixels x
+    // chunk channels); naive keeps the expanded im2col tile incl.
+    // predicated-zero pads.
+    // duplicate-aware: the raw patch is loaded once per channel chunk and
+    // stays resident across the kernel-position loop (no double buffer);
+    // naive: the expanded im2col tile is re-staged per step (double
+    // buffered to overlap the next load).
+    let smem_feat_per_block = if cfg.dup_aware {
+        prof.unique_pixels * bk.min(wl.in_channels) as f64 * eb
+    } else {
+        (bm * bk) as f64 * eb * 2.0
+    };
+    let smem_w_per_block = (bk * bn) as f64 * eb * 2.0;
+    let smem_out_per_block = if cfg.reg_packing { 0.0 } else { (bm * bn) as f64 * ACC_BYTES };
+    let smem_bytes_per_block =
+        smem_granule(smem_feat_per_block + smem_w_per_block + smem_out_per_block);
+
+    // staging writes + operand reads by the MMA warps
+    let stage_writes = (feat_loads_per_block + (k * bn) as f64) * eb;
+    let operand_reads =
+        (cfg.warps_per_block() * (cfg.warp_m() + cfg.warp_n())) as f64 * k as f64 * eb;
+    let out_roundtrip = if cfg.reg_packing {
+        0.0
+    } else {
+        // int32 store + reload (Fig. 5); strided int32 tile stores hit
+        // 2-way shared-memory bank conflicts on top
+        (bm * bn) as f64 * ACC_BYTES * 2.0 * 2.0
+    };
+    let smem_traffic_bytes = n_blocks as f64 * (stage_writes + operand_reads + out_roundtrip);
+
+    // --- registers ---------------------------------------------------------
+    // accumulator fragments: warp_row_tiles*warp_col_tiles 8x8 i32 tiles
+    // spread over 32 lanes, plus operand fragments and bookkeeping.
+    let acc_regs = cfg.warp_row_tiles * cfg.warp_col_tiles * (MMA_M * MMA_N) / 32;
+    let frag_regs = 4 * (cfg.warp_row_tiles + cfg.warp_col_tiles);
+    let regs_per_thread = 32 + acc_regs + frag_regs;
+
+    // --- shuffles -----------------------------------------------------------
+    let outputs = (m * n) as f64;
+    let shuffle_instructions = if cfg.reg_packing {
+        // Fig. 9 tree: 3 shuffles per 32 lanes + Fig. 10 gather (1 per
+        // packed word group) + §3.3.2 layout maintenance when NHWCnc.
+        let tree = outputs / 32.0 * 3.0;
+        let gather = outputs / (32.0 * 8.0);
+        let maintain = if cfg.nhwcnc_layout {
+            outputs / (MMA_M * MMA_N) as f64 * layout::MAINTENANCE_SHUFFLES_PER_TILE as f64
+        } else {
+            0.0
+        };
+        tree + gather + maintain
+    } else {
+        0.0
+    };
+
+    let dup_factor = if cfg.dup_aware && prof.unique_per_row_block > 0.0 {
+        prof.naive_per_row_block / prof.unique_per_row_block
+    } else {
+        1.0
+    };
+
+    TrafficAnalysis {
+        n_blocks,
+        k_steps,
+        dram_bytes: dram_feature + dram_weight + out_store,
+        l2_bytes: l2_feature + l2_weight,
+        smem_traffic_bytes,
+        smem_bytes_per_block,
+        regs_per_thread,
+        shuffle_instructions,
+        coalesce_efficiency,
+        dup_factor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage2() -> ConvWorkload {
+        ConvWorkload::resnet50_stage(2, 8)
+    }
+
+    fn analyze_cfg(cfg: &ScheduleConfig) -> TrafficAnalysis {
+        analyze(&stage2(), cfg, &mut ProfileCache::default())
+    }
+
+    #[test]
+    fn dup_aware_reduces_loads_and_traffic() {
+        let on = analyze_cfg(&ScheduleConfig::default());
+        let off = analyze_cfg(&ScheduleConfig {
+            dup_aware: false,
+            ..ScheduleConfig::default()
+        });
+        // fewer global loads -> less L2 traffic and fewer staging writes
+        assert!(on.l2_bytes < off.l2_bytes);
+        assert!(on.smem_traffic_bytes < off.smem_traffic_bytes);
+        // the 3x3 receptive-field overlap gives a 2x..9x duplicate factor
+        assert!(on.dup_factor > 2.0 && on.dup_factor <= 9.0, "{}", on.dup_factor);
+        assert_eq!(off.dup_factor, 1.0);
+        // DRAM cold traffic is identical: L2 absorbs the repeats either way
+        assert!((on.dram_bytes - off.dram_bytes).abs() < 1.0);
+    }
+
+    #[test]
+    fn packing_halves_smem_output_footprint() {
+        let on = analyze_cfg(&ScheduleConfig::default());
+        let off = analyze_cfg(&ScheduleConfig {
+            reg_packing: false,
+            ..ScheduleConfig::default()
+        });
+        // Fig. 7: unpacked staging adds bm*bn*4 bytes
+        assert_eq!(
+            off.smem_bytes_per_block - on.smem_bytes_per_block,
+            32 * 32 * 4
+        );
+        assert!(off.smem_traffic_bytes > on.smem_traffic_bytes);
+        assert!(on.shuffle_instructions > 0.0);
+        assert_eq!(off.shuffle_instructions, 0.0);
+    }
+
+    #[test]
+    fn nhwcnc_gives_full_coalescing() {
+        let on = analyze_cfg(&ScheduleConfig::default());
+        let off = analyze_cfg(&ScheduleConfig {
+            nhwcnc_layout: false,
+            ..ScheduleConfig::default()
+        });
+        assert!((on.coalesce_efficiency - 1.0).abs() < 1e-9);
+        assert!(off.coalesce_efficiency < 0.75);
+    }
+
+    #[test]
+    fn dram_bytes_bounded_by_problem_footprint() {
+        let a = analyze_cfg(&ScheduleConfig::default());
+        let wl = stage2();
+        // cold DRAM traffic can't be less than input+weights+output once
+        let eb = wl.precision.element_bytes();
+        let floor = (wl.batch * wl.height * wl.width * wl.in_channels) as f64 * eb
+            + (wl.gemm_k() * wl.gemm_n()) as f64 * eb
+            + (wl.gemm_m() * wl.gemm_n()) as f64 * eb;
+        assert!(a.dram_bytes >= floor * 0.9, "{} vs {floor}", a.dram_bytes);
+        assert!(a.dram_bytes <= floor * 1.6);
+    }
+
+    #[test]
+    fn bigger_warp_tiles_reduce_operand_traffic_per_mac() {
+        let small = analyze_cfg(&ScheduleConfig {
+            warp_row_tiles: 1,
+            warp_col_tiles: 1,
+            blk_row_warps: 4,
+            blk_col_warps: 1,
+            ..ScheduleConfig::default()
+        });
+        let big = analyze_cfg(&ScheduleConfig {
+            warp_row_tiles: 4,
+            warp_col_tiles: 4,
+            blk_row_warps: 1,
+            blk_col_warps: 1,
+            ..ScheduleConfig::default()
+        });
+        // same block_m x block_n? small: 4*1*8=32 x 1*1*8=8; big: 32x32.
+        // compare operand traffic normalized by output elements
+        let per_out_small = small.smem_traffic_bytes / small.n_blocks as f64;
+        let _ = per_out_small;
+        assert!(
+            big.smem_traffic_bytes < small.smem_traffic_bytes,
+            "big {} small {}",
+            big.smem_traffic_bytes,
+            small.smem_traffic_bytes
+        );
+    }
+
+    #[test]
+    fn profile_cache_hits() {
+        let wl = stage2();
+        let mut cache = ProfileCache::default();
+        let _ = analyze(&wl, &ScheduleConfig::default(), &mut cache);
+        let n1 = cache.len();
+        let _ = analyze(&wl, &ScheduleConfig::default(), &mut cache);
+        assert_eq!(cache.len(), n1);
+    }
+}

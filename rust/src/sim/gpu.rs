@@ -1,0 +1,137 @@
+//! GPU hardware parameters for the cost simulator.
+
+/// Architecture-level constants of the simulated GPU. Defaults model the
+//  NVIDIA T4 (Turing TU104) the paper measures on.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Streaming multiprocessors.
+    pub sms: usize,
+    /// Sustained SM clock (GHz). T4 boosts to 1.59 but sustains lower.
+    pub clock_ghz: f64,
+    /// DRAM bandwidth (GB/s).
+    pub dram_gbps: f64,
+    /// L2 cache size (bytes) and bandwidth (GB/s).
+    pub l2_bytes: usize,
+    pub l2_gbps: f64,
+    /// Shared memory per SM (bytes) usable by thread blocks.
+    pub smem_per_sm: usize,
+    /// Shared-memory bandwidth per SM (bytes / cycle).
+    pub smem_bytes_per_cycle: f64,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: usize,
+    /// Max resident warps / blocks per SM.
+    pub max_warps_per_sm: usize,
+    pub max_blocks_per_sm: usize,
+    /// INT4 tensor-core MACs per SM per cycle (one 8x8x32 WMMA ≈ 2048
+    /// MACs; the T4's 8 tensor cores sustain about one such atom/cycle).
+    pub int4_macs_per_cycle: f64,
+    /// INT8 is half the INT4 rate (operand group 8x16 vs 8x32).
+    pub int8_macs_per_cycle: f64,
+    /// Warps needed in flight per SM to fully hide pipeline latency.
+    pub latency_hiding_warps: usize,
+    /// Warp-wide load/store instructions retired per SM per cycle (Turing:
+    /// 16 LSU lanes -> 0.5 warp-instructions/cycle).
+    pub ldst_warp_per_cycle: f64,
+    /// Sustained fraction of MMA peak achievable by a shared-memory-fed
+    /// convolution kernel (operand delivery, barriers, tail effects).
+    pub mma_sustained_frac: f64,
+}
+
+impl GpuSpec {
+    /// The paper's testbed: NVIDIA T4.
+    pub fn t4() -> Self {
+        Self {
+            name: "NVIDIA T4 (simulated)".into(),
+            sms: 40,
+            clock_ghz: 1.35,
+            dram_gbps: 320.0,
+            l2_bytes: 4 << 20,
+            l2_gbps: 900.0,
+            smem_per_sm: 64 << 10,
+            smem_bytes_per_cycle: 64.0,
+            regs_per_sm: 65_536,
+            max_warps_per_sm: 32,
+            max_blocks_per_sm: 16,
+            int4_macs_per_cycle: 2048.0,
+            int8_macs_per_cycle: 1024.0,
+            latency_hiding_warps: 12,
+            ldst_warp_per_cycle: 0.25,
+            mma_sustained_frac: 0.75,
+        }
+    }
+
+    /// Peak INT4 tensor throughput in TOPS (2 ops per MAC) — sanity anchor
+    /// against the datasheet's 260 TOPS (at 1.59 GHz boost).
+    pub fn peak_int4_tops(&self) -> f64 {
+        2.0 * self.int4_macs_per_cycle * self.sms as f64 * self.clock_ghz / 1000.0
+    }
+
+    /// RTX 2080 Ti (TU102): more SMs and bandwidth than the T4, same
+    /// Turing tensor cores — the §2.2 point that optimal parallelization
+    /// depends on "the number of SMs, L1/L2 cache size, or processor
+    /// performance".
+    pub fn rtx2080ti() -> Self {
+        Self {
+            name: "RTX 2080 Ti (simulated)".into(),
+            sms: 68,
+            clock_ghz: 1.55,
+            dram_gbps: 616.0,
+            l2_bytes: 5_767_168, // 5.5 MiB
+            l2_gbps: 1800.0,
+            smem_per_sm: 64 << 10,
+            smem_bytes_per_cycle: 64.0,
+            regs_per_sm: 65_536,
+            max_warps_per_sm: 32,
+            max_blocks_per_sm: 16,
+            int4_macs_per_cycle: 2048.0,
+            int8_macs_per_cycle: 1024.0,
+            latency_hiding_warps: 12,
+            ldst_warp_per_cycle: 0.25,
+            mma_sustained_frac: 0.75,
+        }
+    }
+
+    /// A small edge-class part (Jetson-like): few SMs, narrow DRAM —
+    /// stresses occupancy and wave quantization very differently.
+    pub fn edge_small() -> Self {
+        Self {
+            name: "edge-small (simulated)".into(),
+            sms: 8,
+            clock_ghz: 1.1,
+            dram_gbps: 60.0,
+            l2_bytes: 1 << 20,
+            l2_gbps: 200.0,
+            smem_per_sm: 48 << 10,
+            smem_bytes_per_cycle: 64.0,
+            regs_per_sm: 65_536,
+            max_warps_per_sm: 32,
+            max_blocks_per_sm: 16,
+            int4_macs_per_cycle: 2048.0,
+            int8_macs_per_cycle: 1024.0,
+            latency_hiding_warps: 12,
+            ldst_warp_per_cycle: 0.25,
+            mma_sustained_frac: 0.75,
+        }
+    }
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        Self::t4()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t4_peak_near_datasheet() {
+        let t4 = GpuSpec::t4();
+        // datasheet: 260 TOPS INT4 at boost clock; our sustained-clock peak
+        // must be the same order (220±40)
+        let peak = t4.peak_int4_tops();
+        assert!((180.0..=265.0).contains(&peak), "peak {peak}");
+    }
+}

@@ -1,0 +1,162 @@
+//! SM occupancy: how many thread blocks of a schedule fit on one SM.
+//!
+//! The paper leans on occupancy twice: too-large tiles starve the SMs
+//! (§2.2 "too small parallelization may result in occupancy problems"),
+//! and register-level packing shrinks the shared-memory footprint which
+//! "allocate[s] more thread blocks on the GPU SM due to relaxed L1
+//! constraints" (§3.2.2, Fig. 7).
+
+use super::gpu::GpuSpec;
+
+/// Per-block resource demands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockResources {
+    pub smem_bytes: usize,
+    pub regs_per_thread: usize,
+    pub threads: usize,
+}
+
+/// Occupancy outcome for one schedule on one GPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Occupancy {
+    /// Blocks resident per SM (0 = schedule does not fit at all).
+    pub blocks_per_sm: usize,
+    /// Warps resident per SM.
+    pub warps_per_sm: usize,
+    /// Which resource capped the block count.
+    pub limiter: Limiter,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Limiter {
+    SharedMemory,
+    Registers,
+    Warps,
+    BlockSlots,
+    DoesNotFit,
+}
+
+/// CUDA registers are allocated in aligned granules; model 8-reg rounding.
+const REG_GRANULE: usize = 8;
+
+pub fn occupancy(gpu: &GpuSpec, block: &BlockResources) -> Occupancy {
+    let warps_per_block = block.threads.div_ceil(32);
+    let regs_per_thread = block.regs_per_thread.div_ceil(REG_GRANULE) * REG_GRANULE;
+    let regs_per_block = regs_per_thread * block.threads;
+
+    if block.smem_bytes > gpu.smem_per_sm
+        || regs_per_block > gpu.regs_per_sm
+        || warps_per_block > gpu.max_warps_per_sm
+        || regs_per_thread > 255
+    {
+        return Occupancy { blocks_per_sm: 0, warps_per_sm: 0, limiter: Limiter::DoesNotFit };
+    }
+
+    let by_smem = if block.smem_bytes == 0 {
+        usize::MAX
+    } else {
+        gpu.smem_per_sm / block.smem_bytes
+    };
+    let by_regs = gpu.regs_per_sm / regs_per_block;
+    let by_warps = gpu.max_warps_per_sm / warps_per_block;
+    let by_slots = gpu.max_blocks_per_sm;
+
+    let (blocks, limiter) = [
+        (by_smem, Limiter::SharedMemory),
+        (by_regs, Limiter::Registers),
+        (by_warps, Limiter::Warps),
+        (by_slots, Limiter::BlockSlots),
+    ]
+    .into_iter()
+    .min_by_key(|&(b, _)| b)
+    .unwrap();
+
+    Occupancy { blocks_per_sm: blocks, warps_per_sm: blocks * warps_per_block, limiter }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn t4() -> GpuSpec {
+        GpuSpec::t4()
+    }
+
+    #[test]
+    fn smem_limited_block() {
+        let o = occupancy(
+            &t4(),
+            &BlockResources { smem_bytes: 24 << 10, regs_per_thread: 32, threads: 128 },
+        );
+        assert_eq!(o.blocks_per_sm, 2); // 64KB / 24KB
+        assert_eq!(o.limiter, Limiter::SharedMemory);
+    }
+
+    #[test]
+    fn packing_reduced_smem_raises_occupancy() {
+        // the Fig. 7 effect: halving output staging lifts blocks/SM
+        let fat = occupancy(
+            &t4(),
+            &BlockResources { smem_bytes: 40 << 10, regs_per_thread: 40, threads: 256 },
+        );
+        let slim = occupancy(
+            &t4(),
+            &BlockResources { smem_bytes: 18 << 10, regs_per_thread: 40, threads: 256 },
+        );
+        assert!(slim.blocks_per_sm > fat.blocks_per_sm);
+    }
+
+    #[test]
+    fn oversized_block_does_not_fit() {
+        let o = occupancy(
+            &t4(),
+            &BlockResources { smem_bytes: 128 << 10, regs_per_thread: 32, threads: 256 },
+        );
+        assert_eq!(o.limiter, Limiter::DoesNotFit);
+        assert_eq!(o.blocks_per_sm, 0);
+    }
+
+    #[test]
+    fn register_pressure_limits() {
+        let o = occupancy(
+            &t4(),
+            &BlockResources { smem_bytes: 1 << 10, regs_per_thread: 128, threads: 512 },
+        );
+        assert_eq!(o.limiter, Limiter::Registers);
+        assert_eq!(o.blocks_per_sm, 1); // 65536 / (128*512)
+    }
+
+    #[test]
+    fn prop_occupancy_monotone_in_smem() {
+        check::forall(200, |rng| {
+            let smem_a = 1 + rng.gen_range(64 << 10);
+            let smem_b = 1 + rng.gen_range(64 << 10);
+            let (lo, hi) = (smem_a.min(smem_b), smem_a.max(smem_b));
+            let t4 = t4();
+            let mk = |s| {
+                occupancy(
+                    &t4,
+                    &BlockResources { smem_bytes: s, regs_per_thread: 32, threads: 64 },
+                )
+                .blocks_per_sm
+            };
+            assert!(mk(lo) >= mk(hi));
+        });
+    }
+
+    #[test]
+    fn prop_warps_never_exceed_cap() {
+        check::forall(300, |rng| {
+            let o = occupancy(
+                &t4(),
+                &BlockResources {
+                    smem_bytes: rng.gen_range(64 << 10),
+                    regs_per_thread: 16 + rng.gen_range(240),
+                    threads: 32 + rng.gen_range(992),
+                },
+            );
+            assert!(o.warps_per_sm <= t4().max_warps_per_sm);
+        });
+    }
+}

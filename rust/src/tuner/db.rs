@@ -1,0 +1,98 @@
+//! Measurement database: every (genotype, config, runtime) the tuner has
+//! paid for. Guarantees the §4.1 rule that no configuration is measured
+//! twice, and serves as the cost model's training set.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::searchspace::{Genotype, ScheduleConfig};
+
+#[derive(Debug, Default)]
+pub struct MeasureDb {
+    rows: Vec<(Genotype, ScheduleConfig, f64)>,
+    seen: HashSet<Genotype>,
+    index: HashMap<Genotype, usize>,
+}
+
+impl MeasureDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one measurement. Returns false (and ignores the row) if the
+    /// genotype was already measured — callers violating the no-remeasure
+    /// rule are surfaced in tests via this signal.
+    pub fn record(&mut self, g: Genotype, cfg: ScheduleConfig, runtime_us: f64) -> bool {
+        if !self.seen.insert(g.clone()) {
+            return false;
+        }
+        self.index.insert(g.clone(), self.rows.len());
+        self.rows.push((g, cfg, runtime_us));
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn contains(&self, g: &Genotype) -> bool {
+        self.seen.contains(g)
+    }
+
+    pub fn measured_set(&self) -> &HashSet<Genotype> {
+        &self.seen
+    }
+
+    pub fn runtime_of(&self, g: &Genotype) -> Option<f64> {
+        self.index.get(g).map(|&i| self.rows[i].2)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(Genotype, ScheduleConfig, f64)> {
+        self.rows.iter()
+    }
+
+    /// Best (config, runtime) so far.
+    pub fn best(&self) -> Option<(ScheduleConfig, f64)> {
+        self.rows
+            .iter()
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .map(|(_, c, r)| (*c, *r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(bits: &[u8]) -> Genotype {
+        bits.to_vec()
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let mut db = MeasureDb::new();
+        assert!(db.record(g(&[1, 2]), ScheduleConfig::default(), 10.0));
+        assert!(!db.record(g(&[1, 2]), ScheduleConfig::default(), 11.0));
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.runtime_of(&g(&[1, 2])), Some(10.0));
+    }
+
+    #[test]
+    fn best_tracks_minimum() {
+        let mut db = MeasureDb::new();
+        db.record(g(&[0]), ScheduleConfig::default(), 30.0);
+        db.record(g(&[1]), ScheduleConfig::tvm_baseline(), 20.0);
+        db.record(g(&[2]), ScheduleConfig::default(), 25.0);
+        let (cfg, rt) = db.best().unwrap();
+        assert_eq!(rt, 20.0);
+        assert_eq!(cfg, ScheduleConfig::tvm_baseline());
+    }
+
+    #[test]
+    fn empty_db_has_no_best() {
+        assert!(MeasureDb::new().best().is_none());
+    }
+}

@@ -1,0 +1,111 @@
+//! Tuning-curve recording — the data behind Fig. 14 (best GFLOPS vs
+//! number of trials).
+
+use crate::searchspace::ScheduleConfig;
+
+/// One measured trial.
+#[derive(Debug, Clone)]
+pub struct TrialRecord {
+    pub trial: usize,
+    pub config: ScheduleConfig,
+    pub runtime_us: f64,
+    /// Best runtime seen up to and including this trial.
+    pub best_so_far_us: f64,
+    /// Throughput of the best-so-far schedule (GFLOPS, the paper's Fig. 14
+    /// y-axis), derived from the workload's op count.
+    pub best_gflops: f64,
+}
+
+/// A whole session's trial log.
+#[derive(Debug, Clone)]
+pub struct History {
+    pub explorer: &'static str,
+    records: Vec<TrialRecord>,
+}
+
+impl History {
+    pub fn new(explorer: &'static str) -> Self {
+        Self { explorer, records: Vec::new() }
+    }
+
+    pub fn push(&mut self, config: ScheduleConfig, runtime_us: f64, workload_ops: u64) {
+        let best = self
+            .records
+            .last()
+            .map_or(runtime_us, |r| r.best_so_far_us.min(runtime_us));
+        self.records.push(TrialRecord {
+            trial: self.records.len() + 1,
+            config,
+            runtime_us,
+            best_so_far_us: best,
+            best_gflops: workload_ops as f64 / best / 1e3, // ops / us -> GFLOPS
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[TrialRecord] {
+        &self.records
+    }
+
+    /// Best runtime after the first `n` trials (for curve comparisons).
+    pub fn best_after(&self, n: usize) -> f64 {
+        self.records
+            .iter()
+            .take(n)
+            .map(|r| r.best_so_far_us)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// The monotone best-so-far runtime curve.
+    pub fn best_curve(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.best_so_far_us).collect()
+    }
+
+    /// The Fig. 14 series: (trial, best GFLOPS).
+    pub fn gflops_curve(&self) -> Vec<(usize, f64)> {
+        self.records.iter().map(|r| (r.trial, r.best_gflops)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_so_far_is_monotone_nonincreasing() {
+        let mut h = History::new("test");
+        let ops = 1_000_000u64;
+        for rt in [50.0, 40.0, 60.0, 35.0, 80.0] {
+            h.push(ScheduleConfig::default(), rt, ops);
+        }
+        assert_eq!(h.best_curve(), vec![50.0, 40.0, 40.0, 35.0, 35.0]);
+        assert_eq!(h.len(), 5);
+    }
+
+    #[test]
+    fn gflops_inverse_of_runtime() {
+        let mut h = History::new("test");
+        h.push(ScheduleConfig::default(), 10.0, 2_000_000);
+        // 2e6 ops / 10 us = 200 ops/us -> 0.2 GFLOPS? No: ops/us = Mops/s
+        // ... 2e6 ops in 1e-5 s = 2e11 ops/s = 200 GFLOPS
+        assert!((h.records()[0].best_gflops - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_after_prefix() {
+        let mut h = History::new("test");
+        for rt in [90.0, 70.0, 30.0] {
+            h.push(ScheduleConfig::default(), rt, 1);
+        }
+        assert_eq!(h.best_after(2), 70.0);
+        assert_eq!(h.best_after(3), 30.0);
+        assert_eq!(h.best_after(0), f64::INFINITY);
+    }
+}

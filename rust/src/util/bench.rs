@@ -1,0 +1,106 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline). Used by the `cargo bench` targets (`harness = false`).
+//!
+//! Measures wall time over warmup + timed iterations, reports median /
+//! mean / p95, and supports a `--quick` mode via `BENCH_QUICK=1` for CI.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Whether quick mode is on (fewer iterations; used by CI / smoke runs).
+pub fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Time `f` and print a criterion-like line. `iters` is auto-scaled so the
+/// timed section takes roughly 0.5 s (50 ms in quick mode).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let budget_ns = if quick() { 5e7 } else { 5e8 };
+    let iters = ((budget_ns / once) as usize).clamp(5, 10_000);
+
+    // warmup
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let median = samples[samples.len() / 2];
+    let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+    let p95 = samples[p95_idx];
+
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: median,
+        p95_ns: p95,
+    };
+    println!(
+        "bench {:<44} {:>12} (median {:>12}, p95 {:>12}, n={})",
+        stats.name,
+        fmt_ns(stats.mean_ns),
+        fmt_ns(stats.median_ns),
+        fmt_ns(stats.p95_ns),
+        stats.iters
+    );
+    stats
+}
+
+/// Section header for a bench binary.
+pub fn section(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut acc = 0u64;
+        let s = bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.median_ns <= s.p95_ns * 1.001);
+        assert!(s.iters >= 5);
+    }
+}

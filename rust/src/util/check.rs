@@ -1,0 +1,59 @@
+//! Tiny property-testing driver (stands in for `proptest`, unavailable
+//! offline): run a property over many seeded random cases and report the
+//! first failing seed for reproduction.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla rpath link flag
+//! use tcconv::util::{check, Rng};
+//! check::forall(100, |rng| {
+//!     let x = rng.gen_range(1000);
+//!     assert!(x < 1000, "seeded case failed");
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Default case count for property tests.
+pub const DEFAULT_CASES: usize = 100;
+
+/// Run `prop` over `cases` independently-seeded RNGs. Panics (with the
+/// failing seed) if any case panics.
+pub fn forall<F: Fn(&mut Rng)>(cases: usize, prop: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(50, |rng| {
+            let a = rng.gen_range(100);
+            let b = rng.gen_range(100);
+            assert!(a + b < 200);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_reports_seed() {
+        forall(50, |rng| {
+            assert!(rng.gen_range(10) < 9, "hit the 10%% case");
+        });
+    }
+}

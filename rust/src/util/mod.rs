@@ -1,0 +1,13 @@
+//! Self-contained utilities replacing crates unavailable in this offline
+//! environment (DESIGN.md §Substitutions): a deterministic PRNG ([`rng`]),
+//! a minimal JSON codec ([`json`]) for the artifact metadata and the
+//! rust↔python schedule interchange, a property-test driver ([`check`]),
+//! and a criterion-style micro-benchmark harness ([`bench`]).
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,193 @@
+//! Model zoo: the convolution workloads of the "popular neural networks"
+//! the paper's abstract targets. Each network is described as its list of
+//! *distinct* conv layers with repetition counts, so network-level speedup
+//! aggregates per-layer tuning results correctly.
+
+use crate::conv::ConvWorkload;
+
+/// One distinct conv layer of a network and how many times it repeats.
+#[derive(Debug, Clone)]
+pub struct NetworkLayer {
+    pub workload: ConvWorkload,
+    pub repeats: usize,
+}
+
+/// A named collection of conv layers.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: Vec<NetworkLayer>,
+}
+
+impl Network {
+    /// Total conv MACs x2 of one forward pass (3x3 convs only — the ops
+    /// this repo's scheduler targets, matching the paper's evaluation).
+    pub fn total_ops(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.workload.ops() * l.repeats as u64)
+            .sum()
+    }
+
+    /// Network forward time given per-distinct-layer runtimes (us),
+    /// keyed by workload name.
+    pub fn forward_us(&self, runtime_of: impl Fn(&ConvWorkload) -> f64) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| runtime_of(&l.workload) * l.repeats as f64)
+            .sum()
+    }
+}
+
+fn layer(name: &str, batch: usize, hw: usize, cin: usize, cout: usize, reps: usize) -> NetworkLayer {
+    NetworkLayer {
+        workload: ConvWorkload::new(name, batch, hw, hw, cin, cout),
+        repeats: reps,
+    }
+}
+
+/// ResNet50's 3x3 convolutions (one per bottleneck block; the paper's
+/// Table 1 tunes the four distinct shapes).
+pub fn resnet50(batch: usize) -> Network {
+    Network {
+        name: "resnet50",
+        layers: vec![
+            layer("resnet50_stage2", batch, 56, 64, 64, 3),
+            layer("resnet50_stage3", batch, 28, 128, 128, 4),
+            layer("resnet50_stage4", batch, 14, 256, 256, 6),
+            layer("resnet50_stage5", batch, 7, 512, 512, 3),
+        ],
+    }
+}
+
+/// ResNet18's 3x3 convolutions (basic blocks: two 3x3 per block; the
+/// intro's "four stages of convolution layers, each of which takes
+/// different feature map sizes and the number of channels").
+pub fn resnet18(batch: usize) -> Network {
+    Network {
+        name: "resnet18",
+        layers: vec![
+            layer("resnet18_stage1", batch, 56, 64, 64, 4),
+            layer("resnet18_stage2", batch, 28, 128, 128, 3),
+            layer("resnet18_stage3", batch, 14, 256, 256, 3),
+            layer("resnet18_stage4", batch, 7, 512, 512, 3),
+        ],
+    }
+}
+
+/// VGG16's 3x3 convolutions (all of them — VGG is 3x3 end to end).
+pub fn vgg16(batch: usize) -> Network {
+    Network {
+        name: "vgg16",
+        layers: vec![
+            layer("vgg16_conv1_2", batch, 224, 64, 64, 1),
+            layer("vgg16_conv2_1", batch, 112, 64, 128, 1),
+            layer("vgg16_conv2_2", batch, 112, 128, 128, 1),
+            layer("vgg16_conv3_1", batch, 56, 128, 256, 1),
+            layer("vgg16_conv3_x", batch, 56, 256, 256, 2),
+            layer("vgg16_conv4_1", batch, 28, 256, 512, 1),
+            layer("vgg16_conv4_x", batch, 28, 512, 512, 2),
+            layer("vgg16_conv5_x", batch, 14, 512, 512, 3),
+        ],
+    }
+}
+
+/// ResNet50 including the stride-2 stage-transition 3x3 convolutions
+/// (downsampling blocks) — exercises the scheduler on strided im2col,
+/// where receptive fields overlap less and duplicate-awareness weakens.
+pub fn resnet50_with_transitions(batch: usize) -> Network {
+    let mut net = resnet50(batch);
+    net.name = "resnet50+transitions";
+    for (name, hw, c) in [
+        ("resnet50_trans3", 56usize, 128usize),
+        ("resnet50_trans4", 28, 256),
+        ("resnet50_trans5", 14, 512),
+    ] {
+        net.layers.push(NetworkLayer {
+            workload: ConvWorkload::new(name, batch, hw, hw, c, c).with_stride(2),
+            repeats: 1,
+        });
+    }
+    net
+}
+
+/// All networks at the paper's batch size.
+pub fn all_networks(batch: usize) -> Vec<Network> {
+    vec![resnet50(batch), resnet18(batch), vgg16(batch)]
+}
+
+pub fn by_name(name: &str, batch: usize) -> Option<Network> {
+    all_networks(batch).into_iter().find(|n| n.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_matches_table1_shapes() {
+        let net = resnet50(8);
+        assert_eq!(net.layers.len(), 4);
+        for l in &net.layers {
+            assert_eq!(l.workload.ops(), 1_849_688_064);
+        }
+        // 3+4+6+3 bottleneck blocks
+        assert_eq!(net.layers.iter().map(|l| l.repeats).sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn forward_time_weights_by_repeats() {
+        let net = resnet18(1);
+        let t = net.forward_us(|_| 10.0);
+        assert_eq!(t, 10.0 * 13.0);
+    }
+
+    #[test]
+    fn all_layer_gemms_are_mma_compatible() {
+        // every zoo conv must admit at least one legal schedule
+        // (N % 8 == 0 and K % 32 == 0)
+        for net in all_networks(8) {
+            for l in &net.layers {
+                assert_eq!(l.workload.gemm_n() % 8, 0, "{}", l.workload.name);
+                assert_eq!(l.workload.gemm_k() % 32, 0, "{}", l.workload.name);
+                assert_eq!(l.workload.gemm_m() % 8, 0, "{}", l.workload.name);
+            }
+        }
+    }
+
+    #[test]
+    fn transition_convs_downsample_and_stay_tunable() {
+        use crate::searchspace::{SearchSpace, SpaceOptions};
+        use crate::sim::Simulator;
+        let net = resnet50_with_transitions(8);
+        let trans: Vec<_> =
+            net.layers.iter().filter(|l| l.workload.stride == 2).collect();
+        assert_eq!(trans.len(), 3);
+        let sim = Simulator::noiseless(crate::sim::GpuSpec::t4());
+        for l in trans {
+            assert_eq!(l.workload.out_height() * 2, l.workload.height);
+            let space = SearchSpace::for_workload(&l.workload, SpaceOptions::default());
+            let legal = space.enumerate_legal();
+            assert!(!legal.is_empty(), "{}", l.workload.name);
+            // strided conv has lower duplicate factor than its stride-1 twin
+            let s2 = l.workload.im2col().duplicates_info().duplicate_factor();
+            let s1 = l
+                .workload
+                .clone()
+                .with_stride(1)
+                .im2col()
+                .duplicates_info()
+                .duplicate_factor();
+            assert!(s2 < s1, "{}: {s2} vs {s1}", l.workload.name);
+            // and it simulates fine
+            let m = sim.measure_once(&l.workload, &space.decode(&legal[0]));
+            assert!(m.feasible);
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("vgg16", 1).is_some());
+        assert!(by_name("alexnet", 1).is_none());
+    }
+}

@@ -1,0 +1,236 @@
+//! Cross-module integration tests: the whole L3 stack working together,
+//! plus the bridge to the AOT artifacts.
+
+use std::collections::HashSet;
+
+use tcconv::conv::ConvWorkload;
+use tcconv::explore::ExplorerKind;
+use tcconv::quant::{pack_int4, unpack_int4, Epilogue};
+use tcconv::report::experiments;
+use tcconv::searchspace::{ScheduleConfig, SearchSpace, SpaceOptions};
+use tcconv::sim::{GpuSpec, ProfileCache, Simulator};
+use tcconv::tuner::{exhaustive_best, Tuner, TunerOptions};
+use tcconv::util::{check, Rng};
+
+// ---------------------------------------------------------------------
+// tuning sessions
+// ---------------------------------------------------------------------
+
+#[test]
+fn diversity_tuner_beats_random_at_equal_budget() {
+    // the Fig. 14 premise as a hard invariant: at the same trial budget,
+    // the model-guided diversity-aware tuner finds a config at least as
+    // good as pure random search (mean over seeds)
+    let wl = ConvWorkload::resnet50_stage(2, 8);
+    let mut div_total = 0.0;
+    let mut rand_total = 0.0;
+    for seed in [1u64, 2, 3] {
+        let run = |kind: ExplorerKind| {
+            let mut t = Tuner::new(
+                &wl,
+                TunerOptions {
+                    n_trials: 192,
+                    explorer: kind,
+                    seed,
+                    simulator: Simulator { seed, ..Default::default() },
+                    ..Default::default()
+                },
+            );
+            t.tune().runtime_us
+        };
+        div_total += run(ExplorerKind::DiversityAware);
+        rand_total += run(ExplorerKind::Random);
+    }
+    assert!(
+        div_total <= rand_total * 1.02,
+        "diversity {div_total} vs random {rand_total}"
+    );
+}
+
+#[test]
+fn tuning_is_reproducible_from_seed() {
+    let wl = ConvWorkload::resnet50_stage(3, 8);
+    let run = || {
+        let mut t = Tuner::new(
+            &wl,
+            TunerOptions { n_trials: 96, seed: 77, ..Default::default() },
+        );
+        let r = t.tune();
+        (r.config, r.runtime_us)
+    };
+    let (c1, r1) = run();
+    let (c2, r2) = run();
+    assert_eq!(c1, c2);
+    assert_eq!(r1, r2);
+}
+
+#[test]
+fn searched_schedule_roundtrips_to_python_schema() {
+    // tuner output -> JSON -> parse back (the aot.py --schedule-json path)
+    let wl = ConvWorkload::resnet50_stage(4, 8);
+    let mut t = Tuner::new(&wl, TunerOptions { n_trials: 64, ..Default::default() });
+    let cfg = t.tune().config;
+    let json_text = cfg.to_json().to_string();
+    let parsed = ScheduleConfig::from_json(&tcconv::util::Json::parse(&json_text).unwrap()).unwrap();
+    assert_eq!(parsed, cfg);
+}
+
+// ---------------------------------------------------------------------
+// whole-space properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn exhaustive_optimum_uses_all_three_optimizations() {
+    // Table 1 / Fig. 15 consistency: the unconstrained optimum for every
+    // stage enables dup_aware, reg_packing and nhwcnc_layout
+    let sim = Simulator::noiseless(GpuSpec::t4());
+    for stage in 2..=5 {
+        let wl = ConvWorkload::resnet50_stage(stage, 8);
+        let (cfg, _, _) = exhaustive_best(&wl, SpaceOptions::default(), &sim);
+        assert!(cfg.dup_aware, "stage{stage}: {cfg:?}");
+        assert!(cfg.nhwcnc_layout, "stage{stage}: {cfg:?}");
+    }
+}
+
+#[test]
+fn prop_simulator_ranking_stable_under_noise() {
+    // pairs separated by >25% in noiseless runtime keep their order under
+    // measurement noise
+    let wl = ConvWorkload::resnet50_stage(2, 8);
+    let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
+    let clean = Simulator::noiseless(GpuSpec::t4());
+    let noisy = Simulator { noise_sigma: 0.015, seed: 9, ..Default::default() };
+    check::forall(40, |rng| {
+        let mut cache = ProfileCache::default();
+        let a = space.decode(&space.random_legal(rng));
+        let b = space.decode(&space.random_legal(rng));
+        let ca = clean.measure(&wl, &a, &mut cache).runtime_us;
+        let cb = clean.measure(&wl, &b, &mut cache).runtime_us;
+        if (ca - cb).abs() / ca.min(cb) < 0.25 {
+            return;
+        }
+        let na = noisy.measure(&wl, &a, &mut cache).runtime_us;
+        let nb = noisy.measure(&wl, &b, &mut cache).runtime_us;
+        assert_eq!(ca < cb, na < nb, "noise flipped a 25% gap");
+    });
+}
+
+#[test]
+fn prop_explorers_never_propose_measured() {
+    let wl = ConvWorkload::resnet50_stage(5, 8);
+    let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
+    let model = tcconv::costmodel::Gbt::new(tcconv::costmodel::GbtParams::default());
+    check::forall(10, |rng| {
+        let mut measured = HashSet::new();
+        for _ in 0..50 {
+            measured.insert(space.random_legal(rng));
+        }
+        for kind in [ExplorerKind::SimulatedAnnealing, ExplorerKind::DiversityAware] {
+            let mut ex = kind.build(&space);
+            for g in ex.propose(&model, &measured, 16, rng) {
+                assert!(!measured.contains(&g));
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// quant pipeline vs simulator bookkeeping
+// ---------------------------------------------------------------------
+
+#[test]
+fn epilogue_then_pack_roundtrip_many_tiles() {
+    let e = Epilogue::default();
+    check::forall(50, |rng| {
+        let cols = 8 * (1 + rng.gen_range(4));
+        let rows = 1 + rng.gen_range(8);
+        let acc: Vec<i32> =
+            (0..rows * cols).map(|_| rng.gen_range(1 << 16) as i32 - (1 << 15)).collect();
+        let bias: Vec<i32> = (0..cols).map(|_| rng.gen_range(256) as i32 - 128).collect();
+        let packed = e.apply_tile_packed(&acc, &bias, cols);
+        assert_eq!(packed.len(), rows * cols / 8);
+        for v in unpack_int4(&packed) {
+            assert!((-8..=7).contains(&v));
+        }
+    });
+}
+
+#[test]
+fn pack_matches_python_golden_file() {
+    // gen_golden wrote python/tests/golden_pack.json; both sides read it.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/python/tests/golden_pack.json");
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!("skipping: run `cargo run --bin gen_golden` first");
+            return;
+        }
+    };
+    let j = tcconv::util::Json::parse(&text).unwrap();
+    let cases = j.as_arr().unwrap();
+    assert!(cases.len() > 10);
+    for case in cases {
+        let vals: Vec<i32> = case
+            .req("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        let want: Vec<i32> = case
+            .req("packed")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(pack_int4(&vals), want);
+    }
+}
+
+// ---------------------------------------------------------------------
+// experiment drivers (fast smoke of the bench paths)
+// ---------------------------------------------------------------------
+
+#[test]
+fn ablation_driver_produces_all_stages() {
+    let rows = experiments::run_ablation(&Simulator::noiseless(GpuSpec::t4()));
+    assert_eq!(rows.len(), 4);
+    assert_eq!(
+        rows.iter().map(|r| r.stage).collect::<Vec<_>>(),
+        vec![2, 3, 4, 5]
+    );
+}
+
+#[test]
+fn mean_curve_averages_histories() {
+    let sim = Simulator::default();
+    let curves = experiments::run_fig14(64, &[5, 6], &sim);
+    for (_, hs) in &curves {
+        assert_eq!(hs.len(), 2);
+        let mc = experiments::mean_curve(hs);
+        assert_eq!(mc.len(), 64);
+        // monotone nondecreasing GFLOPS (best-so-far)
+        for w in mc.windows(2) {
+            assert!(w[1].1 >= w[0].1 * 0.999999);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rng-independence of outcomes across explorers sharing a space
+// ---------------------------------------------------------------------
+
+#[test]
+fn space_is_shared_safely_across_explorers() {
+    let wl = ConvWorkload::resnet50_stage(2, 8);
+    let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
+    let mut rng = Rng::new(0);
+    let g = space.random_legal(&mut rng);
+    let c1 = space.decode(&g);
+    let _sa = ExplorerKind::SimulatedAnnealing.build(&space);
+    let _da = ExplorerKind::DiversityAware.build(&space);
+    assert_eq!(space.decode(&g), c1, "building explorers must not mutate the space");
+}
