@@ -22,11 +22,11 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use tcconv::conv::ConvWorkload;
-use tcconv::explore::ExplorerKind;
+use tcconv::registry::ScheduleRegistry;
 use tcconv::runtime::{read_golden, Engine};
 use tcconv::searchspace::SpaceOptions;
-use tcconv::sim::Simulator;
-use tcconv::tuner::{exhaustive_best, Tuner, TunerOptions};
+use tcconv::sim::{SimMeasurer, Simulator};
+use tcconv::tuner::{exhaustive_best, Session};
 
 fn main() -> anyhow::Result<()> {
     let trials: usize = std::env::var("TRIALS")
@@ -40,34 +40,41 @@ fn main() -> anyhow::Result<()> {
     // ---- phase 1: schedule search (simulated T4) ------------------------
     println!("[1/3] tuning schedules ({trials} trials per conv)");
     let sim = Simulator::default();
+    let mut registry = ScheduleRegistry::new();
     let mut tuned = Vec::new();
     for stage in 2..=5 {
         let wl = ConvWorkload::resnet50_stage(stage, 8);
         let (_, base_us, _) = exhaustive_best(&wl, SpaceOptions::baseline(), &sim);
-        let mut tuner = Tuner::new(
-            &wl,
-            TunerOptions {
-                n_trials: trials,
-                explorer: ExplorerKind::DiversityAware,
-                seed: stage as u64,
-                simulator: sim.clone(),
-                ..Default::default()
-            },
-        );
-        let res = tuner.tune();
+        let res = Session::for_workload(&wl)
+            .trials(trials)
+            .seed(stage as u64)
+            .explorer("diversity")
+            .measurer(SimMeasurer::boxed(sim.clone()))
+            .run()?;
         println!(
             "  stage{stage}: {:>7.2} us (baseline {:>7.2} us, {:.2}x) {}",
-            res.runtime_us,
+            res.best.runtime_us,
             base_us,
-            base_us / res.runtime_us,
-            res.config.brief()
+            base_us / res.best.runtime_us,
+            res.best.config.brief()
         );
-        tuned.push((stage, res));
+        registry.insert(&wl.name, res.registry_entry());
+        tuned.push((stage, res.best.clone()));
     }
+    println!(
+        "  schedule registry assembled ({} entries — what Server::from_registry serves with)",
+        registry.len()
+    );
 
     // ---- phase 2: load the AOT artifacts --------------------------------
     println!("\n[2/3] loading AOT artifacts via PJRT (python not involved)");
-    let engine = Engine::cpu()?;
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("  PJRT unavailable ({e}); skipping phases 2/3");
+            return Ok(());
+        }
+    };
     println!("  PJRT platform: {}", engine.platform());
     let mut loaded = Vec::new();
     for stage in ["stage2", "stage3", "stage4", "stage5"] {

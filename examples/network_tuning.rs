@@ -1,17 +1,18 @@
 //! Network-level tuning: tune every distinct 3x3 conv of a whole model
-//! (ResNet50 / ResNet18 / VGG16) and report per-layer and end-to-end
-//! speedup — the "convolution operations of popular neural networks" of
-//! the paper's abstract.
+//! (ResNet50 / ResNet18 / VGG16) with cross-stage transfer learning and
+//! report per-layer and end-to-end speedup — the "convolution operations
+//! of popular neural networks" of the paper's abstract.
 //!
 //! ```bash
 //! cargo run --release --example network_tuning            # resnet18
 //! MODEL=vgg16 TRIALS=256 cargo run --release --example network_tuning
+//! OUT=schedules.json cargo run --release --example network_tuning
 //! ```
 
-use tcconv::explore::ExplorerKind;
+use tcconv::registry::ScheduleRegistry;
 use tcconv::searchspace::SpaceOptions;
-use tcconv::sim::Simulator;
-use tcconv::tuner::{exhaustive_best, Tuner, TunerOptions};
+use tcconv::sim::{SimMeasurer, Simulator};
+use tcconv::tuner::{exhaustive_best, Session, SessionResult};
 use tcconv::zoo;
 
 fn main() {
@@ -37,29 +38,32 @@ fn main() {
     );
     let mut base_total = 0.0;
     let mut tuned_total = 0.0;
+    let mut registry = ScheduleRegistry::new();
+    // sessions chain: each layer warm-starts from the previous layer's
+    // measurements (the workload-context features make them transferable)
+    let mut prior: Option<SessionResult> = None;
     for l in &net.layers {
         let (_, base_us, _) = exhaustive_best(&l.workload, SpaceOptions::baseline(), &sim);
-        let mut tuner = Tuner::new(
-            &l.workload,
-            TunerOptions {
-                n_trials: trials,
-                explorer: ExplorerKind::DiversityAware,
-                simulator: sim.clone(),
-                ..Default::default()
-            },
-        );
-        let res = tuner.tune();
+        let mut builder = Session::for_workload(&l.workload)
+            .trials(trials)
+            .measurer(SimMeasurer::boxed(sim.clone()));
+        if let Some(p) = &prior {
+            builder = builder.transfer_from(p);
+        }
+        let res = builder.run().expect("builtin explorer");
         base_total += base_us * l.repeats as f64;
-        tuned_total += res.runtime_us * l.repeats as f64;
+        tuned_total += res.best.runtime_us * l.repeats as f64;
         println!(
             "{:<22} {:>4} {:>12.2} {:>12.2} {:>8.2}x  {}",
             l.workload.name,
             l.repeats,
             base_us,
-            res.runtime_us,
-            base_us / res.runtime_us,
-            res.config.brief()
+            res.best.runtime_us,
+            base_us / res.best.runtime_us,
+            res.best.config.brief()
         );
+        registry.insert(&l.workload.name, res.registry_entry());
+        prior = Some(res);
     }
     println!(
         "\n{} end-to-end 3x3-conv time: {:.1} us -> {:.1} us  ({:.2}x network-level speedup)",
@@ -68,4 +72,9 @@ fn main() {
         tuned_total,
         base_total / tuned_total
     );
+
+    if let Ok(out) = std::env::var("OUT") {
+        registry.save(&out).expect("writing registry");
+        println!("schedule registry ({} entries) written to {out}", registry.len());
+    }
 }

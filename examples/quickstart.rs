@@ -1,4 +1,5 @@
-//! Quickstart: tune one convolution and inspect the result.
+//! Quickstart: tune one convolution with the `Session` API and inspect
+//! the result.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -6,11 +7,12 @@
 //!
 //! Tunes the ResNet50 stage-2 3x3 convolution (batch 8, the paper's
 //! Table 1 target) with the diversity-aware explorer for 128 trials and
-//! prints the best schedule, its simulated runtime, and the tuning curve.
+//! prints the best schedule, its simulated runtime, the tuning curve, and
+//! the schedule-registry entry a deployment would load.
 
 use tcconv::conv::ConvWorkload;
-use tcconv::explore::ExplorerKind;
-use tcconv::tuner::{Tuner, TunerOptions};
+use tcconv::registry::ScheduleRegistry;
+use tcconv::tuner::Session;
 
 fn main() {
     // 1. pick a workload: ResNet50 stage-2 3x3 conv, batch 8
@@ -27,27 +29,25 @@ fn main() {
         wl.ops() as f64 / 1e9
     );
 
-    // 2. tune: 4 rounds of 32 measurements, diversity-aware exploration
-    let mut tuner = Tuner::new(
-        &wl,
-        TunerOptions {
-            n_trials: 128,
-            explorer: ExplorerKind::DiversityAware,
-            seed: 42,
-            ..Default::default()
-        },
-    );
-    let res = tuner.tune();
+    // 2. tune: 4 rounds of 32 measurements, diversity-aware exploration.
+    //    (Everything is pluggable: .explorer(name) resolves through the
+    //    explorer registry, .measurer(..) swaps the substrate.)
+    let res = Session::for_workload(&wl)
+        .trials(128)
+        .seed(42)
+        .explorer("diversity")
+        .run()
+        .expect("builtin explorer");
 
     // 3. results
-    println!("\nbest schedule: {}", res.config.brief());
+    println!("\nbest schedule: {}", res.best.config.brief());
     println!(
         "simulated runtime: {:.2} us  ({:.1} GFLOPS)",
-        res.runtime_us,
-        wl.ops() as f64 / res.runtime_us / 1e3
+        res.best.runtime_us,
+        wl.ops() as f64 / res.best.runtime_us / 1e3
     );
     println!("\ntuning curve (best-so-far, every 16 trials):");
-    for r in res.history.records().iter().step_by(16) {
+    for r in res.best.history.records().iter().step_by(16) {
         println!(
             "  trial {:>4}: best {:>8.2} us   {}",
             r.trial,
@@ -56,7 +56,12 @@ fn main() {
         );
     }
 
-    // 4. export for AOT baking: the schedule JSON round-trips into
-    //    python/compile/schedules.py (aot.py --schedule-json)
-    println!("\nschedule JSON: {}", res.config.to_json());
+    // 4. export: the bare schedule JSON round-trips into
+    //    python/compile/schedules.py (aot.py --schedule-json), and the
+    //    registry document is what `serve::Server::from_registry` routes
+    //    requests with.
+    println!("\nschedule JSON (aot.py --schedule-json): {}", res.best.config.to_json());
+    let mut registry = ScheduleRegistry::new();
+    registry.insert(&wl.name, res.registry_entry());
+    println!("schedule registry JSON (repro serve --registry): {}", registry.to_json());
 }

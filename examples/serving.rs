@@ -1,9 +1,12 @@
-//! Serving demo: the L3 coordinator routing and batching quantized-conv
-//! inference requests across a worker pool.
+//! Serving demo: tune-time connected to serve-time. Each conv kind is
+//! tuned with a quick `Session`, the best schedules land in a
+//! `ScheduleRegistry`, and the L3 coordinator routes and batches
+//! quantized-conv inference requests across a worker pool — executing
+//! every request under its kind's tuned schedule.
 //!
 //! ```bash
 //! cargo run --release --example serving
-//! WORKERS=8 REQUESTS=200 cargo run --release --example serving
+//! WORKERS=8 REQUESTS=200 TRIALS=96 cargo run --release --example serving
 //! ```
 //!
 //! Workload: a mixed stream of edge-sized quantized convolutions (the
@@ -15,13 +18,18 @@ use std::time::Instant;
 
 use tcconv::conv::{ConvInstance, ConvWorkload};
 use tcconv::quant::Epilogue;
+use tcconv::registry::ScheduleRegistry;
 use tcconv::serve::{Server, ServerConfig, SubmitError};
+use tcconv::sim::Simulator;
+use tcconv::tuner::Session;
 use tcconv::util::Rng;
 
 fn main() {
     let workers: usize = std::env::var("WORKERS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
     let n_requests: usize =
         std::env::var("REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(120);
+    let trials: usize =
+        std::env::var("TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(96);
 
     // edge-inference conv kinds (INT4 domain)
     let kinds = vec![
@@ -35,7 +43,23 @@ fn main() {
         println!("  {k}: {}x{} C{}->{} ({:.1} MOPs)", wl.height, wl.width, wl.in_channels, wl.out_channels, wl.ops() as f64 / 1e6);
     }
 
-    let server = Server::start(ServerConfig { workers, queue_depth: 64, max_batch: 8 });
+    // tune each kind, persist the winners into the registry the server loads
+    println!("\ntuning schedules ({trials} trials/kind):");
+    let mut registry = ScheduleRegistry::new();
+    for (kind, wl) in &kinds {
+        let res = Session::for_workload(wl)
+            .trials(trials)
+            .measurer(Simulator::default().into_measurer())
+            .run()
+            .expect("builtin explorer");
+        println!("  {kind}: {:.2} us  {}", res.best.runtime_us, res.best.config.brief());
+        registry.insert(kind, res.registry_entry());
+    }
+
+    let server = Server::from_registry(
+        ServerConfig { workers, queue_depth: 64, max_batch: 8 },
+        registry,
+    );
     let epi = Epilogue::default();
     let mut rng = Rng::new(7);
     let mut pending = Vec::new();
@@ -66,9 +90,14 @@ fn main() {
 
     // collect all responses
     let mut total_batch = 0usize;
+    let mut tuned_hits = 0usize;
+    let default_schedule = tcconv::searchspace::ScheduleConfig::default();
     for rx in pending {
         let r = rx.recv().expect("worker died");
         total_batch += r.batch_size;
+        if r.schedule != default_schedule {
+            tuned_hits += 1;
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let metrics = server.shutdown();
@@ -90,5 +119,8 @@ fn main() {
         n_requests as f64 / wall,
         wall,
         total_batch as f64 / n_requests as f64,
+    );
+    println!(
+        "{tuned_hits}/{n_requests} responses executed under a registry-tuned schedule"
     );
 }

@@ -98,9 +98,19 @@ fn main() {
     });
 
     section("explorer round + end-to-end tune");
-    let mut ex = ExplorerKind::DiversityAware.build(&space);
+    // explorer selection shares the CLI's parse shim: EXPLORER=sa|diversity|...
+    let kind: ExplorerKind = std::env::var("EXPLORER")
+        .ok()
+        .map(|s| s.parse().expect("EXPLORER env var"))
+        .unwrap_or_default();
     let measured = HashSet::new();
-    bench("diversity-aware propose(32) [trained model]", || {
+    let mut ex = kind.build(&space);
+    bench(&format!("{} propose(32) [trained model]", kind.name()), || {
+        // exhaustive drains an internal cursor; rebuild it so every timed
+        // call proposes a real batch (other kinds keep the cheap path)
+        if kind == ExplorerKind::Exhaustive {
+            ex = kind.build(&space);
+        }
         let mut r = Rng::new(3);
         std::hint::black_box(ex.propose(&model, &measured, 32, &mut r));
     });

@@ -55,16 +55,30 @@ impl ConvInstance {
 /// (batch, out_h, out_w, out_c/8) — identical layout to the AOT artifact
 /// output.
 pub fn qconv2d(inst: &ConvInstance, epi: &Epilogue) -> Vec<i32> {
+    qconv2d_scheduled(inst, epi, &crate::searchspace::ScheduleConfig::default())
+}
+
+/// Execute the conv under a specific schedule — the serving path, where
+/// [`crate::serve::Server`] routes each request kind to its registry-tuned
+/// schedule. On this CPU substrate the schedule steers the GEMM blocking
+/// (the tile hierarchy's block_m/block_k, clamped to cache-sane bounds);
+/// numerics are schedule-invariant by construction, which
+/// `scheduled_execution_is_numerics_invariant` pins down.
+pub fn qconv2d_scheduled(
+    inst: &ConvInstance,
+    epi: &Epilogue,
+    cfg: &crate::searchspace::ScheduleConfig,
+) -> Vec<i32> {
     let wl = &inst.wl;
     let (m, n, k) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
     let cols = im2col(inst);
     debug_assert_eq!(cols.len(), m * k);
 
-    // blocked i32 GEMM (block sizes chosen for L1-friendliness; the
-    // *performance* schedule lives in the simulator — this executor is
-    // about numerics + serving throughput)
+    // blocked i32 GEMM; the tuned schedule picks the blocking
+    let bm = cfg.block_m().clamp(8, 64);
+    let bk = cfg.block_k().clamp(32, 128);
     let mut acc = vec![0i32; m * n];
-    gemm_i32_blocked(&cols, &inst.w, &mut acc, m, n, k);
+    gemm_i32_blocked_with(&cols, &inst.w, &mut acc, m, n, k, bm, bk);
 
     // fused epilogue + packing, row-major
     let mut out = Vec::with_capacity(m * n / 8);
@@ -137,14 +151,31 @@ pub fn im2col_dup_aware(inst: &ConvInstance) -> Vec<i8> {
     cols
 }
 
-/// Blocked i32 GEMM: (m x k) i8 by (k x n) i8 -> (m x n) i32.
+/// Blocked i32 GEMM: (m x k) i8 by (k x n) i8 -> (m x n) i32, with the
+/// default L1-friendly blocking.
 pub fn gemm_i32_blocked(a: &[i8], b: &[i8], c: &mut [i32], m: usize, n: usize, k: usize) {
-    const BM: usize = 32;
-    const BK: usize = 64;
-    for i0 in (0..m).step_by(BM) {
-        for k0 in (0..k).step_by(BK) {
-            let i1 = (i0 + BM).min(m);
-            let k1 = (k0 + BK).min(k);
+    gemm_i32_blocked_with(a, b, c, m, n, k, 32, 64)
+}
+
+/// Blocked i32 GEMM with caller-chosen (bm, bk) blocking — the knob the
+/// tuned schedule drives on the CPU substrate.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_blocked_with(
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    bm: usize,
+    bk: usize,
+) {
+    let bm = bm.max(1);
+    let bk = bk.max(1);
+    for i0 in (0..m).step_by(bm) {
+        for k0 in (0..k).step_by(bk) {
+            let i1 = (i0 + bm).min(m);
+            let k1 = (k0 + bk).min(k);
             for i in i0..i1 {
                 let arow = &a[i * k..(i + 1) * k];
                 let crow = &mut c[i * n..(i + 1) * n];
@@ -236,6 +267,24 @@ mod tests {
         let inst = ConvInstance::synthetic(&wl, 1);
         let epi = Epilogue::default();
         assert_eq!(qconv2d(&inst, &epi), conv_scalar(&inst, &epi));
+    }
+
+    #[test]
+    fn scheduled_execution_is_numerics_invariant() {
+        // the serving router may execute one kind under any tuned
+        // schedule; the schedule must never change the output bits
+        use crate::searchspace::ScheduleConfig;
+        let inst = ConvInstance::synthetic(&tiny(), 9);
+        let epi = Epilogue::default();
+        let want = qconv2d(&inst, &epi);
+        for cfg in [
+            ScheduleConfig::default(),
+            ScheduleConfig::tvm_baseline(),
+            ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, chunk: 1, ..Default::default() },
+            ScheduleConfig { blk_row_warps: 8, warp_row_tiles: 8, chunk: 8, ..Default::default() },
+        ] {
+            assert_eq!(qconv2d_scheduled(&inst, &epi, &cfg), want, "{cfg:?}");
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 pub mod execute;
 mod im2col;
 
-pub use execute::{qconv2d, ConvInstance};
+pub use execute::{qconv2d, qconv2d_scheduled, ConvInstance};
 pub use im2col::{DuplicatesInfo, GemmCoord, Im2colIndex, SourceElem};
 
 /// Reduced-precision data type of a convolution (paper §1: the MMA

@@ -82,6 +82,10 @@ impl Gbt {
         &self.trees
     }
 
+    pub fn params(&self) -> &GbtParams {
+        &self.params
+    }
+
     pub fn predict(&self, x: &[f64]) -> f64 {
         let mut s = self.base_score;
         for t in &self.trees {

@@ -30,6 +30,13 @@ pub trait CostModel {
     /// Whether `train` has been called with enough data to be useful.
     fn is_trained(&self) -> bool;
 
+    /// Default-construct hook: a **fresh, untrained** model of the same
+    /// family and hyper-parameters. Sessions use this to spawn one model
+    /// per workload from a single prototype (`dyn CostModel` has no
+    /// `Clone`, and sharing a trained model across workloads would leak
+    /// measurements between sessions).
+    fn clone_model(&self) -> Box<dyn CostModel>;
+
     fn predict_config(&self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> f64 {
         self.predict(&featurize(wl, cfg))
     }
@@ -46,6 +53,10 @@ impl CostModel for Gbt {
 
     fn is_trained(&self) -> bool {
         !self.trees().is_empty()
+    }
+
+    fn clone_model(&self) -> Box<dyn CostModel> {
+        Box::new(Gbt::new(self.params().clone()))
     }
 }
 
@@ -105,5 +116,21 @@ mod tests {
         }
         let acc = correct as f64 / total as f64;
         assert!(acc > 0.7, "held-out rank accuracy {acc} (n={total})");
+    }
+
+    #[test]
+    fn clone_model_is_fresh_but_same_family() {
+        let mut model = Gbt::new(GbtParams { n_trees: 7, seed: 3, ..Default::default() });
+        let xs: Vec<Vec<f64>> = (0..16).map(|i| vec![i as f64, (i * i) as f64]).collect();
+        let ys: Vec<f64> = (0..16).map(|i| 100.0 - i as f64).collect();
+        CostModel::train(&mut model, &xs, &ys);
+        assert!(CostModel::is_trained(&model));
+
+        let fresh = model.clone_model();
+        assert!(!fresh.is_trained(), "clone_model must not copy the fit");
+        // same hyper-params family: training the clone works the same way
+        let mut fresh = fresh;
+        fresh.train(&xs, &ys);
+        assert!(fresh.is_trained());
     }
 }

@@ -16,23 +16,30 @@
 mod diversity;
 mod exhaustive;
 mod random;
+mod registry;
 mod sa;
 
 pub use diversity::DiversityAware;
 pub use exhaustive::Exhaustive;
 pub use random::RandomSearch;
+pub use registry::{ExplorerFactory, ExplorerRegistry};
 pub use sa::{AnnealingParams, SimulatedAnnealing};
 
 use std::collections::HashSet;
+use std::str::FromStr;
 
 use crate::costmodel::CostModel;
 use crate::searchspace::{Genotype, SearchSpace};
 use crate::util::Rng;
 
-/// Which explorer to instantiate (CLI / bench selector).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Thin parse shim over the builtin explorer names — what the CLI and the
+/// benches share. Construction and naming both delegate to
+/// [`ExplorerRegistry`]; custom (registered) explorers have no kind and
+/// are addressed by name through [`crate::tuner::Session`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExplorerKind {
     SimulatedAnnealing,
+    #[default]
     DiversityAware,
     Random,
     Exhaustive,
@@ -40,16 +47,9 @@ pub enum ExplorerKind {
 
 impl ExplorerKind {
     pub fn build(self, space: &SearchSpace) -> Box<dyn Explorer> {
-        match self {
-            ExplorerKind::SimulatedAnnealing => {
-                Box::new(SimulatedAnnealing::new(space.clone(), AnnealingParams::default()))
-            }
-            ExplorerKind::DiversityAware => {
-                Box::new(DiversityAware::new(space.clone(), AnnealingParams::default()))
-            }
-            ExplorerKind::Random => Box::new(RandomSearch::new(space.clone())),
-            ExplorerKind::Exhaustive => Box::new(Exhaustive::new(space.clone())),
-        }
+        ExplorerRegistry::with_builtins()
+            .build(self.name(), space)
+            .expect("builtin explorer is registered")
     }
 
     pub fn name(self) -> &'static str {
@@ -58,6 +58,31 @@ impl ExplorerKind {
             ExplorerKind::DiversityAware => "diversity-aware",
             ExplorerKind::Random => "random",
             ExplorerKind::Exhaustive => "exhaustive",
+        }
+    }
+}
+
+impl FromStr for ExplorerKind {
+    type Err = anyhow::Error;
+
+    /// Parse a canonical name or short alias. Name/alias resolution and
+    /// the valid-options list both come from the builtin registry, so the
+    /// shim cannot drift from it (shared by `repro --explorer` and the
+    /// benches' `EXPLORER=` env selector).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let registry = ExplorerRegistry::with_builtins();
+        match registry.resolve(s) {
+            Some("simulated-annealing") => Ok(ExplorerKind::SimulatedAnnealing),
+            Some("diversity-aware") => Ok(ExplorerKind::DiversityAware),
+            Some("random") => Ok(ExplorerKind::Random),
+            Some("exhaustive") => Ok(ExplorerKind::Exhaustive),
+            Some(other) => Err(anyhow::anyhow!(
+                "explorer '{other}' has no ExplorerKind; select it by name via Session"
+            )),
+            None => Err(anyhow::anyhow!(
+                "unknown explorer '{s}' (valid: {})",
+                registry.names().join(", ")
+            )),
         }
     }
 }
@@ -82,7 +107,9 @@ pub trait Explorer {
 }
 
 /// Shared helper: top-up a proposal batch with random unmeasured configs
-/// (the "+1 random" and shortfall-fill rules of §4.1).
+/// (the "+1 random" and shortfall-fill rules of §4.1). Dedup against the
+/// batch goes through a `HashSet` shadow of `out` — the linear
+/// `out.contains` scan made this O(batch²) per round.
 pub(crate) fn fill_random(
     space: &SearchSpace,
     out: &mut Vec<Genotype>,
@@ -90,11 +117,12 @@ pub(crate) fn fill_random(
     target: usize,
     rng: &mut Rng,
 ) {
+    let mut in_batch: HashSet<Genotype> = out.iter().cloned().collect();
     let mut guard = 0;
     while out.len() < target && guard < 10_000 {
         guard += 1;
         let g = space.random_legal(rng);
-        if !measured.contains(&g) && !out.contains(&g) {
+        if !measured.contains(&g) && in_batch.insert(g.clone()) {
             out.push(g);
         }
     }
@@ -156,5 +184,49 @@ mod tests {
         for g in &out {
             assert!(!measured.contains(g));
         }
+    }
+
+    #[test]
+    fn fill_random_dedupes_against_prefilled_batch() {
+        let sp = space();
+        let mut rng = Rng::new(5);
+        let pre = sp.random_legal(&mut rng);
+        let mut out = vec![pre.clone()];
+        fill_random(&sp, &mut out, &HashSet::new(), 24, &mut rng);
+        assert_eq!(out.len(), 24);
+        let mut uniq = out.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), out.len(), "prefilled entry must not repeat");
+    }
+
+    #[test]
+    fn explorer_kind_parses_names_and_aliases() {
+        assert_eq!("sa".parse::<ExplorerKind>().unwrap(), ExplorerKind::SimulatedAnnealing);
+        assert_eq!(
+            "simulated-annealing".parse::<ExplorerKind>().unwrap(),
+            ExplorerKind::SimulatedAnnealing
+        );
+        assert_eq!("diversity".parse::<ExplorerKind>().unwrap(), ExplorerKind::DiversityAware);
+        assert_eq!("random".parse::<ExplorerKind>().unwrap(), ExplorerKind::Random);
+        assert_eq!("exhaustive".parse::<ExplorerKind>().unwrap(), ExplorerKind::Exhaustive);
+        assert_eq!(ExplorerKind::default(), ExplorerKind::DiversityAware);
+        // round-trip: every kind's canonical name parses back to itself
+        for kind in [
+            ExplorerKind::SimulatedAnnealing,
+            ExplorerKind::DiversityAware,
+            ExplorerKind::Random,
+            ExplorerKind::Exhaustive,
+        ] {
+            assert_eq!(kind.name().parse::<ExplorerKind>().unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn explorer_kind_unknown_name_lists_options() {
+        let err = "genetic".parse::<ExplorerKind>().unwrap_err().to_string();
+        assert!(err.contains("genetic"), "{err}");
+        assert!(err.contains("diversity-aware"), "{err}");
+        assert!(err.contains("exhaustive"), "{err}");
     }
 }

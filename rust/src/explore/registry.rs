@@ -1,0 +1,163 @@
+//! Name-keyed explorer registry: how sessions (and the CLI) resolve an
+//! exploration module without a closed enum.
+//!
+//! The builtin modules register under their canonical names plus short
+//! aliases; downstream code can [`ExplorerRegistry::register`] custom
+//! modules (e.g. a remote-worker explorer) and select them by name through
+//! the same [`crate::tuner::Session`] API.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::{
+    AnnealingParams, DiversityAware, Exhaustive, Explorer, RandomSearch, SimulatedAnnealing,
+};
+use crate::searchspace::SearchSpace;
+
+/// Factory: build one explorer instance for one search space.
+pub type ExplorerFactory = Box<dyn Fn(&SearchSpace) -> Box<dyn Explorer>>;
+
+/// A registry of explorer factories keyed by name.
+pub struct ExplorerRegistry {
+    factories: BTreeMap<String, ExplorerFactory>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl ExplorerRegistry {
+    /// An empty registry (no builtins).
+    pub fn empty() -> Self {
+        Self { factories: BTreeMap::new(), aliases: BTreeMap::new() }
+    }
+
+    /// The four builtin modules under their canonical names, plus the
+    /// short aliases the CLI has always accepted.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register("simulated-annealing", |s: &SearchSpace| {
+            Box::new(SimulatedAnnealing::new(s.clone(), AnnealingParams::default()))
+                as Box<dyn Explorer>
+        });
+        r.register("diversity-aware", |s: &SearchSpace| {
+            Box::new(DiversityAware::new(s.clone(), AnnealingParams::default()))
+                as Box<dyn Explorer>
+        });
+        r.register("random", |s: &SearchSpace| {
+            Box::new(RandomSearch::new(s.clone())) as Box<dyn Explorer>
+        });
+        r.register("exhaustive", |s: &SearchSpace| {
+            Box::new(Exhaustive::new(s.clone())) as Box<dyn Explorer>
+        });
+        r.alias("sa", "simulated-annealing");
+        r.alias("diversity", "diversity-aware");
+        r
+    }
+
+    /// Register (or replace) a factory under `name`.
+    pub fn register<F>(&mut self, name: impl Into<String>, factory: F)
+    where
+        F: Fn(&SearchSpace) -> Box<dyn Explorer> + 'static,
+    {
+        self.factories.insert(name.into(), Box::new(factory));
+    }
+
+    /// Register a short alias for a canonical name.
+    pub fn alias(&mut self, alias: impl Into<String>, canonical: impl Into<String>) {
+        self.aliases.insert(alias.into(), canonical.into());
+    }
+
+    /// Canonical names, sorted (for error messages and `--help`).
+    pub fn names(&self) -> Vec<&str> {
+        self.factories.keys().map(String::as_str).collect()
+    }
+
+    /// Resolve a name or alias to its canonical registered name. An exact
+    /// factory match wins over an alias, so registering a custom explorer
+    /// under an alias name (e.g. "diversity") replaces it rather than
+    /// being shadowed by the builtin the alias points at.
+    pub fn resolve(&self, name: &str) -> Option<&str> {
+        if let Some((k, _)) = self.factories.get_key_value(name) {
+            return Some(k.as_str());
+        }
+        let canon = self.aliases.get(name)?;
+        self.factories.get_key_value(canon).map(|(k, _)| k.as_str())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.resolve(name).is_some()
+    }
+
+    /// Build the named explorer for `space`; unknown names error, listing
+    /// the valid options.
+    pub fn build(&self, name: &str, space: &SearchSpace) -> Result<Box<dyn Explorer>> {
+        match self.resolve(name).and_then(|c| self.factories.get(c)) {
+            Some(f) => Ok(f(space)),
+            None => bail!(
+                "unknown explorer '{name}' (valid: {})",
+                self.names().join(", ")
+            ),
+        }
+    }
+}
+
+impl Default for ExplorerRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::searchspace::SpaceOptions;
+
+    fn space() -> SearchSpace {
+        SearchSpace::for_workload(&ConvWorkload::resnet50_stage(2, 8), SpaceOptions::default())
+    }
+
+    #[test]
+    fn builtins_resolve_by_name_and_alias() {
+        let r = ExplorerRegistry::with_builtins();
+        let sp = space();
+        for name in ["simulated-annealing", "sa", "diversity-aware", "diversity", "random", "exhaustive"] {
+            let ex = r.build(name, &sp).unwrap();
+            assert!(!ex.name().is_empty(), "{name}");
+        }
+        assert_eq!(r.build("sa", &sp).unwrap().name(), "simulated-annealing");
+    }
+
+    #[test]
+    fn unknown_name_error_lists_options() {
+        let r = ExplorerRegistry::with_builtins();
+        let err = r.build("genetic", &space()).unwrap_err().to_string();
+        assert!(err.contains("genetic"), "{err}");
+        assert!(err.contains("diversity-aware"), "{err}");
+        assert!(err.contains("random"), "{err}");
+    }
+
+    #[test]
+    fn custom_explorer_registers_and_builds() {
+        let mut r = ExplorerRegistry::with_builtins();
+        r.register("random-again", |s: &SearchSpace| {
+            Box::new(RandomSearch::new(s.clone())) as Box<dyn Explorer>
+        });
+        assert!(r.contains("random-again"));
+        assert!(r.build("random-again", &space()).is_ok());
+        assert!(r.names().contains(&"random-again"));
+    }
+
+    #[test]
+    fn custom_registration_under_alias_name_beats_the_alias() {
+        // "diversity" normally aliases to diversity-aware; an explicit
+        // factory registered under that exact name must win
+        let mut r = ExplorerRegistry::with_builtins();
+        r.register("diversity", |s: &SearchSpace| {
+            Box::new(RandomSearch::new(s.clone())) as Box<dyn Explorer>
+        });
+        assert_eq!(r.resolve("diversity"), Some("diversity"));
+        assert_eq!(r.build("diversity", &space()).unwrap().name(), "random");
+        // the canonical name is untouched
+        assert_eq!(r.build("diversity-aware", &space()).unwrap().name(), "diversity-aware");
+    }
+}

@@ -23,22 +23,47 @@
 //! * **L2/L1 (build time, `python/compile/`)** — JAX conv model calling the
 //!   Pallas MMA GEMM kernel, lowered once to `artifacts/*.hlo.txt`.
 //!
-//! Quickstart:
+//! Quickstart — tune, persist, serve (the [`tuner::Session`] fluent API):
 //!
 //! ```no_run
 //! use tcconv::conv::ConvWorkload;
-//! use tcconv::tuner::{Tuner, TunerOptions};
-//! use tcconv::explore::ExplorerKind;
+//! use tcconv::registry::ScheduleRegistry;
+//! use tcconv::serve::{Server, ServerConfig};
+//! use tcconv::tuner::Session;
 //!
+//! // 1. tune one workload (explorers are selected by registry name)
 //! let wl = ConvWorkload::resnet50_stage(2, 8);
-//! let mut tuner = Tuner::new(&wl, TunerOptions {
-//!     n_trials: 128,
-//!     explorer: ExplorerKind::DiversityAware,
-//!     ..Default::default()
-//! });
-//! let best = tuner.tune();
-//! println!("best schedule {:?} -> {:.2} us", best.config, best.runtime_us);
+//! let res = Session::for_workload(&wl)
+//!     .trials(500)
+//!     .explorer("diversity")
+//!     .run()
+//!     .expect("known explorer");
+//! println!("best {} -> {:.2} us", res.best.config.brief(), res.best.runtime_us);
+//!
+//! // 2. chain a second session with transfer learning from the first
+//! let wl3 = ConvWorkload::resnet50_stage(3, 8);
+//! let res3 = Session::for_workload(&wl3)
+//!     .trials(500)
+//!     .transfer_from(&res)
+//!     .run()
+//!     .unwrap();
+//!
+//! // 3. persist the tuned schedules and serve with them
+//! let mut reg = ScheduleRegistry::new();
+//! reg.insert(&wl.name, res.registry_entry());
+//! reg.insert(&wl3.name, res3.registry_entry());
+//! reg.save("schedules.json").unwrap();
+//!
+//! let server = Server::from_registry(ServerConfig::default(),
+//!     ScheduleRegistry::load("schedules.json").unwrap());
+//! # drop(server);
 //! ```
+//!
+//! `repro tune-net --out schedules.json` runs step 1–3 over the whole
+//! model [`zoo`]; `repro serve --registry schedules.json` loads the result.
+//! Custom measurement substrates ([`sim::Measurer`]), cost models
+//! ([`costmodel::CostModel`]) and exploration modules
+//! ([`explore::ExplorerRegistry`]) plug into the same builder.
 
 pub mod conv;
 pub mod costmodel;
@@ -46,6 +71,7 @@ pub mod util;
 pub mod explore;
 pub mod layout;
 pub mod quant;
+pub mod registry;
 pub mod report;
 pub mod runtime;
 pub mod searchspace;

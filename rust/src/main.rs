@@ -1,7 +1,9 @@
 //! `repro` — the L3 coordinator CLI.
 //!
 //! Subcommands (run `repro help`):
-//!   tune      tune one ResNet50 stage conv, print/export the schedule
+//!   tune      tune one ResNet50 stage conv via the Session API
+//!   tune-net  tune every zoo workload (transfer-chained), write a registry
+//!   serve     load a schedule registry and serve synthetic traffic with it
 //!   table1    regenerate Table 1 (baseline / exhaustive / searched)
 //!   fig14     diversity-aware vs original explorer tuning curves (CSV)
 //!   fig15     accumulated-speedup ablation
@@ -15,13 +17,18 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use tcconv::conv::ConvWorkload;
+use tcconv::conv::{ConvInstance, ConvWorkload};
+use tcconv::costmodel::{CostModel, Gbt, GbtParams};
 use tcconv::explore::ExplorerKind;
+use tcconv::quant::Epilogue;
+use tcconv::registry::ScheduleRegistry;
 use tcconv::report::{self, experiments};
 use tcconv::runtime;
 use tcconv::searchspace::{SearchSpace, SpaceOptions};
-use tcconv::sim::{GpuSpec, ProfileCache, Simulator};
-use tcconv::tuner::{Tuner, TunerOptions};
+use tcconv::serve::{Server, ServerConfig, SubmitError};
+use tcconv::sim::{GpuSpec, SimMeasurer, Simulator};
+use tcconv::tuner::{Session, SessionResult};
+use tcconv::zoo;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -30,6 +37,8 @@ fn main() -> ExitCode {
 
     let result = match cmd {
         "tune" => cmd_tune(&flags),
+        "tune-net" => cmd_tune_net(&flags),
+        "serve" => cmd_serve(&flags),
         "table1" => cmd_table1(&flags),
         "fig14" => cmd_fig14(&flags),
         "fig15" => cmd_ablation(&flags, true),
@@ -59,17 +68,29 @@ fn print_help() {
     println!(
         "repro — reduced-precision conv auto-scheduler (Choi et al. 2022 reproduction)
 
+The pipeline is tune -> registry -> serve: `Session::for_workload(wl)`
+searches a schedule per conv, `tune-net` persists every best schedule to a
+JSON ScheduleRegistry, and the serving coordinator loads that registry so
+each request kind executes under its tuned schedule.
+
 USAGE: repro <command> [--flag value ...]
 
 COMMANDS
-  tune     --stage 2..5 [--trials 500] [--explorer diversity|sa|random]
-           [--seed N] [--out schedule.json]
-  table1   [--trials 500] [--seed N]
-  fig14    [--trials 500] [--seeds 3]
-  fig15    (accumulated ablation)
-  fig16    (marginal ablation)
-  explain  --stage 2..5  (show the searched schedule's tile hierarchy)
-  verify   [--artifacts artifacts] (PJRT-execute AOT HLO vs python goldens)
+  tune      --stage 2..5 [--trials 500] [--explorer diversity|sa|random|exhaustive]
+            [--seed N] [--out schedule.json]
+  tune-net  [--model resnet50|resnet18|vgg16|all] [--trials 240] [--batch 8]
+            [--explorer diversity] [--seed N] [--out schedules.json]
+            tunes every distinct conv of the model zoo, chaining
+            transfer learning across stages, and writes one registry file
+  serve     [--registry schedules.json] [--workers 4] [--requests 16]
+            loads the registry and routes synthetic requests through the
+            worker pool using the tuned schedule per kind
+  table1    [--trials 500] [--seed N]
+  fig14     [--trials 500] [--seeds 3]
+  fig15     (accumulated ablation)
+  fig16     (marginal ablation)
+  explain   --stage 2..5  (show the searched schedule's tile hierarchy)
+  verify    [--artifacts artifacts] (PJRT-execute AOT HLO vs python goldens)
 "
     );
 }
@@ -97,12 +118,13 @@ fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> u64 {
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn explorer_of(flags: &HashMap<String, String>) -> ExplorerKind {
-    match flags.get("explorer").map(String::as_str) {
-        Some("sa") | Some("simulated-annealing") => ExplorerKind::SimulatedAnnealing,
-        Some("random") => ExplorerKind::Random,
-        Some("exhaustive") => ExplorerKind::Exhaustive,
-        _ => ExplorerKind::DiversityAware,
+/// `--explorer` through the shared `ExplorerKind::from_str` shim (the
+/// same parser the benches' `EXPLORER=` env selector uses); unknown names
+/// error, listing the valid options.
+fn explorer_of(flags: &HashMap<String, String>) -> anyhow::Result<ExplorerKind> {
+    match flags.get("explorer") {
+        Some(name) => name.parse(),
+        None => Ok(ExplorerKind::default()),
     }
 }
 
@@ -110,6 +132,7 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let stage = flag_usize(flags, "stage", 2);
     let trials = flag_usize(flags, "trials", 500);
     let seed = flag_u64(flags, "seed", 0);
+    let explorer = explorer_of(flags)?;
     let wl = ConvWorkload::resnet50_stage(stage, 8);
     println!(
         "tuning {} (gemm {}x{}x{}) for {trials} trials, explorer={}",
@@ -117,29 +140,173 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         wl.gemm_m(),
         wl.gemm_n(),
         wl.gemm_k(),
-        explorer_of(flags).name()
+        explorer.name()
     );
-    let mut tuner = Tuner::new(
-        &wl,
-        TunerOptions {
-            n_trials: trials,
-            explorer: explorer_of(flags),
-            seed,
-            ..Default::default()
-        },
-    );
-    let res = tuner.tune();
+    let res = Session::for_workload(&wl)
+        .trials(trials)
+        .seed(seed)
+        .explorer(explorer.name())
+        .run()?;
     println!(
         "best: {:.2} us ({:.1} GFLOPS) after {} trials",
-        res.runtime_us,
-        wl.ops() as f64 / res.runtime_us / 1e3,
-        res.trials_used
+        res.best.runtime_us,
+        wl.ops() as f64 / res.best.runtime_us / 1e3,
+        res.best.trials_used
     );
-    println!("schedule: {}", res.config.brief());
+    println!("schedule: {}", res.best.config.brief());
     if let Some(path) = flags.get("out") {
-        std::fs::write(path, res.config.to_json().to_string())?;
+        std::fs::write(path, res.best.config.to_json().to_string())?;
         println!("schedule JSON written to {path} (feed to aot.py --schedule-json)");
     }
+    Ok(())
+}
+
+fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model = flags.get("model").cloned().unwrap_or_else(|| "all".into());
+    let trials = flag_usize(flags, "trials", 240);
+    let batch = flag_usize(flags, "batch", 8);
+    let seed = flag_u64(flags, "seed", 0);
+    let explorer = explorer_of(flags)?;
+    let out = flags.get("out").cloned().unwrap_or_else(|| "schedules.json".into());
+
+    let nets = if model == "all" {
+        zoo::all_networks(batch)
+    } else {
+        vec![zoo::by_name(&model, batch).ok_or_else(|| {
+            anyhow::anyhow!("unknown model '{model}' (resnet50|resnet18|vgg16|all)")
+        })?]
+    };
+
+    let mut registry = ScheduleRegistry::new();
+    // one cost-model prototype; each session gets a fresh untrained clone
+    // (the CostModel::clone_model default-construct hook)
+    let model_proto: Box<dyn CostModel> =
+        Box::new(Gbt::new(GbtParams { seed, ..Default::default() }));
+    println!(
+        "tune-net: {} network(s), batch {batch}, {trials} trials/conv, explorer={}",
+        nets.len(),
+        explorer.name()
+    );
+    for net in &nets {
+        println!("\n{} ({} distinct 3x3 convs):", net.name, net.layers.len());
+        // cross-stage transfer: each layer's session warm-starts from the
+        // previous layer's measurements (shared tile structure transfers
+        // through the workload-context features)
+        let mut prior: Option<SessionResult> = None;
+        for l in &net.layers {
+            if registry.contains(&l.workload.name) {
+                println!("  {:<22} (already tuned)", l.workload.name);
+                continue;
+            }
+            let mut builder = Session::for_workload(&l.workload)
+                .trials(trials)
+                .seed(seed)
+                .explorer(explorer.name())
+                .model(model_proto.clone_model())
+                .measurer(SimMeasurer::boxed(Simulator { seed, ..Default::default() }));
+            if let Some(p) = &prior {
+                builder = builder.transfer_from(p);
+            }
+            let res = builder.run()?;
+            println!(
+                "  {:<22} {:>8.2} us  {}",
+                l.workload.name,
+                res.best.runtime_us,
+                res.best.config.brief()
+            );
+            registry.insert(&l.workload.name, res.registry_entry());
+            prior = Some(res);
+        }
+    }
+
+    registry.save(&out)?;
+    println!(
+        "\nschedule registry with {} entries written to {out} \
+         (load with `repro serve --registry {out}` or Server::from_registry)",
+        registry.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let path = flags.get("registry").cloned().unwrap_or_else(|| "schedules.json".into());
+    let workers = flag_usize(flags, "workers", 4);
+    let requests = flag_usize(flags, "requests", 16);
+
+    let registry = ScheduleRegistry::load(&path)?;
+    println!("loaded {} tuned schedules from {path}", registry.len());
+
+    // map registry kinds back to concrete convs (zoo built once, batch 1
+    // so the CPU executor demo stays snappy)
+    let zoo_by_name: HashMap<String, ConvWorkload> = zoo::all_networks(1)
+        .into_iter()
+        .flat_map(|n| n.layers)
+        .map(|l| (l.workload.name.clone(), l.workload))
+        .collect();
+    let mut kinds: Vec<ConvWorkload> = Vec::new();
+    let mut unmatched: Vec<&str> = Vec::new();
+    for k in registry.kinds() {
+        match zoo_by_name.get(k) {
+            Some(wl) => kinds.push(wl.clone()),
+            None => unmatched.push(k),
+        }
+    }
+    if !unmatched.is_empty() {
+        eprintln!(
+            "warning: {} registry kind(s) have no zoo workload and will not be exercised: {}",
+            unmatched.len(),
+            unmatched.join(", ")
+        );
+    }
+    anyhow::ensure!(
+        !kinds.is_empty(),
+        "no registry kind matches a zoo workload (was the registry written by tune-net?)"
+    );
+
+    let server = Server::from_registry(
+        ServerConfig { workers, queue_depth: 256, max_batch: 8 },
+        registry,
+    );
+    println!("serving {requests} synthetic requests across {} kinds, {workers} workers", kinds.len());
+    let epi = Epilogue::default();
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let wl = &kinds[i % kinds.len()];
+        // retry on backpressure so every requested submission lands
+        loop {
+            let inst = ConvInstance::synthetic(wl, i as u64);
+            match server.submit(&wl.name, inst, epi) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(SubmitError::Busy) => {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => anyhow::bail!("submit failed: {e:?}"),
+            }
+        }
+    }
+    let mut tuned_hits = 0usize;
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?;
+        if resp.schedule != tcconv::searchspace::ScheduleConfig::default() {
+            tuned_hits += 1;
+        }
+    }
+    let metrics = server.shutdown();
+    println!("\nper-kind latency (us):");
+    for kind in metrics.kinds() {
+        let s = metrics.summary(&kind).unwrap();
+        println!(
+            "  {:<22} n={:<4} exec p50 {:>8.0}  p95 {:>8.0}  mean batch {:.2}",
+            s.kind, s.count, s.exec_p50_us, s.exec_p95_us, s.mean_batch
+        );
+    }
+    println!(
+        "{tuned_hits} of {} responses executed under a registry-tuned (non-default) schedule",
+        metrics.total_count()
+    );
     Ok(())
 }
 
@@ -180,14 +347,10 @@ fn cmd_explain(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let stage = flag_usize(flags, "stage", 2);
     let trials = flag_usize(flags, "trials", 256);
     let wl = ConvWorkload::resnet50_stage(stage, 8);
-    let mut tuner = Tuner::new(
-        &wl,
-        TunerOptions { n_trials: trials, ..Default::default() },
-    );
-    let res = tuner.tune();
-    let cfg = res.config;
+    let res = Session::for_workload(&wl).trials(trials).run()?;
+    let cfg = res.best.config;
     let sim = Simulator::noiseless(GpuSpec::t4());
-    let m = sim.measure(&wl, &cfg, &mut ProfileCache::default());
+    let m = sim.measure_once(&wl, &cfg);
     let b = &m.breakdown;
     println!("Fig. 2-style schedule walkthrough — {}", wl.name);
     println!("  im2col GEMM: M={} N={} K={}", wl.gemm_m(), wl.gemm_n(), wl.gemm_k());

@@ -1,0 +1,244 @@
+//! The durable tune→serve artifact: a JSON-serializable map from workload
+//! key (conv kind) to its best-found [`ScheduleConfig`] and tuned runtime.
+//!
+//! `repro tune-net` writes one of these for a whole model zoo;
+//! [`crate::serve::Server::from_registry`] loads it and routes every
+//! request kind to its tuned schedule. Before this existed the best
+//! schedule found by tuning was printed and dropped — the serving
+//! coordinator never saw it.
+//!
+//! Schema (via [`crate::util::json`], interchangeable with the python
+//! tooling):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "schedules": {
+//!     "resnet50_stage2": {
+//!       "schedule": { "blk_row_warps": 2, ... },
+//!       "runtime_us": 51.3,
+//!       "trials": 500,
+//!       "explorer": "diversity-aware"
+//!     }
+//!   }
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::searchspace::ScheduleConfig;
+use crate::util::Json;
+
+/// Schema version written by [`ScheduleRegistry::to_json`].
+pub const REGISTRY_VERSION: usize = 1;
+
+/// One tuned workload: the schedule to deploy plus its tune-time record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedEntry {
+    pub config: ScheduleConfig,
+    /// Tuned (simulated) runtime, microseconds.
+    pub runtime_us: f64,
+    /// Measurement budget the session spent.
+    pub trials: usize,
+    /// Exploration module that found it.
+    pub explorer: String,
+}
+
+impl TunedEntry {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schedule", self.config.to_json()),
+            ("runtime_us", Json::Num(self.runtime_us)),
+            ("trials", Json::Num(self.trials as f64)),
+            ("explorer", Json::Str(self.explorer.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            config: ScheduleConfig::from_json(j.req("schedule")?)?,
+            runtime_us: j
+                .req("runtime_us")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("runtime_us not a number"))?,
+            trials: j.get("trials").and_then(Json::as_usize).unwrap_or(0),
+            explorer: j
+                .get("explorer")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+        })
+    }
+}
+
+/// `{workload key → tuned schedule}` — the artifact connecting tune-time
+/// to serve-time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScheduleRegistry {
+    entries: BTreeMap<String, TunedEntry>,
+}
+
+impl ScheduleRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (or replace) the tuned entry for one workload key.
+    pub fn insert(&mut self, kind: &str, entry: TunedEntry) {
+        self.entries.insert(kind.to_string(), entry);
+    }
+
+    pub fn get(&self, kind: &str) -> Option<&TunedEntry> {
+        self.entries.get(kind)
+    }
+
+    pub fn contains(&self, kind: &str) -> bool {
+        self.entries.contains_key(kind)
+    }
+
+    /// The schedule the serving layer should execute `kind` with: its
+    /// tuned config, or [`ScheduleConfig::default`] for unknown kinds.
+    pub fn schedule_for(&self, kind: &str) -> ScheduleConfig {
+        self.entries
+            .get(kind)
+            .map(|e| e.config)
+            .unwrap_or_default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Workload keys, sorted.
+    pub fn kinds(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &TunedEntry)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    // ----- JSON interchange ------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let schedules: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(REGISTRY_VERSION as f64)),
+            ("schedules", Json::Obj(schedules)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let version = j
+            .req("version")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("registry version not an integer"))?;
+        if version != REGISTRY_VERSION {
+            bail!("unsupported registry version {version} (want {REGISTRY_VERSION})");
+        }
+        let schedules = j
+            .req("schedules")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("'schedules' not an object"))?;
+        let mut out = Self::new();
+        for (kind, entry) in schedules {
+            let entry = TunedEntry::from_json(entry)
+                .with_context(|| format!("registry entry '{kind}'"))?;
+            out.entries.insert(kind.clone(), entry);
+        }
+        Ok(out)
+    }
+
+    /// Write the registry to a JSON file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing schedule registry {path:?}"))
+    }
+
+    /// Load a registry from a JSON file written by [`ScheduleRegistry::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading schedule registry {path:?} (run `repro tune-net`?)"))?;
+        Self::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing schedule registry {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(chunk: usize, rt: f64) -> TunedEntry {
+        TunedEntry {
+            config: ScheduleConfig { chunk, ..Default::default() },
+            runtime_us: rt,
+            trials: 128,
+            explorer: "diversity-aware".to_string(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries() {
+        let mut reg = ScheduleRegistry::new();
+        reg.insert("stage2", entry(1, 51.25));
+        reg.insert("stage5", entry(4, 88.5));
+        let text = reg.to_json().to_string();
+        let back = ScheduleRegistry::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, reg);
+        assert_eq!(back.get("stage5").unwrap().config.chunk, 4);
+        assert_eq!(back.get("stage2").unwrap().runtime_us, 51.25);
+    }
+
+    #[test]
+    fn schedule_for_falls_back_to_default() {
+        let mut reg = ScheduleRegistry::new();
+        reg.insert("known", entry(8, 10.0));
+        assert_eq!(reg.schedule_for("known").chunk, 8);
+        assert_eq!(reg.schedule_for("unknown"), ScheduleConfig::default());
+        assert!(!reg.contains("unknown"));
+    }
+
+    #[test]
+    fn rejects_future_versions_and_garbage() {
+        let j = Json::parse(r#"{"version": 2, "schedules": {}}"#).unwrap();
+        assert!(ScheduleRegistry::from_json(&j).is_err());
+        let j = Json::parse(r#"{"schedules": {}}"#).unwrap();
+        assert!(ScheduleRegistry::from_json(&j).is_err());
+        let j = Json::parse(r#"{"version": 1, "schedules": {"x": {"runtime_us": 1}}}"#).unwrap();
+        assert!(ScheduleRegistry::from_json(&j).is_err(), "entry missing schedule");
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let mut reg = ScheduleRegistry::new();
+        reg.insert("edge", entry(2, 7.75));
+        let path = std::env::temp_dir().join("tcconv_registry_test.json");
+        reg.save(&path).unwrap();
+        let back = ScheduleRegistry::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, reg);
+    }
+
+    #[test]
+    fn kinds_are_sorted() {
+        let mut reg = ScheduleRegistry::new();
+        reg.insert("b", entry(1, 2.0));
+        reg.insert("a", entry(1, 1.0));
+        let kinds: Vec<&str> = reg.kinds().collect();
+        assert_eq!(kinds, vec!["a", "b"]);
+        assert_eq!(reg.iter().count(), 2);
+    }
+}

@@ -27,7 +27,7 @@ pub fn run_table1(n_trials: usize, seed: u64, sim: &Simulator) -> Vec<Table1Row>
                     n_trials,
                     explorer: ExplorerKind::DiversityAware,
                     seed,
-                    simulator: sim.clone(),
+                    measurer: sim.clone().into_measurer(),
                     ..Default::default()
                 },
             );
@@ -73,11 +73,12 @@ pub fn run_fig14(
                             // realistic measurement noise: this is the
                             // regime where explorer quality matters (the
                             // young cost model mis-ranks, §3.4)
-                            simulator: Simulator {
+                            measurer: Simulator {
                                 seed,
                                 noise_sigma: sim.noise_sigma.max(0.05),
                                 ..sim.clone()
-                            },
+                            }
+                            .into_measurer(),
                             ..Default::default()
                         },
                     );

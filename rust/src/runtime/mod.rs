@@ -101,10 +101,12 @@ impl ArtifactMeta {
 }
 
 /// The PJRT engine: one CPU client, many loaded executables.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU PJRT client (the rust-side "hardware").
     pub fn cpu() -> Result<Self> {
@@ -130,11 +132,13 @@ impl Engine {
 }
 
 /// One compiled convolution: executes (x, w, bias) -> packed-INT4 output.
+#[cfg(feature = "pjrt")]
 pub struct LoadedConv {
     exe: xla::PjRtLoadedExecutable,
     pub meta: ArtifactMeta,
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedConv {
     /// Execute with raw tensors. `x` and `w` are int8 (INT4-valued), bias
     /// is int32; returns the int32 output (packed INT4 words), row-major.
@@ -177,6 +181,7 @@ impl LoadedConv {
 
 /// Build an s8 literal from raw bytes (the crate's `vec1` has no i8
 /// NativeType impl; go through untyped data).
+#[cfg(feature = "pjrt")]
 fn literal_s8(data: &[i8], shape: &[usize]) -> xla::Literal {
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
@@ -188,8 +193,53 @@ fn literal_s8(data: &[i8], shape: &[usize]) -> xla::Literal {
     .expect("s8 literal")
 }
 
+#[cfg(feature = "pjrt")]
 fn to_i64(shape: &[usize]) -> Vec<i64> {
     shape.iter().map(|&d| d as i64).collect()
+}
+
+/// Stub engine for builds without the `xla` bindings (the default offline
+/// build): the API surface compiles, every entry point errors at runtime.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    _priv: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: rebuild with `--features pjrt` after \
+             adding the `xla` bindings crate"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load_conv(&self, dir: &Path, stage: &str) -> Result<LoadedConv> {
+        // parse the metadata anyway so manifest errors surface first
+        let _meta = ArtifactMeta::load(dir, stage)?;
+        bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+    }
+}
+
+/// Stub twin of the compiled-executable handle (no `pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+pub struct LoadedConv {
+    pub meta: ArtifactMeta,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LoadedConv {
+    pub fn run(&self, _x: &[i8], _w: &[i8], _bias: &[i32]) -> Result<Vec<i32>> {
+        bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+    }
+
+    pub fn time_once(&self, _x: &[i8], _w: &[i8], _bias: &[i32]) -> Result<f64> {
+        bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+    }
 }
 
 #[cfg(test)]

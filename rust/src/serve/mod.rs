@@ -8,6 +8,12 @@
 //! the pure-rust executor ([`crate::conv::execute`]) whose numerics are
 //! verified against the Pallas/PJRT path, so coordinator latencies are
 //! not polluted by interpret-mode XLA overhead.
+//!
+//! [`Server::from_registry`] closes the tune→serve loop: the coordinator
+//! loads a [`ScheduleRegistry`] (written by `repro tune-net` or any
+//! [`crate::tuner::Session`] pipeline) and every request kind executes
+//! under its tuned schedule, falling back to `ScheduleConfig::default()`
+//! for kinds the registry does not know.
 
 mod metrics;
 
@@ -20,8 +26,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::conv::{qconv2d, ConvInstance};
+use crate::conv::{qconv2d_scheduled, ConvInstance};
 use crate::quant::Epilogue;
+use crate::registry::ScheduleRegistry;
+use crate::searchspace::ScheduleConfig;
 
 /// Serving configuration.
 #[derive(Debug, Clone)]
@@ -61,6 +69,9 @@ pub struct Response {
     pub exec_us: f64,
     /// How many requests shared the worker batch.
     pub batch_size: usize,
+    /// The schedule the worker executed this request with (tuned per kind
+    /// via the registry, or the default fallback).
+    pub schedule: ScheduleConfig,
 }
 
 /// Submission outcome.
@@ -78,6 +89,8 @@ struct Shared {
     running: AtomicBool,
     submitted: AtomicU64,
     completed: AtomicU64,
+    /// Tuned schedules by request kind; read-only once serving starts.
+    registry: ScheduleRegistry,
 }
 
 /// The serving coordinator.
@@ -90,13 +103,24 @@ pub struct Server {
 }
 
 impl Server {
+    /// Start without tuned schedules: every kind executes with the
+    /// default schedule (equivalent to an empty registry).
     pub fn start(cfg: ServerConfig) -> Self {
+        Self::from_registry(cfg, ScheduleRegistry::new())
+    }
+
+    /// Start a server wired to tune-time: each request kind routes to its
+    /// tuned schedule from `registry` (typically
+    /// [`ScheduleRegistry::load`]ed from the file `repro tune-net` wrote);
+    /// kinds missing from the registry fall back to the default schedule.
+    pub fn from_registry(cfg: ServerConfig, registry: ScheduleRegistry) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             running: AtomicBool::new(true),
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            registry,
         });
         let metrics = Arc::new(Metrics::new());
         let workers = (0..cfg.workers)
@@ -142,6 +166,16 @@ impl Server {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The tuned-schedule registry this server routes with.
+    pub fn registry(&self) -> &ScheduleRegistry {
+        &self.shared.registry
+    }
+
+    /// The schedule requests of `kind` execute under (tuned or fallback).
+    pub fn schedule_for(&self, kind: &str) -> ScheduleConfig {
+        self.shared.registry.schedule_for(kind)
     }
 
     pub fn queue_len(&self) -> usize {
@@ -203,10 +237,13 @@ fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize) {
         };
 
         let bsize = batch.len();
+        // one registry lookup per batch: head-of-line batching guarantees
+        // a single kind, hence a single schedule, per batch
+        let schedule = shared.registry.schedule_for(&batch[0].kind);
         for req in batch {
             let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
             let t = Instant::now();
-            let out = qconv2d(&req.instance, &req.epilogue);
+            let out = qconv2d_scheduled(&req.instance, &req.epilogue, &schedule);
             let exec_us = t.elapsed().as_secs_f64() * 1e6;
             metrics.observe(&req.kind, queue_us, exec_us, bsize);
             shared.completed.fetch_add(1, Ordering::SeqCst);
@@ -217,6 +254,7 @@ fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize) {
                 queue_us,
                 exec_us,
                 batch_size: bsize,
+                schedule,
             });
         }
     }
@@ -225,7 +263,8 @@ fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::ConvWorkload;
+    use crate::conv::{qconv2d, ConvWorkload};
+    use crate::registry::TunedEntry;
 
     fn tiny_wl() -> ConvWorkload {
         ConvWorkload::new("edge", 1, 8, 8, 8, 8)
@@ -313,6 +352,41 @@ mod tests {
             .collect();
         let metrics = server.shutdown();
         assert_eq!(metrics.total_count(), n);
+    }
+
+    #[test]
+    fn registry_routes_tuned_schedule_and_falls_back() {
+        let tuned = ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, chunk: 1, ..Default::default() };
+        assert_ne!(tuned, ScheduleConfig::default());
+        let mut reg = ScheduleRegistry::new();
+        reg.insert(
+            "edge",
+            TunedEntry {
+                config: tuned,
+                runtime_us: 12.0,
+                trials: 64,
+                explorer: "diversity-aware".into(),
+            },
+        );
+        let server = Server::from_registry(ServerConfig { workers: 1, ..Default::default() }, reg);
+        assert_eq!(server.schedule_for("edge"), tuned);
+        assert_eq!(server.schedule_for("unseen"), ScheduleConfig::default());
+
+        let wl = tiny_wl();
+        let epi = Epilogue::default();
+        let inst = ConvInstance::synthetic(&wl, 4);
+        let want = qconv2d(&inst, &epi);
+
+        // known kind: executes under the tuned schedule, same numerics
+        let resp = server.submit("edge", inst.clone(), epi).unwrap().recv().unwrap();
+        assert_eq!(resp.schedule, tuned);
+        assert_eq!(resp.packed_output, want);
+
+        // unknown kind: falls back to the default schedule
+        let resp = server.submit("other", inst, epi).unwrap().recv().unwrap();
+        assert_eq!(resp.schedule, ScheduleConfig::default());
+        assert_eq!(resp.packed_output, want);
+        server.shutdown();
     }
 
     #[test]

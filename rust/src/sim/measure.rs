@@ -1,0 +1,182 @@
+//! The measurement abstraction of the tuning loop: anything that can turn
+//! a (workload, schedule) pair into a [`Measurement`].
+//!
+//! The paper's pipeline measures candidates on real hardware; this testbed
+//! measures them on the analytic T4 simulator. [`Measurer`] is the seam
+//! between those worlds: the tuner only sees `dyn Measurer`, so swapping
+//! the simulator for a remote measurement worker, an RPC pool, or a replay
+//! log is a constructor argument, not a refactor.
+//!
+//! * [`SimMeasurer`] — wraps a [`Simulator`] plus the [`ProfileCache`]
+//!   that amortizes the im2col tile analysis across configs (what the old
+//!   `Tuner` carried as two concrete fields).
+//! * [`CachedMeasurer`] — a memoizing decorator: repeated measurements of
+//!   the same (workload, config) pair are served from memory. Useful when
+//!   several sessions share one substrate (e.g. `tune-net` re-visiting a
+//!   shape, or ablations sweeping overlapping spaces).
+
+use std::collections::HashMap;
+
+use crate::conv::ConvWorkload;
+use crate::searchspace::ScheduleConfig;
+
+use super::{Measurement, ProfileCache, Simulator};
+
+/// A measurement substrate: produces the ground-truth cost of one schedule.
+pub trait Measurer {
+    /// Measure one schedule on one workload.
+    fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement;
+
+    /// Substrate name for logs and reports.
+    fn name(&self) -> &str {
+        "measurer"
+    }
+}
+
+/// The analytic T4-class simulator as a measurement substrate.
+pub struct SimMeasurer {
+    sim: Simulator,
+    cache: ProfileCache,
+}
+
+impl SimMeasurer {
+    pub fn new(sim: Simulator) -> Self {
+        Self { sim, cache: ProfileCache::default() }
+    }
+
+    /// Convenience for `TunerOptions { measurer: .. }` call sites.
+    pub fn boxed(sim: Simulator) -> Box<dyn Measurer> {
+        Box::new(Self::new(sim))
+    }
+
+    pub fn simulator(&self) -> &Simulator {
+        &self.sim
+    }
+}
+
+impl Default for SimMeasurer {
+    fn default() -> Self {
+        Self::new(Simulator::default())
+    }
+}
+
+impl Measurer for SimMeasurer {
+    fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement {
+        self.sim.measure(wl, cfg, &mut self.cache)
+    }
+
+    fn name(&self) -> &str {
+        "sim"
+    }
+}
+
+impl Simulator {
+    /// This simulator as a boxed measurement substrate.
+    pub fn into_measurer(self) -> Box<dyn Measurer> {
+        Box::new(SimMeasurer::new(self))
+    }
+}
+
+/// Memoizing decorator over any [`Measurer`].
+pub struct CachedMeasurer {
+    inner: Box<dyn Measurer>,
+    memo: HashMap<(ConvWorkload, ScheduleConfig), Measurement>,
+    name: String,
+    hits: usize,
+    misses: usize,
+}
+
+impl CachedMeasurer {
+    pub fn new(inner: Box<dyn Measurer>) -> Self {
+        let name = format!("cached({})", inner.name());
+        Self { inner, memo: HashMap::new(), name, hits: 0, misses: 0 }
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+}
+
+impl Measurer for CachedMeasurer {
+    fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement {
+        let key = (wl.clone(), *cfg);
+        if let Some(m) = self.memo.get(&key) {
+            self.hits += 1;
+            return m.clone();
+        }
+        let m = self.inner.measure(wl, cfg);
+        self.misses += 1;
+        self.memo.insert(key, m.clone());
+        m
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GpuSpec;
+
+    /// Counts invocations so the decorator's dedup is observable.
+    struct CountingMeasurer {
+        inner: SimMeasurer,
+        calls: std::rc::Rc<std::cell::Cell<usize>>,
+    }
+
+    impl Measurer for CountingMeasurer {
+        fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement {
+            self.calls.set(self.calls.get() + 1);
+            self.inner.measure(wl, cfg)
+        }
+    }
+
+    #[test]
+    fn sim_measurer_matches_direct_simulator() {
+        let wl = ConvWorkload::resnet50_stage(2, 8);
+        let cfg = ScheduleConfig::default();
+        let sim = Simulator::noiseless(GpuSpec::t4());
+        let direct = sim.measure_once(&wl, &cfg).runtime_us;
+        let mut m = SimMeasurer::new(sim);
+        assert_eq!(m.measure(&wl, &cfg).runtime_us, direct);
+        assert_eq!(m.name(), "sim");
+    }
+
+    #[test]
+    fn cached_measurer_dedupes_repeat_measurements() {
+        let calls = std::rc::Rc::new(std::cell::Cell::new(0));
+        let counting = CountingMeasurer {
+            inner: SimMeasurer::new(Simulator::noiseless(GpuSpec::t4())),
+            calls: std::rc::Rc::clone(&calls),
+        };
+        let mut cached = CachedMeasurer::new(Box::new(counting));
+        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let a = ScheduleConfig::default();
+        let b = ScheduleConfig { chunk: 1, ..a };
+
+        let r1 = cached.measure(&wl, &a).runtime_us;
+        let r2 = cached.measure(&wl, &a).runtime_us;
+        cached.measure(&wl, &b);
+        assert_eq!(r1, r2);
+        assert_eq!(calls.get(), 2, "second identical measure must hit the memo");
+        assert_eq!(cached.hits(), 1);
+        assert_eq!(cached.misses(), 2);
+        assert_eq!(cached.name(), "cached(measurer)");
+    }
+
+    #[test]
+    fn different_workloads_do_not_collide_in_the_memo() {
+        let mut cached = CachedMeasurer::new(SimMeasurer::boxed(Simulator::noiseless(GpuSpec::t4())));
+        let cfg = ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, ..Default::default() };
+        let a = cached.measure(&ConvWorkload::resnet50_stage(2, 8), &cfg).runtime_us;
+        let b = cached.measure(&ConvWorkload::resnet50_stage(5, 8), &cfg).runtime_us;
+        assert_ne!(a, b);
+        assert_eq!(cached.misses(), 2);
+    }
+}

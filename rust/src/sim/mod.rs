@@ -13,10 +13,12 @@
 
 mod analysis;
 mod gpu;
+mod measure;
 mod occupancy;
 
 pub use analysis::{analyze, ProfileCache, TrafficAnalysis, ACC_BYTES, INT4_BYTES};
 pub use gpu::GpuSpec;
+pub use measure::{CachedMeasurer, Measurer, SimMeasurer};
 pub use occupancy::{occupancy, BlockResources, Limiter, Occupancy};
 
 use std::collections::hash_map::DefaultHasher;

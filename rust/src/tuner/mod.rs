@@ -3,22 +3,34 @@
 //! round (top-31 model picks + 1 random), the cost model retrained on all
 //! measurements after each round, and a database guaranteeing no config is
 //! ever measured twice.
+//!
+//! Every pluggable stage sits behind a trait: exploration
+//! ([`crate::explore::Explorer`], resolved by name through
+//! [`crate::explore::ExplorerRegistry`]), cost modelling
+//! ([`crate::costmodel::CostModel`]) and measurement
+//! ([`crate::sim::Measurer`]). [`Session`] is the fluent front door that
+//! wires them together and hands the result to the
+//! [`crate::registry::ScheduleRegistry`] serving loads.
 
 mod db;
 mod history;
+mod session;
 
 pub use db::MeasureDb;
 pub use history::{History, TrialRecord};
+pub use session::{Session, SessionBuilder, SessionResult};
+
+// Re-export the measurement seam here too: tuning code is its main client.
+pub use crate::sim::{CachedMeasurer, Measurer, SimMeasurer};
 
 use crate::conv::ConvWorkload;
 use crate::costmodel::{featurize, CostModel, Gbt, GbtParams};
 use crate::explore::{Explorer, ExplorerKind};
 use crate::searchspace::{Genotype, ScheduleConfig, SearchSpace, SpaceOptions};
-use crate::sim::{ProfileCache, Simulator};
+use crate::sim::Simulator;
 use crate::util::Rng;
 
 /// Tuning-session options (§4.1 defaults).
-#[derive(Debug, Clone)]
 pub struct TunerOptions {
     /// Total real-measurement budget ("500 trials" in the paper).
     pub n_trials: usize,
@@ -27,8 +39,11 @@ pub struct TunerOptions {
     pub explorer: ExplorerKind,
     pub space: SpaceOptions,
     pub seed: u64,
-    /// Simulator used as the measurement substrate.
-    pub simulator: Simulator,
+    /// Measurement substrate (replaces the old concrete `simulator` field;
+    /// default: the noisy T4 simulator behind a [`SimMeasurer`]).
+    pub measurer: Box<dyn Measurer>,
+    /// Cost-model prototype; `None` = the GBT ranker seeded from `seed`.
+    pub model: Option<Box<dyn CostModel>>,
 }
 
 impl Default for TunerOptions {
@@ -39,7 +54,8 @@ impl Default for TunerOptions {
             explorer: ExplorerKind::DiversityAware,
             space: SpaceOptions::default(),
             seed: 0,
-            simulator: Simulator::default(),
+            measurer: Box::new(SimMeasurer::default()),
+            model: None,
         }
     }
 }
@@ -53,17 +69,19 @@ pub struct TuneResult {
     pub history: History,
 }
 
-/// One tuning session over one convolution workload.
+/// One tuning session over one convolution workload. Every collaborator is
+/// a trait object — no concrete model or measurement substrate appears in
+/// the fields.
 pub struct Tuner {
     wl: ConvWorkload,
     space: SearchSpace,
     explorer: Box<dyn Explorer>,
-    model: Gbt,
+    model: Box<dyn CostModel>,
     db: MeasureDb,
-    sim: Simulator,
-    cache: ProfileCache,
+    measurer: Box<dyn Measurer>,
     rng: Rng,
-    opts: TunerOptions,
+    n_trials: usize,
+    batch_size: usize,
     /// Transfer-learning prior: (features, runtime) rows from other
     /// workloads, mixed into every retraining set. The feature vector
     /// includes workload-context dims, so one model ranks across convs
@@ -75,16 +93,40 @@ impl Tuner {
     pub fn new(wl: &ConvWorkload, opts: TunerOptions) -> Self {
         let space = SearchSpace::for_workload(wl, opts.space);
         let explorer = opts.explorer.build(&space);
+        Self::assemble(wl, space, explorer, opts)
+    }
+
+    /// Construct with a caller-built explorer (how [`Session`] plugs in
+    /// registry-resolved or custom exploration modules); `opts.explorer`
+    /// is ignored.
+    pub fn with_explorer(
+        wl: &ConvWorkload,
+        opts: TunerOptions,
+        explorer: Box<dyn Explorer>,
+    ) -> Self {
+        let space = SearchSpace::for_workload(wl, opts.space);
+        Self::assemble(wl, space, explorer, opts)
+    }
+
+    fn assemble(
+        wl: &ConvWorkload,
+        space: SearchSpace,
+        explorer: Box<dyn Explorer>,
+        opts: TunerOptions,
+    ) -> Self {
+        let TunerOptions { n_trials, batch_size, seed, measurer, model, .. } = opts;
+        let model = model
+            .unwrap_or_else(|| Box::new(Gbt::new(GbtParams { seed, ..Default::default() })));
         Self {
             wl: wl.clone(),
             space,
             explorer,
-            model: Gbt::new(GbtParams { seed: opts.seed, ..Default::default() }),
+            model,
             db: MeasureDb::new(),
-            sim: opts.simulator.clone(),
-            cache: ProfileCache::default(),
-            rng: Rng::new(opts.seed ^ 0xD1CE),
-            opts,
+            measurer,
+            rng: Rng::new(seed ^ 0xD1CE),
+            n_trials,
+            batch_size,
             prior: Vec::new(),
         }
     }
@@ -94,15 +136,22 @@ impl Tuner {
     /// the training set, and the cost model is trained immediately, so the
     /// very first proposal batch is already model-guided instead of random.
     pub fn with_transfer(mut self, prior_wl: &ConvWorkload, prior_db: &MeasureDb) -> Self {
-        self.prior = prior_db
+        let rows = prior_db
             .iter()
             .map(|(_, cfg, rt)| (featurize(prior_wl, cfg), *rt))
             .collect();
+        self.set_prior(rows);
+        self
+    }
+
+    /// Install pre-featurized transfer rows (the [`Session`] path); trains
+    /// the model right away once there is enough data.
+    pub fn set_prior(&mut self, rows: Vec<(Vec<f64>, f64)>) {
+        self.prior = rows;
         if self.prior.len() >= 4 {
             let (xs, ys): (Vec<Vec<f64>>, Vec<f64>) = self.prior.iter().cloned().unzip();
             self.model.train(&xs, &ys);
         }
-        self
     }
 
     pub fn space(&self) -> &SearchSpace {
@@ -113,13 +162,19 @@ impl Tuner {
         &self.db
     }
 
+    /// Consume the tuner, keeping its measurement database (what a
+    /// [`SessionResult`] carries forward for transfer learning).
+    pub fn into_db(self) -> MeasureDb {
+        self.db
+    }
+
     /// Run one explore→measure→train round; returns how many configs were
     /// measured (0 = space exhausted).
     pub fn step(&mut self, history: &mut History) -> usize {
         let batch = self.explorer.propose(
-            &self.model,
+            self.model.as_ref(),
             self.db.measured_set(),
-            self.opts.batch_size,
+            self.batch_size,
             &mut self.rng,
         );
         if batch.is_empty() {
@@ -134,7 +189,7 @@ impl Tuner {
         let mut n = 0;
         for g in batch {
             let cfg = self.space.decode(g);
-            let m = self.sim.measure(&self.wl, &cfg, &mut self.cache);
+            let m = self.measurer.measure(&self.wl, &cfg);
             self.db.record(g.clone(), cfg, m.runtime_us);
             history.push(cfg, m.runtime_us, self.wl.ops());
             n += 1;
@@ -159,7 +214,7 @@ impl Tuner {
     /// is exhausted), returning the best schedule.
     pub fn tune(&mut self) -> TuneResult {
         let mut history = History::new(self.explorer.name());
-        while self.db.len() < self.opts.n_trials {
+        while self.db.len() < self.n_trials {
             if self.step(&mut history) == 0 {
                 break;
             }
@@ -182,13 +237,13 @@ pub fn exhaustive_best(
     sim: &Simulator,
 ) -> (ScheduleConfig, f64, usize) {
     let space = SearchSpace::for_workload(wl, space_opts);
-    let mut cache = ProfileCache::default();
+    let mut measurer = SimMeasurer::new(sim.clone());
     let mut best: Option<(ScheduleConfig, f64)> = None;
     let legal = space.enumerate_legal();
     let n = legal.len();
     for g in legal {
         let cfg = space.decode(&g);
-        let rt = sim.measure(wl, &cfg, &mut cache).runtime_us;
+        let rt = measurer.measure(wl, &cfg).runtime_us;
         if best.as_ref().map_or(true, |(_, b)| rt < *b) {
             best = Some((cfg, rt));
         }
@@ -200,6 +255,7 @@ pub fn exhaustive_best(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::GpuSpec;
 
     #[test]
     fn transfer_warm_start_speeds_early_search() {
@@ -212,10 +268,11 @@ mod tests {
         let mut cold_sum = 0.0;
         let mut warm_sum = 0.0;
         for seed in [3u64, 5, 9] {
-            let opts = |s| TunerOptions {
+            let opts = |s: u64| TunerOptions {
                 n_trials: 96,
                 seed: s,
-                simulator: Simulator { noise_sigma: 0.02, seed: s, ..Default::default() },
+                measurer: Simulator { noise_sigma: 0.02, seed: s, ..Default::default() }
+                    .into_measurer(),
                 ..Default::default()
             };
             // source session provides the prior
@@ -237,7 +294,8 @@ mod tests {
             n_trials,
             explorer,
             seed,
-            simulator: Simulator { noise_sigma: 0.01, seed, ..Default::default() },
+            measurer: Simulator { noise_sigma: 0.01, seed, ..Default::default() }
+                .into_measurer(),
             ..Default::default()
         }
     }
@@ -270,14 +328,14 @@ mod tests {
     #[test]
     fn tuned_close_to_exhaustive_optimum() {
         let wl = ConvWorkload::resnet50_stage(3, 8);
-        let sim = Simulator::noiseless(crate::sim::GpuSpec::t4());
+        let sim = Simulator::noiseless(GpuSpec::t4());
         let (_, best_rt, n_legal) = exhaustive_best(&wl, SpaceOptions::default(), &sim);
         let mut t = Tuner::new(
             &wl,
             TunerOptions {
                 n_trials: 400,
                 explorer: ExplorerKind::DiversityAware,
-                simulator: Simulator::noiseless(crate::sim::GpuSpec::t4()),
+                measurer: Simulator::noiseless(GpuSpec::t4()).into_measurer(),
                 seed: 7,
                 ..Default::default()
             },
@@ -320,5 +378,27 @@ mod tests {
         );
         let res = t.tune();
         assert_eq!(res.trials_used, n_legal);
+    }
+
+    #[test]
+    fn cached_measurer_composes_with_tuner() {
+        // the decorator is transparent: same seed, same proposals, same
+        // best — and the no-remeasure discipline means zero cache hits
+        // within a single session
+        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let run = |cached: bool| {
+            let base = Simulator { noise_sigma: 0.01, seed: 2, ..Default::default() };
+            let measurer: Box<dyn Measurer> = if cached {
+                Box::new(CachedMeasurer::new(base.into_measurer()))
+            } else {
+                base.into_measurer()
+            };
+            let mut t = Tuner::new(
+                &wl,
+                TunerOptions { n_trials: 64, seed: 2, measurer, ..Default::default() },
+            );
+            t.tune().runtime_us
+        };
+        assert_eq!(run(false), run(true));
     }
 }

@@ -1,0 +1,320 @@
+//! The fluent tuning-session API — the crate's front door.
+//!
+//! ```no_run
+//! use tcconv::conv::ConvWorkload;
+//! use tcconv::tuner::Session;
+//!
+//! let wl = ConvWorkload::resnet50_stage(2, 8);
+//! let res = Session::for_workload(&wl)
+//!     .trials(500)
+//!     .explorer("diversity")
+//!     .run()
+//!     .unwrap();
+//! println!("{} -> {:.2} us", res.best.config.brief(), res.best.runtime_us);
+//! ```
+//!
+//! A [`SessionResult`] keeps the measurement database, so sessions chain
+//! via [`SessionBuilder::transfer_from`] (the paper's cross-workload
+//! transfer learning) and convert into
+//! [`crate::registry::ScheduleRegistry`] entries via
+//! [`SessionResult::registry_entry`] — the artifact the serving layer
+//! loads.
+
+use crate::conv::ConvWorkload;
+use crate::costmodel::{featurize, CostModel};
+use crate::explore::{Explorer, ExplorerRegistry};
+use crate::registry::TunedEntry;
+use crate::searchspace::{SearchSpace, SpaceOptions};
+use crate::sim::Measurer;
+
+use super::{MeasureDb, TuneResult, Tuner, TunerOptions};
+
+/// Entry point for the fluent API.
+pub struct Session;
+
+impl Session {
+    /// Start configuring a tuning session for one workload.
+    pub fn for_workload(wl: &ConvWorkload) -> SessionBuilder {
+        SessionBuilder {
+            wl: wl.clone(),
+            trials: 500,
+            batch_size: 32,
+            seed: 0,
+            space: SpaceOptions::default(),
+            explorer: "diversity-aware".to_string(),
+            registry: ExplorerRegistry::with_builtins(),
+            measurer: None,
+            model: None,
+            prior: Vec::new(),
+        }
+    }
+}
+
+/// Fluent configuration of one tuning session.
+pub struct SessionBuilder {
+    wl: ConvWorkload,
+    trials: usize,
+    batch_size: usize,
+    seed: u64,
+    space: SpaceOptions,
+    explorer: String,
+    registry: ExplorerRegistry,
+    measurer: Option<Box<dyn Measurer>>,
+    model: Option<Box<dyn CostModel>>,
+    prior: Vec<(Vec<f64>, f64)>,
+}
+
+impl SessionBuilder {
+    /// Total measurement budget (paper default: 500).
+    pub fn trials(mut self, n: usize) -> Self {
+        self.trials = n;
+        self
+    }
+
+    /// Configs measured per round (paper default: 32).
+    pub fn batch_size(mut self, n: usize) -> Self {
+        self.batch_size = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn space(mut self, space: SpaceOptions) -> Self {
+        self.space = space;
+        self
+    }
+
+    /// Select the exploration module by registry name (canonical name or
+    /// alias, e.g. `"diversity"`, `"sa"`). Resolution happens in
+    /// [`SessionBuilder::run`]; unknown names error there, listing the
+    /// valid options.
+    pub fn explorer(mut self, name: &str) -> Self {
+        self.explorer = name.to_string();
+        self
+    }
+
+    /// Swap the explorer registry (to add custom exploration modules).
+    pub fn explorer_registry(mut self, registry: ExplorerRegistry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    /// Register one custom exploration module on this session's registry.
+    pub fn register_explorer<F>(mut self, name: &str, factory: F) -> Self
+    where
+        F: Fn(&SearchSpace) -> Box<dyn Explorer> + 'static,
+    {
+        self.registry.register(name, factory);
+        self
+    }
+
+    /// Measurement substrate (default: the noisy T4 simulator, seeded from
+    /// this session's seed).
+    pub fn measurer(mut self, m: Box<dyn Measurer>) -> Self {
+        self.measurer = Some(m);
+        self
+    }
+
+    /// Cost-model prototype (default: the GBT ranker). Prototypes are
+    /// installed as-is; to reuse one prototype across several sessions,
+    /// pass `proto.clone_model()` to each.
+    pub fn model(mut self, m: Box<dyn CostModel>) -> Self {
+        self.model = Some(m);
+        self
+    }
+
+    /// Warm-start from a finished session on another workload: its
+    /// measurements join this session's training set (featurized under the
+    /// prior workload, whose context dims make transfer meaningful).
+    /// Chainable — call once per prior session.
+    pub fn transfer_from(mut self, prior: &SessionResult) -> Self {
+        for (_, cfg, rt) in prior.db().iter() {
+            self.prior.push((featurize(prior.workload(), cfg), *rt));
+        }
+        self
+    }
+
+    /// Build the tuner and run the full session.
+    pub fn run(self) -> crate::Result<SessionResult> {
+        let Self { wl, trials, batch_size, seed, space, explorer, registry, measurer, model, prior } =
+            self;
+        let search_space = SearchSpace::for_workload(&wl, space);
+        // provenance: the canonical registry name this session selected
+        // (Explorer::name() may differ for custom modules)
+        let explorer_name = registry
+            .resolve(&explorer)
+            .unwrap_or(explorer.as_str())
+            .to_string();
+        let explorer = registry.build(&explorer, &search_space)?;
+        let opts = TunerOptions {
+            n_trials: trials,
+            batch_size,
+            explorer: crate::explore::ExplorerKind::default(), // unused: explorer is prebuilt
+            seed,
+            space,
+            measurer: measurer.unwrap_or_else(|| {
+                crate::sim::Simulator { seed, ..Default::default() }.into_measurer()
+            }),
+            model,
+        };
+        // assemble directly with the space already built for the registry
+        // lookup (Tuner::with_explorer would re-derive the identical one)
+        let mut tuner = Tuner::assemble(&wl, search_space, explorer, opts);
+        if !prior.is_empty() {
+            tuner.set_prior(prior);
+        }
+        let best = tuner.tune();
+        let db = tuner.into_db();
+        Ok(SessionResult { workload: wl, best, db, explorer_name })
+    }
+}
+
+/// Outcome of one tuning session: the best schedule plus everything a
+/// follow-up session (transfer) or a deployment (registry entry) needs.
+pub struct SessionResult {
+    workload: ConvWorkload,
+    /// The best schedule found and the full tuning history.
+    pub best: TuneResult,
+    db: MeasureDb,
+    /// Canonical registry name the session's explorer was selected by.
+    explorer_name: String,
+}
+
+impl SessionResult {
+    pub fn workload(&self) -> &ConvWorkload {
+        &self.workload
+    }
+
+    /// Every measurement the session paid for (transfer-learning fuel).
+    pub fn db(&self) -> &MeasureDb {
+        &self.db
+    }
+
+    /// The registry name this session's exploration module was selected
+    /// by (provenance for the serve-time artifact).
+    pub fn explorer_name(&self) -> &str {
+        &self.explorer_name
+    }
+
+    /// This session's result as a [`crate::registry::ScheduleRegistry`]
+    /// entry, keyed by the workload name at insert time.
+    pub fn registry_entry(&self) -> TunedEntry {
+        TunedEntry {
+            config: self.best.config,
+            runtime_us: self.best.runtime_us,
+            trials: self.best.trials_used,
+            explorer: self.explorer_name.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::RandomSearch;
+    use crate::sim::{GpuSpec, SimMeasurer, Simulator};
+
+    /// Small real workload whose legal space excludes the default
+    /// schedule (gemm N = 8 forces 8-wide block columns), so every tuned
+    /// config is observably non-default.
+    fn tiny() -> ConvWorkload {
+        ConvWorkload::new("tiny_session", 1, 8, 8, 32, 8)
+    }
+
+    #[test]
+    fn session_matches_equivalent_tuner() {
+        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let session = Session::for_workload(&wl)
+            .trials(64)
+            .seed(11)
+            .explorer("diversity")
+            .measurer(SimMeasurer::boxed(Simulator { seed: 11, ..Default::default() }))
+            .run()
+            .unwrap();
+        let mut tuner = Tuner::new(
+            &wl,
+            TunerOptions {
+                n_trials: 64,
+                seed: 11,
+                measurer: Simulator { seed: 11, ..Default::default() }.into_measurer(),
+                ..Default::default()
+            },
+        );
+        let direct = tuner.tune();
+        assert_eq!(session.best.config, direct.config);
+        assert_eq!(session.best.runtime_us, direct.runtime_us);
+        assert_eq!(session.db().len(), 64);
+    }
+
+    #[test]
+    fn unknown_explorer_name_errors_with_options() {
+        let err = Session::for_workload(&tiny())
+            .explorer("genetic")
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("genetic"), "{err}");
+        assert!(err.contains("diversity-aware"), "{err}");
+    }
+
+    #[test]
+    fn custom_explorer_runs_by_name() {
+        let res = Session::for_workload(&tiny())
+            .trials(32)
+            .register_explorer("my-random", |s: &SearchSpace| {
+                Box::new(RandomSearch::new(s.clone())) as Box<dyn Explorer>
+            })
+            .explorer("my-random")
+            .measurer(Simulator::noiseless(GpuSpec::t4()).into_measurer())
+            .run()
+            .unwrap();
+        assert_eq!(res.best.history.explorer, "random");
+        // provenance records the registry name the session selected, not
+        // the module's self-reported name
+        assert_eq!(res.explorer_name(), "my-random");
+        assert_eq!(res.registry_entry().explorer, "my-random");
+        assert!(res.best.runtime_us.is_finite());
+    }
+
+    #[test]
+    fn transfer_from_feeds_prior_measurements() {
+        let src_wl = ConvWorkload::resnet50_stage(2, 8);
+        let dst_wl = ConvWorkload::resnet50_stage(3, 8);
+        let src = Session::for_workload(&src_wl)
+            .trials(64)
+            .seed(5)
+            .measurer(Simulator { seed: 5, ..Default::default() }.into_measurer())
+            .run()
+            .unwrap();
+        let warm = Session::for_workload(&dst_wl)
+            .trials(64)
+            .seed(5)
+            .measurer(Simulator { seed: 5, ..Default::default() }.into_measurer())
+            .transfer_from(&src)
+            .run()
+            .unwrap();
+        // transfer only changes guidance, never the accounting
+        assert_eq!(warm.db().len(), 64);
+        assert!(warm.best.runtime_us <= warm.best.history.best_after(64) * 1.0001);
+    }
+
+    #[test]
+    fn registry_entry_reflects_best() {
+        let res = Session::for_workload(&tiny())
+            .trials(64)
+            .seed(3)
+            .measurer(Simulator::noiseless(GpuSpec::t4()).into_measurer())
+            .run()
+            .unwrap();
+        let entry = res.registry_entry();
+        assert_eq!(entry.config, res.best.config);
+        assert_eq!(entry.runtime_us, res.best.runtime_us);
+        assert_eq!(entry.trials, res.best.trials_used);
+        assert_eq!(entry.explorer, "diversity-aware");
+        // the tiny workload's legal space excludes the default schedule
+        assert_ne!(entry.config, crate::searchspace::ScheduleConfig::default());
+    }
+}

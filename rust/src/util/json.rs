@@ -73,6 +73,15 @@ impl Json {
         }
     }
 
+    /// Borrow the key→value map of an object (used by consumers that walk
+    /// dynamic keys, e.g. the schedule registry).
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
     // ----- parsing ---------------------------------------------------------
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
@@ -357,6 +366,16 @@ mod tests {
     fn unicode_strings() {
         let j = Json::parse(r#""café — ok""#).unwrap();
         assert_eq!(j.as_str(), Some("café — ok"));
+    }
+
+    #[test]
+    fn as_obj_walks_dynamic_keys() {
+        let j = Json::parse(r#"{"a": 1, "b": {"c": true}}"#).unwrap();
+        let m = j.as_obj().unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["a"].as_usize(), Some(1));
+        assert_eq!(m["b"].get("c").and_then(Json::as_bool), Some(true));
+        assert!(Json::Num(1.0).as_obj().is_none());
     }
 
     #[test]

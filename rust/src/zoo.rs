@@ -120,6 +120,17 @@ pub fn by_name(name: &str, batch: usize) -> Option<Network> {
     all_networks(batch).into_iter().find(|n| n.name == name)
 }
 
+/// Find one workload by its layer name anywhere in the zoo (maps a
+/// schedule-registry kind back to a concrete conv; for many lookups,
+/// build a name map from [`all_networks`] once instead).
+pub fn workload_by_name(name: &str, batch: usize) -> Option<ConvWorkload> {
+    all_networks(batch)
+        .into_iter()
+        .flat_map(|n| n.layers)
+        .find(|l| l.workload.name == name)
+        .map(|l| l.workload)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +200,13 @@ mod tests {
     fn by_name_lookup() {
         assert!(by_name("vgg16", 1).is_some());
         assert!(by_name("alexnet", 1).is_none());
+    }
+
+    #[test]
+    fn workload_by_name_spans_all_networks() {
+        let wl = workload_by_name("vgg16_conv3_1", 4).unwrap();
+        assert_eq!((wl.batch, wl.in_channels, wl.out_channels), (4, 128, 256));
+        assert!(workload_by_name("resnet18_stage4", 1).is_some());
+        assert!(workload_by_name("nope", 1).is_none());
     }
 }

@@ -32,7 +32,7 @@ fn diversity_tuner_beats_random_at_equal_budget() {
                     n_trials: 192,
                     explorer: kind,
                     seed,
-                    simulator: Simulator { seed, ..Default::default() },
+                    measurer: Simulator { seed, ..Default::default() }.into_measurer(),
                     ..Default::default()
                 },
             );

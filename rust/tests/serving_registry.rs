@@ -1,0 +1,129 @@
+//! Integration tests for the tune→serve connection: a `Session` finds a
+//! schedule, a `ScheduleRegistry` persists it, and `Server::from_registry`
+//! routes live requests through it.
+
+use tcconv::conv::{qconv2d, ConvInstance, ConvWorkload};
+use tcconv::quant::Epilogue;
+use tcconv::registry::{ScheduleRegistry, TunedEntry};
+use tcconv::searchspace::ScheduleConfig;
+use tcconv::serve::{Server, ServerConfig};
+use tcconv::sim::{GpuSpec, Simulator};
+use tcconv::tuner::Session;
+use tcconv::util::Json;
+
+/// A small conv whose legal schedule space excludes the default config
+/// (gemm N = 8 admits only 8-wide block columns; the default is 32-wide),
+/// so "the server used a tuned schedule" is observable.
+fn tiny_wl() -> ConvWorkload {
+    ConvWorkload::new("tiny_serve", 1, 8, 8, 32, 8)
+}
+
+fn tune_tiny(trials: usize) -> (ConvWorkload, ScheduleRegistry, ScheduleConfig) {
+    let wl = tiny_wl();
+    let res = Session::for_workload(&wl)
+        .trials(trials)
+        .seed(1)
+        .explorer("diversity")
+        .measurer(Simulator::noiseless(GpuSpec::t4()).into_measurer())
+        .run()
+        .expect("builtin explorer");
+    let tuned = res.best.config;
+    let mut registry = ScheduleRegistry::new();
+    registry.insert(&wl.name, res.registry_entry());
+    (wl, registry, tuned)
+}
+
+#[test]
+fn registry_roundtrips_through_json_file() {
+    let (_, registry, tuned) = tune_tiny(64);
+    let path = std::env::temp_dir().join("tcconv_itest_registry.json");
+    registry.save(&path).unwrap();
+    let loaded = ScheduleRegistry::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded, registry, "save -> load must preserve every entry");
+    let entry = loaded.get("tiny_serve").unwrap();
+    assert_eq!(entry.config, tuned);
+    assert_eq!(entry.explorer, "diversity-aware");
+    assert_eq!(entry.trials, 64);
+    // the raw file is plain JSON the python tooling can read
+    let text = registry.to_json().to_string();
+    assert!(Json::parse(&text).unwrap().get("schedules").is_some());
+}
+
+#[test]
+fn server_serves_with_tuned_nondefault_schedule() {
+    // end-to-end acceptance path: tune -> registry -> serve; the request's
+    // response must carry the tuned (non-default) schedule and bit-exact
+    // numerics
+    let (wl, registry, tuned) = tune_tiny(64);
+    assert_ne!(
+        tuned,
+        ScheduleConfig::default(),
+        "tiny workload's legal space excludes the default schedule"
+    );
+
+    let server = Server::from_registry(
+        ServerConfig { workers: 2, ..Default::default() },
+        registry,
+    );
+    assert_eq!(server.schedule_for(&wl.name), tuned);
+
+    let epi = Epilogue::default();
+    for seed in 0..4u64 {
+        let inst = ConvInstance::synthetic(&wl, seed);
+        let want = qconv2d(&inst, &epi);
+        let resp = server.submit(&wl.name, inst, epi).unwrap().recv().unwrap();
+        assert_eq!(resp.schedule, tuned, "request must execute under its tuned schedule");
+        assert_eq!(resp.packed_output, want, "tuned schedule must not change numerics");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn server_falls_back_to_default_for_missing_kind() {
+    let mut registry = ScheduleRegistry::new();
+    registry.insert(
+        "some_other_kind",
+        TunedEntry {
+            config: ScheduleConfig { chunk: 1, blk_col_warps: 1, warp_col_tiles: 1, ..Default::default() },
+            runtime_us: 5.0,
+            trials: 32,
+            explorer: "random".into(),
+        },
+    );
+    let server = Server::from_registry(
+        ServerConfig { workers: 1, ..Default::default() },
+        registry,
+    );
+
+    let wl = ConvWorkload::new("unregistered", 1, 8, 8, 8, 8);
+    let epi = Epilogue::default();
+    let inst = ConvInstance::synthetic(&wl, 7);
+    let want = qconv2d(&inst, &epi);
+    let resp = server.submit(&wl.name, inst, epi).unwrap().recv().unwrap();
+    assert_eq!(resp.schedule, ScheduleConfig::default());
+    assert_eq!(resp.packed_output, want);
+    server.shutdown();
+}
+
+#[test]
+fn empty_registry_server_equals_plain_start() {
+    let wl = ConvWorkload::new("plain", 1, 6, 6, 8, 8);
+    let epi = Epilogue::default();
+    let inst = ConvInstance::synthetic(&wl, 3);
+    let want = qconv2d(&inst, &epi);
+
+    let a = Server::start(ServerConfig { workers: 1, ..Default::default() });
+    let b = Server::from_registry(
+        ServerConfig { workers: 1, ..Default::default() },
+        ScheduleRegistry::new(),
+    );
+    let ra = a.submit("plain", inst.clone(), epi).unwrap().recv().unwrap();
+    let rb = b.submit("plain", inst, epi).unwrap().recv().unwrap();
+    assert_eq!(ra.packed_output, want);
+    assert_eq!(rb.packed_output, want);
+    assert_eq!(ra.schedule, rb.schedule);
+    a.shutdown();
+    b.shutdown();
+}
