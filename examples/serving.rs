@@ -114,6 +114,13 @@ fn main() {
             s.kind, s.count, s.queue_p50_us, s.queue_p95_us, s.exec_p50_us, s.exec_p95_us, s.mean_batch
         );
     }
+    println!("\nend-to-end latency histogram (queue + exec):");
+    print!("{}", metrics.total_latency_histogram().render(40));
+    let counts = metrics.worker_counts();
+    println!(
+        "per-worker completions: [{}]",
+        counts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ")
+    );
     println!(
         "\nthroughput: {:.0} requests/s over {:.2} s wall | mean co-batch {:.2} | backpressure events: {busy_events}",
         n_requests as f64 / wall,

@@ -1,7 +1,9 @@
 //! Bench: L3 hot-path microbenchmarks — the §Perf targets of DESIGN.md.
 //!
 //! Targets: cost-model inference < 10 us/config, simulator < 30 us/config
-//! (cached), full 500-trial tune of one conv < 10 s.
+//! (cached), full 500-trial tune of one conv < 10 s, and parallel
+//! candidate measurement (`--jobs 4`) beating serial on every resnet50
+//! stage while staying bit-identical.
 //!
 //! `cargo bench --bench hotpath`
 
@@ -12,7 +14,7 @@ use tcconv::costmodel::{featurize, CostModel, Gbt, GbtParams};
 use tcconv::explore::ExplorerKind;
 use tcconv::quant::{pack_int4_into, warp_pack_int4, WARP_SIZE};
 use tcconv::searchspace::{ScheduleConfig, SearchSpace, SpaceOptions};
-use tcconv::sim::{analyze, GpuSpec, ProfileCache, Simulator};
+use tcconv::sim::{analyze, GpuSpec, Measurer, ParallelMeasurer, ProfileCache, Simulator};
 use tcconv::tuner::{Tuner, TunerOptions};
 use tcconv::util::bench::{bench, quick, section};
 use tcconv::util::Rng;
@@ -96,6 +98,54 @@ fn main() {
     bench("warp_pack_int4 (shuffle-tree emulation)", || {
         std::hint::black_box(warp_pack_int4(&warp));
     });
+
+    section("parallel candidate measurement (tune --jobs)");
+    // A realistic tuning round per resnet50 stage: a fresh batch of
+    // random legal schedules, measured cold (new measurer per run, so the
+    // per-worker profile caches start empty — the expensive early rounds
+    // of a tune, where parallelism matters most). Serial is jobs=1 through
+    // the same ParallelMeasurer, so the only variable is the fan-out.
+    let jobs = 4;
+    let reps = if quick() { 3 } else { 6 };
+    let batch_n = 256;
+    for stage in 2..=5 {
+        let swl = ConvWorkload::resnet50_stage(stage, 8);
+        let sspace = SearchSpace::for_workload(&swl, SpaceOptions::default());
+        let mut r = Rng::new(11 + stage as u64);
+        let batch: Vec<ScheduleConfig> =
+            (0..batch_n).map(|_| sspace.decode(&sspace.random_legal(&mut r))).collect();
+        // determinism spot-check: fan-out must not change a single bit
+        let serial_vals: Vec<f64> = ParallelMeasurer::new(sim.clone(), 1)
+            .measure_batch(&swl, &batch)
+            .into_iter()
+            .map(|m| m.runtime_us)
+            .collect();
+        let parallel_vals: Vec<f64> = ParallelMeasurer::new(sim.clone(), jobs)
+            .measure_batch(&swl, &batch)
+            .into_iter()
+            .map(|m| m.runtime_us)
+            .collect();
+        assert_eq!(serial_vals, parallel_vals, "stage{stage}: parallel != serial");
+
+        let time_with = |n_jobs: usize| {
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let mut m = ParallelMeasurer::new(sim.clone(), n_jobs);
+                let t = std::time::Instant::now();
+                std::hint::black_box(m.measure_batch(&swl, &batch));
+                best = best.min(t.elapsed().as_secs_f64());
+            }
+            best
+        };
+        let t_serial = time_with(1);
+        let t_parallel = time_with(jobs);
+        println!(
+            "stage{stage}: batch {batch_n}  serial {:>7.2} ms  --jobs {jobs} {:>7.2} ms  speedup {:.2}x (bit-identical)",
+            t_serial * 1e3,
+            t_parallel * 1e3,
+            t_serial / t_parallel
+        );
+    }
 
     section("explorer round + end-to-end tune");
     // explorer selection shares the CLI's parse shim: EXPLORER=sa|diversity|...

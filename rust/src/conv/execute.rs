@@ -58,6 +58,29 @@ pub fn qconv2d(inst: &ConvInstance, epi: &Epilogue) -> Vec<i32> {
     qconv2d_scheduled(inst, epi, &crate::searchspace::ScheduleConfig::default())
 }
 
+/// Reusable execution buffers: the laid-out im2col operand, the i32
+/// accumulator, and the epilogue row buffer.
+///
+/// One conv execution needs `m*k + m*n` words of staging; allocating them
+/// per request is pure overhead when a serving worker executes a batch of
+/// same-kind requests back to back (same dims → same buffer sizes, so the
+/// allocations are reused verbatim). Workers in [`crate::serve`] keep one
+/// scratch each and thread it through the batch via
+/// [`qconv2d_scheduled_with`].
+#[derive(Debug, Default)]
+pub struct ExecScratch {
+    cols: Vec<i8>,
+    acc: Vec<i32>,
+    rowbuf: Vec<i32>,
+}
+
+impl ExecScratch {
+    /// Empty scratch; buffers grow to the first workload's sizes on use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Execute the conv under a specific schedule — the serving path, where
 /// [`crate::serve::Server`] routes each request kind to its registry-tuned
 /// schedule. On this CPU substrate the schedule steers the GEMM blocking
@@ -69,25 +92,40 @@ pub fn qconv2d_scheduled(
     epi: &Epilogue,
     cfg: &crate::searchspace::ScheduleConfig,
 ) -> Vec<i32> {
+    qconv2d_scheduled_with(inst, epi, cfg, &mut ExecScratch::new())
+}
+
+/// [`qconv2d_scheduled`] with caller-owned staging buffers — the batched
+/// serving hot path. Output is identical; only the allocation behaviour
+/// differs (a reused scratch amortizes the im2col/accumulator buffers
+/// across a same-kind request batch).
+pub fn qconv2d_scheduled_with(
+    inst: &ConvInstance,
+    epi: &Epilogue,
+    cfg: &crate::searchspace::ScheduleConfig,
+    scratch: &mut ExecScratch,
+) -> Vec<i32> {
     let wl = &inst.wl;
     let (m, n, k) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
-    let cols = im2col(inst);
-    debug_assert_eq!(cols.len(), m * k);
+    im2col_into(inst, &mut scratch.cols);
+    debug_assert_eq!(scratch.cols.len(), m * k);
 
     // blocked i32 GEMM; the tuned schedule picks the blocking
     let bm = cfg.block_m().clamp(8, 64);
     let bk = cfg.block_k().clamp(32, 128);
-    let mut acc = vec![0i32; m * n];
-    gemm_i32_blocked_with(&cols, &inst.w, &mut acc, m, n, k, bm, bk);
+    scratch.acc.clear();
+    scratch.acc.resize(m * n, 0);
+    gemm_i32_blocked_with(&scratch.cols, &inst.w, &mut scratch.acc, m, n, k, bm, bk);
 
     // fused epilogue + packing, row-major
     let mut out = Vec::with_capacity(m * n / 8);
-    let mut rowbuf = vec![0i32; n];
+    scratch.rowbuf.clear();
+    scratch.rowbuf.resize(n, 0);
     for row in 0..m {
         for c in 0..n {
-            rowbuf[c] = epi.apply(acc[row * n + c], inst.bias[c]);
+            scratch.rowbuf[c] = epi.apply(scratch.acc[row * n + c], inst.bias[c]);
         }
-        out.extend_from_slice(&pack_int4(&rowbuf));
+        out.extend_from_slice(&pack_int4(&scratch.rowbuf));
     }
     out
 }
@@ -95,10 +133,20 @@ pub fn qconv2d_scheduled(
 /// im2col lowering (kernel-position-major columns, NHWC source) — the
 /// naive expanded form.
 pub fn im2col(inst: &ConvInstance) -> Vec<i8> {
+    let mut cols = Vec::new();
+    im2col_into(inst, &mut cols);
+    cols
+}
+
+/// [`im2col`] into a caller-owned buffer (cleared and zero-filled to
+/// `m*k`); reusing the buffer across a same-shape batch skips the
+/// allocation without changing the result.
+pub fn im2col_into(inst: &ConvInstance, cols: &mut Vec<i8>) {
     let wl = &inst.wl;
     let ix = wl.im2col();
     let (m, k) = (wl.gemm_m(), wl.gemm_k());
-    let mut cols = vec![0i8; m * k];
+    cols.clear();
+    cols.resize(m * k, 0);
     for row in 0..m {
         for col in 0..k {
             if let SourceElem::Feat(lin) = ix.source(GemmCoord { row, col }) {
@@ -106,7 +154,6 @@ pub fn im2col(inst: &ConvInstance) -> Vec<i8> {
             }
         }
     }
-    cols
 }
 
 /// Duplicate-aware im2col: stage only genuine elements into a compact
@@ -284,6 +331,31 @@ mod tests {
             ScheduleConfig { blk_row_warps: 8, warp_row_tiles: 8, chunk: 8, ..Default::default() },
         ] {
             assert_eq!(qconv2d_scheduled(&inst, &epi, &cfg), want, "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_mixed_shapes_is_numerics_invariant() {
+        // a serving worker threads one ExecScratch through consecutive
+        // requests of *different* kinds; stale buffer contents must never
+        // leak into the next execution
+        let epi = Epilogue::default();
+        let mut scratch = ExecScratch::new();
+        let shapes = [
+            ConvWorkload::new("s_a", 1, 8, 8, 16, 8),
+            ConvWorkload::new("s_b", 1, 6, 6, 8, 16),
+            ConvWorkload::new("s_a2", 1, 8, 8, 16, 8), // back to the first shape
+        ];
+        for (i, wl) in shapes.iter().enumerate() {
+            let inst = ConvInstance::synthetic(wl, 40 + i as u64);
+            let fresh = qconv2d(&inst, &epi);
+            let reused = qconv2d_scheduled_with(
+                &inst,
+                &epi,
+                &crate::searchspace::ScheduleConfig::default(),
+                &mut scratch,
+            );
+            assert_eq!(fresh, reused, "{}", wl.name);
         }
     }
 

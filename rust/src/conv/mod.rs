@@ -5,14 +5,14 @@
 //! input channels `I`, output channels `O` and kernel `KH x KW` becomes
 //! a `(N*OH*OW) x (KH*KW*I)` by `(KH*KW*I) x O` matrix multiplication.
 //!
-//! [`im2col`] implements the *static duplicates analysis* of §3.1: given
-//! only the conv configuration, it computes the duplicate-index →
+//! [`Im2colIndex`] implements the *static duplicates analysis* of §3.1:
+//! given only the conv configuration, it computes the duplicate-index →
 //! genuine-index mapping the compiler uses to elide redundant loads.
 
 pub mod execute;
 mod im2col;
 
-pub use execute::{qconv2d, qconv2d_scheduled, ConvInstance};
+pub use execute::{qconv2d, qconv2d_scheduled, qconv2d_scheduled_with, ConvInstance, ExecScratch};
 pub use im2col::{DuplicatesInfo, GemmCoord, Im2colIndex, SourceElem};
 
 /// Reduced-precision data type of a convolution (paper §1: the MMA

@@ -5,7 +5,7 @@
 //!
 //! Implementation: gradient-boosted regression trees trained with a
 //! pairwise ranking objective (the same objective AutoTVM's XGBoost uses),
-//! over static loop/tile features ([`features`]) — no measured quantity
+//! over static loop/tile features ([`featurize`]) — no measured quantity
 //! leaks into the features; everything the model knows about actual cost
 //! it must learn from the measurements it is given.
 

@@ -14,7 +14,8 @@
 //!    (annealing acceptance), "improving the quality of the competition".
 //!
 //! The rest of the loop (energy = cost-model score, temperature schedule,
-//! final top-31 + 1 random batch) is identical to [`super::sa`].
+//! final top-31 + 1 random batch) is identical to
+//! [`SimulatedAnnealing`](super::SimulatedAnnealing).
 
 use std::collections::HashSet;
 
@@ -86,7 +87,8 @@ impl DiversityAware {
 
     /// The diversity-aware annealing walk (Fig. 13): two mutants per
     /// parent -> diversity-select half -> compete with parents. Proposals
-    /// come from the final population, as in [`super::sa`] — the point of
+    /// come from the final population, as in
+    /// [`SimulatedAnnealing`](super::SimulatedAnnealing) — the point of
     /// diversity selection is precisely that this population stays spread
     /// out instead of collapsing around the model's current favourite.
     pub(crate) fn anneal(

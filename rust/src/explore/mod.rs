@@ -89,6 +89,15 @@ impl FromStr for ExplorerKind {
 
 /// An exploration module: proposes the next batch of configurations to
 /// measure, given the current cost model and the set already measured.
+///
+/// The API is *batch-granular* on purpose: proposals arrive a round at a
+/// time, which is exactly the unit [`crate::tuner::Tuner`] hands to
+/// [`crate::sim::Measurer::measure_batch`] — so a parallel measurement
+/// substrate ([`crate::sim::ParallelMeasurer`]) can fan a whole round
+/// across its worker pool without the explorer knowing or caring. The
+/// proposal order within a batch is part of the deterministic replay
+/// contract: measurements are recorded in exactly this order regardless
+/// of how (or on how many threads) they were taken.
 pub trait Explorer {
     /// Propose up to `batch` *distinct, unmeasured, legal* genotypes.
     /// (§4.1: "The exploration module only picks candidates that have not

@@ -64,6 +64,15 @@
 //! Custom measurement substrates ([`sim::Measurer`]), cost models
 //! ([`costmodel::CostModel`]) and exploration modules
 //! ([`explore::ExplorerRegistry`]) plug into the same builder.
+//!
+//! Both halves of the pipeline are parallel: `.parallelism(n)` (or
+//! `repro tune --jobs n`) fans each candidate-measurement batch across a
+//! [`sim::pool::MeasurePool`] of worker threads — bit-identical to serial,
+//! just faster — and [`serve::Server`] executes requests on
+//! `ServerConfig::workers` threads with per-kind batching. The
+//! determinism guarantees and pool ownership rules are documented in
+//! [`sim::pool`] and `ARCHITECTURE.md`; the top-level `README.md` has the
+//! quickstart.
 
 pub mod conv;
 pub mod costmodel;

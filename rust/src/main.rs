@@ -26,7 +26,7 @@ use tcconv::report::{self, experiments};
 use tcconv::runtime;
 use tcconv::searchspace::{SearchSpace, SpaceOptions};
 use tcconv::serve::{Server, ServerConfig, SubmitError};
-use tcconv::sim::{GpuSpec, SimMeasurer, Simulator};
+use tcconv::sim::{GpuSpec, Simulator};
 use tcconv::tuner::{Session, SessionResult};
 use tcconv::zoo;
 
@@ -77,14 +77,17 @@ USAGE: repro <command> [--flag value ...]
 
 COMMANDS
   tune      --stage 2..5 [--trials 500] [--explorer diversity|sa|random|exhaustive]
-            [--seed N] [--out schedule.json]
+            [--seed N] [--jobs 1] [--out schedule.json]
+            --jobs N measures each candidate batch on N worker threads
+            (bit-identical results, shorter wall-clock)
   tune-net  [--model resnet50|resnet18|vgg16|all] [--trials 240] [--batch 8]
-            [--explorer diversity] [--seed N] [--out schedules.json]
+            [--explorer diversity] [--seed N] [--jobs 1] [--out schedules.json]
             tunes every distinct conv of the model zoo, chaining
             transfer learning across stages, and writes one registry file
   serve     [--registry schedules.json] [--workers 4] [--requests 16]
             loads the registry and routes synthetic requests through the
-            worker pool using the tuned schedule per kind
+            worker pool using the tuned schedule per kind; reports per-kind
+            latency, an end-to-end latency histogram and per-worker load
   table1    [--trials 500] [--seed N]
   fig14     [--trials 500] [--seeds 3]
   fig15     (accumulated ablation)
@@ -132,10 +135,11 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let stage = flag_usize(flags, "stage", 2);
     let trials = flag_usize(flags, "trials", 500);
     let seed = flag_u64(flags, "seed", 0);
+    let jobs = flag_usize(flags, "jobs", 1);
     let explorer = explorer_of(flags)?;
     let wl = ConvWorkload::resnet50_stage(stage, 8);
     println!(
-        "tuning {} (gemm {}x{}x{}) for {trials} trials, explorer={}",
+        "tuning {} (gemm {}x{}x{}) for {trials} trials, explorer={}, jobs={jobs}",
         wl.name,
         wl.gemm_m(),
         wl.gemm_n(),
@@ -145,6 +149,7 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let res = Session::for_workload(&wl)
         .trials(trials)
         .seed(seed)
+        .parallelism(jobs)
         .explorer(explorer.name())
         .run()?;
     println!(
@@ -166,6 +171,7 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let trials = flag_usize(flags, "trials", 240);
     let batch = flag_usize(flags, "batch", 8);
     let seed = flag_u64(flags, "seed", 0);
+    let jobs = flag_usize(flags, "jobs", 1);
     let explorer = explorer_of(flags)?;
     let out = flags.get("out").cloned().unwrap_or_else(|| "schedules.json".into());
 
@@ -183,7 +189,7 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let model_proto: Box<dyn CostModel> =
         Box::new(Gbt::new(GbtParams { seed, ..Default::default() }));
     println!(
-        "tune-net: {} network(s), batch {batch}, {trials} trials/conv, explorer={}",
+        "tune-net: {} network(s), batch {batch}, {trials} trials/conv, explorer={}, jobs={jobs}",
         nets.len(),
         explorer.name()
     );
@@ -198,12 +204,15 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 println!("  {:<22} (already tuned)", l.workload.name);
                 continue;
             }
+            // the default measurer is the seeded T4 simulator; with
+            // --jobs > 1 the Session fans each candidate batch across a
+            // ParallelMeasurer pool (results identical, wall-clock lower)
             let mut builder = Session::for_workload(&l.workload)
                 .trials(trials)
                 .seed(seed)
+                .parallelism(jobs)
                 .explorer(explorer.name())
-                .model(model_proto.clone_model())
-                .measurer(SimMeasurer::boxed(Simulator { seed, ..Default::default() }));
+                .model(model_proto.clone_model());
             if let Some(p) = &prior {
                 builder = builder.transfer_from(p);
             }
@@ -303,6 +312,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             s.kind, s.count, s.exec_p50_us, s.exec_p95_us, s.mean_batch
         );
     }
+    println!("\nend-to-end latency histogram (queue + exec):");
+    print!("{}", metrics.total_latency_histogram().render(40));
+    let counts = metrics.worker_counts();
+    println!(
+        "per-worker completions: [{}]",
+        counts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ")
+    );
     println!(
         "{tuned_hits} of {} responses executed under a registry-tuned (non-default) schedule",
         metrics.total_count()

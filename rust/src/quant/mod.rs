@@ -3,8 +3,9 @@
 //!
 //! The paper's §3.2 moves the epilogue (bias/BN/ReLU + clip to INT4) ahead
 //! of the shared-memory store and packs eight 4-bit outputs per 32-bit
-//! register using warp shuffles. [`pack`] implements the packed layout and
-//! integer epilogue; [`warp`] emulates the 32-lane warp register file and
+//! register using warp shuffles. [`pack_int4`] and [`Epilogue`] implement
+//! the packed layout and integer epilogue;
+//! [`warp_pack_int4`] emulates the 32-lane warp register file and
 //! the shuffle-based packing algorithm of Fig. 9/10 lane-for-lane, which is
 //! how we validate the *algorithm* (not just the layout) without CUDA.
 

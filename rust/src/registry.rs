@@ -23,6 +23,7 @@
 //!   }
 //! }
 //! ```
+#![deny(missing_docs)]
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -38,6 +39,7 @@ pub const REGISTRY_VERSION: usize = 1;
 /// One tuned workload: the schedule to deploy plus its tune-time record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TunedEntry {
+    /// The best schedule the tuning session found — what serving deploys.
     pub config: ScheduleConfig,
     /// Tuned (simulated) runtime, microseconds.
     pub runtime_us: f64,
@@ -82,6 +84,7 @@ pub struct ScheduleRegistry {
 }
 
 impl ScheduleRegistry {
+    /// An empty registry (every kind falls back to the default schedule).
     pub fn new() -> Self {
         Self::default()
     }
@@ -91,10 +94,12 @@ impl ScheduleRegistry {
         self.entries.insert(kind.to_string(), entry);
     }
 
+    /// The tuned entry for `kind`, if one was recorded.
     pub fn get(&self, kind: &str) -> Option<&TunedEntry> {
         self.entries.get(kind)
     }
 
+    /// Whether `kind` has a tuned entry.
     pub fn contains(&self, kind: &str) -> bool {
         self.entries.contains_key(kind)
     }
@@ -108,10 +113,12 @@ impl ScheduleRegistry {
             .unwrap_or_default()
     }
 
+    /// How many kinds have tuned entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the registry has no entries at all.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -121,12 +128,14 @@ impl ScheduleRegistry {
         self.entries.keys().map(String::as_str)
     }
 
+    /// Every `(kind, entry)` pair, sorted by kind.
     pub fn iter(&self) -> impl Iterator<Item = (&str, &TunedEntry)> {
         self.entries.iter().map(|(k, v)| (k.as_str(), v))
     }
 
     // ----- JSON interchange ------------------------------------------------
 
+    /// Serialize to the versioned JSON schema in the module docs.
     pub fn to_json(&self) -> Json {
         let schedules: BTreeMap<String, Json> = self
             .entries
@@ -139,6 +148,7 @@ impl ScheduleRegistry {
         ])
     }
 
+    /// Parse the versioned JSON schema; rejects unknown versions.
     pub fn from_json(j: &Json) -> Result<Self> {
         let version = j
             .req("version")?

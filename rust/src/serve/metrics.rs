@@ -1,7 +1,13 @@
-//! Per-kind serving metrics: queue/exec latency percentiles, batch sizes.
+//! Per-kind serving metrics: queue/exec latency percentiles, log-scaled
+//! latency histograms, batch sizes, and per-worker completion counters.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
+
+/// Number of log-2 histogram buckets: bucket 0 covers `< 1 us`, bucket
+/// `i >= 1` covers `[2^(i-1), 2^i) us`, and the last bucket is open-ended
+/// (everything from `2^22` us ≈ 4.2 s up) so no sample is ever dropped.
+const HIST_BUCKETS: usize = 24;
 
 #[derive(Debug, Default, Clone)]
 struct KindStats {
@@ -13,19 +19,96 @@ struct KindStats {
 /// Aggregated view of one conv kind's serving behaviour.
 #[derive(Debug, Clone)]
 pub struct LatencySummary {
+    /// The request kind the numbers describe.
     pub kind: String,
+    /// Requests completed.
     pub count: u64,
+    /// Median time spent queued, microseconds.
     pub queue_p50_us: f64,
+    /// 95th-percentile time spent queued, microseconds.
     pub queue_p95_us: f64,
+    /// Median execution time, microseconds.
     pub exec_p50_us: f64,
+    /// 95th-percentile execution time, microseconds.
     pub exec_p95_us: f64,
+    /// Mean number of requests sharing a worker batch.
     pub mean_batch: f64,
+}
+
+/// A log-2-bucketed latency histogram (microsecond domain).
+///
+/// Percentiles compress a distribution to a point; the histogram keeps its
+/// shape — bimodality from cold batches, tails from queue spikes — which
+/// is what a capacity decision actually needs. Buckets double in width
+/// (`<1 us`, `1-2`, `2-4`, ...), so 24 buckets span sub-microsecond to
+/// multi-second without per-sample storage at observation time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+}
+
+impl LatencyHistogram {
+    /// Build the histogram of `samples_us` (microseconds).
+    pub fn from_samples(samples_us: &[f64]) -> Self {
+        let mut counts = vec![0u64; HIST_BUCKETS];
+        for &s in samples_us {
+            counts[Self::bucket_of(s)] += 1;
+        }
+        Self { counts }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us < 1.0 {
+            0
+        } else {
+            (us.log2().floor() as usize + 1).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// The non-empty `(lo_us, hi_us, count)` buckets, in latency order.
+    /// `hi_us` of the final bucket is `f64::INFINITY`.
+    pub fn buckets(&self) -> Vec<(f64, f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let lo = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                let hi = if i == HIST_BUCKETS - 1 {
+                    f64::INFINITY
+                } else {
+                    (1u64 << i) as f64
+                };
+                (lo, hi, c)
+            })
+            .collect()
+    }
+
+    /// ASCII bar rendering (one line per non-empty bucket), bars scaled to
+    /// `width` characters — what `repro serve` prints.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        let mut out = String::new();
+        for (lo, hi, c) in self.buckets() {
+            let bar = "#".repeat(((c as f64 / max as f64) * width as f64).ceil() as usize);
+            let hi_s = if hi.is_infinite() { "inf".to_string() } else { format!("{hi:.0}") };
+            out.push_str(&format!("{lo:>8.0} - {hi_s:>6} us  {bar} {c}\n"));
+        }
+        out
+    }
 }
 
 /// Thread-safe metrics sink shared by the workers.
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<HashMap<String, KindStats>>,
+    /// Completions per worker index (load-balance visibility).
+    worker_counts: Mutex<Vec<u64>>,
 }
 
 fn pct(sorted: &[f64], q: f64) -> f64 {
@@ -37,18 +120,29 @@ fn pct(sorted: &[f64], q: f64) -> f64 {
 }
 
 impl Metrics {
+    /// Empty sink.
     pub fn new() -> Self {
         Self::default()
     }
 
-    pub fn observe(&self, kind: &str, queue_us: f64, exec_us: f64, batch: usize) {
+    /// Record one completed request: its kind, queue and execution
+    /// latencies, the size of the worker batch it shared, and the index
+    /// of the worker that executed it.
+    pub fn observe(&self, kind: &str, queue_us: f64, exec_us: f64, batch: usize, worker: usize) {
         let mut m = self.inner.lock().unwrap();
         let s = m.entry(kind.to_string()).or_default();
         s.queue_us.push(queue_us);
         s.exec_us.push(exec_us);
         s.batch_sizes.push(batch);
+        drop(m);
+        let mut w = self.worker_counts.lock().unwrap();
+        if w.len() <= worker {
+            w.resize(worker + 1, 0);
+        }
+        w[worker] += 1;
     }
 
+    /// Total requests completed across all kinds.
     pub fn total_count(&self) -> u64 {
         self.inner
             .lock()
@@ -58,12 +152,20 @@ impl Metrics {
             .sum()
     }
 
+    /// Completions per worker index. Shorter than the worker count if the
+    /// trailing workers never completed a request.
+    pub fn worker_counts(&self) -> Vec<u64> {
+        self.worker_counts.lock().unwrap().clone()
+    }
+
+    /// All kinds observed so far, sorted.
     pub fn kinds(&self) -> Vec<String> {
         let mut k: Vec<String> = self.inner.lock().unwrap().keys().cloned().collect();
         k.sort();
         k
     }
 
+    /// Percentile summary for one kind; `None` if never observed.
     pub fn summary(&self, kind: &str) -> Option<LatencySummary> {
         let m = self.inner.lock().unwrap();
         let s = m.get(kind)?;
@@ -82,6 +184,23 @@ impl Metrics {
                 / s.batch_sizes.len().max(1) as f64,
         })
     }
+
+    /// Execution-latency histogram for one kind; `None` if never observed.
+    pub fn exec_histogram(&self, kind: &str) -> Option<LatencyHistogram> {
+        let m = self.inner.lock().unwrap();
+        Some(LatencyHistogram::from_samples(&m.get(kind)?.exec_us))
+    }
+
+    /// End-to-end (queue + exec) latency histogram across every kind —
+    /// the fleet-level view `repro serve` prints.
+    pub fn total_latency_histogram(&self) -> LatencyHistogram {
+        let m = self.inner.lock().unwrap();
+        let all: Vec<f64> = m
+            .values()
+            .flat_map(|s| s.queue_us.iter().zip(&s.exec_us).map(|(q, e)| q + e))
+            .collect();
+        LatencyHistogram::from_samples(&all)
+    }
 }
 
 #[cfg(test)]
@@ -92,7 +211,7 @@ mod tests {
     fn percentiles_and_counts() {
         let m = Metrics::new();
         for i in 1..=100 {
-            m.observe("k", i as f64, (101 - i) as f64, 2);
+            m.observe("k", i as f64, (101 - i) as f64, 2, i % 3);
         }
         let s = m.summary("k").unwrap();
         assert_eq!(s.count, 100);
@@ -106,10 +225,56 @@ mod tests {
     #[test]
     fn missing_kind_is_none() {
         assert!(Metrics::new().summary("nope").is_none());
+        assert!(Metrics::new().exec_histogram("nope").is_none());
     }
 
     #[test]
     fn pct_on_empty_is_zero() {
         assert_eq!(pct(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn worker_counters_track_completions() {
+        let m = Metrics::new();
+        m.observe("a", 1.0, 1.0, 1, 0);
+        m.observe("a", 1.0, 1.0, 1, 2);
+        m.observe("b", 1.0, 1.0, 1, 2);
+        assert_eq!(m.worker_counts(), vec![1, 0, 2]);
+        assert_eq!(m.worker_counts().iter().sum::<u64>(), m.total_count());
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2_and_lossless() {
+        let h = LatencyHistogram::from_samples(&[0.5, 1.0, 1.5, 3.0, 1000.0, 1e12]);
+        assert_eq!(h.count(), 6);
+        let buckets = h.buckets();
+        // 0.5 -> [0,1); 1.0 and 1.5 -> [1,2); 3.0 -> [2,4);
+        // 1000 -> [512,1024); 1e12 -> open-ended last bucket
+        assert_eq!(buckets[0], (0.0, 1.0, 1));
+        assert_eq!(buckets[1], (1.0, 2.0, 2));
+        assert_eq!(buckets[2], (2.0, 4.0, 1));
+        assert_eq!(buckets[3], (512.0, 1024.0, 1));
+        let last = buckets.last().unwrap();
+        assert!(last.1.is_infinite());
+        assert_eq!(last.2, 1);
+    }
+
+    #[test]
+    fn histogram_render_shows_nonempty_buckets() {
+        let h = LatencyHistogram::from_samples(&[1.0, 1.0, 1.0, 5.0]);
+        let text = h.render(10);
+        assert!(text.contains("##########"), "{text}");
+        assert_eq!(text.lines().count(), 2, "{text}");
+    }
+
+    #[test]
+    fn total_latency_histogram_sums_queue_and_exec() {
+        let m = Metrics::new();
+        m.observe("a", 3.0, 4.0, 1, 0); // 7 us end-to-end -> [4,8)
+        m.observe("b", 0.2, 0.3, 1, 1); // 0.5 us -> [0,1)
+        let h = m.total_latency_histogram();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.buckets()[0], (0.0, 1.0, 1));
+        assert_eq!(h.buckets()[1], (4.0, 8.0, 1));
     }
 }

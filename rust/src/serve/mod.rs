@@ -14,10 +14,26 @@
 //! [`crate::tuner::Session`] pipeline) and every request kind executes
 //! under its tuned schedule, falling back to `ScheduleConfig::default()`
 //! for kinds the registry does not know.
+//!
+//! # Concurrency model
+//!
+//! [`ServerConfig::workers`] threads pull from one bounded queue. A worker
+//! claims a *head-of-line batch*: the oldest request plus up to
+//! `max_batch - 1` queued requests of the same kind, preserving the
+//! arrival order of everything it skips. One kind per batch means one
+//! registry lookup per batch, and the batch reuses one
+//! [`ExecScratch`](crate::conv::ExecScratch) — the laid-out im2col operand
+//! and accumulator buffers of
+//! [`qconv2d_scheduled`](crate::conv::qconv2d_scheduled) are recycled
+//! across the batch instead of reallocated per request. [`Metrics`] records
+//! queue/exec latency per kind (percentiles and log-scaled
+//! [`LatencyHistogram`]s) plus per-worker completion counters, so skewed
+//! load-balance is visible, not guessed.
+#![deny(missing_docs)]
 
 mod metrics;
 
-pub use metrics::{LatencySummary, Metrics};
+pub use metrics::{LatencyHistogram, LatencySummary, Metrics};
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -26,7 +42,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::conv::{qconv2d_scheduled, ConvInstance};
+use crate::conv::{qconv2d_scheduled_with, ConvInstance, ExecScratch};
 use crate::quant::Epilogue;
 use crate::registry::ScheduleRegistry;
 use crate::searchspace::ScheduleConfig;
@@ -34,6 +50,7 @@ use crate::searchspace::ScheduleConfig;
 /// Serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Worker threads executing requests (`repro serve --workers`).
     pub workers: usize,
     /// Max queued requests before `submit` returns Busy.
     pub queue_depth: usize,
@@ -50,10 +67,13 @@ impl Default for ServerConfig {
 
 /// One inference request.
 pub struct Request {
+    /// Server-assigned submission id (monotonic).
     pub id: u64,
     /// Conv kind key (e.g. "stage2"); batching groups by this.
     pub kind: String,
+    /// The conv problem to execute.
     pub instance: ConvInstance,
+    /// Post-GEMM epilogue (bias / ReLU / requantization shift).
     pub epilogue: Epilogue,
     enqueued: Instant,
     respond: Sender<Response>,
@@ -62,13 +82,20 @@ pub struct Request {
 /// One completed inference.
 #[derive(Debug)]
 pub struct Response {
+    /// The id `submit` assigned to this request.
     pub id: u64,
+    /// The request's conv kind.
     pub kind: String,
+    /// Packed-INT4 output words (same layout as the AOT artifacts).
     pub packed_output: Vec<i32>,
+    /// Time spent queued before a worker claimed the request, microseconds.
     pub queue_us: f64,
+    /// Execution time on the worker, microseconds.
     pub exec_us: f64,
     /// How many requests shared the worker batch.
     pub batch_size: usize,
+    /// Index of the worker that executed this request.
+    pub worker: usize,
     /// The schedule the worker executed this request with (tuned per kind
     /// via the registry, or the default fallback).
     pub schedule: ScheduleConfig,
@@ -123,12 +150,12 @@ impl Server {
             registry,
         });
         let metrics = Arc::new(Metrics::new());
-        let workers = (0..cfg.workers)
-            .map(|_| {
+        let workers = (0..cfg.workers.max(1))
+            .map(|w| {
                 let sh = Arc::clone(&shared);
                 let mx = Arc::clone(&metrics);
                 let max_batch = cfg.max_batch;
-                std::thread::spawn(move || worker_loop(sh, mx, max_batch))
+                std::thread::spawn(move || worker_loop(sh, mx, max_batch, w))
             })
             .collect();
         Self { shared, cfg, workers, metrics, next_id: AtomicU64::new(1) }
@@ -164,6 +191,7 @@ impl Server {
         Ok(rx)
     }
 
+    /// Live metrics sink (latency summaries, histograms, worker counters).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -178,10 +206,12 @@ impl Server {
         self.shared.registry.schedule_for(kind)
     }
 
+    /// Requests currently queued (not yet claimed by a worker).
     pub fn queue_len(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
     }
 
+    /// Requests completed since start.
     pub fn completed(&self) -> u64 {
         self.shared.completed.load(Ordering::SeqCst)
     }
@@ -206,7 +236,13 @@ impl Server {
 }
 
 /// Worker: pull a head-of-line batch of same-kind requests, execute, time.
-fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize) {
+///
+/// Each worker owns one [`ExecScratch`] for its whole lifetime: every
+/// request in every batch reuses the same im2col/accumulator staging
+/// buffers (same-kind batches have identical dims, so the reuse is
+/// allocation-free), and the scratch is shape-safe across kind changes.
+fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize, worker: usize) {
+    let mut scratch = ExecScratch::new();
     loop {
         let batch = {
             let mut q = shared.queue.lock().unwrap();
@@ -243,9 +279,9 @@ fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize) {
         for req in batch {
             let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
             let t = Instant::now();
-            let out = qconv2d_scheduled(&req.instance, &req.epilogue, &schedule);
+            let out = qconv2d_scheduled_with(&req.instance, &req.epilogue, &schedule, &mut scratch);
             let exec_us = t.elapsed().as_secs_f64() * 1e6;
-            metrics.observe(&req.kind, queue_us, exec_us, bsize);
+            metrics.observe(&req.kind, queue_us, exec_us, bsize, worker);
             shared.completed.fetch_add(1, Ordering::SeqCst);
             let _ = req.respond.send(Response {
                 id: req.id,
@@ -254,6 +290,7 @@ fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize) {
                 queue_us,
                 exec_us,
                 batch_size: bsize,
+                worker,
                 schedule,
             });
         }
@@ -286,9 +323,11 @@ mod tests {
             let resp = rx.recv().unwrap();
             assert_eq!(resp.packed_output, want);
             assert!(resp.exec_us > 0.0);
+            assert!(resp.worker < 2);
         }
         let m = server.shutdown();
         assert_eq!(m.summary("edge").unwrap().count, 8);
+        assert_eq!(m.worker_counts().iter().sum::<u64>(), 8);
     }
 
     #[test]
@@ -352,6 +391,7 @@ mod tests {
             .collect();
         let metrics = server.shutdown();
         assert_eq!(metrics.total_count(), n);
+        assert_eq!(metrics.worker_counts().iter().sum::<u64>(), n);
     }
 
     #[test]
@@ -406,5 +446,71 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.summary("a").unwrap().count, 6);
         assert_eq!(m.summary("b").unwrap().count, 6);
+    }
+
+    #[test]
+    fn multi_worker_mixed_burst_routes_and_loses_nothing() {
+        // the concurrency satellite: a mixed-kind burst across 4 workers
+        // must complete every request, route each kind to *its* tuned
+        // schedule, compute correct numerics under scratch reuse, and
+        // never lose a response
+        let kinds = [
+            ("mx_a", ConvWorkload::new("mx_a", 1, 8, 8, 16, 8)),
+            ("mx_b", ConvWorkload::new("mx_b", 1, 6, 6, 8, 16)),
+            ("mx_c", ConvWorkload::new("mx_c", 1, 10, 10, 8, 8)),
+        ];
+        let tuned = [
+            ScheduleConfig { chunk: 1, ..Default::default() },
+            ScheduleConfig { chunk: 4, ..Default::default() },
+            ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, ..Default::default() },
+        ];
+        let mut reg = ScheduleRegistry::new();
+        for ((kind, _), cfg) in kinds.iter().zip(&tuned) {
+            reg.insert(
+                kind,
+                TunedEntry {
+                    config: *cfg,
+                    runtime_us: 1.0,
+                    trials: 1,
+                    explorer: "test".into(),
+                },
+            );
+        }
+        let server = Server::from_registry(
+            ServerConfig { workers: 4, queue_depth: 512, max_batch: 4 },
+            reg,
+        );
+        let epi = Epilogue::default();
+        let n = 60u64;
+        let mut pending = Vec::new();
+        for s in 0..n {
+            let (kind, wl) = &kinds[s as usize % kinds.len()];
+            let inst = ConvInstance::synthetic(wl, s);
+            let want = qconv2d(&inst, &epi);
+            let rx = server.submit(kind, inst, epi).unwrap();
+            pending.push((kind.to_string(), want, rx));
+        }
+        let mut per_kind = std::collections::HashMap::new();
+        for (kind, want, rx) in pending {
+            let resp = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .expect("response lost");
+            assert_eq!(resp.kind, kind);
+            assert_eq!(resp.packed_output, want, "numerics under scratch reuse");
+            let i = kinds.iter().position(|(k, _)| *k == kind).unwrap();
+            assert_eq!(resp.schedule, tuned[i], "kind routed to wrong schedule");
+            assert!(resp.worker < 4);
+            *per_kind.entry(kind).or_insert(0u64) += 1;
+        }
+        let m = server.shutdown();
+        assert_eq!(m.total_count(), n, "no response may be lost");
+        assert_eq!(per_kind.len(), 3);
+        for (kind, _) in &kinds {
+            assert_eq!(per_kind[*kind], n / 3);
+            assert_eq!(m.summary(kind).unwrap().count, n / 3);
+            assert!(m.exec_histogram(kind).unwrap().count() == n / 3);
+        }
+        assert_eq!(m.worker_counts().iter().sum::<u64>(), n);
+        assert_eq!(m.total_latency_histogram().count(), n);
     }
 }

@@ -10,12 +10,20 @@
 //! * [`SimMeasurer`] — wraps a [`Simulator`] plus the [`ProfileCache`]
 //!   that amortizes the im2col tile analysis across configs (what the old
 //!   `Tuner` carried as two concrete fields).
+//! * [`ParallelMeasurer`](super::ParallelMeasurer) — the same simulator
+//!   fanned across a [`MeasurePool`](super::MeasurePool) of worker
+//!   threads; batches measure in parallel, bit-identical to serial.
 //! * [`CachedMeasurer`] — a memoizing decorator: repeated measurements of
-//!   the same (workload, config) pair are served from memory. Useful when
-//!   several sessions share one substrate (e.g. `tune-net` re-visiting a
-//!   shape, or ablations sweeping overlapping spaces).
+//!   the same (workload, config) pair are served from memory. The memo is
+//!   lock-striped with interior mutability, and cache misses are forwarded
+//!   to the inner substrate *as one batch*, so wrapping a
+//!   `ParallelMeasurer` keeps the full fan-out — the cache never
+//!   serializes a batch it cannot answer.
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::conv::ConvWorkload;
 use crate::searchspace::ScheduleConfig;
@@ -26,6 +34,18 @@ use super::{Measurement, ProfileCache, Simulator};
 pub trait Measurer {
     /// Measure one schedule on one workload.
     fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement;
+
+    /// Measure a whole candidate batch, returning measurements in
+    /// candidate order (`out[i]` belongs to `cfgs[i]`).
+    ///
+    /// The default runs serially through [`Measurer::measure`]; parallel
+    /// substrates ([`ParallelMeasurer`](super::ParallelMeasurer)) override
+    /// this to fan the batch across workers. [`crate::tuner::Tuner`]
+    /// measures every proposal round through this entry point, so the
+    /// substrate — not the tuner — decides the execution strategy.
+    fn measure_batch(&mut self, wl: &ConvWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
+        cfgs.iter().map(|c| self.measure(wl, c)).collect()
+    }
 
     /// Substrate name for logs and reports.
     fn name(&self) -> &str {
@@ -40,6 +60,7 @@ pub struct SimMeasurer {
 }
 
 impl SimMeasurer {
+    /// Wrap `sim` with a fresh profile cache.
     pub fn new(sim: Simulator) -> Self {
         Self { sim, cache: ProfileCache::default() }
     }
@@ -49,6 +70,7 @@ impl SimMeasurer {
         Box::new(Self::new(sim))
     }
 
+    /// The simulator this measurer runs on.
     pub fn simulator(&self) -> &Simulator {
         &self.sim
     }
@@ -77,27 +99,80 @@ impl Simulator {
     }
 }
 
+/// Number of lock stripes in the [`CachedMeasurer`] memo. Sixteen stripes
+/// keep concurrent probes from different workers contention-free without
+/// meaningfully inflating the footprint.
+const MEMO_STRIPES: usize = 16;
+
+type MemoKey = (ConvWorkload, ScheduleConfig);
+
+/// Lock-striped memoization map: `MEMO_STRIPES` independently locked
+/// shards, selected by key hash. All operations take `&self` (interior
+/// mutability), so probes from concurrent readers never funnel through a
+/// single lock.
+struct StripedMemo {
+    stripes: Vec<Mutex<HashMap<MemoKey, Measurement>>>,
+}
+
+impl StripedMemo {
+    fn new() -> Self {
+        Self { stripes: (0..MEMO_STRIPES).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    fn stripe_of(&self, key: &MemoKey) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.stripes.len()
+    }
+
+    fn get(&self, key: &MemoKey) -> Option<Measurement> {
+        self.stripes[self.stripe_of(key)].lock().unwrap().get(key).cloned()
+    }
+
+    fn insert(&self, key: MemoKey, m: Measurement) {
+        self.stripes[self.stripe_of(&key)].lock().unwrap().insert(key, m);
+    }
+}
+
 /// Memoizing decorator over any [`Measurer`].
+///
+/// The memo is interior-mutable and lock-striped (16 hash-selected mutex
+/// shards), so probing is a `&self` operation that composes with
+/// concurrent use. On a
+/// batch measurement, every memo miss is collected and forwarded to the
+/// inner substrate **as one batch** — a wrapped
+/// [`ParallelMeasurer`](super::ParallelMeasurer) still fans the misses
+/// across its whole pool instead of receiving them one at a time.
 pub struct CachedMeasurer {
     inner: Box<dyn Measurer>,
-    memo: HashMap<(ConvWorkload, ScheduleConfig), Measurement>,
+    memo: StripedMemo,
     name: String,
-    hits: usize,
-    misses: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
 }
 
 impl CachedMeasurer {
+    /// Memoize `inner`: repeated (workload, config) measurements are
+    /// answered from memory.
     pub fn new(inner: Box<dyn Measurer>) -> Self {
         let name = format!("cached({})", inner.name());
-        Self { inner, memo: HashMap::new(), name, hits: 0, misses: 0 }
+        Self {
+            inner,
+            memo: StripedMemo::new(),
+            name,
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
     }
 
+    /// How many measurements were answered from the memo.
     pub fn hits(&self) -> usize {
-        self.hits
+        self.hits.load(Ordering::Relaxed)
     }
 
+    /// How many measurements had to go to the inner substrate.
     pub fn misses(&self) -> usize {
-        self.misses
+        self.misses.load(Ordering::Relaxed)
     }
 }
 
@@ -105,13 +180,40 @@ impl Measurer for CachedMeasurer {
     fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement {
         let key = (wl.clone(), *cfg);
         if let Some(m) = self.memo.get(&key) {
-            self.hits += 1;
-            return m.clone();
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return m;
         }
         let m = self.inner.measure(wl, cfg);
-        self.misses += 1;
+        self.misses.fetch_add(1, Ordering::Relaxed);
         self.memo.insert(key, m.clone());
         m
+    }
+
+    fn measure_batch(&mut self, wl: &ConvWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
+        let mut out: Vec<Option<Measurement>> = vec![None; cfgs.len()];
+        let mut miss_idx = Vec::new();
+        for (i, cfg) in cfgs.iter().enumerate() {
+            match self.memo.get(&(wl.clone(), *cfg)) {
+                Some(m) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    out[i] = Some(m);
+                }
+                None => miss_idx.push(i),
+            }
+        }
+        if !miss_idx.is_empty() {
+            // one inner batch for all misses: a parallel inner substrate
+            // keeps its full fan-out
+            let miss_cfgs: Vec<ScheduleConfig> = miss_idx.iter().map(|&i| cfgs[i]).collect();
+            let measured = self.inner.measure_batch(wl, &miss_cfgs);
+            debug_assert_eq!(measured.len(), miss_cfgs.len());
+            for (&i, m) in miss_idx.iter().zip(measured) {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.memo.insert((wl.clone(), cfgs[i]), m.clone());
+                out[i] = Some(m);
+            }
+        }
+        out.into_iter().map(|m| m.expect("every candidate answered")).collect()
     }
 
     fn name(&self) -> &str {
@@ -122,7 +224,7 @@ impl Measurer for CachedMeasurer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::GpuSpec;
+    use crate::sim::{GpuSpec, ParallelMeasurer};
 
     /// Counts invocations so the decorator's dedup is observable.
     struct CountingMeasurer {
@@ -178,5 +280,56 @@ mod tests {
         let b = cached.measure(&ConvWorkload::resnet50_stage(5, 8), &cfg).runtime_us;
         assert_ne!(a, b);
         assert_eq!(cached.misses(), 2);
+    }
+
+    #[test]
+    fn batch_probe_forwards_only_misses_in_one_batch() {
+        let calls = std::rc::Rc::new(std::cell::Cell::new(0));
+        let counting = CountingMeasurer {
+            inner: SimMeasurer::new(Simulator::noiseless(GpuSpec::t4())),
+            calls: std::rc::Rc::clone(&calls),
+        };
+        let mut cached = CachedMeasurer::new(Box::new(counting));
+        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let a = ScheduleConfig::default();
+        let b = ScheduleConfig { chunk: 1, ..a };
+        let c = ScheduleConfig { chunk: 4, ..a };
+
+        // warm the memo with `a`
+        cached.measure(&wl, &a);
+        assert_eq!(calls.get(), 1);
+
+        // batch of [a, b, c]: only b and c reach the inner measurer
+        let batch = cached.measure_batch(&wl, &[a, b, c]);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(calls.get(), 3, "hit must not be re-measured");
+        assert_eq!(cached.hits(), 1);
+        assert_eq!(cached.misses(), 3);
+        // order preserved: batch[0] is a's memoized value
+        assert_eq!(batch[0].runtime_us, cached.measure(&wl, &a).runtime_us);
+    }
+
+    #[test]
+    fn cached_over_parallel_is_bit_identical_to_serial() {
+        // the intended composition: memo in front, pool behind
+        let wl = ConvWorkload::resnet50_stage(2, 8);
+        let sim = Simulator { noise_sigma: 0.02, seed: 3, ..Default::default() };
+        let cfgs: Vec<ScheduleConfig> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&ch| ScheduleConfig { chunk: ch, ..Default::default() })
+            .collect();
+        let mut serial = SimMeasurer::new(sim.clone());
+        let want: Vec<f64> = cfgs.iter().map(|c| serial.measure(&wl, c).runtime_us).collect();
+
+        let mut cached = CachedMeasurer::new(ParallelMeasurer::boxed(sim, 4));
+        let got: Vec<f64> =
+            cached.measure_batch(&wl, &cfgs).into_iter().map(|m| m.runtime_us).collect();
+        assert_eq!(want, got);
+        // second pass: all hits, no inner traffic
+        let again: Vec<f64> =
+            cached.measure_batch(&wl, &cfgs).into_iter().map(|m| m.runtime_us).collect();
+        assert_eq!(want, again);
+        assert_eq!(cached.hits(), cfgs.len());
+        assert_eq!(cached.misses(), cfgs.len());
     }
 }

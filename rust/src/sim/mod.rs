@@ -4,7 +4,7 @@
 //! The paper's speedups come from counted effects: duplicate loads elided,
 //! shared-memory bytes and footprint shrunk by packing, 32-byte
 //! transactions wasted by uncoalesced layout, occupancy limits, MMA
-//! pipeline utilization. [`analysis`] counts those quantities exactly from
+//! pipeline utilization. [`analyze`] counts those quantities exactly from
 //! the schedule and the im2col index algebra; this module turns counts
 //! into time with a bounded-overlap roofline plus occupancy/wave effects —
 //! the standard analytic GPU model (cf. the hierarchical roofline used by
@@ -15,11 +15,13 @@ mod analysis;
 mod gpu;
 mod measure;
 mod occupancy;
+pub mod pool;
 
 pub use analysis::{analyze, ProfileCache, TrafficAnalysis, ACC_BYTES, INT4_BYTES};
 pub use gpu::GpuSpec;
 pub use measure::{CachedMeasurer, Measurer, SimMeasurer};
 pub use occupancy::{occupancy, BlockResources, Limiter, Occupancy};
+pub use pool::{MeasurePool, ParallelMeasurer};
 
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};

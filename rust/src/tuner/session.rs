@@ -13,12 +13,31 @@
 //! println!("{} -> {:.2} us", res.best.config.brief(), res.best.runtime_us);
 //! ```
 //!
+//! Candidate measurement — where tuning spends its wall-clock time — can
+//! be fanned across a worker pool with [`SessionBuilder::parallelism`];
+//! results are bit-identical to a serial run of the same seed:
+//!
+//! ```
+//! use tcconv::conv::ConvWorkload;
+//! use tcconv::tuner::Session;
+//!
+//! let wl = ConvWorkload::resnet50_stage(2, 8);
+//! let res = Session::for_workload(&wl)
+//!     .trials(32)
+//!     .seed(7)
+//!     .parallelism(2) // measure each proposal batch on 2 workers
+//!     .run()
+//!     .unwrap();
+//! assert_eq!(res.best.trials_used, 32);
+//! ```
+//!
 //! A [`SessionResult`] keeps the measurement database, so sessions chain
 //! via [`SessionBuilder::transfer_from`] (the paper's cross-workload
 //! transfer learning) and convert into
 //! [`crate::registry::ScheduleRegistry`] entries via
 //! [`SessionResult::registry_entry`] — the artifact the serving layer
 //! loads.
+#![deny(missing_docs)]
 
 use crate::conv::ConvWorkload;
 use crate::costmodel::{featurize, CostModel};
@@ -40,6 +59,7 @@ impl Session {
             trials: 500,
             batch_size: 32,
             seed: 0,
+            jobs: 1,
             space: SpaceOptions::default(),
             explorer: "diversity-aware".to_string(),
             registry: ExplorerRegistry::with_builtins(),
@@ -56,6 +76,7 @@ pub struct SessionBuilder {
     trials: usize,
     batch_size: usize,
     seed: u64,
+    jobs: usize,
     space: SpaceOptions,
     explorer: String,
     registry: ExplorerRegistry,
@@ -77,13 +98,32 @@ impl SessionBuilder {
         self
     }
 
+    /// Seed for everything stochastic in the session: exploration,
+    /// cost-model initialization, and the default measurer's simulated
+    /// noise. Same seed, same session — serial or parallel.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Search-space shape (knob ranges / legality rules).
     pub fn space(mut self, space: SpaceOptions) -> Self {
         self.space = space;
+        self
+    }
+
+    /// Measure each proposal batch on `n` worker threads (default 1 =
+    /// serial). Parallel sessions reproduce serial sessions bit-for-bit:
+    /// measurement noise is keyed per candidate and the pool merges
+    /// results in candidate order (see [`crate::sim::pool`]).
+    ///
+    /// Applies to the *default* measurement substrate (the seeded T4
+    /// simulator behind a [`crate::sim::ParallelMeasurer`]); an explicit
+    /// [`SessionBuilder::measurer`] wins over this knob, since a custom
+    /// substrate decides its own execution strategy via
+    /// [`Measurer::measure_batch`](crate::sim::Measurer::measure_batch).
+    pub fn parallelism(mut self, n: usize) -> Self {
+        self.jobs = n.max(1);
         self
     }
 
@@ -139,8 +179,19 @@ impl SessionBuilder {
 
     /// Build the tuner and run the full session.
     pub fn run(self) -> crate::Result<SessionResult> {
-        let Self { wl, trials, batch_size, seed, space, explorer, registry, measurer, model, prior } =
-            self;
+        let Self {
+            wl,
+            trials,
+            batch_size,
+            seed,
+            jobs,
+            space,
+            explorer,
+            registry,
+            measurer,
+            model,
+            prior,
+        } = self;
         let search_space = SearchSpace::for_workload(&wl, space);
         // provenance: the canonical registry name this session selected
         // (Explorer::name() may differ for custom modules)
@@ -156,7 +207,12 @@ impl SessionBuilder {
             seed,
             space,
             measurer: measurer.unwrap_or_else(|| {
-                crate::sim::Simulator { seed, ..Default::default() }.into_measurer()
+                let sim = crate::sim::Simulator { seed, ..Default::default() };
+                if jobs > 1 {
+                    crate::sim::ParallelMeasurer::boxed(sim, jobs)
+                } else {
+                    sim.into_measurer()
+                }
             }),
             model,
         };
@@ -184,6 +240,7 @@ pub struct SessionResult {
 }
 
 impl SessionResult {
+    /// The workload this session tuned.
     pub fn workload(&self) -> &ConvWorkload {
         &self.workload
     }
@@ -247,6 +304,39 @@ mod tests {
         assert_eq!(session.best.config, direct.config);
         assert_eq!(session.best.runtime_us, direct.runtime_us);
         assert_eq!(session.db().len(), 64);
+    }
+
+    #[test]
+    fn parallel_session_reproduces_serial_session() {
+        // end-to-end determinism across the whole Session pipeline: the
+        // parallelism knob must change wall-clock only, never the result
+        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let run = |jobs: usize| {
+            Session::for_workload(&wl)
+                .trials(96)
+                .seed(21)
+                .parallelism(jobs)
+                .run()
+                .unwrap()
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.best.config, parallel.best.config);
+        assert_eq!(serial.best.runtime_us, parallel.best.runtime_us);
+        let a: Vec<f64> =
+            serial.best.history.records().iter().map(|r| r.runtime_us).collect();
+        let b: Vec<f64> =
+            parallel.best.history.records().iter().map(|r| r.runtime_us).collect();
+        assert_eq!(a, b, "identical measurement sequence, trial-for-trial");
+        // explicit measurer wins over the parallelism knob (documented)
+        let explicit = Session::for_workload(&wl)
+            .trials(64)
+            .seed(21)
+            .parallelism(8)
+            .measurer(SimMeasurer::boxed(Simulator { seed: 21, ..Default::default() }))
+            .run()
+            .unwrap();
+        assert_eq!(explicit.db().len(), 64);
     }
 
     #[test]

@@ -108,6 +108,57 @@ fn server_falls_back_to_default_for_missing_kind() {
 }
 
 #[test]
+fn parallel_tune_to_multiworker_serve_end_to_end() {
+    // the whole PR-2 surface in one path: a *parallel* tuning session
+    // (4 measurement jobs) must reproduce the serial session bit-for-bit,
+    // its registry entry must route through a multi-worker server, and a
+    // mixed burst must complete with correct numerics and full metrics
+    let wl = tiny_wl();
+    let session = |jobs: usize| {
+        Session::for_workload(&wl)
+            .trials(64)
+            .seed(2)
+            .parallelism(jobs)
+            .run()
+            .expect("builtin explorer")
+    };
+    let serial = session(1);
+    let parallel = session(4);
+    assert_eq!(serial.best.config, parallel.best.config);
+    assert_eq!(serial.best.runtime_us, parallel.best.runtime_us);
+
+    let mut registry = ScheduleRegistry::new();
+    registry.insert(&wl.name, parallel.registry_entry());
+    let tuned = parallel.best.config;
+
+    let server = Server::from_registry(
+        ServerConfig { workers: 4, queue_depth: 128, max_batch: 4 },
+        registry,
+    );
+    let epi = Epilogue::default();
+    let other = ConvWorkload::new("other_kind", 1, 6, 6, 8, 8);
+    let mut pending = Vec::new();
+    for seed in 0..24u64 {
+        let (kind, src): (&str, &ConvWorkload) =
+            if seed % 2 == 0 { (&wl.name, &wl) } else { ("other_kind", &other) };
+        let inst = ConvInstance::synthetic(src, seed);
+        let want = qconv2d(&inst, &epi);
+        pending.push((kind.to_string(), want, server.submit(kind, inst, epi).unwrap()));
+    }
+    for (kind, want, rx) in pending {
+        let resp = rx.recv().expect("response lost");
+        assert_eq!(resp.packed_output, want);
+        let expect_schedule =
+            if kind == wl.name { tuned } else { ScheduleConfig::default() };
+        assert_eq!(resp.schedule, expect_schedule, "kind {kind}");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.total_count(), 24);
+    assert_eq!(metrics.worker_counts().iter().sum::<u64>(), 24);
+    assert_eq!(metrics.total_latency_histogram().count(), 24);
+}
+
+#[test]
 fn empty_registry_server_equals_plain_start() {
     let wl = ConvWorkload::new("plain", 1, 6, 6, 8, 8);
     let epi = Epilogue::default();
