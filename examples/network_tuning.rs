@@ -19,8 +19,8 @@ fn main() {
     let model = std::env::var("MODEL").unwrap_or_else(|_| "resnet18".into());
     let trials: usize =
         std::env::var("TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(192);
-    let net = zoo::by_name(&model, 8).unwrap_or_else(|| {
-        eprintln!("unknown model '{model}' (resnet50|resnet18|vgg16)");
+    let net = zoo::by_name(&model, 8).unwrap_or_else(|e| {
+        eprintln!("{e}");
         std::process::exit(1);
     });
 

@@ -15,7 +15,7 @@
 //!   stage data, proving the remap preserves semantics.
 
 use crate::layout::{Layout, TensorDims};
-use crate::quant::{pack_int4, Epilogue};
+use crate::quant::{pack_int4_padded_into, Epilogue};
 
 use super::im2col::{GemmCoord, SourceElem};
 use super::ConvWorkload;
@@ -26,7 +26,10 @@ pub struct ConvInstance {
     pub wl: ConvWorkload,
     /// NHWC feature map, values in [-8, 7].
     pub x: Vec<i8>,
-    /// HWIO weights, values in [-8, 7].
+    /// HWIO weights, values in [-8, 7]. For grouped convs the I axis holds
+    /// the *per-group* input channels (shape `KH x KW x I/G x O`, the
+    /// framework-standard grouped-weight layout); output channel `oc`
+    /// belongs to group `oc / (O/G)`.
     pub w: Vec<i8>,
     /// Per-output-channel bias.
     pub bias: Vec<i32>,
@@ -41,7 +44,7 @@ impl ConvInstance {
         let x = (0..wl.batch * wl.height * wl.width * wl.in_channels)
             .map(|_| rng.gen_range(16) as i8 - 8)
             .collect();
-        let w = (0..wl.kernel * wl.kernel * wl.in_channels * wl.out_channels)
+        let w = (0..wl.kernel * wl.kernel * wl.in_channels_per_group() * wl.out_channels)
             .map(|_| rng.gen_range(16) as i8 - 8)
             .collect();
         let bias = (0..wl.out_channels)
@@ -61,12 +64,14 @@ pub fn qconv2d(inst: &ConvInstance, epi: &Epilogue) -> Vec<i32> {
 /// Reusable execution buffers: the laid-out im2col operand, the i32
 /// accumulator, and the epilogue row buffer.
 ///
-/// One conv execution needs `m*k + m*n` words of staging; allocating them
-/// per request is pure overhead when a serving worker executes a batch of
-/// same-kind requests back to back (same dims → same buffer sizes, so the
-/// allocations are reused verbatim). Workers in [`crate::serve`] keep one
-/// scratch each and thread it through the batch via
-/// [`qconv2d_scheduled_with`].
+/// One conv execution needs `m*k_g` operand words (the per-group im2col
+/// tile — grouped convs cycle every group through the same buffer, since
+/// all groups share one shape) plus `m*out_channels` accumulator words;
+/// allocating them per request is pure overhead when a serving worker
+/// executes a batch of same-kind requests back to back (same dims → same
+/// buffer sizes, so the allocations are reused verbatim). Workers in
+/// [`crate::serve`] keep one scratch each and thread it through the batch
+/// via [`qconv2d_scheduled_with`].
 #[derive(Debug, Default)]
 pub struct ExecScratch {
     cols: Vec<i8>,
@@ -106,35 +111,52 @@ pub fn qconv2d_scheduled_with(
     scratch: &mut ExecScratch,
 ) -> Vec<i32> {
     let wl = &inst.wl;
-    let (m, n, k) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
-    im2col_into(inst, &mut scratch.cols);
-    debug_assert_eq!(scratch.cols.len(), m * k);
+    // per-group GEMM dims: a grouped conv runs `groups` independent
+    // (m x k_g) by (k_g x n_g) GEMMs into disjoint accumulator columns
+    let (m, n_g, k_g) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
+    let n = wl.out_channels;
 
     // blocked i32 GEMM; the tuned schedule picks the blocking
     let bm = cfg.block_m().clamp(8, 64);
     let bk = cfg.block_k().clamp(32, 128);
     scratch.acc.clear();
     scratch.acc.resize(m * n, 0);
-    gemm_i32_blocked_with(&scratch.cols, &inst.w, &mut scratch.acc, m, n, k, bm, bk);
+    for group in 0..wl.groups {
+        im2col_group_into(inst, group, &mut scratch.cols);
+        debug_assert_eq!(scratch.cols.len(), m * k_g);
+        gemm_i32_blocked_group(
+            &scratch.cols,
+            &inst.w,
+            &mut scratch.acc,
+            m,
+            k_g,
+            n_g,
+            n,
+            group * n_g,
+            bm,
+            bk,
+        );
+    }
 
-    // fused epilogue + packing, row-major
-    let mut out = Vec::with_capacity(m * n / 8);
+    // fused epilogue + packing, row-major (rows padded to the packing
+    // granule when out_channels is not a multiple of 8)
+    let mut out = Vec::with_capacity(m * n.div_ceil(8));
     scratch.rowbuf.clear();
     scratch.rowbuf.resize(n, 0);
     for row in 0..m {
         for c in 0..n {
             scratch.rowbuf[c] = epi.apply(scratch.acc[row * n + c], inst.bias[c]);
         }
-        out.extend_from_slice(&pack_int4(&scratch.rowbuf));
+        pack_int4_padded_into(&scratch.rowbuf, &mut out);
     }
     out
 }
 
-/// im2col lowering (kernel-position-major columns, NHWC source) — the
-/// naive expanded form.
+/// im2col lowering of group 0 (== the whole conv for dense workloads):
+/// kernel-position-major columns, NHWC source — the naive expanded form.
 pub fn im2col(inst: &ConvInstance) -> Vec<i8> {
     let mut cols = Vec::new();
-    im2col_into(inst, &mut cols);
+    im2col_group_into(inst, 0, &mut cols);
     cols
 }
 
@@ -142,8 +164,15 @@ pub fn im2col(inst: &ConvInstance) -> Vec<i8> {
 /// `m*k`); reusing the buffer across a same-shape batch skips the
 /// allocation without changing the result.
 pub fn im2col_into(inst: &ConvInstance, cols: &mut Vec<i8>) {
+    im2col_group_into(inst, 0, cols)
+}
+
+/// im2col lowering of one channel group into a caller-owned buffer — the
+/// executor's staging step; grouped convs call it once per group with the
+/// same (reused) buffer, since every group's operand has identical shape.
+pub fn im2col_group_into(inst: &ConvInstance, group: usize, cols: &mut Vec<i8>) {
     let wl = &inst.wl;
-    let ix = wl.im2col();
+    let ix = wl.im2col_group(group);
     let (m, k) = (wl.gemm_m(), wl.gemm_k());
     cols.clear();
     cols.resize(m * k, 0);
@@ -156,14 +185,15 @@ pub fn im2col_into(inst: &ConvInstance, cols: &mut Vec<i8>) {
     }
 }
 
-/// Duplicate-aware im2col: stage only genuine elements into a compact
-/// buffer, then materialize the expanded tile by reading *through the
-/// genuine-index map* (Algorithm 1's shared-memory discipline). The
-/// result must equal [`im2col`] exactly — that equality is the proof the
-/// static remap is sound.
-pub fn im2col_dup_aware(inst: &ConvInstance) -> Vec<i8> {
+/// Duplicate-aware im2col of one channel group: stage only genuine
+/// elements into a compact buffer, then materialize the expanded tile by
+/// reading *through the genuine-index map* (Algorithm 1's shared-memory
+/// discipline). The result must equal [`im2col_group_into`]'s exactly —
+/// that equality is the proof the static remap is sound (for dilated and
+/// grouped lowering included).
+pub fn im2col_dup_aware_group(inst: &ConvInstance, group: usize) -> Vec<i8> {
     let wl = &inst.wl;
-    let ix = wl.im2col();
+    let ix = wl.im2col_group(group);
     let (m, k) = (wl.gemm_m(), wl.gemm_k());
 
     // pass 1: load pass — only genuine coordinates touch the source
@@ -196,6 +226,12 @@ pub fn im2col_dup_aware(inst: &ConvInstance) -> Vec<i8> {
         }
     }
     cols
+}
+
+/// Duplicate-aware im2col of group 0 — kept as the historical dense-conv
+/// entry point; see [`im2col_dup_aware_group`].
+pub fn im2col_dup_aware(inst: &ConvInstance) -> Vec<i8> {
+    im2col_dup_aware_group(inst, 0)
 }
 
 /// Blocked i32 GEMM: (m x k) i8 by (k x n) i8 -> (m x n) i32, with the
@@ -241,6 +277,49 @@ pub fn gemm_i32_blocked_with(
     }
 }
 
+/// One group's blocked GEMM into a column slice of the full accumulator:
+/// `a` is the group's (m x k_g) im2col operand, `b` the whole
+/// `KH*KW*(I/G) x O` weight matrix of which this group owns columns
+/// `[col0, col0 + n_g)`, and `c` the full (m x n_total) accumulator the
+/// group writes its `n_g`-wide stripe of. With `groups == 1` (`col0 = 0`,
+/// `n_g == n_total`) this is exactly [`gemm_i32_blocked_with`].
+#[allow(clippy::too_many_arguments)]
+fn gemm_i32_blocked_group(
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    m: usize,
+    k_g: usize,
+    n_g: usize,
+    n_total: usize,
+    col0: usize,
+    bm: usize,
+    bk: usize,
+) {
+    let bm = bm.max(1);
+    let bk = bk.max(1);
+    for i0 in (0..m).step_by(bm) {
+        for k0 in (0..k_g).step_by(bk) {
+            let i1 = (i0 + bm).min(m);
+            let k1 = (k0 + bk).min(k_g);
+            for i in i0..i1 {
+                let arow = &a[i * k_g..(i + 1) * k_g];
+                let crow = &mut c[i * n_total + col0..i * n_total + col0 + n_g];
+                for kk in k0..k1 {
+                    let av = arow[kk] as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n_total + col0..kk * n_total + col0 + n_g];
+                    for j in 0..n_g {
+                        crow[j] += av * brow[j] as i32;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Re-layout an NHWC int8 map to NHWCnc (8x16 WMMA tiles contiguous),
 /// matching `model.nhwc_to_nhwcnc` on the python side. Used by the layout
 /// tests and the serving path's input preparation.
@@ -270,42 +349,50 @@ mod tests {
         ConvWorkload::new("tiny", 1, 6, 6, 8, 8)
     }
 
-    /// Scalar reference conv (quadruple loop) — a third, independent
-    /// implementation to triangulate against.
+    /// Scalar reference conv (direct sextuple loop, groups and dilation
+    /// included) — a third, independent implementation to triangulate
+    /// against.
     fn conv_scalar(inst: &ConvInstance, epi: &Epilogue) -> Vec<i32> {
         let wl = &inst.wl;
         let (oh, ow) = (wl.out_height(), wl.out_width());
-        let mut vals = Vec::new();
+        let (cpg, opg) = (wl.in_channels_per_group(), wl.out_channels_per_group());
+        let mut out = Vec::new();
+        let mut vals = vec![0i32; wl.out_channels];
         for nn in 0..wl.batch {
             for oy in 0..oh {
                 for ox in 0..ow {
                     for oc in 0..wl.out_channels {
+                        let group = oc / opg;
                         let mut acc = 0i32;
                         for ky in 0..wl.kernel {
                             for kx in 0..wl.kernel {
-                                let y = (oy * wl.stride + ky) as isize - wl.padding as isize;
-                                let x = (ox * wl.stride + kx) as isize - wl.padding as isize;
+                                let y = (oy * wl.stride + ky * wl.dilation) as isize
+                                    - wl.padding as isize;
+                                let x = (ox * wl.stride + kx * wl.dilation) as isize
+                                    - wl.padding as isize;
                                 if y < 0 || x < 0 || y >= wl.height as isize || x >= wl.width as isize {
                                     continue;
                                 }
-                                for ic in 0..wl.in_channels {
+                                for ic in 0..cpg {
                                     let xi = ((nn * wl.height + y as usize) * wl.width
                                         + x as usize)
                                         * wl.in_channels
+                                        + group * cpg
                                         + ic;
-                                    let wi = ((ky * wl.kernel + kx) * wl.in_channels + ic)
+                                    let wi = ((ky * wl.kernel + kx) * cpg + ic)
                                         * wl.out_channels
                                         + oc;
                                     acc += inst.x[xi] as i32 * inst.w[wi] as i32;
                                 }
                             }
                         }
-                        vals.push(epi.apply(acc, inst.bias[oc]));
+                        vals[oc] = epi.apply(acc, inst.bias[oc]);
                     }
+                    pack_int4_padded_into(&vals, &mut out);
                 }
             }
         }
-        pack_int4(&vals)
+        out
     }
 
     #[test]
@@ -365,12 +452,59 @@ mod tests {
         // through the genuine map reproduces the expanded im2col exactly
         let inst = ConvInstance::synthetic(&tiny(), 2);
         assert_eq!(im2col_dup_aware(&inst), im2col(&inst));
+        // ... and per group of a grouped, dilated conv
+        let wl = ConvWorkload::new("gd", 1, 7, 7, 8, 8).with_groups(4).with_dilation(2);
+        let inst = ConvInstance::synthetic(&wl, 5);
+        for g in 0..4 {
+            let mut naive = Vec::new();
+            im2col_group_into(&inst, g, &mut naive);
+            assert_eq!(im2col_dup_aware_group(&inst, g), naive, "group {g}");
+        }
+    }
+
+    #[test]
+    fn grouped_and_dilated_match_scalar_reference() {
+        let epi = Epilogue::default();
+        let cases = [
+            ConvWorkload::new("grp", 1, 8, 8, 16, 16).with_groups(4),
+            ConvWorkload::new("dw", 1, 8, 8, 16, 16).depthwise(),
+            ConvWorkload::new("dil", 1, 10, 10, 8, 8).with_dilation(2),
+            ConvWorkload::new("gd", 2, 9, 9, 8, 16).with_groups(2).with_dilation(3),
+            ConvWorkload::new("pw", 1, 6, 6, 16, 8).with_kernel(1, 0),
+            // out_channels not a multiple of 8: rows pack with a zero tail
+            ConvWorkload::new("odd", 1, 6, 6, 12, 12).with_groups(12),
+        ];
+        for (i, wl) in cases.iter().enumerate() {
+            let inst = ConvInstance::synthetic(wl, 60 + i as u64);
+            assert_eq!(qconv2d(&inst, &epi), conv_scalar(&inst, &epi), "{}", wl.name);
+        }
+    }
+
+    #[test]
+    fn grouped_output_independent_of_schedule_and_scratch_reuse() {
+        use crate::searchspace::ScheduleConfig;
+        let epi = Epilogue::default();
+        let wl = ConvWorkload::new("gsched", 1, 8, 8, 16, 16).with_groups(4).with_dilation(2);
+        let inst = ConvInstance::synthetic(&wl, 77);
+        let want = qconv2d(&inst, &epi);
+        let mut scratch = ExecScratch::new();
+        for cfg in [
+            ScheduleConfig::default(),
+            ScheduleConfig::tvm_baseline(),
+            ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, chunk: 1, ..Default::default() },
+        ] {
+            assert_eq!(
+                qconv2d_scheduled_with(&inst, &epi, &cfg, &mut scratch),
+                want,
+                "{cfg:?}"
+            );
+        }
     }
 
     #[test]
     fn prop_executor_matches_scalar_on_random_shapes() {
         check::forall(12, |rng| {
-            let wl = ConvWorkload::new(
+            let mut wl = ConvWorkload::new(
                 "p",
                 1 + rng.gen_range(2),
                 3 + rng.gen_range(5),
@@ -378,6 +512,9 @@ mod tests {
                 8 * (1 + rng.gen_range(2)),
                 8 * (1 + rng.gen_range(2)),
             );
+            wl = wl.with_groups([1, 2, 4, 8][rng.gen_range(4)]);
+            wl.dilation = 1 + rng.gen_range(2);
+            wl.padding = wl.effective_kernel() / 2; // keep the output non-empty
             let inst = ConvInstance::synthetic(&wl, rng.next_u64());
             let epi = Epilogue { relu: rng.gen_bool(0.5), requant_shift: rng.gen_range(8) as u32 };
             assert_eq!(qconv2d(&inst, &epi), conv_scalar(&inst, &epi), "{wl:?}");

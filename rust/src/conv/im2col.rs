@@ -70,31 +70,51 @@ impl DuplicatesInfo {
     }
 }
 
-/// The im2col index algebra for one conv configuration. All methods are
-/// O(1) index arithmetic — the "compiler's static awareness" of Fig. 4.
+/// The im2col index algebra for one conv configuration (one channel group
+/// of it — groups have identical spatial structure over disjoint channel
+/// ranges, so a grouped conv is `groups` copies of this algebra). All
+/// methods are cheap index arithmetic — the "compiler's static awareness"
+/// of Fig. 4.
 #[derive(Debug, Clone)]
 pub struct Im2colIndex {
     batch: usize,
     height: usize,
     width: usize,
-    in_channels: usize,
+    /// Channels this group's GEMM sees (`in_channels / groups`).
+    channels: usize,
+    /// Where this group's channel range starts in the full feature map.
+    channel_base: usize,
+    /// Channel stride of the NHWC feature map (all groups).
+    total_channels: usize,
     kernel: usize,
     stride: usize,
     padding: usize,
+    dilation: usize,
     out_h: usize,
     out_w: usize,
 }
 
 impl Im2colIndex {
+    /// The algebra for group 0 (== the whole conv when `groups == 1`).
     pub fn new(wl: &ConvWorkload) -> Self {
+        Self::for_group(wl, 0)
+    }
+
+    /// The algebra for one specific channel group.
+    pub fn for_group(wl: &ConvWorkload, group: usize) -> Self {
+        assert!(group < wl.groups, "group {group} of {}", wl.groups);
+        let channels = wl.in_channels_per_group();
         Self {
             batch: wl.batch,
             height: wl.height,
             width: wl.width,
-            in_channels: wl.in_channels,
+            channels,
+            channel_base: group * channels,
+            total_channels: wl.in_channels,
             kernel: wl.kernel,
             stride: wl.stride,
             padding: wl.padding,
+            dilation: wl.dilation,
             out_h: wl.out_height(),
             out_w: wl.out_width(),
         }
@@ -105,7 +125,7 @@ impl Im2colIndex {
     }
 
     pub fn cols(&self) -> usize {
-        self.kernel * self.kernel * self.in_channels
+        self.kernel * self.kernel * self.channels
     }
 
     /// Decompose a row index into (batch, out_y, out_x).
@@ -114,25 +134,56 @@ impl Im2colIndex {
         (row / per_img, (row % per_img) / self.out_w, row % self.out_w)
     }
 
-    /// Decompose a col index into (kernel_y, kernel_x, channel).
+    /// Decompose a col index into (kernel_y, kernel_x, group-local channel).
     fn col_slot(&self, col: usize) -> (usize, usize, usize) {
-        let c = col % self.in_channels;
-        let kpos = col / self.in_channels;
+        let c = col % self.channels;
+        let kpos = col / self.channels;
         (kpos / self.kernel, kpos % self.kernel, c)
+    }
+
+    /// Feature-map coordinate hit by output position `o` at kernel offset
+    /// `k`: `o*stride + k*dilation - padding` (may land in the halo).
+    fn tap(&self, o: usize, k: usize) -> isize {
+        (o * self.stride + k * self.dilation) as isize - self.padding as isize
     }
 
     /// Resolve an im2col cell to its source feature element (or padding).
     pub fn source(&self, at: GemmCoord) -> SourceElem {
         let (n, oy, ox) = self.row_pixel(at.row);
         let (ky, kx, c) = self.col_slot(at.col);
-        let y = (oy * self.stride + ky) as isize - self.padding as isize;
-        let x = (ox * self.stride + kx) as isize - self.padding as isize;
+        let y = self.tap(oy, ky);
+        let x = self.tap(ox, kx);
         if y < 0 || x < 0 || y >= self.height as isize || x >= self.width as isize {
             return SourceElem::Pad;
         }
         let (y, x) = (y as u64, x as u64);
-        let (h, w, ci) = (self.width as u64, self.in_channels as u64, c as u64);
-        SourceElem::Feat(((n as u64 * self.height as u64 + y) * h + x) * w + ci)
+        let w = self.width as u64;
+        let ci = (self.channel_base + c) as u64;
+        let tc = self.total_channels as u64;
+        SourceElem::Feat(((n as u64 * self.height as u64 + y) * w + x) * tc + ci)
+    }
+
+    /// Smallest output position (with its kernel offset) whose dilated
+    /// receptive field covers feature coordinate `v` along one axis.
+    /// With dilation, `v + padding - o*stride` must additionally be a
+    /// multiple of `dilation`, so the lower bound is scanned forward until
+    /// the divisibility holds (bounded by the kernel extent).
+    fn first_cover(&self, v: isize) -> (usize, usize) {
+        let vp = v + self.padding as isize; // = o*stride + k*dilation >= 0
+        let span = ((self.kernel - 1) * self.dilation) as isize;
+        let s = self.stride as isize;
+        let mut o = if vp <= span { 0 } else { ((vp - span) + s - 1) / s };
+        loop {
+            let r = vp - o * self.stride as isize;
+            debug_assert!(r >= 0, "over-scanned past the covering pixel");
+            if r % self.dilation as isize == 0 {
+                let k = (r / self.dilation as isize) as usize;
+                if k < self.kernel {
+                    return (o as usize, k);
+                }
+            }
+            o += 1;
+        }
     }
 
     /// The *genuine index* of a cell (§3.1.2): the lexicographically first
@@ -141,27 +192,20 @@ impl Im2colIndex {
     pub fn genuine(&self, at: GemmCoord) -> GemmCoord {
         let (n, oy, ox) = self.row_pixel(at.row);
         let (ky, kx, c) = self.col_slot(at.col);
-        let y = (oy * self.stride + ky) as isize - self.padding as isize;
-        let x = (ox * self.stride + kx) as isize - self.padding as isize;
+        let y = self.tap(oy, ky);
+        let x = self.tap(ox, kx);
         if y < 0 || x < 0 || y >= self.height as isize || x >= self.width as isize {
             return at; // padding: no genuine remap
         }
-        // Smallest output pixel (oy0, ox0) whose receptive field covers
-        // (y, x): maximize the kernel offset, i.e. minimize the pixel.
-        //   oy0 = max(0, ceil((y + p - (kh-1)) / s)), clamped to valid range
-        let min_pix = |v: isize| -> usize {
-            let lo = v + self.padding as isize - (self.kernel as isize - 1);
-            let lo = if lo <= 0 { 0 } else { (lo as usize + self.stride - 1) / self.stride };
-            lo
-        };
-        let oy0 = min_pix(y).min(self.out_h - 1);
-        let ox0 = min_pix(x).min(self.out_w - 1);
-        let ky0 = (y + self.padding as isize - (oy0 * self.stride) as isize) as usize;
-        let kx0 = (x + self.padding as isize - (ox0 * self.stride) as isize) as usize;
-        debug_assert!(ky0 < self.kernel && kx0 < self.kernel);
+        // minimize the row (oy first, then ox); for a fixed pixel the
+        // kernel offset reaching (y, x) is unique, so per-axis minima give
+        // the lexicographically first coordinate
+        let (oy0, ky0) = self.first_cover(y);
+        let (ox0, kx0) = self.first_cover(x);
+        debug_assert!(oy0 <= oy && ox0 < self.out_w);
         GemmCoord {
             row: (n * self.out_h + oy0) * self.out_w + ox0,
-            col: (ky0 * self.kernel + kx0) * self.in_channels + c,
+            col: (ky0 * self.kernel + kx0) * self.channels + c,
         }
     }
 
@@ -191,36 +235,38 @@ impl Im2colIndex {
         TileStats { total, padding, unique: keys.len() }
     }
 
-    /// Whole-matrix duplicates summary (paper Fig. 3: how much of the
-    /// lowered feature map is redundant).
+    /// Whole-matrix duplicates summary for *this group* (paper Fig. 3: how
+    /// much of the lowered feature map is redundant). Groups are
+    /// structurally identical, so whole-conv numbers for a grouped
+    /// [`ConvWorkload`] are these times `groups`.
     pub fn duplicates_info(&self) -> DuplicatesInfo {
         let gemm_cells = self.rows() * self.cols();
-        // unique = all feature elements (every input element is used by at
-        // least one output pixel for same-padding convs); padding counted
-        // analytically per kernel offset.
+        // unique = all of this group's feature elements (every input
+        // element is used by at least one output pixel for same-padding
+        // convs); padding counted analytically per kernel offset.
         let mut padding_cells = 0usize;
         for ky in 0..self.kernel {
             for kx in 0..self.kernel {
                 let valid_y = self.valid_out_positions(ky, self.height, self.out_h);
                 let valid_x = self.valid_out_positions(kx, self.width, self.out_w);
                 padding_cells += (self.out_h * self.out_w - valid_y * valid_x)
-                    * self.in_channels
+                    * self.channels
                     * self.batch;
             }
         }
         DuplicatesInfo {
             gemm_cells,
             padding_cells,
-            unique_elements: self.batch * self.height * self.width * self.in_channels,
+            unique_elements: self.batch * self.height * self.width * self.channels,
         }
     }
 
     /// Number of output positions along one axis for which kernel offset
-    /// `k` hits inside the (unpadded) feature map.
+    /// `k` (dilated) hits inside the (unpadded) feature map.
     fn valid_out_positions(&self, k: usize, extent: usize, out: usize) -> usize {
         (0..out)
             .filter(|&o| {
-                let v = (o * self.stride + k) as isize - self.padding as isize;
+                let v = self.tap(o, k);
                 v >= 0 && (v as usize) < extent
             })
             .count()
@@ -298,6 +344,68 @@ mod tests {
         let ix = tiny();
         let s = ix.tile_stats(0, 6, 0, ix.cols());
         assert!(s.duplicate_factor() > 1.5, "{:?}", s);
+    }
+
+    #[test]
+    fn dilated_genuine_agrees_with_brute_force() {
+        // lexicographic-first scan over the whole matrix is the spec;
+        // genuine() must reproduce it under dilation, where the covering
+        // pixel additionally needs (v + p - o*s) % d == 0
+        for dilation in 1..=3usize {
+            let mut wl = ConvWorkload::new("dil", 1, 9, 9, 2, 4);
+            wl.dilation = dilation;
+            wl.padding = dilation; // same-ish padding
+            let ix = wl.im2col();
+            let mut first: std::collections::HashMap<u64, GemmCoord> =
+                std::collections::HashMap::new();
+            for row in 0..ix.rows() {
+                for col in 0..ix.cols() {
+                    let at = GemmCoord { row, col };
+                    match ix.source(at) {
+                        SourceElem::Pad => assert_eq!(ix.genuine(at), at),
+                        SourceElem::Feat(lin) => {
+                            let want = *first.entry(lin).or_insert(at);
+                            assert_eq!(ix.genuine(at), want, "d={dilation} at {at:?}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_index_offsets_channels() {
+        let wl = ConvWorkload::new("grp", 1, 6, 6, 8, 8).with_groups(4);
+        let g0 = wl.im2col_group(0);
+        let g3 = wl.im2col_group(3);
+        assert_eq!(g0.cols(), 9 * 2);
+        // same cell in different groups reads different channels of the
+        // same pixel: linear indices differ by the channel-base offset
+        let at = GemmCoord { row: 10, col: 5 };
+        match (g0.source(at), g3.source(at)) {
+            (SourceElem::Feat(a), SourceElem::Feat(b)) => assert_eq!(b - a, 3 * 2),
+            (a, b) => assert_eq!(a, b), // both padding at the same slot
+        }
+        // per-group duplicates info scales to the whole conv by x groups
+        let info = g0.duplicates_info();
+        assert_eq!(info.unique_elements * 4, 1 * 6 * 6 * 8);
+    }
+
+    #[test]
+    fn dilation_preserves_gemm_shape_but_spreads_taps() {
+        // a dilated kernel samples every d-th element; the whole-matrix
+        // duplicate factor stays near kernel area for same-padded
+        // stride-1 convs (every tap is still reused k^2-ish times at
+        // shifted positions), and the GEMM dims never change
+        let plain = ConvWorkload::new("p", 1, 16, 16, 4, 4);
+        let dil = plain.clone().with_dilation(2);
+        let fp = plain.im2col().duplicates_info().duplicate_factor();
+        let fd = dil.im2col().duplicates_info().duplicate_factor();
+        assert!(fd > 1.0 && fp > 1.0);
+        // identical matrix shape: dilation never changes the GEMM dims,
+        // only which elements the cells reference
+        assert_eq!(plain.im2col().cols(), dil.im2col().cols());
+        assert_eq!(plain.gemm_m(), dil.gemm_m());
     }
 
     #[test]

@@ -4,6 +4,10 @@
 //! on Tensor Cores (§2.1): a conv with batch `N`, feature map `H x W`,
 //! input channels `I`, output channels `O` and kernel `KH x KW` becomes
 //! a `(N*OH*OW) x (KH*KW*I)` by `(KH*KW*I) x O` matrix multiplication.
+//! With `G` channel groups it becomes `G` independent per-group GEMMs of
+//! `(N*OH*OW) x (KH*KW*I/G)` by `(KH*KW*I/G) x (O/G)`, and dilation `D`
+//! stretches every kernel tap to stride `D` over the feature map
+//! (effective kernel `(K-1)*D + 1`) without changing the GEMM shape.
 //!
 //! [`Im2colIndex`] implements the *static duplicates analysis* of §3.1:
 //! given only the conv configuration, it computes the duplicate-index →
@@ -53,6 +57,14 @@ impl Precision {
 
 /// High-level convolution definition (paper §2.2: the "algorithm-level
 /// convolution configuration" the compiler statically knows).
+///
+/// Beyond the paper's dense 3x3/1x1 workloads this carries `groups` and
+/// `dilation`, covering the grouped (ResNeXt), depthwise (MobileNet,
+/// `groups == in_channels`) and dilated (DeepLab) convolution families.
+/// A grouped conv lowers to `groups` independent per-group GEMMs of
+/// `(N*OH*OW) x (KH*KW*I/G)` by `(KH*KW*I/G) x (O/G)`; dilation only
+/// changes which feature elements the receptive field samples, so the
+/// whole im2col duplicates analysis applies unchanged.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ConvWorkload {
     pub name: String,
@@ -64,6 +76,11 @@ pub struct ConvWorkload {
     pub kernel: usize,
     pub stride: usize,
     pub padding: usize,
+    /// Channel groups; both channel counts must divide by it. `1` = dense,
+    /// `in_channels` = depthwise.
+    pub groups: usize,
+    /// Kernel-tap spacing; `1` = ordinary convolution.
+    pub dilation: usize,
     pub precision: Precision,
 }
 
@@ -86,6 +103,8 @@ impl ConvWorkload {
             kernel: 3,
             stride: 1,
             padding: 1,
+            groups: 1,
+            dilation: 1,
             precision: Precision::Int4,
         }
     }
@@ -101,6 +120,60 @@ impl ConvWorkload {
     pub fn with_stride(mut self, stride: usize) -> Self {
         self.stride = stride;
         self
+    }
+
+    /// Same conv with a different kernel extent and padding (e.g. the 1x1
+    /// pad-0 pointwise convs of MobileNetV2).
+    pub fn with_kernel(mut self, kernel: usize, padding: usize) -> Self {
+        self.kernel = kernel;
+        self.padding = padding;
+        self
+    }
+
+    /// Same conv split into `groups` channel groups (ResNeXt cardinality;
+    /// `groups == in_channels` is depthwise). Both channel counts must be
+    /// divisible by `groups`.
+    pub fn with_groups(mut self, groups: usize) -> Self {
+        assert!(groups >= 1, "groups must be >= 1");
+        assert_eq!(self.in_channels % groups, 0, "in_channels % groups != 0");
+        assert_eq!(self.out_channels % groups, 0, "out_channels % groups != 0");
+        self.groups = groups;
+        self
+    }
+
+    /// Same conv with dilated kernel taps *and* the padding adjusted to
+    /// `dilation` (the DeepLab "same" convention for 3x3: effective kernel
+    /// `2*dilation + 1` with padding `dilation` preserves spatial extent).
+    pub fn with_dilation(mut self, dilation: usize) -> Self {
+        assert!(dilation >= 1, "dilation must be >= 1");
+        self.dilation = dilation;
+        self.padding = (self.kernel - 1) / 2 * dilation;
+        self
+    }
+
+    /// Depthwise variant: one group per channel.
+    pub fn depthwise(self) -> Self {
+        let g = self.in_channels;
+        self.with_groups(g)
+    }
+
+    /// Kernel extent actually spanned on the feature map:
+    /// `(kernel - 1) * dilation + 1` (the dilated-conv identity — for
+    /// `dilation == 1` this is just `kernel`).
+    pub fn effective_kernel(&self) -> usize {
+        (self.kernel - 1) * self.dilation + 1
+    }
+
+    /// Input channels seen by one group's GEMM.
+    pub fn in_channels_per_group(&self) -> usize {
+        debug_assert_eq!(self.in_channels % self.groups, 0);
+        self.in_channels / self.groups
+    }
+
+    /// Output channels produced by one group's GEMM.
+    pub fn out_channels_per_group(&self) -> usize {
+        debug_assert_eq!(self.out_channels % self.groups, 0);
+        self.out_channels / self.groups
     }
 
     /// The four 3x3 convolutions of Table 1: one per ResNet50 residual
@@ -125,31 +198,51 @@ impl ConvWorkload {
     }
 
     pub fn out_height(&self) -> usize {
-        (self.height + 2 * self.padding - self.kernel) / self.stride + 1
+        (self.height + 2 * self.padding - self.effective_kernel()) / self.stride + 1
     }
 
     pub fn out_width(&self) -> usize {
-        (self.width + 2 * self.padding - self.kernel) / self.stride + 1
+        (self.width + 2 * self.padding - self.effective_kernel()) / self.stride + 1
     }
 
-    /// im2col GEMM rows: one per output pixel.
+    /// im2col GEMM rows: one per output pixel (shared by every group).
     pub fn gemm_m(&self) -> usize {
         self.batch * self.out_height() * self.out_width()
     }
 
-    /// im2col GEMM columns: one per output channel.
+    /// im2col GEMM columns *per group*: one per group-local output channel
+    /// (= `out_channels` for dense convs).
     pub fn gemm_n(&self) -> usize {
-        self.out_channels
+        self.out_channels_per_group()
     }
 
-    /// im2col GEMM accumulation depth.
+    /// im2col GEMM accumulation depth *per group*.
     pub fn gemm_k(&self) -> usize {
-        self.kernel * self.kernel * self.in_channels
+        self.kernel * self.kernel * self.in_channels_per_group()
     }
 
-    /// Multiply-accumulate operation count (2 ops/MAC) — Table 1's OPs row.
+    /// Per-group GEMM N padded up to the 8-column WMMA atom — what tile
+    /// legality and the simulator work with. A depthwise conv's raw
+    /// per-group N of 1 pads to one 8-wide atom.
+    pub fn gemm_n_padded(&self) -> usize {
+        self.gemm_n().div_ceil(crate::searchspace::MMA_N) * crate::searchspace::MMA_N
+    }
+
+    /// Per-group GEMM K padded up to this precision's MMA K-group (the
+    /// "K-group alignment per group" rule: a depthwise 3x3's raw K of 9
+    /// pads to one 32-deep INT4 K-group).
+    pub fn gemm_k_padded(&self) -> usize {
+        let kg = self.precision.mma_k();
+        self.gemm_k().div_ceil(kg) * kg
+    }
+
+    /// Multiply-accumulate operation count (2 ops/MAC) — Table 1's OPs
+    /// row. Grouped convs do `groups` independent per-group GEMMs.
     pub fn ops(&self) -> u64 {
-        2 * self.gemm_m() as u64 * self.gemm_n() as u64 * self.gemm_k() as u64
+        2 * self.groups as u64
+            * self.gemm_m() as u64
+            * self.gemm_n() as u64
+            * self.gemm_k() as u64
     }
 
     /// Bytes of the (unpadded) input feature map at this precision.
@@ -167,9 +260,16 @@ impl ConvWorkload {
         self.height * self.width >= self.in_channels
     }
 
-    /// The im2col index algebra for this conv.
+    /// The im2col index algebra for this conv (group 0; all groups share
+    /// the same spatial structure, so group 0 stands in for any of them in
+    /// the duplicates analysis).
     pub fn im2col(&self) -> Im2colIndex {
         Im2colIndex::new(self)
+    }
+
+    /// The im2col index algebra for one specific channel group.
+    pub fn im2col_group(&self, group: usize) -> Im2colIndex {
+        Im2colIndex::for_group(self, group)
     }
 }
 
@@ -212,5 +312,50 @@ mod tests {
     #[should_panic]
     fn stage_out_of_range_panics() {
         ConvWorkload::resnet50_stage(6, 8);
+    }
+
+    #[test]
+    fn dilation_shrinks_output_via_effective_kernel() {
+        // (k-1)*d + 1 identity: a dilated 3x3 with padding d preserves
+        // the spatial extent, exactly like a plain 3x3 with padding 1
+        let plain = ConvWorkload::new("p", 1, 28, 28, 16, 16);
+        assert_eq!(plain.effective_kernel(), 3);
+        let d4 = plain.clone().with_dilation(4);
+        assert_eq!(d4.effective_kernel(), 9);
+        assert_eq!(d4.padding, 4);
+        assert_eq!(d4.out_height(), 28);
+        assert_eq!(d4.out_width(), 28);
+        // without the padding adjustment the map shrinks by (eff_k - 1)
+        let mut crop = plain.clone();
+        crop.dilation = 4;
+        assert_eq!(crop.out_height(), 28 + 2 - 9 + 1);
+    }
+
+    #[test]
+    fn grouped_gemm_is_per_group() {
+        let g = ConvWorkload::new("g", 8, 56, 56, 128, 128).with_groups(32);
+        assert_eq!(g.gemm_n(), 4);
+        assert_eq!(g.gemm_k(), 9 * 4);
+        assert_eq!(g.gemm_n_padded(), 8);
+        assert_eq!(g.gemm_k_padded(), 64); // 36 -> one-and-a-bit INT4 K-groups
+        // ops: groups * per-group GEMM macs, x2
+        let dense = ConvWorkload::new("d", 8, 56, 56, 128, 128);
+        assert_eq!(g.ops() * 32, dense.ops());
+    }
+
+    #[test]
+    fn depthwise_pads_to_one_atom() {
+        let dw = ConvWorkload::new("dw", 1, 8, 8, 64, 64).depthwise();
+        assert_eq!(dw.groups, 64);
+        assert_eq!((dw.gemm_n(), dw.gemm_k()), (1, 9));
+        assert_eq!((dw.gemm_n_padded(), dw.gemm_k_padded()), (8, 32));
+        let dw8 = dw.with_precision(Precision::Int8);
+        assert_eq!(dw8.gemm_k_padded(), 16); // INT8 K-group is 16
+    }
+
+    #[test]
+    #[should_panic]
+    fn groups_must_divide_channels() {
+        ConvWorkload::new("bad", 1, 8, 8, 12, 12).with_groups(8);
     }
 }

@@ -9,7 +9,7 @@ use crate::conv::ConvWorkload;
 use crate::searchspace::ScheduleConfig;
 
 /// Number of features [`featurize`] emits.
-pub const FEATURE_DIM: usize = 24;
+pub const FEATURE_DIM: usize = 26;
 
 fn lg(x: usize) -> f64 {
     (x.max(1) as f64).log2()
@@ -17,7 +17,9 @@ fn lg(x: usize) -> f64 {
 
 /// Feature vector for one (workload, schedule) pair.
 pub fn featurize(wl: &ConvWorkload, cfg: &ScheduleConfig) -> Vec<f64> {
-    let (m, n, k) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
+    // the tile grid the schedule actually covers: the per-group GEMM,
+    // N/K padded to the MMA atom (same view the legality rule takes)
+    let (m, n, k) = (wl.gemm_m(), wl.gemm_n_padded(), wl.gemm_k_padded());
     let (bm, bn, bk) = (cfg.block_m(), cfg.block_n(), cfg.block_k());
     let m_pad = cfg.padded_m(m);
     let nm = m_pad / bm;
@@ -62,9 +64,12 @@ pub fn featurize(wl: &ConvWorkload, cfg: &ScheduleConfig) -> Vec<f64> {
         out_tile_packed / 1024.0,
         out_tile_unpacked / 1024.0,
         macs_per_block / staged.max(1.0) / 1024.0,
-        // workload context (lets one model generalize across stages)
+        // workload context (lets one model generalize across stages and
+        // across the grouped/dilated workload families)
         lg(wl.height * wl.width),
         lg(wl.in_channels),
+        lg(wl.groups),
+        lg(wl.dilation),
     ];
     debug_assert_eq!(v.len(), FEATURE_DIM);
     v
@@ -99,6 +104,22 @@ mod tests {
             for f in featurize(&wl, &ScheduleConfig::default()) {
                 assert!(f.is_finite());
             }
+        }
+    }
+
+    #[test]
+    fn grouped_and_dilated_context_features_distinguish() {
+        let dense = ConvWorkload::new("d", 8, 28, 28, 128, 128);
+        let grouped = dense.clone().with_groups(32);
+        let dilated = dense.clone().with_dilation(2);
+        let cfg = ScheduleConfig { blk_col_warps: 1, warp_col_tiles: 1, chunk: 1, ..Default::default() };
+        let fd = featurize(&dense, &cfg);
+        let fg = featurize(&grouped, &cfg);
+        let fl = featurize(&dilated, &cfg);
+        assert_ne!(fd, fg);
+        assert_ne!(fd, fl);
+        for f in fd.iter().chain(&fg).chain(&fl) {
+            assert!(f.is_finite());
         }
     }
 

@@ -80,10 +80,13 @@ COMMANDS
             [--seed N] [--jobs 1] [--out schedule.json]
             --jobs N measures each candidate batch on N worker threads
             (bit-identical results, shorter wall-clock)
-  tune-net  [--model resnet50|resnet18|vgg16|all] [--trials 240] [--batch 8]
-            [--explorer diversity] [--seed N] [--jobs 1] [--out schedules.json]
-            tunes every distinct conv of the model zoo, chaining
-            transfer learning across stages, and writes one registry file
+  tune-net  [--net resnet50|resnet18|vgg16|mobilenet_v2|resnext50|deeplab_head|all]
+            [--trials 240] [--batch 8] [--explorer diversity] [--seed N]
+            [--jobs 1] [--out schedules.json]   (--model is a synonym of --net)
+            tunes every distinct conv of the model zoo — dense 3x3s plus
+            the grouped (resnext50), depthwise+pointwise (mobilenet_v2)
+            and dilated (deeplab_head) families — chaining transfer
+            learning across stages, and writes one registry file
   serve     [--registry schedules.json] [--workers 4] [--requests 16]
             loads the registry and routes synthetic requests through the
             worker pool using the tuned schedule per kind; reports per-kind
@@ -167,7 +170,12 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let model = flags.get("model").cloned().unwrap_or_else(|| "all".into());
+    // `--net` and `--model` are synonyms (serving docs say --net)
+    let model = flags
+        .get("net")
+        .or_else(|| flags.get("model"))
+        .cloned()
+        .unwrap_or_else(|| "all".into());
     let trials = flag_usize(flags, "trials", 240);
     let batch = flag_usize(flags, "batch", 8);
     let seed = flag_u64(flags, "seed", 0);
@@ -178,9 +186,8 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let nets = if model == "all" {
         zoo::all_networks(batch)
     } else {
-        vec![zoo::by_name(&model, batch).ok_or_else(|| {
-            anyhow::anyhow!("unknown model '{model}' (resnet50|resnet18|vgg16|all)")
-        })?]
+        // unknown names error here, listing every valid network
+        vec![zoo::by_name(&model, batch)?]
     };
 
     let mut registry = ScheduleRegistry::new();
@@ -194,7 +201,7 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         explorer.name()
     );
     for net in &nets {
-        println!("\n{} ({} distinct 3x3 convs):", net.name, net.layers.len());
+        println!("\n{} ({} distinct convs):", net.name, net.layers.len());
         // cross-stage transfer: each layer's session warm-starts from the
         // previous layer's measurements (shared tile structure transfers
         // through the workload-context features)

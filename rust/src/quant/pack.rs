@@ -51,6 +51,29 @@ pub fn pack_int4_into(values: &[i32], out: &mut Vec<i32>) {
     }
 }
 
+/// [`pack_int4_into`] tolerating lengths that are not a multiple of the
+/// pack factor: the final partial group is zero-padded to a full word
+/// (two's-complement nibble 0). This is how grouped convolutions with a
+/// per-group channel count below the packing granule store their output
+/// rows — e.g. a depthwise conv's `O/G == 1` — without changing the word
+/// layout for exact multiples.
+pub fn pack_int4_padded_into(values: &[i32], out: &mut Vec<i32>) {
+    for group in values.chunks(PACK_FACTOR) {
+        let mut word: u32 = 0;
+        for (j, &v) in group.iter().enumerate() {
+            word |= ((v as u32) & 0xF) << (4 * j);
+        }
+        out.push(word as i32);
+    }
+}
+
+/// Allocating form of [`pack_int4_padded_into`].
+pub fn pack_int4_padded(values: &[i32]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(values.len().div_ceil(PACK_FACTOR));
+    pack_int4_padded_into(values, &mut out);
+    out
+}
+
 /// Unpack int32 words back to int4-domain values (sign-extended).
 pub fn unpack_int4(words: &[i32]) -> Vec<i32> {
     let mut out = Vec::with_capacity(words.len() * PACK_FACTOR);
@@ -155,6 +178,33 @@ mod tests {
         let bias = vec![1i32; 8];
         let packed = e.apply_tile_packed(&acc, &bias, 8);
         assert_eq!(packed.len(), 4);
+    }
+
+    #[test]
+    fn padded_pack_agrees_with_exact_pack_on_multiples() {
+        let vals: Vec<i32> = (0..24).map(|i| (i % 16) - 8).collect();
+        assert_eq!(pack_int4_padded(&vals), pack_int4(&vals));
+    }
+
+    #[test]
+    fn padded_pack_zero_fills_the_tail() {
+        // 3 values pack into one word with five zero nibbles on top
+        let w = pack_int4_padded(&[-1, 2, -3]);
+        assert_eq!(w.len(), 1);
+        let got = unpack_int4(&w);
+        assert_eq!(&got[..3], &[-1, 2, -3]);
+        assert!(got[3..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn prop_padded_pack_prefix_roundtrip() {
+        check::forall(100, |rng| {
+            let n = 1 + rng.gen_range(40);
+            let vals: Vec<i32> = (0..n).map(|_| rng.gen_range(16) as i32 - 8).collect();
+            let words = pack_int4_padded(&vals);
+            assert_eq!(words.len(), n.div_ceil(PACK_FACTOR));
+            assert_eq!(&unpack_int4(&words)[..n], &vals[..]);
+        });
     }
 
     #[test]

@@ -72,7 +72,15 @@ impl SearchSpace {
             knobs.push(Knob { name: "reg_packing", values: vec![0, 1] });
             knobs.push(Knob { name: "nhwcnc_layout", values: vec![0, 1] });
         }
-        Self { knobs, opts, gemm: (wl.gemm_m(), wl.gemm_n(), wl.gemm_k()), wl: wl.clone() }
+        // legality is judged on the *per-group* GEMM with N and K padded
+        // to the MMA atom (K-group alignment per group): a depthwise conv
+        // tiles its one padded 8x32 atom, not the raw (1, 9) GEMM
+        Self {
+            knobs,
+            opts,
+            gemm: (wl.gemm_m(), wl.gemm_n_padded(), wl.gemm_k_padded()),
+            wl: wl.clone(),
+        }
     }
 
     pub fn knobs(&self) -> &[Knob] {
@@ -262,6 +270,35 @@ mod tests {
         );
         let c = s.decode(&s.from_index(0));
         assert!(!c.dup_aware && !c.reg_packing && !c.nhwcnc_layout);
+    }
+
+    #[test]
+    fn grouped_and_depthwise_spaces_are_nonempty_and_atom_aligned() {
+        // resnext-style: per-group (4, 36) pads to (8, 64); depthwise
+        // (1, 9) pads to one (8, 32) atom, admitting exactly the
+        // narrowest column/chunk tilings
+        let gx = SearchSpace::for_workload(
+            &ConvWorkload::new("gx", 8, 56, 56, 128, 128).with_groups(32),
+            SpaceOptions::default(),
+        );
+        let legal = gx.enumerate_legal();
+        assert!(!legal.is_empty());
+        for g in &legal {
+            let c = gx.decode(g);
+            assert!(c.block_n() <= 8);
+            assert!(c.block_k() <= 64);
+        }
+        let dw = SearchSpace::for_workload(
+            &ConvWorkload::new("dw", 1, 8, 8, 64, 64).depthwise(),
+            SpaceOptions::default(),
+        );
+        let legal = dw.enumerate_legal();
+        assert!(!legal.is_empty());
+        for g in &legal {
+            let c = dw.decode(g);
+            assert_eq!(c.block_n(), 8, "depthwise pads N to one atom");
+            assert_eq!(c.block_k(), 32, "depthwise pads K to one K-group");
+        }
     }
 
     #[test]

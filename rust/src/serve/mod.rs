@@ -449,6 +449,50 @@ mod tests {
     }
 
     #[test]
+    fn grouped_depthwise_and_dilated_requests_serve_correctly() {
+        // the new workload families as live request kinds: a depthwise
+        // batch and a dilated batch through one worker pool, each routed
+        // to a family-legal tuned schedule, with reference numerics
+        let dw = ConvWorkload::new("srv_dw", 1, 8, 8, 16, 16).depthwise();
+        let dil = ConvWorkload::new("srv_dil", 1, 9, 9, 8, 8).with_dilation(2);
+        let narrow = ScheduleConfig {
+            blk_col_warps: 1,
+            warp_col_tiles: 1,
+            chunk: 1,
+            blk_row_warps: 1,
+            warp_row_tiles: 1,
+            ..Default::default()
+        };
+        let mut reg = ScheduleRegistry::new();
+        for kind in ["srv_dw", "srv_dil"] {
+            reg.insert(
+                kind,
+                TunedEntry {
+                    config: narrow,
+                    runtime_us: 1.0,
+                    trials: 1,
+                    explorer: "test".into(),
+                },
+            );
+        }
+        let server = Server::from_registry(ServerConfig { workers: 2, ..Default::default() }, reg);
+        let epi = Epilogue::default();
+        let mut pending = Vec::new();
+        for s in 0..8u64 {
+            let wl = if s % 2 == 0 { &dw } else { &dil };
+            let inst = ConvInstance::synthetic(wl, s);
+            let want = qconv2d(&inst, &epi);
+            pending.push((want, server.submit(&wl.name, inst, epi).unwrap()));
+        }
+        for (want, rx) in pending {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.schedule, narrow);
+            assert_eq!(resp.packed_output, want);
+        }
+        server.shutdown();
+    }
+
+    #[test]
     fn multi_worker_mixed_burst_routes_and_loses_nothing() {
         // the concurrency satellite: a mixed-kind burst across 4 workers
         // must complete every request, route each kind to *its* tuned

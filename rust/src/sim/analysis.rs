@@ -122,18 +122,22 @@ pub fn analyze(
     cfg: &ScheduleConfig,
     cache: &mut ProfileCache,
 ) -> TrafficAnalysis {
-    let (m, n, k) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
+    // per-group GEMM, N/K padded to the MMA atom; a grouped conv launches
+    // `groups` structurally identical grids over disjoint channel ranges,
+    // so per-group counts scale by `groups`
+    let (m, n, k) = (wl.gemm_m(), wl.gemm_n_padded(), wl.gemm_k_padded());
+    let groups = wl.groups;
     let (bm, bn, bk) = (cfg.block_m(), cfg.block_n(), cfg.block_k());
     debug_assert!(cfg.is_legal_for(m, n, k));
     let m_pad = cfg.padded_m(m); // ragged M-tiles padded like TVM
     let nm = m_pad / bm;
     let nn = n / bn;
-    let n_blocks = nm * nn;
+    let n_blocks = nm * nn * groups;
     let k_steps = k / bk;
 
     let eb = wl.precision.element_bytes();
-    let ix = wl.im2col();
-    let prof = cache.profile(&ix, bm, wl.in_channels);
+    let ix = wl.im2col(); // group 0 stands in for every group
+    let prof = cache.profile(&ix, bm, wl.in_channels_per_group());
 
     // --- coalescing: derived from WMMA-tile byte addresses (layout mod) --
     let dims = TensorDims {
@@ -158,20 +162,23 @@ pub fn analyze(
     };
     // DRAM sees each M-row-block's distinct elements once (first N-block
     // cold-misses); the other nn-1 N-blocks are L2 hits. Without duplicate
-    // awareness the *L2* absorbs the intra-block repeats too.
-    let dram_feature = nm as f64 * prof.unique_per_row_block * eb;
-    let l2_feature = (nn as f64 * feat_loads_per_block * nm as f64) * eb - dram_feature;
+    // awareness the *L2* absorbs the intra-block repeats too. Groups read
+    // disjoint channel ranges, so both sides scale by `groups`.
+    let dram_feature = (nm * groups) as f64 * prof.unique_per_row_block * eb;
+    let l2_feature =
+        (nn as f64 * feat_loads_per_block * (nm * groups) as f64) * eb - dram_feature;
 
     // --- weight traffic ---------------------------------------------------
-    let w_total = (k * n) as f64 * eb; // whole filter, cold
+    let w_total = (k * n * groups) as f64 * eb; // whole filter, cold
     let w_per_block = (k * bn) as f64 * eb;
     let dram_weight = w_total;
     let l2_weight = (n_blocks as f64 * w_per_block) - dram_weight;
 
     // --- output traffic ---------------------------------------------------
     // final global store is packed INT4 either way (§3.2.2); the unpacked
-    // path additionally roundtrips int32 through shared memory.
-    let out_store = (m_pad * n) as f64 * eb;
+    // path additionally roundtrips int32 through shared memory. Stores are
+    // of *real* output channels (padded N lanes are masked, not written).
+    let out_store = (m_pad * wl.gemm_n() * groups) as f64 * eb;
 
     // --- shared-memory traffic & footprint --------------------------------
     // staging buffer per K step: duplicate-aware keeps the raw
@@ -183,7 +190,7 @@ pub fn analyze(
     // naive: the expanded im2col tile is re-staged per step (double
     // buffered to overlap the next load).
     let smem_feat_per_block = if cfg.dup_aware {
-        prof.unique_pixels * bk.min(wl.in_channels) as f64 * eb
+        prof.unique_pixels * bk.min(wl.in_channels_per_group()) as f64 * eb
     } else {
         (bm * bk) as f64 * eb * 2.0
     };
@@ -213,7 +220,7 @@ pub fn analyze(
     let regs_per_thread = 32 + acc_regs + frag_regs;
 
     // --- shuffles -----------------------------------------------------------
-    let outputs = (m * n) as f64;
+    let outputs = (m * wl.gemm_n() * groups) as f64; // real outputs, all groups
     let shuffle_instructions = if cfg.reg_packing {
         // Fig. 9 tree: 3 shuffles per 32 lanes + Fig. 10 gather (1 per
         // packed word group) + §3.3.2 layout maintenance when NHWCnc.
@@ -345,6 +352,41 @@ mod tests {
             big.smem_traffic_bytes,
             small.smem_traffic_bytes
         );
+    }
+
+    #[test]
+    fn grouped_traffic_scales_with_groups() {
+        // same total channels split into 32 groups: the block grid
+        // multiplies by groups while each block shrinks to the per-group
+        // GEMM; dense and grouped cold weight traffic differ by exactly
+        // the padded-K/N inflation
+        let dense = ConvWorkload::new("d", 8, 56, 56, 128, 128);
+        let grouped = dense.clone().with_groups(32);
+        let cfg_g = ScheduleConfig {
+            blk_col_warps: 1,
+            warp_col_tiles: 1,
+            chunk: 1,
+            ..ScheduleConfig::default()
+        };
+        let a = analyze(&grouped, &cfg_g, &mut ProfileCache::default());
+        let base = analyze(&dense, &cfg_g, &mut ProfileCache::default());
+        assert_eq!(a.n_blocks % 32, 0, "one grid per group");
+        assert!(a.n_blocks > base.n_blocks);
+        // grouped conv does 1/32 the MACs but pads (4, 36) -> (8, 64), so
+        // traffic lands well below dense yet above the raw 1/32 floor
+        assert!(a.dram_bytes < base.dram_bytes);
+        assert!(a.smem_traffic_bytes < base.smem_traffic_bytes);
+    }
+
+    #[test]
+    fn dilation_preserves_gemm_but_changes_duplicates() {
+        let plain = ConvWorkload::new("p", 8, 28, 28, 64, 64);
+        let dil = plain.clone().with_dilation(2);
+        let cfg = ScheduleConfig::default();
+        let a = analyze(&plain, &cfg, &mut ProfileCache::default());
+        let b = analyze(&dil, &cfg, &mut ProfileCache::default());
+        assert_eq!(a.n_blocks, b.n_blocks, "same GEMM, same grid");
+        assert!(b.dup_factor > 1.0, "dilated taps still overlap across pixels");
     }
 
     #[test]

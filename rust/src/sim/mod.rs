@@ -89,7 +89,9 @@ impl Simulator {
         cfg: &ScheduleConfig,
         cache: &mut ProfileCache,
     ) -> Measurement {
-        let (m, n, k) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
+        // legality on the per-group GEMM with N/K padded to the MMA atom
+        // (matches SearchSpace; grouped/depthwise convs tile padded atoms)
+        let (m, n, k) = (wl.gemm_m(), wl.gemm_n_padded(), wl.gemm_k_padded());
         if !cfg.is_legal_for(m, n, k) {
             return infeasible();
         }
@@ -123,8 +125,11 @@ impl Simulator {
         let tiles = (cfg.warp_row_tiles * cfg.warp_col_tiles) as f64;
         let issue_eff = tiles / (tiles + 1.0);
 
-        // padded-M waste is real compute the SMs burn (ragged tiles)
-        let total_macs = (cfg.padded_m(m) as f64) * (n as f64) * (k as f64);
+        // padded-M waste is real compute the SMs burn (ragged tiles), and
+        // so are the N/K pad lanes of grouped convs; every group runs its
+        // own padded per-group GEMM
+        let total_macs =
+            (cfg.padded_m(m) as f64) * (n as f64) * (k as f64) * wl.groups as f64;
         let macs_per_cycle = match wl.precision {
             crate::conv::Precision::Int4 => g.int4_macs_per_cycle,
             crate::conv::Precision::Int8 => g.int8_macs_per_cycle,
@@ -387,6 +392,37 @@ mod tests {
                 assert!(on.runtime_us <= off.runtime_us * 1.0001, "stage{s} {cfg:?}");
             }
         }
+    }
+
+    #[test]
+    fn grouped_and_dilated_workloads_simulate_feasibly() {
+        let sim = sim();
+        let narrow = ScheduleConfig {
+            blk_row_warps: 1,
+            warp_row_tiles: 1,
+            blk_col_warps: 1,
+            warp_col_tiles: 1,
+            chunk: 1,
+            ..Default::default()
+        };
+        // resnext-style grouped conv
+        let gx = ConvWorkload::new("gx", 8, 56, 56, 128, 128).with_groups(32);
+        let mg = sim.measure_once(&gx, &narrow);
+        assert!(mg.feasible);
+        // grouped does ~1/groups of the dense MACs: strictly faster than
+        // its dense twin under the same schedule
+        let dense = sim.measure_once(&ConvWorkload::new("d", 8, 56, 56, 128, 128), &narrow);
+        assert!(mg.runtime_us < dense.runtime_us);
+        // depthwise (the extreme): still feasible, still finite
+        let dw = ConvWorkload::new("dw", 8, 28, 28, 192, 192).depthwise();
+        assert!(sim.measure_once(&dw, &narrow).feasible);
+        // dilated: same GEMM as the plain conv, comparable runtime
+        let dil = ConvWorkload::new("dil", 8, 28, 28, 64, 64).with_dilation(4);
+        let md = sim.measure_once(&dil, &ScheduleConfig::default());
+        assert!(md.feasible);
+        // the default (wide) schedule is illegal for depthwise: padded
+        // per-group N is one 8-wide atom, block_n 32 cannot divide it
+        assert!(!sim.measure_once(&dw, &ScheduleConfig::default()).feasible);
     }
 
     #[test]

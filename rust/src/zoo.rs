@@ -2,6 +2,13 @@
 //! the paper's abstract targets. Each network is described as its list of
 //! *distinct* conv layers with repetition counts, so network-level speedup
 //! aggregates per-layer tuning results correctly.
+//!
+//! Beyond the paper's dense ResNet/VGG evaluation the zoo carries the
+//! grouped/depthwise/dilated workload families: [`resnext50`]
+//! (cardinality-32 grouped 3x3), [`mobilenet_v2`] (depthwise 3x3 +
+//! pointwise 1x1) and [`deeplab_head`] (dilated 3x3 segmentation head).
+
+use anyhow::{bail, Result};
 
 use crate::conv::ConvWorkload;
 
@@ -20,8 +27,9 @@ pub struct Network {
 }
 
 impl Network {
-    /// Total conv MACs x2 of one forward pass (3x3 convs only — the ops
-    /// this repo's scheduler targets, matching the paper's evaluation).
+    /// Total conv MACs x2 of one forward pass (the convs this repo's
+    /// scheduler targets: the paper's 3x3s plus the grouped/depthwise/
+    /// dilated and pointwise layers of the extended zoo).
     pub fn total_ops(&self) -> u64 {
         self.layers
             .iter()
@@ -111,24 +119,124 @@ pub fn resnet50_with_transitions(batch: usize) -> Network {
     net
 }
 
-/// All networks at the paper's batch size.
-pub fn all_networks(batch: usize) -> Vec<Network> {
-    vec![resnet50(batch), resnet18(batch), vgg16(batch)]
+/// MobileNetV2-style inverted-residual convolutions: depthwise 3x3 blocks
+/// (`groups == channels`) interleaved with pointwise 1x1 expand/project
+/// convs — a representative per-resolution subset of the real network,
+/// with repeats standing in for the blocks sharing a shape.
+pub fn mobilenet_v2(batch: usize) -> Network {
+    let dw = |name: &str, hw: usize, ch: usize, reps: usize| NetworkLayer {
+        workload: ConvWorkload::new(name, batch, hw, hw, ch, ch).depthwise(),
+        repeats: reps,
+    };
+    let pw = |name: &str, hw: usize, cin: usize, cout: usize, reps: usize| NetworkLayer {
+        workload: ConvWorkload::new(name, batch, hw, hw, cin, cout).with_kernel(1, 0),
+        repeats: reps,
+    };
+    Network {
+        name: "mobilenet_v2",
+        layers: vec![
+            dw("mbv2_dw_112", 112, 32, 1),
+            pw("mbv2_pw_112", 112, 32, 16, 1),
+            pw("mbv2_exp_56", 56, 24, 144, 2),
+            dw("mbv2_dw_56", 56, 144, 2),
+            dw("mbv2_dw_28", 28, 192, 3),
+            dw("mbv2_dw_14", 14, 384, 4),
+            pw("mbv2_pw_14", 14, 384, 96, 2),
+            dw("mbv2_dw_7", 7, 960, 3),
+        ],
+    }
 }
 
-pub fn by_name(name: &str, batch: usize) -> Option<Network> {
-    all_networks(batch).into_iter().find(|n| n.name == name)
+/// ResNeXt50 (32x4d): the grouped 3x3 of every bottleneck, cardinality 32
+/// — channel counts double relative to ResNet50 but each group's GEMM is
+/// 1/32 of a dense one.
+pub fn resnext50(batch: usize) -> Network {
+    let grp = |name: &str, hw: usize, ch: usize, reps: usize| NetworkLayer {
+        workload: ConvWorkload::new(name, batch, hw, hw, ch, ch).with_groups(32),
+        repeats: reps,
+    };
+    Network {
+        name: "resnext50",
+        layers: vec![
+            grp("resnext50_stage2", 56, 128, 3),
+            grp("resnext50_stage3", 28, 256, 4),
+            grp("resnext50_stage4", 14, 512, 6),
+            grp("resnext50_stage5", 7, 1024, 3),
+        ],
+    }
+}
+
+/// DeepLab-style dilated segmentation head: stride-1 3x3 convs at
+/// increasing dilation rates over a fixed 28x28 feature map (the "same"
+/// padding convention `padding == dilation` keeps the map undecimated),
+/// plus the pointwise classifier.
+pub fn deeplab_head(batch: usize) -> Network {
+    let dil = |name: &str, ch: usize, d: usize, reps: usize| NetworkLayer {
+        workload: ConvWorkload::new(name, batch, 28, 28, ch, ch).with_dilation(d),
+        repeats: reps,
+    };
+    Network {
+        name: "deeplab_head",
+        layers: vec![
+            dil("deeplab_d2", 256, 2, 2),
+            dil("deeplab_d4", 256, 4, 2),
+            dil("deeplab_d8", 256, 8, 1),
+            NetworkLayer {
+                workload: ConvWorkload::new("deeplab_cls", batch, 28, 28, 256, 32)
+                    .with_kernel(1, 0),
+                repeats: 1,
+            },
+        ],
+    }
+}
+
+/// All networks at the paper's batch size.
+pub fn all_networks(batch: usize) -> Vec<Network> {
+    vec![
+        resnet50(batch),
+        resnet18(batch),
+        vgg16(batch),
+        mobilenet_v2(batch),
+        resnext50(batch),
+        deeplab_head(batch),
+    ]
+}
+
+/// Names of every zoo network, in [`all_networks`] order (error messages,
+/// `--help`).
+pub fn network_names() -> Vec<&'static str> {
+    all_networks(1).into_iter().map(|n| n.name).collect()
+}
+
+/// Look a network up by name. Unknown names error with the full list of
+/// valid names (the `ExplorerRegistry` convention) instead of a bare
+/// `None` the CLI would swallow.
+pub fn by_name(name: &str, batch: usize) -> Result<Network> {
+    match all_networks(batch).into_iter().find(|n| n.name == name) {
+        Some(net) => Ok(net),
+        None => bail!(
+            "unknown network '{name}' (valid: {})",
+            network_names().join(", ")
+        ),
+    }
 }
 
 /// Find one workload by its layer name anywhere in the zoo (maps a
 /// schedule-registry kind back to a concrete conv; for many lookups,
-/// build a name map from [`all_networks`] once instead).
-pub fn workload_by_name(name: &str, batch: usize) -> Option<ConvWorkload> {
-    all_networks(batch)
+/// build a name map from [`all_networks`] once instead). Unknown names
+/// error, listing the networks searched.
+pub fn workload_by_name(name: &str, batch: usize) -> Result<ConvWorkload> {
+    match all_networks(batch)
         .into_iter()
         .flat_map(|n| n.layers)
         .find(|l| l.workload.name == name)
-        .map(|l| l.workload)
+    {
+        Some(l) => Ok(l.workload),
+        None => bail!(
+            "no conv layer named '{name}' in any zoo network (searched: {})",
+            network_names().join(", ")
+        ),
+    }
 }
 
 #[cfg(test)]
@@ -155,14 +263,35 @@ mod tests {
 
     #[test]
     fn all_layer_gemms_are_mma_compatible() {
-        // every zoo conv must admit at least one legal schedule
-        // (N % 8 == 0 and K % 32 == 0)
+        // every zoo conv must admit at least one legal schedule: padded
+        // per-group N lands on the 8-wide atom, padded per-group K on the
+        // precision's K-group, and M on the 8-row atom
+        use crate::searchspace::{SearchSpace, SpaceOptions};
         for net in all_networks(8) {
             for l in &net.layers {
-                assert_eq!(l.workload.gemm_n() % 8, 0, "{}", l.workload.name);
-                assert_eq!(l.workload.gemm_k() % 32, 0, "{}", l.workload.name);
-                assert_eq!(l.workload.gemm_m() % 8, 0, "{}", l.workload.name);
+                let wl = &l.workload;
+                assert_eq!(wl.gemm_n_padded() % 8, 0, "{}", wl.name);
+                assert_eq!(wl.gemm_k_padded() % 32, 0, "{}", wl.name);
+                assert_eq!(wl.gemm_m() % 8, 0, "{}", wl.name);
+                let space = SearchSpace::for_workload(wl, SpaceOptions::default());
+                assert!(!space.enumerate_legal().is_empty(), "{}", wl.name);
             }
+        }
+    }
+
+    #[test]
+    fn new_workload_families_are_present_and_typed() {
+        let mb = mobilenet_v2(8);
+        assert!(mb.layers.iter().any(|l| l.workload.groups == l.workload.in_channels
+            && l.workload.groups > 1), "mobilenet has depthwise convs");
+        assert!(mb.layers.iter().any(|l| l.workload.kernel == 1), "and pointwise convs");
+        let rx = resnext50(8);
+        assert!(rx.layers.iter().all(|l| l.workload.groups == 32));
+        let dl = deeplab_head(8);
+        assert!(dl.layers.iter().any(|l| l.workload.dilation > 1));
+        // dilated "same" convention: the head never decimates the map
+        for l in &dl.layers {
+            assert_eq!(l.workload.out_height(), l.workload.height, "{}", l.workload.name);
         }
     }
 
@@ -198,15 +327,26 @@ mod tests {
 
     #[test]
     fn by_name_lookup() {
-        assert!(by_name("vgg16", 1).is_some());
-        assert!(by_name("alexnet", 1).is_none());
+        assert!(by_name("vgg16", 1).is_ok());
+        assert!(by_name("mobilenet_v2", 1).is_ok());
+        assert!(by_name("resnext50", 1).is_ok());
+        assert!(by_name("deeplab_head", 1).is_ok());
+        // unknown names error, listing every valid name
+        let err = by_name("alexnet", 1).unwrap_err().to_string();
+        assert!(err.contains("alexnet"), "{err}");
+        for name in network_names() {
+            assert!(err.contains(name), "{err} missing {name}");
+        }
     }
 
     #[test]
     fn workload_by_name_spans_all_networks() {
         let wl = workload_by_name("vgg16_conv3_1", 4).unwrap();
         assert_eq!((wl.batch, wl.in_channels, wl.out_channels), (4, 128, 256));
-        assert!(workload_by_name("resnet18_stage4", 1).is_some());
-        assert!(workload_by_name("nope", 1).is_none());
+        assert!(workload_by_name("resnet18_stage4", 1).is_ok());
+        assert_eq!(workload_by_name("mbv2_dw_28", 2).unwrap().groups, 192);
+        assert_eq!(workload_by_name("deeplab_d4", 1).unwrap().dilation, 4);
+        let err = workload_by_name("nope", 1).unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("resnext50"), "{err}");
     }
 }

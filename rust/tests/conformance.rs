@@ -1,0 +1,298 @@
+//! Randomized conformance harness: the regression net for every
+//! execute/layout/schedule change.
+//!
+//! A seeded generator draws workloads across every axis the pipeline
+//! supports — batch, spatial extent, channels, kernel, stride, padding,
+//! **groups** (incl. depthwise), **dilation** and precision — and for each
+//! asserts that the scheduled executor ([`qconv2d_scheduled`]) is
+//! *bit-identical* to an independent direct-convolution reference under
+//! several sampled legal schedules (plus the default and baseline
+//! configs). The reference implementation here shares no code with the
+//! im2col/GEMM path: it is the plain sextuple loop over output pixels.
+//!
+//! Everything is keyed off fixed seeds through `util::Rng`, so a failure
+//! reproduces exactly; the failing workload is printed by the assert.
+
+use tcconv::conv::{
+    qconv2d, qconv2d_scheduled, qconv2d_scheduled_with, ConvInstance, ConvWorkload,
+    ExecScratch, Precision,
+};
+use tcconv::quant::{pack_int4_padded_into, Epilogue};
+use tcconv::searchspace::{ScheduleConfig, SearchSpace, SpaceOptions};
+use tcconv::util::Rng;
+
+/// Independent direct-convolution reference: NHWC input, `KHxKWx(I/G)xO`
+/// weights, groups, dilation, epilogue, padded INT4 packing. Deliberately
+/// the dumbest possible implementation.
+fn conv_reference(inst: &ConvInstance, epi: &Epilogue) -> Vec<i32> {
+    let wl = &inst.wl;
+    let (oh, ow) = (wl.out_height(), wl.out_width());
+    let (cpg, opg) = (wl.in_channels_per_group(), wl.out_channels_per_group());
+    let mut out = Vec::new();
+    let mut row = vec![0i32; wl.out_channels];
+    for n in 0..wl.batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for oc in 0..wl.out_channels {
+                    let group = oc / opg;
+                    let mut acc = 0i32;
+                    for ky in 0..wl.kernel {
+                        let y = (oy * wl.stride + ky * wl.dilation) as isize
+                            - wl.padding as isize;
+                        if y < 0 || y >= wl.height as isize {
+                            continue;
+                        }
+                        for kx in 0..wl.kernel {
+                            let x = (ox * wl.stride + kx * wl.dilation) as isize
+                                - wl.padding as isize;
+                            if x < 0 || x >= wl.width as isize {
+                                continue;
+                            }
+                            for ic in 0..cpg {
+                                let xi = ((n * wl.height + y as usize) * wl.width
+                                    + x as usize)
+                                    * wl.in_channels
+                                    + group * cpg
+                                    + ic;
+                                let wi = ((ky * wl.kernel + kx) * cpg + ic)
+                                    * wl.out_channels
+                                    + oc;
+                                acc += inst.x[xi] as i32 * inst.w[wi] as i32;
+                            }
+                        }
+                    }
+                    row[oc] = epi.apply(acc, inst.bias[oc]);
+                }
+                pack_int4_padded_into(&row, &mut out);
+            }
+        }
+    }
+    out
+}
+
+/// Draw one random workload covering the full configuration space. Keeps
+/// resampling until the output map is non-empty.
+fn random_workload(rng: &mut Rng, case: usize) -> ConvWorkload {
+    loop {
+        let kernel = [1, 2, 3][rng.gen_range(3)];
+        let dilation = 1 + rng.gen_range(3); // 1..=3
+        let stride = 1 + rng.gen_range(2); // 1..=2
+        let padding = rng.gen_range(3); // 0..=2
+        let height = 3 + rng.gen_range(7); // 3..=9
+        let width = 3 + rng.gen_range(7);
+        // channels built from per-group x groups so groups always divide;
+        // depthwise (cpg == 1, opg == 1) is drawn regularly
+        let groups = [1, 2, 3, 4][rng.gen_range(4)];
+        let cpg = [1, 2, 4, 8][rng.gen_range(4)];
+        let opg = [1, 2, 4, 8][rng.gen_range(4)];
+        let mut wl = ConvWorkload::new(
+            format!("conf_{case}"),
+            1 + rng.gen_range(2),
+            height,
+            width,
+            cpg * groups,
+            opg * groups,
+        );
+        wl.kernel = kernel;
+        wl.stride = stride;
+        wl.padding = padding;
+        wl.dilation = dilation;
+        wl.groups = groups;
+        wl.precision = if rng.gen_bool(0.5) { Precision::Int4 } else { Precision::Int8 };
+        let eff = wl.effective_kernel();
+        if wl.height + 2 * wl.padding >= eff && wl.width + 2 * wl.padding >= eff {
+            return wl;
+        }
+    }
+}
+
+/// Sample up to `n` legal schedules for the workload, always including
+/// the default and the TVM-baseline configs (which the executor must
+/// accept whether or not they are tile-legal — numerics are
+/// schedule-invariant by construction).
+fn schedules_for(wl: &ConvWorkload, rng: &mut Rng, n: usize) -> Vec<ScheduleConfig> {
+    let mut out = vec![ScheduleConfig::default(), ScheduleConfig::tvm_baseline()];
+    let space = SearchSpace::for_workload(wl, SpaceOptions::default());
+    let legal = space.enumerate_legal();
+    if !legal.is_empty() {
+        for _ in 0..n {
+            out.push(space.decode(&legal[rng.gen_range(legal.len())]));
+        }
+    }
+    out
+}
+
+#[test]
+fn conformance_scheduled_executor_matches_direct_reference() {
+    let mut rng = Rng::new(0xC04F0A4A);
+    let mut depthwise_seen = 0usize;
+    let mut dilated_seen = 0usize;
+    let mut legal_checked = 0usize;
+    for case in 0..50 {
+        let wl = random_workload(&mut rng, case);
+        if wl.groups > 1 && wl.groups == wl.in_channels {
+            depthwise_seen += 1;
+        }
+        if wl.dilation > 1 {
+            dilated_seen += 1;
+        }
+        let inst = ConvInstance::synthetic(&wl, 0xBEEF + case as u64);
+        let epi = Epilogue {
+            relu: rng.gen_bool(0.5),
+            requant_shift: rng.gen_range(8) as u32,
+        };
+        let want = conv_reference(&inst, &epi);
+        assert_eq!(qconv2d(&inst, &epi), want, "default schedule, {wl:?}");
+        for cfg in schedules_for(&wl, &mut rng, 3) {
+            legal_checked += 1;
+            assert_eq!(
+                qconv2d_scheduled(&inst, &epi, &cfg),
+                want,
+                "schedule {cfg:?} on {wl:?}"
+            );
+        }
+    }
+    // the draw must actually exercise the new workload families
+    assert!(dilated_seen >= 5, "only {dilated_seen} dilated draws");
+    assert!(depthwise_seen >= 1, "no depthwise draw");
+    assert!(legal_checked >= 100, "only {legal_checked} schedule checks");
+}
+
+#[test]
+fn conformance_scratch_reuse_across_random_workload_stream() {
+    // a serving worker threads one ExecScratch through an arbitrary
+    // request stream; stale buffer contents must never leak between
+    // workloads of different shape/groups/dilation
+    let mut rng = Rng::new(0x5C4A7C11);
+    let mut scratch = ExecScratch::new();
+    let epi = Epilogue::default();
+    for case in 0..24 {
+        let wl = random_workload(&mut rng, case);
+        let inst = ConvInstance::synthetic(&wl, 7_000 + case as u64);
+        let fresh = qconv2d(&inst, &epi);
+        let reused = qconv2d_scheduled_with(
+            &inst,
+            &epi,
+            &ScheduleConfig::default(),
+            &mut scratch,
+        );
+        assert_eq!(fresh, reused, "{wl:?}");
+        assert_eq!(fresh, conv_reference(&inst, &epi), "{wl:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// im2col index-algebra properties (the §3.1 duplicates analysis under
+// groups and dilation)
+// ---------------------------------------------------------------------------
+
+mod im2col_algebra {
+    use super::{random_workload, Rng};
+    use std::collections::HashMap;
+    use tcconv::conv::{GemmCoord, SourceElem};
+
+    #[test]
+    fn prop_every_cell_resolves_in_bounds_and_genuine_is_canonical() {
+        let mut rng = Rng::new(0x11415);
+        for case in 0..20 {
+            let wl = random_workload(&mut rng, case);
+            let feat_len = wl.batch * wl.height * wl.width * wl.in_channels;
+            for group in 0..wl.groups.min(2) {
+                let ix = wl.im2col_group(group);
+                // brute-force spec: the first coordinate (lexicographic
+                // scan order) referring to each feature element
+                let mut first: HashMap<u64, GemmCoord> = HashMap::new();
+                for row in 0..ix.rows() {
+                    for col in 0..ix.cols() {
+                        let at = GemmCoord { row, col };
+                        match ix.source(at) {
+                            SourceElem::Pad => {
+                                // padding is its own genuine index
+                                assert_eq!(ix.genuine(at), at, "{wl:?}");
+                            }
+                            SourceElem::Feat(lin) => {
+                                assert!(
+                                    (lin as usize) < feat_len,
+                                    "out-of-bounds feature index {lin} in {wl:?}"
+                                );
+                                let want = *first.entry(lin).or_insert(at);
+                                let g = ix.genuine(at);
+                                assert_eq!(g, want, "genuine != brute force at {at:?} in {wl:?}");
+                                // idempotent and source-preserving
+                                assert_eq!(ix.genuine(g), g, "{wl:?}");
+                                assert_eq!(ix.source(g), ix.source(at), "{wl:?}");
+                            }
+                        }
+                    }
+                }
+                // the remap is a bijection: distinct genuine fixpoints
+                // refer to distinct feature elements
+                let mut fixpoint_sources: HashMap<u64, GemmCoord> = HashMap::new();
+                for row in 0..ix.rows() {
+                    for col in 0..ix.cols() {
+                        let at = GemmCoord { row, col };
+                        if ix.genuine(at) == at {
+                            if let SourceElem::Feat(lin) = ix.source(at) {
+                                if let Some(prev) = fixpoint_sources.insert(lin, at) {
+                                    panic!(
+                                        "genuine coords {prev:?} and {at:?} share \
+                                         element {lin} in {wl:?}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_output_shape_matches_effective_kernel_formula() {
+        // the dilated-conv identity: a kernel of extent k with dilation d
+        // spans (k-1)*d + 1 feature elements, so
+        //   out = (in + 2*pad - ((k-1)*d + 1)) / stride + 1
+        let mut rng = Rng::new(0xD11A7E);
+        for case in 0..40 {
+            let wl = random_workload(&mut rng, case);
+            let eff = (wl.kernel - 1) * wl.dilation + 1;
+            assert_eq!(wl.effective_kernel(), eff);
+            assert_eq!(
+                wl.out_height(),
+                (wl.height + 2 * wl.padding - eff) / wl.stride + 1,
+                "{wl:?}"
+            );
+            assert_eq!(
+                wl.out_width(),
+                (wl.width + 2 * wl.padding - eff) / wl.stride + 1,
+                "{wl:?}"
+            );
+            // and the index algebra agrees with the workload shape
+            let ix = wl.im2col();
+            assert_eq!(ix.rows(), wl.gemm_m(), "{wl:?}");
+            assert_eq!(ix.cols(), wl.gemm_k(), "{wl:?}");
+        }
+    }
+
+    #[test]
+    fn prop_tile_stats_sum_to_duplicates_info_per_group() {
+        let mut rng = Rng::new(0x7157A7);
+        for case in 0..12 {
+            let wl = random_workload(&mut rng, case);
+            let ix = wl.im2col();
+            let full = ix.tile_stats(0, ix.rows(), 0, ix.cols());
+            let info = ix.duplicates_info();
+            assert_eq!(full.total, info.gemm_cells, "{wl:?}");
+            assert_eq!(full.padding, info.padding_cells, "{wl:?}");
+            // analytic unique counts *all* of the group's elements; the
+            // enumerated count can only fall short when stride/dilation/
+            // cropping skip some input elements entirely
+            assert!(full.unique <= info.unique_elements, "{wl:?}");
+            if wl.stride == 1 && wl.dilation == 1 && wl.padding < wl.kernel {
+                // dense stride-1 windows with sub-kernel padding sweep
+                // every input element at least once
+                assert_eq!(full.unique, info.unique_elements, "{wl:?}");
+            }
+        }
+    }
+}

@@ -159,6 +159,71 @@ fn parallel_tune_to_multiworker_serve_end_to_end() {
 }
 
 #[test]
+fn grouped_and_dilated_kinds_tune_persist_and_serve_end_to_end() {
+    // the new workload families through the whole pipeline: tune a tiny
+    // depthwise (mobilenet-style) conv and a dilated conv via Session,
+    // persist the registry to disk, reload it, and serve a mixed burst —
+    // every request kind must route to *its* tuned schedule with correct
+    // numerics and no lost responses
+    let dw = ConvWorkload::new("rt_mbv2_dw", 1, 8, 8, 32, 32).depthwise();
+    let dil = ConvWorkload::new("rt_deeplab_d2", 1, 8, 8, 16, 16).with_dilation(2);
+
+    let mut registry = ScheduleRegistry::new();
+    let mut tuned = std::collections::HashMap::new();
+    let mut prior = None;
+    for wl in [&dw, &dil] {
+        let mut builder = Session::for_workload(wl)
+            .trials(48)
+            .seed(9)
+            .explorer("diversity")
+            .measurer(Simulator::noiseless(GpuSpec::t4()).into_measurer());
+        if let Some(p) = &prior {
+            builder = builder.transfer_from(p); // cross-family transfer
+        }
+        let res = builder.run().expect("builtin explorer");
+        assert!(res.best.runtime_us.is_finite());
+        registry.insert(&wl.name, res.registry_entry());
+        tuned.insert(wl.name.clone(), res.best.config);
+        prior = Some(res);
+    }
+    // the depthwise legal space excludes the default schedule (its padded
+    // per-group GEMM is a single 8x32 atom; the default tiles 32 columns),
+    // so registry routing is observable
+    assert_ne!(tuned[&dw.name], ScheduleConfig::default());
+
+    let path = std::env::temp_dir().join("tcconv_rt_grouped_registry.json");
+    registry.save(&path).unwrap();
+    let loaded = ScheduleRegistry::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, registry, "grouped/dilated entries survive the JSON roundtrip");
+
+    let server = Server::from_registry(
+        ServerConfig { workers: 2, queue_depth: 64, max_batch: 4 },
+        loaded,
+    );
+    let epi = Epilogue::default();
+    let mut pending = Vec::new();
+    for seed in 0..12u64 {
+        let wl = if seed % 2 == 0 { &dw } else { &dil };
+        let inst = ConvInstance::synthetic(wl, seed);
+        let want = qconv2d(&inst, &epi);
+        pending.push((wl.name.clone(), want, server.submit(&wl.name, inst, epi).unwrap()));
+    }
+    for (kind, want, rx) in pending {
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("response lost");
+        assert_eq!(resp.kind, kind);
+        assert_eq!(resp.schedule, tuned[&kind], "kind {kind} routed to wrong schedule");
+        assert_eq!(resp.packed_output, want, "kind {kind} numerics");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.total_count(), 12, "no response may be lost");
+    assert_eq!(metrics.summary("rt_mbv2_dw").unwrap().count, 6);
+    assert_eq!(metrics.summary("rt_deeplab_d2").unwrap().count, 6);
+}
+
+#[test]
 fn empty_registry_server_equals_plain_start() {
     let wl = ConvWorkload::new("plain", 1, 6, 6, 8, 8);
     let epi = Epilogue::default();
