@@ -57,7 +57,7 @@ fn main() {
     }
 
     let server = Server::from_registry(
-        ServerConfig { workers, queue_depth: 64, max_batch: 8 },
+        ServerConfig { workers, queue_depth: 64, max_batch: 8, max_wait: 2 },
         registry,
     );
     let epi = Epilogue::default();

@@ -1,0 +1,181 @@
+//! Bench: online serving throughput — dynamic batching vs unbatched.
+//!
+//! A mixed-kind burst over the four ResNet50 stage shapes (edge-scaled:
+//! the stage geometry — feature map halving, channels doubling — at
+//! channel counts where the executor's per-request fixed costs are
+//! visible) is pushed through the serving coordinator twice: once with
+//! `max_batch = 1` (every request is its own batch) and once with the
+//! dynamic batcher on. Same requests, same workers, same numerics — the
+//! only variable is batching.
+//!
+//! Why batching wins on this substrate: each worker's `ExecScratch`
+//! caches the im2col gather map of the *last* shape executed. An
+//! unbatched mixed stream alternates kinds per worker, rebuilding the
+//! map almost every request; head-of-line batching runs same-kind
+//! requests back to back, paying the index resolution once per batch.
+//! The full `max_batch` sweep is written to `BENCH_serving.json` (the
+//! artifact CI uploads).
+//!
+//! ```bash
+//! cargo bench --bench serving
+//! BENCH_QUICK=1 cargo bench --bench serving   # CI smoke mode
+//! ```
+
+use std::time::Instant;
+
+use tcconv::conv::{ConvInstance, ConvWorkload};
+use tcconv::quant::Epilogue;
+use tcconv::serve::{Server, ServerConfig, SubmitError};
+use tcconv::util::bench::{quick, section};
+use tcconv::util::{Json, Rng};
+
+/// One timed configuration of the sweep.
+struct RunStats {
+    max_batch: usize,
+    max_wait: usize,
+    wall_s: f64,
+    rps: f64,
+    mean_batch: f64,
+}
+
+fn run_config(
+    workers: usize,
+    max_batch: usize,
+    max_wait: usize,
+    stream: &[(usize, ConvInstance)],
+    kinds: &[ConvWorkload],
+) -> RunStats {
+    let server = Server::start(ServerConfig {
+        workers,
+        queue_depth: 256,
+        max_batch,
+        max_wait,
+    });
+    let epi = Epilogue::default();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(stream.len());
+    for (k, inst) in stream {
+        loop {
+            match server.submit(&kinds[*k].name, inst.clone(), epi) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(SubmitError::Busy) => std::thread::yield_now(),
+                Err(e) => panic!("submit failed: {e:?}"),
+            }
+        }
+    }
+    for rx in pending {
+        rx.recv().expect("response lost");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = server.shutdown();
+    let mean_batch = metrics.batch_histogram().mean();
+    RunStats {
+        max_batch,
+        max_wait,
+        wall_s,
+        rps: stream.len() as f64 / wall_s,
+        mean_batch,
+    }
+}
+
+fn main() {
+    let workers: usize =
+        std::env::var("WORKERS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let requests: usize = std::env::var("REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick() { 160 } else { 480 });
+
+    // resnet50 stage geometry, edge-scaled: 28^2 x C -> 4^2 x 8C
+    let kinds = vec![
+        ConvWorkload::new("rn50e_stage2", 1, 28, 28, 4, 4),
+        ConvWorkload::new("rn50e_stage3", 1, 14, 14, 8, 8),
+        ConvWorkload::new("rn50e_stage4", 1, 7, 7, 16, 16),
+        ConvWorkload::new("rn50e_stage5", 1, 4, 4, 32, 32),
+    ];
+
+    section("online serving: dynamic batching sweep");
+    println!(
+        "{workers} workers, {requests} requests, mixed-kind burst over {} resnet50 stage shapes",
+        kinds.len()
+    );
+
+    // pre-generate the request stream (seeded shuffle, so the unbatched
+    // configuration really does alternate kinds per worker): generation
+    // cost must not pollute the serving measurement
+    let mut rng = Rng::new(42);
+    let stream: Vec<(usize, ConvInstance)> = (0..requests)
+        .map(|i| {
+            let k = if i % 7 == 0 { rng.gen_range(kinds.len()) } else { i % kinds.len() };
+            (k, ConvInstance::synthetic(&kinds[k], i as u64))
+        })
+        .collect();
+
+    // warm the allocator / caches once, untimed
+    run_config(workers, 1, 0, &stream[..stream.len().min(32)], &kinds);
+
+    let reps = if quick() { 2 } else { 3 };
+    let sweep = [(1usize, 0usize), (2, 4), (4, 4), (8, 4)];
+    let mut results: Vec<RunStats> = Vec::new();
+    for &(max_batch, max_wait) in &sweep {
+        let mut best: Option<RunStats> = None;
+        for _ in 0..reps {
+            let r = run_config(workers, max_batch, max_wait, &stream, &kinds);
+            if best.as_ref().map_or(true, |b| r.wall_s < b.wall_s) {
+                best = Some(r);
+            }
+        }
+        let r = best.unwrap();
+        println!(
+            "max_batch {:>2} max_wait {:>2}: {:>8.1} req/s  ({:.3} s wall, mean co-batch {:.2})",
+            r.max_batch, r.max_wait, r.rps, r.wall_s, r.mean_batch
+        );
+        results.push(r);
+    }
+
+    let unbatched = &results[0];
+    let batched = results.last().unwrap();
+    let speedup = batched.rps / unbatched.rps;
+    println!(
+        "\nbatched (max_batch {}) vs unbatched: {speedup:.2}x throughput",
+        batched.max_batch
+    );
+    println!(
+        "  -> target >= 1.5x: {}",
+        if speedup >= 1.5 { "MET" } else { "MISSED" }
+    );
+
+    // BENCH_serving.json: the trajectory CI uploads as an artifact
+    let trajectory = Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("max_batch", Json::Num(r.max_batch as f64)),
+                    ("max_wait", Json::Num(r.max_wait as f64)),
+                    ("wall_s", Json::Num(r.wall_s)),
+                    ("rps", Json::Num(r.rps)),
+                    ("mean_batch", Json::Num(r.mean_batch)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("serving".into())),
+        ("workers", Json::Num(workers as f64)),
+        ("requests", Json::Num(requests as f64)),
+        (
+            "kinds",
+            Json::Arr(kinds.iter().map(|w| Json::Str(w.name.clone())).collect()),
+        ),
+        ("unbatched_rps", Json::Num(unbatched.rps)),
+        ("batched_rps", Json::Num(batched.rps)),
+        ("speedup", Json::Num(speedup)),
+        ("trajectory", trajectory),
+    ]);
+    std::fs::write("BENCH_serving.json", doc.to_string()).expect("writing BENCH_serving.json");
+    println!("trajectory written to BENCH_serving.json");
+}

@@ -23,6 +23,7 @@ use super::ConvWorkload;
 /// A quantized conv problem instance: INT4-domain values held in i8.
 #[derive(Debug, Clone)]
 pub struct ConvInstance {
+    /// The conv shape this data instantiates.
     pub wl: ConvWorkload,
     /// NHWC feature map, values in [-8, 7].
     pub x: Vec<i8>,
@@ -62,27 +63,127 @@ pub fn qconv2d(inst: &ConvInstance, epi: &Epilogue) -> Vec<i32> {
 }
 
 /// Reusable execution buffers: the laid-out im2col operand, the i32
-/// accumulator, and the epilogue row buffer.
+/// accumulator, the epilogue row buffer, and the cached im2col gather
+/// map.
 ///
 /// One conv execution needs `m*k_g` operand words (the per-group im2col
 /// tile — grouped convs cycle every group through the same buffer, since
 /// all groups share one shape) plus `m*out_channels` accumulator words;
 /// allocating them per request is pure overhead when a serving worker
 /// executes a batch of same-kind requests back to back (same dims → same
-/// buffer sizes, so the allocations are reused verbatim). Workers in
-/// [`crate::serve`] keep one scratch each and thread it through the batch
-/// via [`qconv2d_scheduled_with`].
+/// buffer sizes, so the allocations are reused verbatim).
+///
+/// The scratch also memoizes the **im2col gather map** of the last shape
+/// executed: one resolved source index per `(row, kernel position)` cell
+/// (the channel run under each kernel position is contiguous in NHWC, so
+/// a whole `in_channels/groups` run stages with one slice copy). The map
+/// is pure index algebra — it depends on the conv *shape*, not the data
+/// — so consecutive same-shape requests skip the per-cell
+/// [`Im2colIndex::source`](crate::conv::Im2colIndex::source) resolution
+/// entirely. This is the dynamic batcher's throughput lever: same-kind
+/// batches pay the index resolution once per batch instead of once per
+/// request (`benches/serving.rs` measures the effect). Workers in
+/// [`crate::serve`] keep one scratch each and thread it through the
+/// batch via [`qconv2d_scheduled_with`].
 #[derive(Debug, Default)]
 pub struct ExecScratch {
     cols: Vec<i8>,
     acc: Vec<i32>,
     rowbuf: Vec<i32>,
+    /// Shape the cached gather map describes (None = cold).
+    map_key: Option<Im2colMapKey>,
+    /// Group-0 gather map: linear NHWC source index per
+    /// `(row, kernel position)`, or -1 for a padding run. Group `g` reads
+    /// the same map shifted by `g * in_channels_per_group` (groups are
+    /// disjoint channel ranges of the same pixels).
+    map: Vec<i64>,
 }
 
 impl ExecScratch {
     /// Empty scratch; buffers grow to the first workload's sizes on use.
     pub fn new() -> Self {
         Self::default()
+    }
+}
+
+/// Everything the im2col gather map depends on: the conv shape minus
+/// `name`, `precision` and `out_channels` (which do not affect where
+/// input elements live).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Im2colMapKey {
+    batch: usize,
+    height: usize,
+    width: usize,
+    in_channels: usize,
+    kernel: usize,
+    stride: usize,
+    padding: usize,
+    groups: usize,
+    dilation: usize,
+}
+
+impl Im2colMapKey {
+    fn of(wl: &ConvWorkload) -> Self {
+        Self {
+            batch: wl.batch,
+            height: wl.height,
+            width: wl.width,
+            in_channels: wl.in_channels,
+            kernel: wl.kernel,
+            stride: wl.stride,
+            padding: wl.padding,
+            groups: wl.groups,
+            dilation: wl.dilation,
+        }
+    }
+}
+
+/// Build the group-0 gather map: for every `(row, kernel position)` of
+/// the per-group im2col matrix, the linear NHWC index of channel 0's
+/// source element, or -1 when the position lands in the padding halo.
+/// Channel-minor NHWC layout makes each kernel position's channel run
+/// contiguous, so one entry covers `in_channels/groups` cells.
+fn build_im2col_map(wl: &ConvWorkload, map: &mut Vec<i64>) {
+    let ix = wl.im2col();
+    let m = wl.gemm_m();
+    let kpos = wl.kernel * wl.kernel;
+    let cpg = wl.in_channels_per_group();
+    map.clear();
+    map.reserve(m * kpos);
+    for row in 0..m {
+        for kp in 0..kpos {
+            match ix.source(GemmCoord { row, col: kp * cpg }) {
+                SourceElem::Pad => map.push(-1),
+                SourceElem::Feat(lin) => map.push(lin as i64),
+            }
+        }
+    }
+}
+
+/// Stage one group's im2col operand through a prebuilt gather map:
+/// per kernel position, either one contiguous `cpg`-byte slice copy or a
+/// zero run. Bit-identical to [`im2col_group_into`] (pinned by
+/// `map_staging_equals_reference_im2col`), just without the per-cell
+/// index arithmetic.
+fn im2col_group_from_map(inst: &ConvInstance, group: usize, map: &[i64], cols: &mut Vec<i8>) {
+    let wl = &inst.wl;
+    let (m, k) = (wl.gemm_m(), wl.gemm_k());
+    let cpg = wl.in_channels_per_group();
+    let kpos = wl.kernel * wl.kernel;
+    let off = (group * cpg) as i64;
+    debug_assert_eq!(map.len(), m * kpos);
+    cols.clear();
+    cols.resize(m * k, 0);
+    for row in 0..m {
+        let crow = &mut cols[row * k..(row + 1) * k];
+        for kp in 0..kpos {
+            let base = map[row * kpos + kp];
+            if base >= 0 {
+                let src = (base + off) as usize;
+                crow[kp * cpg..(kp + 1) * cpg].copy_from_slice(&inst.x[src..src + cpg]);
+            }
+            // padding runs stay at the resize-filled zero
+        }
     }
 }
 
@@ -121,8 +222,15 @@ pub fn qconv2d_scheduled_with(
     let bk = cfg.block_k().clamp(32, 128);
     scratch.acc.clear();
     scratch.acc.resize(m * n, 0);
+    // resolve (or reuse) the shape's im2col gather map: a same-shape
+    // request batch pays the per-cell index resolution once
+    let key = Im2colMapKey::of(wl);
+    if scratch.map_key.as_ref() != Some(&key) {
+        build_im2col_map(wl, &mut scratch.map);
+        scratch.map_key = Some(key);
+    }
     for group in 0..wl.groups {
-        im2col_group_into(inst, group, &mut scratch.cols);
+        im2col_group_from_map(inst, group, &scratch.map, &mut scratch.cols);
         debug_assert_eq!(scratch.cols.len(), m * k_g);
         gemm_i32_blocked_group(
             &scratch.cols,
@@ -443,6 +551,57 @@ mod tests {
                 &mut scratch,
             );
             assert_eq!(fresh, reused, "{}", wl.name);
+        }
+    }
+
+    #[test]
+    fn map_staging_equals_reference_im2col() {
+        // the gather map is pure index algebra; staging through it must be
+        // bit-identical to the per-cell reference for every family
+        let cases = [
+            ConvWorkload::new("m_plain", 2, 7, 7, 8, 8),
+            ConvWorkload::new("m_grp", 1, 8, 8, 16, 16).with_groups(4),
+            ConvWorkload::new("m_dw", 1, 6, 6, 8, 8).depthwise(),
+            ConvWorkload::new("m_dil", 1, 9, 9, 8, 8).with_dilation(2),
+            ConvWorkload::new("m_s2", 1, 8, 8, 8, 8).with_stride(2),
+            ConvWorkload::new("m_pw", 1, 6, 6, 16, 8).with_kernel(1, 0),
+        ];
+        for (i, wl) in cases.iter().enumerate() {
+            let inst = ConvInstance::synthetic(wl, 90 + i as u64);
+            let mut map = Vec::new();
+            build_im2col_map(wl, &mut map);
+            assert_eq!(map.len(), wl.gemm_m() * wl.kernel * wl.kernel, "{}", wl.name);
+            for g in 0..wl.groups {
+                let mut want = Vec::new();
+                im2col_group_into(&inst, g, &mut want);
+                let mut got = Vec::new();
+                im2col_group_from_map(&inst, g, &map, &mut got);
+                assert_eq!(got, want, "{} group {g}", wl.name);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_map_cache_survives_shape_changes() {
+        // alternating shapes through one scratch: the single-entry map
+        // cache must rebuild on every shape change without corrupting
+        // numerics (the serving worker's mixed-kind regime)
+        let epi = Epilogue::default();
+        let mut scratch = ExecScratch::new();
+        let a = ConvWorkload::new("mc_a", 1, 8, 8, 8, 8);
+        let b = ConvWorkload::new("mc_b", 1, 6, 6, 16, 8).with_groups(2);
+        for round in 0..3u64 {
+            for wl in [&a, &b] {
+                let inst = ConvInstance::synthetic(wl, 70 + round);
+                let want = qconv2d(&inst, &epi);
+                let got = qconv2d_scheduled_with(
+                    &inst,
+                    &epi,
+                    &crate::searchspace::ScheduleConfig::default(),
+                    &mut scratch,
+                );
+                assert_eq!(got, want, "{} round {round}", wl.name);
+            }
         }
     }
 

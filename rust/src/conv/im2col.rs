@@ -14,7 +14,9 @@ use super::ConvWorkload;
 /// receptive-field slot (kernel-position-major, channel-minor).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct GemmCoord {
+    /// Output-pixel index (row-major over batch, out-height, out-width).
     pub row: usize,
+    /// Receptive-field slot (kernel-position-major, channel-minor).
     pub col: usize,
 }
 
@@ -59,12 +61,17 @@ impl TileStats {
 /// Whole-matrix duplicates summary for a workload (used in reports).
 #[derive(Debug, Clone, Copy)]
 pub struct DuplicatesInfo {
+    /// Total im2col matrix cells (`rows * cols`).
     pub gemm_cells: usize,
+    /// Cells referring to the zero-padding halo.
     pub padding_cells: usize,
+    /// Distinct feature elements behind the non-padding cells.
     pub unique_elements: usize,
 }
 
 impl DuplicatesInfo {
+    /// Whole-matrix naive / duplicate-aware load ratio (Fig. 3's
+    /// redundancy headline).
     pub fn duplicate_factor(&self) -> f64 {
         (self.gemm_cells - self.padding_cells) as f64 / self.unique_elements as f64
     }
@@ -120,10 +127,12 @@ impl Im2colIndex {
         }
     }
 
+    /// im2col matrix rows: one per output pixel.
     pub fn rows(&self) -> usize {
         self.batch * self.out_h * self.out_w
     }
 
+    /// im2col matrix columns: one per receptive-field slot of this group.
     pub fn cols(&self) -> usize {
         self.kernel * self.kernel * self.channels
     }

@@ -24,8 +24,11 @@ pub use im2col::{DuplicatesInfo, GemmCoord, Im2colIndex, SourceElem};
 /// 8x32 operand, twice INT8's 8x16 — doubling peak throughput).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Precision {
+    /// 4-bit integers: 8x32 MMA operand group, the paper's headline
+    /// deployment precision.
     #[default]
     Int4,
+    /// 8-bit integers: 8x16 MMA operand group, half the INT4 peak rate.
     Int8,
 }
 
@@ -67,24 +70,37 @@ impl Precision {
 /// whole im2col duplicates analysis applies unchanged.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ConvWorkload {
+    /// Workload key — doubles as the request kind at serve time and the
+    /// schedule-registry key.
     pub name: String,
+    /// Batch size `N`.
     pub batch: usize,
+    /// Input feature-map height `H`.
     pub height: usize,
+    /// Input feature-map width `W`.
     pub width: usize,
+    /// Input channels `I`.
     pub in_channels: usize,
+    /// Output channels `O`.
     pub out_channels: usize,
+    /// Square kernel extent `K` (taps per axis).
     pub kernel: usize,
+    /// Output stride.
     pub stride: usize,
+    /// Zero-padding halo per edge.
     pub padding: usize,
     /// Channel groups; both channel counts must divide by it. `1` = dense,
     /// `in_channels` = depthwise.
     pub groups: usize,
     /// Kernel-tap spacing; `1` = ordinary convolution.
     pub dilation: usize,
+    /// Reduced-precision data type (INT4 or INT8).
     pub precision: Precision,
 }
 
 impl ConvWorkload {
+    /// A dense 3x3 stride-1 same-padded INT4 conv (the paper's default
+    /// shape); adjust with the `with_*` builders.
     pub fn new(
         name: impl Into<String>,
         batch: usize,
@@ -197,10 +213,12 @@ impl ConvWorkload {
         (2..=5).map(|s| Self::resnet50_stage(s, 8)).collect()
     }
 
+    /// Output feature-map height (dilated-kernel output identity).
     pub fn out_height(&self) -> usize {
         (self.height + 2 * self.padding - self.effective_kernel()) / self.stride + 1
     }
 
+    /// Output feature-map width.
     pub fn out_width(&self) -> usize {
         (self.width + 2 * self.padding - self.effective_kernel()) / self.stride + 1
     }

@@ -40,14 +40,19 @@ impl Tree {
 /// Boosting hyper-parameters.
 #[derive(Debug, Clone)]
 pub struct GbtParams {
+    /// Boosting rounds (trees in the ensemble).
     pub n_trees: usize,
+    /// Maximum tree depth.
     pub max_depth: usize,
+    /// Shrinkage applied to each tree's contribution.
     pub learning_rate: f64,
+    /// Minimum samples a leaf may hold.
     pub min_samples_leaf: usize,
     /// L2 regularization on leaf values (XGBoost lambda).
     pub lambda: f64,
     /// Pairs sampled per example per round for the rank gradients.
     pub pairs_per_example: usize,
+    /// Seed for the pair sampling.
     pub seed: u64,
 }
 
@@ -74,18 +79,22 @@ pub struct Gbt {
 }
 
 impl Gbt {
+    /// An untrained ensemble with the given hyper-parameters.
     pub fn new(params: GbtParams) -> Self {
         Self { params, trees: Vec::new(), base_score: 0.0 }
     }
 
+    /// The fitted trees (empty until `fit_rank` runs on enough data).
     pub fn trees(&self) -> &[Tree] {
         &self.trees
     }
 
+    /// The hyper-parameters this ensemble was constructed with.
     pub fn params(&self) -> &GbtParams {
         &self.params
     }
 
+    /// Ranking score for one feature vector (higher = predicted faster).
     pub fn predict(&self, x: &[f64]) -> f64 {
         let mut s = self.base_score;
         for t in &self.trees {

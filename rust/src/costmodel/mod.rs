@@ -37,6 +37,7 @@ pub trait CostModel {
     /// measurements between sessions).
     fn clone_model(&self) -> Box<dyn CostModel>;
 
+    /// Convenience: featurize and predict in one step.
     fn predict_config(&self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> f64 {
         self.predict(&featurize(wl, cfg))
     }

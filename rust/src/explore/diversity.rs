@@ -33,6 +33,8 @@ pub struct DiversityAware {
 }
 
 impl DiversityAware {
+    /// Diversity-aware annealing over `space` with the given
+    /// hyper-parameters.
     pub fn new(space: SearchSpace, params: AnnealingParams) -> Self {
         Self { space, params, chains: Vec::new() }
     }

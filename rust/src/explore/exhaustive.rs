@@ -8,6 +8,7 @@ use crate::costmodel::CostModel;
 use crate::searchspace::{Genotype, SearchSpace};
 use crate::util::Rng;
 
+/// The exhaustive-enumeration exploration module.
 pub struct Exhaustive {
     space: SearchSpace,
     queue: Vec<Genotype>,
@@ -15,6 +16,7 @@ pub struct Exhaustive {
 }
 
 impl Exhaustive {
+    /// Enumerate `space`'s legal configs once, in index order.
     pub fn new(space: SearchSpace) -> Self {
         let queue = space.enumerate_legal();
         Self { space, queue, cursor: 0 }

@@ -38,20 +38,26 @@ use crate::util::Rng;
 /// are addressed by name through [`crate::tuner::Session`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExplorerKind {
+    /// The original AutoTVM annealing module.
     SimulatedAnnealing,
+    /// The paper's diversity-aware module (§3.4).
     #[default]
     DiversityAware,
+    /// Uniform random baseline.
     Random,
+    /// Enumerate every legal config.
     Exhaustive,
 }
 
 impl ExplorerKind {
+    /// Build this kind's module for `space` via the builtin registry.
     pub fn build(self, space: &SearchSpace) -> Box<dyn Explorer> {
         ExplorerRegistry::with_builtins()
             .build(self.name(), space)
             .expect("builtin explorer is registered")
     }
 
+    /// The canonical registry name of this kind.
     pub fn name(self) -> &'static str {
         match self {
             ExplorerKind::SimulatedAnnealing => "simulated-annealing",

@@ -8,11 +8,13 @@ use crate::costmodel::CostModel;
 use crate::searchspace::{Genotype, SearchSpace};
 use crate::util::Rng;
 
+/// The uniform-random exploration module.
 pub struct RandomSearch {
     space: SearchSpace,
 }
 
 impl RandomSearch {
+    /// Random search over `space`.
     pub fn new(space: SearchSpace) -> Self {
         Self { space }
     }

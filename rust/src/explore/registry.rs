@@ -83,6 +83,7 @@ impl ExplorerRegistry {
         self.factories.get_key_value(canon).map(|(k, _)| k.as_str())
     }
 
+    /// Whether `name` resolves to a registered factory (name or alias).
     pub fn contains(&self, name: &str) -> bool {
         self.resolve(name).is_some()
     }

@@ -18,9 +18,13 @@ use crate::util::Rng;
 /// Annealing hyper-parameters (paper §4.1 defaults).
 #[derive(Debug, Clone, Copy)]
 pub struct AnnealingParams {
+    /// Annealing iterations per proposal round.
     pub n_iters: usize,
+    /// Parallel annealing chains.
     pub parallel: usize,
+    /// Initial temperature.
     pub temp_start: f64,
+    /// Temperature subtracted per iteration.
     pub cooling: f64,
     /// Early-stop when the elite set hasn't changed for this many rounds.
     pub stop_stale: usize,
@@ -51,6 +55,7 @@ pub struct SimulatedAnnealing {
 }
 
 impl SimulatedAnnealing {
+    /// Annealing over `space` with the given hyper-parameters.
     pub fn new(space: SearchSpace, params: AnnealingParams) -> Self {
         Self { space, params, chains: Vec::new() }
     }

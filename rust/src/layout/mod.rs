@@ -14,8 +14,9 @@
 /// Atomic global-memory transaction size on modern NVIDIA GPUs (§3.3.1).
 pub const TRANSACTION_BYTES: usize = 32;
 
-/// WMMA register-tile geometry for reduced precision: 8 rows x 16 bytes.
+/// WMMA register-tile rows for reduced precision (8 rows x 16 bytes).
 pub const WMMA_TILE_ROWS: usize = 8;
+/// WMMA register-tile bytes per row.
 pub const WMMA_TILE_BYTES_PER_ROW: usize = 16;
 
 /// Global-memory layout of a feature map.
@@ -30,13 +31,18 @@ pub enum Layout {
 /// Logical tensor dims (byte-sized elements; INT4 halves `c` upstream).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TensorDims {
+    /// Batch extent.
     pub n: usize,
+    /// Height extent.
     pub h: usize,
+    /// Width extent.
     pub w: usize,
+    /// Channel extent, in bytes.
     pub c: usize,
 }
 
 impl TensorDims {
+    /// Total tensor size in bytes.
     pub fn bytes(&self) -> usize {
         self.n * self.h * self.w * self.c
     }
@@ -56,6 +62,7 @@ impl TensorDims {
             + cc
     }
 
+    /// Byte address of element (n, y, x, c) under the given layout.
     pub fn addr(&self, layout: Layout, n: usize, y: usize, x: usize, c: usize) -> usize {
         match layout {
             Layout::Nhwc => self.nhwc_addr(n, y, x, c),
@@ -96,7 +103,9 @@ pub fn wmma_tile_addresses(
 /// Per-tile coalescing summary the simulator charges.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CoalescingStats {
+    /// Bytes the warp actually wanted.
     pub useful_bytes: usize,
+    /// Distinct 32-byte transactions issued to fetch them.
     pub transactions: usize,
 }
 

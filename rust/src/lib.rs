@@ -69,10 +69,18 @@
 //! `repro tune --jobs n`) fans each candidate-measurement batch across a
 //! [`sim::pool::MeasurePool`] of worker threads — bit-identical to serial,
 //! just faster — and [`serve::Server`] executes requests on
-//! `ServerConfig::workers` threads with per-kind batching. The
+//! `ServerConfig::workers` threads with dynamic same-kind batching. The
 //! determinism guarantees and pool ownership rules are documented in
 //! [`sim::pool`] and `ARCHITECTURE.md`; the top-level `README.md` has the
-//! quickstart.
+//! quickstart and `docs/SERVING.md` the serving operator guide.
+//!
+//! The loop also runs the other way at serve time: the registry is
+//! hot-reloadable ([`serve::Server::reload_registry`], versioned
+//! [`serve::RegistrySnapshot`]s) and [`tuner::online::OnlineTuner`]
+//! watches live serve metrics, retunes hot or schedule-less request
+//! kinds with bounded warm-started sessions, and publishes improvements
+//! through that reload path — serving gets faster while it runs.
+#![deny(missing_docs)]
 
 pub mod conv;
 pub mod costmodel;
@@ -91,3 +99,19 @@ pub mod tuner;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;
+
+// Compile-check the documentation: every ```rust code block in the
+// repo-level markdown files becomes a doctest under `cargo test --doc`,
+// so the documented API can never silently rot. `cfg(doctest)` keeps
+// these shims out of real builds and out of `cargo doc` output.
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+pub struct ReadmeDoctests;
+
+#[cfg(doctest)]
+#[doc = include_str!("../../MIGRATION.md")]
+pub struct MigrationDoctests;
+
+#[cfg(doctest)]
+#[doc = include_str!("../../docs/SERVING.md")]
+pub struct ServingGuideDoctests;

@@ -27,6 +27,7 @@ use tcconv::runtime;
 use tcconv::searchspace::{SearchSpace, SpaceOptions};
 use tcconv::serve::{Server, ServerConfig, SubmitError};
 use tcconv::sim::{GpuSpec, Simulator};
+use tcconv::tuner::online::{OnlineTuner, RetunePolicy};
 use tcconv::tuner::{Session, SessionResult};
 use tcconv::zoo;
 
@@ -88,9 +89,20 @@ COMMANDS
             and dilated (deeplab_head) families — chaining transfer
             learning across stages, and writes one registry file
   serve     [--registry schedules.json] [--workers 4] [--requests 16]
+            [--max-batch 8] [--max-wait 2] [--retune] [--retune-trials 96]
+            [--retune-jobs 2] [--registry-out improved.json]
             loads the registry and routes synthetic requests through the
             worker pool using the tuned schedule per kind; reports per-kind
-            latency, an end-to-end latency histogram and per-worker load
+            latency, end-to-end latency / batch-size / queue-depth
+            histograms and per-worker load. --max-wait N holds underfull
+            batches open N ticks of 50 us for same-kind arrivals. --retune
+            runs an online re-tuning cycle after the burst: hot or
+            schedule-less kinds get a bounded warm-started Session on
+            --retune-jobs measurement workers and improvements publish via
+            registry hot-reload (a second burst then shows the effect);
+            --registry-out persists the final (possibly improved) registry.
+            With --retune, a missing --registry file starts empty instead
+            of erroring — the re-tuner fills it in
   table1    [--trials 500] [--seed N]
   fig14     [--trials 500] [--seeds 3]
   fig15     (accumulated ablation)
@@ -106,9 +118,18 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_else(|| "true".into());
-            out.insert(key.to_string(), val);
-            i += 2;
+            // a following `--flag` means this one is a bare boolean
+            // (e.g. `serve --retune --registry-out x`)
+            match args.get(i + 1).filter(|v| !v.starts_with("--")) {
+                Some(val) => {
+                    out.insert(key.to_string(), val.clone());
+                    i += 2;
+                }
+                None => {
+                    out.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            }
         } else {
             i += 1;
         }
@@ -244,12 +265,64 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Submit `requests` synthetic requests round-robin over `kinds` and
+/// wait for every response; returns how many executed under a
+/// registry-tuned (non-default) schedule.
+fn serve_burst(
+    server: &Server,
+    kinds: &[ConvWorkload],
+    requests: usize,
+    seed0: u64,
+) -> anyhow::Result<usize> {
+    let epi = Epilogue::default();
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let wl = &kinds[i % kinds.len()];
+        // retry on backpressure so every requested submission lands
+        loop {
+            let inst = ConvInstance::synthetic(wl, seed0 + i as u64);
+            match server.submit(&wl.name, inst, epi) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(SubmitError::Busy) => {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => anyhow::bail!("submit failed: {e:?}"),
+            }
+        }
+    }
+    let mut tuned_hits = 0usize;
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?;
+        if resp.schedule != tcconv::searchspace::ScheduleConfig::default() {
+            tuned_hits += 1;
+        }
+    }
+    Ok(tuned_hits)
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let path = flags.get("registry").cloned().unwrap_or_else(|| "schedules.json".into());
     let workers = flag_usize(flags, "workers", 4);
     let requests = flag_usize(flags, "requests", 16);
+    let max_batch = flag_usize(flags, "max-batch", 8);
+    let max_wait = flag_usize(flags, "max-wait", 2);
+    let retune = flags.contains_key("retune");
+    let retune_trials = flag_usize(flags, "retune-trials", 96);
+    let retune_jobs = flag_usize(flags, "retune-jobs", 2);
 
-    let registry = ScheduleRegistry::load(&path)?;
+    // with --retune, a *missing* registry file starts empty (the
+    // re-tuner fills it in); a present-but-unreadable/corrupt file still
+    // errors — silently starting empty there could let --registry-out
+    // overwrite a recoverable file and lose every tuned entry
+    let registry = if retune && !std::path::Path::new(&path).exists() {
+        eprintln!("note: {path} not found; starting with an empty registry (--retune fills it in)");
+        ScheduleRegistry::new()
+    } else {
+        ScheduleRegistry::load(&path)?
+    };
     println!("loaded {} tuned schedules from {path}", registry.len());
 
     // map registry kinds back to concrete convs (zoo built once, batch 1
@@ -274,42 +347,71 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             unmatched.join(", ")
         );
     }
+    if kinds.is_empty() && retune {
+        // nothing tuned yet: drive resnet50 traffic so the re-tuner has
+        // hot, schedule-less kinds to find
+        kinds = zoo::resnet50(1).layers.into_iter().map(|l| l.workload).collect();
+        println!("registry empty: serving resnet50 kinds under the fallback schedule");
+    }
     anyhow::ensure!(
         !kinds.is_empty(),
         "no registry kind matches a zoo workload (was the registry written by tune-net?)"
     );
 
     let server = Server::from_registry(
-        ServerConfig { workers, queue_depth: 256, max_batch: 8 },
+        ServerConfig { workers, queue_depth: 256, max_batch, max_wait },
         registry,
     );
-    println!("serving {requests} synthetic requests across {} kinds, {workers} workers", kinds.len());
-    let epi = Epilogue::default();
-    let mut pending = Vec::new();
-    for i in 0..requests {
-        let wl = &kinds[i % kinds.len()];
-        // retry on backpressure so every requested submission lands
-        loop {
-            let inst = ConvInstance::synthetic(wl, i as u64);
-            match server.submit(&wl.name, inst, epi) {
-                Ok(rx) => {
-                    pending.push(rx);
-                    break;
-                }
-                Err(SubmitError::Busy) => {
-                    std::thread::sleep(std::time::Duration::from_millis(1));
-                }
-                Err(e) => anyhow::bail!("submit failed: {e:?}"),
+    println!(
+        "serving {requests} synthetic requests across {} kinds, {workers} workers \
+         (max_batch {max_batch}, max_wait {max_wait})",
+        kinds.len()
+    );
+    let mut tuned_hits = serve_burst(&server, &kinds, requests, 0)?;
+
+    if retune {
+        println!("\nonline re-tuning cycle ({retune_trials} trials/kind, {retune_jobs} measurement jobs):");
+        let mut tuner = OnlineTuner::from_zoo(
+            1,
+            RetunePolicy {
+                trials: retune_trials,
+                jobs: retune_jobs,
+                max_kinds_per_cycle: kinds.len().max(1),
+                ..Default::default()
+            },
+        );
+        let report = tuner.run_cycle(&server.handle())?;
+        for o in &report.outcomes {
+            println!(
+                "  {:<22} {:?}: tuned {:.2} us (prev {}) -> {}",
+                o.kind,
+                o.reason,
+                o.tuned_runtime_us,
+                o.previous_runtime_us
+                    .map(|p| format!("{p:.2} us"))
+                    .unwrap_or_else(|| "fallback".into()),
+                if o.published { "published" } else { "kept previous" }
+            );
+        }
+        match report.published_version {
+            Some(v) => {
+                println!("  registry hot-reloaded to snapshot v{v} — second burst under new schedules:");
+                tuned_hits += serve_burst(&server, &kinds, requests, 1_000_000)?;
             }
+            None => println!("  nothing improved enough to publish"),
         }
     }
-    let mut tuned_hits = 0usize;
-    for rx in pending {
-        let resp = rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?;
-        if resp.schedule != tcconv::searchspace::ScheduleConfig::default() {
-            tuned_hits += 1;
-        }
+
+    if let Some(out) = flags.get("registry-out") {
+        let snap = server.registry_snapshot();
+        snap.registry().save(out)?;
+        println!(
+            "registry snapshot v{} ({} entries) written to {out}",
+            snap.version(),
+            snap.registry().len()
+        );
     }
+
     let metrics = server.shutdown();
     println!("\nper-kind latency (us):");
     for kind in metrics.kinds() {
@@ -321,6 +423,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
     println!("\nend-to-end latency histogram (queue + exec):");
     print!("{}", metrics.total_latency_histogram().render(40));
+    println!("\nbatch-size histogram (requests coalesced per executed batch):");
+    print!("{}", metrics.batch_histogram().render(40));
+    println!("\nqueue-depth histogram (sampled at submit):");
+    print!("{}", metrics.queue_depth_histogram().render(40));
     let counts = metrics.worker_counts();
     println!(
         "per-worker completions: [{}]",

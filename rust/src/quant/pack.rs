@@ -2,7 +2,9 @@
 //! `python/compile/kernels/pack.py` (validated through golden vectors, see
 //! `gen_golden` and `python/tests/test_pack.py`).
 
+/// Smallest signed 4-bit value.
 pub const INT4_MIN: i32 = -8;
+/// Largest signed 4-bit value.
 pub const INT4_MAX: i32 = 7;
 /// int4 values per packed int32 word.
 pub const PACK_FACTOR: usize = 8;
@@ -93,7 +95,9 @@ pub fn unpack_int4(words: &[i32]) -> Vec<i32> {
 /// the arithmetic itself is fixed and shared with the L1 Pallas kernel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Epilogue {
+    /// Clamp negative accumulators to zero before requantization.
     pub relu: bool,
+    /// Power-of-two requantization scale (arithmetic right shift).
     pub requant_shift: u32,
 }
 

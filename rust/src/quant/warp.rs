@@ -39,18 +39,22 @@ pub struct WarpRegisterFile {
 }
 
 impl WarpRegisterFile {
+    /// `n_regs` zeroed registers.
     pub fn new(n_regs: usize) -> Self {
         Self { regs: vec![[0; WARP_SIZE]; n_regs], shuffles: 0 }
     }
 
+    /// A register file preloaded with the given output tiles.
     pub fn from_tiles(tiles: &[[i32; WARP_SIZE]]) -> Self {
         Self { regs: tiles.to_vec(), shuffles: 0 }
     }
 
+    /// Read register `r` across all 32 lanes.
     pub fn reg(&self, r: usize) -> &[i32; WARP_SIZE] {
         &self.regs[r]
     }
 
+    /// Overwrite register `r` across all 32 lanes.
     pub fn set_reg(&mut self, r: usize, v: [i32; WARP_SIZE]) {
         self.regs[r] = v;
     }

@@ -10,16 +10,24 @@ use crate::tuner::History;
 /// One row of Table 1.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
+    /// ResNet50 stage (2..=5).
     pub stage: usize,
+    /// MAC operation count x2.
     pub ops: u64,
+    /// Best no-optimization (TVM-baseline) runtime, microseconds.
     pub baseline_us: f64,
+    /// Exhaustive optimum of the full space, microseconds.
     pub exhaustive_us: f64,
+    /// AutoTVM-searched runtime, microseconds.
     pub searched_us: f64,
+    /// The searched schedule.
     pub searched_cfg: ScheduleConfig,
+    /// Measurements the search spent.
     pub trials: usize,
 }
 
 impl Table1Row {
+    /// Baseline / searched speedup — the paper's headline ratio.
     pub fn speedup(&self) -> f64 {
         self.baseline_us / self.searched_us
     }
@@ -84,10 +92,15 @@ pub fn print_fig14_csv(curves: &[(&str, &History)]) {
 /// Marginal/accumulated ablation rows (Fig. 15 / Fig. 16).
 #[derive(Debug, Clone)]
 pub struct AblationRow {
+    /// ResNet50 stage (2..=5).
     pub stage: usize,
+    /// Best runtime with no optimization, microseconds.
     pub base_us: f64,
+    /// ... plus duplicate-aware loads.
     pub plus_dup_us: f64,
+    /// ... plus register-level packing.
     pub plus_pack_us: f64,
+    /// ... plus the NHWCnc layout (all three on).
     pub plus_layout_us: f64,
 }
 
@@ -111,6 +124,7 @@ impl AblationRow {
     }
 }
 
+/// Print the Fig. 15 (accumulated) or Fig. 16 (marginal) ablation table.
 pub fn print_ablation(rows: &[AblationRow], accumulated: bool) {
     let title = if accumulated {
         "Fig. 15: accumulated speedup (x) as optimizations are stacked"

@@ -45,10 +45,15 @@ fn as_i32(bytes: &[u8]) -> Vec<i32> {
 /// Outcome of one artifact verification.
 #[derive(Debug)]
 pub struct GoldenReport {
+    /// Stage key verified.
     pub stage: String,
+    /// Whether every output word matched the python oracle.
     pub matches: bool,
+    /// Output words compared.
     pub elements: usize,
+    /// First `(index, got, want)` disagreement, if any.
     pub first_mismatch: Option<(usize, i32, i32)>,
+    /// Wall-clock of the PJRT execution, microseconds.
     pub exec_us: f64,
 }
 

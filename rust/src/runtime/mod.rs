@@ -20,15 +20,19 @@ use crate::util::Json;
 /// Tensor metadata from the artifact manifest.
 #[derive(Debug, Clone)]
 pub struct TensorMeta {
+    /// Tensor shape, outermost first.
     pub shape: Vec<usize>,
-    pub dtype: String, // "s8" | "s32"
+    /// Element dtype: `"s8"` or `"s32"`.
+    pub dtype: String,
 }
 
 impl TensorMeta {
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Total byte length at this dtype.
     pub fn byte_len(&self) -> usize {
         let per = match self.dtype.as_str() {
             "s8" => 1,
@@ -54,17 +58,26 @@ impl TensorMeta {
 /// Parsed `conv_<stage>.meta.json`.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Stage key (e.g. "stage2").
     pub stage: String,
+    /// Path to the AOT-lowered HLO text.
     pub hlo_path: PathBuf,
+    /// Path to the golden (x, w, bias, y) blob.
     pub golden_path: PathBuf,
+    /// Input tensor metadata: x, w, bias.
     pub inputs: Vec<TensorMeta>,
+    /// Output tensor metadata (packed-INT4 words as s32).
     pub output: TensorMeta,
+    /// The schedule the artifact was lowered with.
     pub schedule: ScheduleConfig,
+    /// im2col GEMM dims (M, N, K).
     pub gemm: (usize, usize, usize),
+    /// MAC operation count x2.
     pub ops: u64,
 }
 
 impl ArtifactMeta {
+    /// Parse `dir/conv_<stage>.meta.json`.
     pub fn load(dir: &Path, stage: &str) -> Result<Self> {
         let meta_path = dir.join(format!("conv_{stage}.meta.json"));
         let text = std::fs::read_to_string(&meta_path)
@@ -114,6 +127,7 @@ impl Engine {
         Ok(Self { client })
     }
 
+    /// The PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -135,6 +149,7 @@ impl Engine {
 #[cfg(feature = "pjrt")]
 pub struct LoadedConv {
     exe: xla::PjRtLoadedExecutable,
+    /// The artifact's parsed metadata.
     pub meta: ArtifactMeta,
 }
 
@@ -207,6 +222,7 @@ pub struct Engine {
 
 #[cfg(not(feature = "pjrt"))]
 impl Engine {
+    /// Stub constructor: always errors (build with `--features pjrt`).
     pub fn cpu() -> Result<Self> {
         bail!(
             "PJRT runtime unavailable: rebuild with `--features pjrt` after \
@@ -214,12 +230,14 @@ impl Engine {
         )
     }
 
+    /// Stub platform name.
     pub fn platform(&self) -> String {
         "unavailable".to_string()
     }
 
+    /// Stub loader: parses the metadata (so manifest errors surface
+    /// first), then errors.
     pub fn load_conv(&self, dir: &Path, stage: &str) -> Result<LoadedConv> {
-        // parse the metadata anyway so manifest errors surface first
         let _meta = ArtifactMeta::load(dir, stage)?;
         bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
     }
@@ -228,15 +246,18 @@ impl Engine {
 /// Stub twin of the compiled-executable handle (no `pjrt` feature).
 #[cfg(not(feature = "pjrt"))]
 pub struct LoadedConv {
+    /// The artifact's parsed metadata.
     pub meta: ArtifactMeta,
 }
 
 #[cfg(not(feature = "pjrt"))]
 impl LoadedConv {
+    /// Stub execute: always errors (built without the `pjrt` feature).
     pub fn run(&self, _x: &[i8], _w: &[i8], _bias: &[i32]) -> Result<Vec<i32>> {
         bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
     }
 
+    /// Stub timing: always errors (built without the `pjrt` feature).
     pub fn time_once(&self, _x: &[i8], _w: &[i8], _bias: &[i32]) -> Result<f64> {
         bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
     }

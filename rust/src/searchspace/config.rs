@@ -20,15 +20,23 @@ pub const MMA_K_INT8: usize = 16;
 /// flags of §3.1–3.3.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ScheduleConfig {
+    /// Warps along M per thread block (`BLK-ROW-WARPS`).
     pub blk_row_warps: usize,
+    /// Warps along N per thread block (`BLK-COL-WARPS`).
     pub blk_col_warps: usize,
+    /// WMMA tiles along M per warp (`WARP-ROW-TILES`).
     pub warp_row_tiles: usize,
+    /// WMMA tiles along N per warp (`WARP-COL-TILES`).
     pub warp_col_tiles: usize,
+    /// Input-channel (K) loop split factor (`CHUNK`).
     pub chunk: usize,
     /// 0 = input-channel outer loop, 1 = kernel-height outer loop.
     pub reorder_inner: usize,
+    /// §3.1 duplicate-aware im2col load.
     pub dup_aware: bool,
+    /// §3.2 register-level epilogue + INT4 output packing.
     pub reg_packing: bool,
+    /// §3.3 NHWCnc coalesced global layout.
     pub nhwcnc_layout: bool,
 }
 
@@ -89,10 +97,12 @@ impl ScheduleConfig {
         self.chunk * MMA_K
     }
 
+    /// Warps launched per thread block.
     pub fn warps_per_block(&self) -> usize {
         self.blk_row_warps * self.blk_col_warps
     }
 
+    /// Threads launched per thread block (32 per warp).
     pub fn threads_per_block(&self) -> usize {
         self.warps_per_block() * 32
     }

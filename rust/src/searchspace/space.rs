@@ -13,7 +13,9 @@ pub type Genotype = Vec<u8>;
 /// One tunable dimension.
 #[derive(Debug, Clone)]
 pub struct Knob {
+    /// Knob name (matches the `ScheduleConfig` field).
     pub name: &'static str,
+    /// The values a genotype index selects among.
     pub values: Vec<usize>,
 }
 
@@ -24,7 +26,9 @@ pub struct SpaceOptions {
     /// false (the paper's §4.3 setting: "the search space of the original
     /// AutoTVM"), the flags are pinned to `pinned_flags`.
     pub search_opt_flags: bool,
-    pub pinned_flags: [bool; 3], // dup_aware, reg_packing, nhwcnc_layout
+    /// Pinned `[dup_aware, reg_packing, nhwcnc_layout]` values used when
+    /// the flags are not searched.
+    pub pinned_flags: [bool; 3],
 }
 
 impl Default for SpaceOptions {
@@ -58,6 +62,8 @@ pub struct SearchSpace {
 const POW2: [usize; 4] = [1, 2, 4, 8];
 
 impl SearchSpace {
+    /// The knob space for one workload; legality is judged on its
+    /// per-group GEMM with N/K padded to the MMA atom.
     pub fn for_workload(wl: &ConvWorkload, opts: SpaceOptions) -> Self {
         let mut knobs = vec![
             Knob { name: "blk_row_warps", values: POW2.to_vec() },
@@ -83,6 +89,7 @@ impl SearchSpace {
         }
     }
 
+    /// The tunable dimensions, in genotype order.
     pub fn knobs(&self) -> &[Knob] {
         &self.knobs
     }
@@ -92,6 +99,7 @@ impl SearchSpace {
         &self.wl
     }
 
+    /// Number of knobs (== genotype length).
     pub fn n_knobs(&self) -> usize {
         self.knobs.len()
     }
@@ -133,6 +141,8 @@ impl SearchSpace {
         g
     }
 
+    /// Whether the decoded schedule's tiles divide this workload's
+    /// (padded, per-group) GEMM exactly.
     pub fn is_legal(&self, g: &Genotype) -> bool {
         let (m, n, k) = self.gemm;
         self.decode(g).is_legal_for(m, n, k)

@@ -1,5 +1,12 @@
 //! Per-kind serving metrics: queue/exec latency percentiles, log-scaled
-//! latency histograms, batch sizes, and per-worker completion counters.
+//! latency histograms, batch-size and queue-depth histograms, and
+//! per-worker completion counters.
+//!
+//! The batch-size and queue-depth histograms are what the background
+//! re-tuner ([`crate::tuner::online`]) and a capacity planner read: batch
+//! sizes say whether the dynamic batcher's `max_wait` window is actually
+//! coalescing anything, and queue depth says how close `submit` is to
+//! backpressure.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -103,12 +110,136 @@ impl LatencyHistogram {
     }
 }
 
+/// Sizes below this get one exact bucket each.
+const SIZE_EXACT: usize = 32;
+/// Log-2 buckets covering `[32,64) .. [512,1024)`, plus one open-ended
+/// `1024+` bucket.
+const SIZE_LOG: usize = 6;
+/// Total buckets in a [`SizeHistogram`].
+const SIZE_BUCKETS: usize = SIZE_EXACT + SIZE_LOG;
+
+/// A small-integer histogram: exact counts for sizes `0..32`, log-2
+/// buckets above (`[32,64)`, `[64,128)`, ... `1024+`), so a 40-deep
+/// queue and a 255-deep queue — one request from backpressure at the
+/// default `queue_depth` of 256 — render differently.
+///
+/// Latencies get pure log-2 buckets ([`LatencyHistogram`]) because they
+/// span six orders of magnitude; batch sizes and queue depths are small
+/// integers where the *exact* distribution is the interesting part —
+/// "mostly 1 with a tail of 8s" and "uniformly 4" have the same mean and
+/// opposite operational meanings — with a coarse tail for depth spikes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SizeHistogram {
+    counts: Vec<u64>,
+}
+
+impl Default for SizeHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SizeHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self { counts: vec![0; SIZE_BUCKETS] }
+    }
+
+    fn bucket_of(size: usize) -> usize {
+        if size < SIZE_EXACT {
+            size
+        } else {
+            // 32..63 -> first log bucket, doubling per bucket after
+            let log = (size.ilog2() as usize) - 5;
+            SIZE_EXACT + log.min(SIZE_LOG - 1)
+        }
+    }
+
+    /// The `[lo, hi)` range bucket `i` covers (`hi == usize::MAX` for
+    /// the open-ended final bucket).
+    fn bucket_range(i: usize) -> (usize, usize) {
+        if i < SIZE_EXACT {
+            (i, i + 1)
+        } else if i == SIZE_BUCKETS - 1 {
+            (1usize << (i - SIZE_EXACT + 5), usize::MAX)
+        } else {
+            (1usize << (i - SIZE_EXACT + 5), 1usize << (i - SIZE_EXACT + 6))
+        }
+    }
+
+    /// Record one observation of `size`.
+    pub fn record(&mut self, size: usize) {
+        self.counts[Self::bucket_of(size)] += 1;
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Mean observed size. Ranged-bucket observations count as the
+    /// bucket's lower bound, so the mean is a (tight) lower bound.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: u64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Self::bucket_range(i).0 as u64 * c)
+            .sum();
+        sum as f64 / n as f64
+    }
+
+    /// The non-empty `(lo, hi, count)` buckets in size order; `hi` is
+    /// exclusive (`lo + 1` for the exact buckets, `usize::MAX` for the
+    /// open-ended final bucket).
+    pub fn buckets(&self) -> Vec<(usize, usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let (lo, hi) = Self::bucket_range(i);
+                (lo, hi, c)
+            })
+            .collect()
+    }
+
+    /// ASCII bar rendering (one line per non-empty bucket), bars scaled
+    /// to `width` characters — what `repro serve` prints.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        let mut out = String::new();
+        for (lo, hi, c) in self.buckets() {
+            let bar = "#".repeat(((c as f64 / max as f64) * width as f64).ceil() as usize);
+            let label = if hi == usize::MAX {
+                format!("{lo}+")
+            } else if hi == lo + 1 {
+                lo.to_string()
+            } else {
+                format!("{lo}-{}", hi - 1)
+            };
+            out.push_str(&format!("{label:>8}  {bar} {c}\n"));
+        }
+        out
+    }
+}
+
 /// Thread-safe metrics sink shared by the workers.
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<HashMap<String, KindStats>>,
     /// Completions per worker index (load-balance visibility).
     worker_counts: Mutex<Vec<u64>>,
+    /// One observation per *executed batch* (not per request): how many
+    /// requests the dynamic batcher coalesced.
+    batch_hist: Mutex<SizeHistogram>,
+    /// One observation per accepted `submit`: queue depth right after the
+    /// request was enqueued.
+    queue_depth_hist: Mutex<SizeHistogram>,
 }
 
 fn pct(sorted: &[f64], q: f64) -> f64 {
@@ -140,6 +271,33 @@ impl Metrics {
             w.resize(worker + 1, 0);
         }
         w[worker] += 1;
+    }
+
+    /// Record one executed batch of `size` requests (called once per
+    /// batch by the worker that ran it).
+    pub fn observe_batch(&self, size: usize) {
+        self.batch_hist.lock().unwrap().record(size);
+    }
+
+    /// Record the queue depth observed right after a `submit` enqueued a
+    /// request.
+    pub fn observe_queue_depth(&self, depth: usize) {
+        self.queue_depth_hist.lock().unwrap().record(depth);
+    }
+
+    /// Distribution of executed batch sizes (one sample per batch). A
+    /// histogram that is all 1s means the batcher never coalesces —
+    /// either traffic has no same-kind locality or `max_wait` is too
+    /// small to cover the arrival gap.
+    pub fn batch_histogram(&self) -> SizeHistogram {
+        self.batch_hist.lock().unwrap().clone()
+    }
+
+    /// Distribution of queue depth at submit time (one sample per
+    /// accepted request). Depth hugging `queue_depth` means backpressure
+    /// is imminent.
+    pub fn queue_depth_histogram(&self) -> SizeHistogram {
+        self.queue_depth_hist.lock().unwrap().clone()
     }
 
     /// Total requests completed across all kinds.
@@ -265,6 +423,72 @@ mod tests {
         let text = h.render(10);
         assert!(text.contains("##########"), "{text}");
         assert_eq!(text.lines().count(), 2, "{text}");
+    }
+
+    #[test]
+    fn size_histogram_exact_buckets_and_mean() {
+        let mut h = SizeHistogram::new();
+        for s in [1, 1, 1, 4, 8] {
+            h.record(s);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.buckets(), vec![(1, 2, 3), (4, 5, 1), (8, 9, 1)]);
+        assert!((h.mean() - 3.0).abs() < 1e-9);
+        assert!(h.render(10).lines().count() == 3);
+    }
+
+    #[test]
+    fn size_histogram_log_tail_distinguishes_depths() {
+        // the backpressure signal: a mildly queued server (depth ~40) and
+        // one a hair from Busy at queue_depth 256 (depth 255) must land
+        // in different buckets
+        let mut h = SizeHistogram::new();
+        h.record(40);
+        h.record(255);
+        h.record(1000);
+        h.record(5000); // joins 1024+ with nothing else
+        let buckets = h.buckets();
+        assert_eq!(
+            buckets,
+            vec![(32, 64, 1), (128, 256, 1), (512, 1024, 1), (1024, usize::MAX, 1)]
+        );
+        let text = h.render(10);
+        assert!(text.contains("32-63"), "{text}");
+        assert!(text.contains("128-255"), "{text}");
+        assert!(text.contains("1024+"), "{text}");
+    }
+
+    #[test]
+    fn size_histogram_boundaries() {
+        // 31 is the last exact bucket; 32 is the first ranged one
+        let mut h = SizeHistogram::new();
+        h.record(31);
+        h.record(32);
+        assert_eq!(h.buckets(), vec![(31, 32, 1), (32, 64, 1)]);
+        // lower-bound mean: (31 + 32) / 2
+        assert!((h.mean() - 31.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_batch_and_queue_depth_histograms() {
+        let m = Metrics::new();
+        m.observe_batch(4);
+        m.observe_batch(1);
+        m.observe_queue_depth(0);
+        m.observe_queue_depth(7);
+        m.observe_queue_depth(7);
+        assert_eq!(m.batch_histogram().count(), 2);
+        assert!((m.batch_histogram().mean() - 2.5).abs() < 1e-9);
+        assert_eq!(m.queue_depth_histogram().buckets(), vec![(0, 1, 1), (7, 8, 2)]);
+    }
+
+    #[test]
+    fn empty_size_histogram_is_sane() {
+        let h = SizeHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.buckets().is_empty());
+        assert!(h.render(10).is_empty());
     }
 
     #[test]

@@ -15,37 +15,65 @@
 //! under its tuned schedule, falling back to `ScheduleConfig::default()`
 //! for kinds the registry does not know.
 //!
-//! # Concurrency model
+//! # Dynamic batching
 //!
 //! [`ServerConfig::workers`] threads pull from one bounded queue. A worker
 //! claims a *head-of-line batch*: the oldest request plus up to
 //! `max_batch - 1` queued requests of the same kind, preserving the
-//! arrival order of everything it skips. One kind per batch means one
-//! registry lookup per batch, and the batch reuses one
-//! [`ExecScratch`](crate::conv::ExecScratch) — the laid-out im2col operand
-//! and accumulator buffers of
-//! [`qconv2d_scheduled`](crate::conv::qconv2d_scheduled) are recycled
-//! across the batch instead of reallocated per request. [`Metrics`] records
-//! queue/exec latency per kind (percentiles and log-scaled
-//! [`LatencyHistogram`]s) plus per-worker completion counters, so skewed
-//! load-balance is visible, not guessed.
+//! arrival order of everything it skips. If the batch is still underfull,
+//! the worker holds it open for up to [`ServerConfig::max_wait`] ticks of
+//! [`BATCH_WAIT_TICK_US`] microseconds each, absorbing same-kind arrivals
+//! as they land (`max_wait = 0` restores flush-immediately behaviour).
+//! One kind per batch means one registry lookup per batch, and the batch
+//! reuses one [`ExecScratch`](crate::conv::ExecScratch) — the cached
+//! im2col gather map and the accumulator buffers are recycled across the
+//! batch instead of rebuilt per request, which is where batched
+//! throughput comes from (see `benches/serving.rs`).
+//!
+//! # Hot reload
+//!
+//! The registry lives behind a versioned, atomically swapped snapshot
+//! ([`RegistrySnapshot`]): [`Server::reload_registry`] (or
+//! [`ServeHandle::reload_registry`] from another thread — the background
+//! re-tuner's publish path, [`crate::tuner::online`]) installs a new
+//! registry without stopping anything. Workers resolve the snapshot once
+//! per batch, so a reload takes effect at the next batch boundary, no
+//! request is ever dropped, and every [`Response`] records the
+//! [`Response::registry_version`] it executed under.
+//!
+//! # Shutdown
+//!
+//! [`Server::shutdown`] guarantees a full drain: it first stops accepting
+//! (`submit` returns [`SubmitError::ShuttingDown`]), then waits until
+//! every previously accepted request has been answered, and only then
+//! joins the workers — see the method docs for the exact guarantee.
+//!
+//! [`Metrics`] records queue/exec latency per kind (percentiles and
+//! log-scaled [`LatencyHistogram`]s), batch-size and queue-depth
+//! [`SizeHistogram`]s, plus per-worker completion counters, so skewed
+//! load-balance and a non-coalescing batcher are visible, not guessed.
 #![deny(missing_docs)]
 
 mod metrics;
 
-pub use metrics::{LatencyHistogram, LatencySummary, Metrics};
+pub use metrics::{LatencyHistogram, LatencySummary, Metrics, SizeHistogram};
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::conv::{qconv2d_scheduled_with, ConvInstance, ExecScratch};
 use crate::quant::Epilogue;
 use crate::registry::ScheduleRegistry;
 use crate::searchspace::ScheduleConfig;
+
+/// Length of one batcher wait tick, microseconds: the granularity at
+/// which an underfull batch re-checks the queue for same-kind arrivals
+/// (see [`ServerConfig::max_wait`]).
+pub const BATCH_WAIT_TICK_US: u64 = 50;
 
 /// Serving configuration.
 #[derive(Debug, Clone)]
@@ -57,11 +85,49 @@ pub struct ServerConfig {
     /// Max requests a worker pulls per batch (same conv kind only —
     /// batching across kinds would need separate executables anyway).
     pub max_batch: usize,
+    /// How many ticks of [`BATCH_WAIT_TICK_US`] microseconds a worker
+    /// holds an underfull batch open, waiting for more same-kind
+    /// requests to arrive. `0` (the default) flushes immediately —
+    /// latency-first; bursty traffic benefits from a few ticks of slack
+    /// (`repro serve --max-wait`).
+    pub max_wait: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { workers: 4, queue_depth: 256, max_batch: 8 }
+        Self { workers: 4, queue_depth: 256, max_batch: 8, max_wait: 0 }
+    }
+}
+
+/// A versioned, immutable view of the schedule registry — what the
+/// workers route with.
+///
+/// Snapshots are cheap to share (`Arc`) and never mutated: a reload
+/// installs a *new* snapshot with `version + 1` and in-flight batches
+/// keep the one they resolved, so there is no torn read and no locking
+/// on the request path beyond one `Arc` clone per batch.
+#[derive(Debug)]
+pub struct RegistrySnapshot {
+    version: u64,
+    registry: ScheduleRegistry,
+}
+
+impl RegistrySnapshot {
+    /// Monotonic snapshot version; starts at 1 for the registry the
+    /// server was constructed with, +1 per reload.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The tuned-schedule registry this snapshot carries.
+    pub fn registry(&self) -> &ScheduleRegistry {
+        &self.registry
+    }
+
+    /// The schedule requests of `kind` execute under (tuned or the
+    /// default fallback).
+    pub fn schedule_for(&self, kind: &str) -> ScheduleConfig {
+        self.registry.schedule_for(kind)
     }
 }
 
@@ -99,6 +165,10 @@ pub struct Response {
     /// The schedule the worker executed this request with (tuned per kind
     /// via the registry, or the default fallback).
     pub schedule: ScheduleConfig,
+    /// Version of the [`RegistrySnapshot`] the batch resolved its
+    /// schedule from — how a caller (or test) proves a hot reload took
+    /// effect.
+    pub registry_version: u64,
 }
 
 /// Submission outcome.
@@ -106,27 +176,160 @@ pub struct Response {
 pub enum SubmitError {
     /// Queue at capacity — backpressure (caller retries / sheds).
     Busy,
-    /// Server stopping.
+    /// Server stopping; no new requests are accepted.
     ShuttingDown,
 }
 
 struct Shared {
     queue: Mutex<VecDeque<Request>>,
+    /// Signaled on every accepted submit; workers park here.
     available: Condvar,
+    /// Signaled after every executed batch; `shutdown` drains on it.
+    idle: Condvar,
+    /// False once the workers have been told to exit.
     running: AtomicBool,
-    submitted: AtomicU64,
+    /// False once shutdown began: `submit` refuses new requests. Flipped
+    /// under the queue lock so the drain accounting has a clean cutoff.
+    accepting: AtomicBool,
+    /// Requests accepted by `submit` (queued or in flight).
+    accepted: AtomicU64,
+    /// Requests answered (response sent).
     completed: AtomicU64,
-    /// Tuned schedules by request kind; read-only once serving starts.
-    registry: ScheduleRegistry,
+    /// Max queued requests before `submit` returns Busy.
+    queue_depth: usize,
+    /// Submission id source.
+    next_id: AtomicU64,
+    /// Current registry snapshot; swapped whole on reload.
+    registry: Mutex<Arc<RegistrySnapshot>>,
+}
+
+impl Shared {
+    fn submit(
+        &self,
+        metrics: &Metrics,
+        kind: &str,
+        instance: ConvInstance,
+        epilogue: Epilogue,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        let (tx, rx) = channel();
+        let depth = {
+            let mut q = self.queue.lock().unwrap();
+            if !self.accepting.load(Ordering::SeqCst) {
+                return Err(SubmitError::ShuttingDown);
+            }
+            if q.len() >= self.queue_depth {
+                return Err(SubmitError::Busy); // backpressure
+            }
+            q.push_back(Request {
+                id: self.next_id.fetch_add(1, Ordering::SeqCst),
+                kind: kind.to_string(),
+                instance,
+                epilogue,
+                enqueued: Instant::now(),
+                respond: tx,
+            });
+            self.accepted.fetch_add(1, Ordering::SeqCst);
+            q.len()
+        };
+        metrics.observe_queue_depth(depth);
+        // notify_all, not notify_one: a worker holding a batch open in its
+        // max_wait window may consume a notification meant for an idle
+        // sibling; waking everyone lets whoever can act, act
+        self.available.notify_all();
+        Ok(rx)
+    }
+
+    fn snapshot(&self) -> Arc<RegistrySnapshot> {
+        Arc::clone(&self.registry.lock().unwrap())
+    }
+
+    fn reload(&self, registry: ScheduleRegistry) -> u64 {
+        let mut slot = self.registry.lock().unwrap();
+        let version = slot.version + 1;
+        *slot = Arc::new(RegistrySnapshot { version, registry });
+        version
+    }
+
+    /// Read-modify-write of the *current* registry under the registry
+    /// lock: no concurrent reload can be lost between the read and the
+    /// swap (unlike cloning a snapshot, mutating it for a while, and
+    /// reloading the stale clone).
+    fn update(&self, f: impl FnOnce(&mut ScheduleRegistry)) -> u64 {
+        let mut slot = self.registry.lock().unwrap();
+        let mut registry = slot.registry.clone();
+        f(&mut registry);
+        let version = slot.version + 1;
+        *slot = Arc::new(RegistrySnapshot { version, registry });
+        version
+    }
 }
 
 /// The serving coordinator.
 pub struct Server {
     shared: Arc<Shared>,
-    cfg: ServerConfig,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
-    next_id: AtomicU64,
+}
+
+/// A cloneable, thread-safe handle to a running [`Server`]: submit
+/// requests, read metrics, and publish registry reloads from other
+/// threads — the surface the background re-tuner
+/// ([`crate::tuner::online::OnlineTuner`]) operates through.
+///
+/// Handles hold `Arc`s into the server's shared state, so they stay
+/// valid (but inert — submissions are refused) after
+/// [`Server::shutdown`].
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: Arc<Shared>,
+    metrics: Arc<Metrics>,
+}
+
+impl ServeHandle {
+    /// Submit one request; the response arrives on the returned channel.
+    /// Identical semantics to [`Server::submit`].
+    pub fn submit(
+        &self,
+        kind: &str,
+        instance: ConvInstance,
+        epilogue: Epilogue,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        self.shared.submit(&self.metrics, kind, instance, epilogue)
+    }
+
+    /// Live metrics sink (latency summaries, histograms, worker counters).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The current registry snapshot (see [`Server::registry_snapshot`]).
+    pub fn registry_snapshot(&self) -> Arc<RegistrySnapshot> {
+        self.shared.snapshot()
+    }
+
+    /// Atomically install a new registry; returns the new snapshot
+    /// version (see [`Server::reload_registry`]).
+    pub fn reload_registry(&self, registry: ScheduleRegistry) -> u64 {
+        self.shared.reload(registry)
+    }
+
+    /// Atomically edit the **current** registry in place (see
+    /// [`Server::update_registry`]) — the publish path for incremental
+    /// producers like the background re-tuner, which must not revert
+    /// entries a concurrent reload installed while they were computing.
+    pub fn update_registry(&self, f: impl FnOnce(&mut ScheduleRegistry)) -> u64 {
+        self.shared.update(f)
+    }
+
+    /// Requests currently queued (not yet claimed by a worker).
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Requests answered since the server started.
+    pub fn completed(&self) -> u64 {
+        self.shared.completed.load(Ordering::SeqCst)
+    }
 }
 
 impl Server {
@@ -144,21 +347,26 @@ impl Server {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
+            idle: Condvar::new(),
             running: AtomicBool::new(true),
-            submitted: AtomicU64::new(0),
+            accepting: AtomicBool::new(true),
+            accepted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
-            registry,
+            queue_depth: cfg.queue_depth,
+            next_id: AtomicU64::new(1),
+            registry: Mutex::new(Arc::new(RegistrySnapshot { version: 1, registry })),
         });
         let metrics = Arc::new(Metrics::new());
         let workers = (0..cfg.workers.max(1))
             .map(|w| {
                 let sh = Arc::clone(&shared);
                 let mx = Arc::clone(&metrics);
-                let max_batch = cfg.max_batch;
-                std::thread::spawn(move || worker_loop(sh, mx, max_batch, w))
+                // max_batch 0 would underflow the batcher's room math
+                let (max_batch, max_wait) = (cfg.max_batch.max(1), cfg.max_wait);
+                std::thread::spawn(move || worker_loop(sh, mx, max_batch, max_wait, w))
             })
             .collect();
-        Self { shared, cfg, workers, metrics, next_id: AtomicU64::new(1) }
+        Self { shared, workers, metrics }
     }
 
     /// Submit one request; the response arrives on the returned channel.
@@ -168,27 +376,13 @@ impl Server {
         instance: ConvInstance,
         epilogue: Epilogue,
     ) -> Result<Receiver<Response>, SubmitError> {
-        if !self.shared.running.load(Ordering::SeqCst) {
-            return Err(SubmitError::ShuttingDown);
-        }
-        let (tx, rx) = channel();
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            if q.len() >= self.cfg.queue_depth {
-                return Err(SubmitError::Busy); // backpressure
-            }
-            q.push_back(Request {
-                id: self.next_id.fetch_add(1, Ordering::SeqCst),
-                kind: kind.to_string(),
-                instance,
-                epilogue,
-                enqueued: Instant::now(),
-                respond: tx,
-            });
-        }
-        self.shared.submitted.fetch_add(1, Ordering::SeqCst);
-        self.shared.available.notify_one();
-        Ok(rx)
+        self.shared.submit(&self.metrics, kind, instance, epilogue)
+    }
+
+    /// A cloneable handle for other threads (submission, metrics,
+    /// registry reload) — what the background re-tuner holds.
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle { shared: Arc::clone(&self.shared), metrics: Arc::clone(&self.metrics) }
     }
 
     /// Live metrics sink (latency summaries, histograms, worker counters).
@@ -196,14 +390,44 @@ impl Server {
         &self.metrics
     }
 
-    /// The tuned-schedule registry this server routes with.
-    pub fn registry(&self) -> &ScheduleRegistry {
-        &self.shared.registry
+    /// The current registry snapshot. In-flight batches may still be
+    /// executing under an older snapshot for one batch's duration.
+    pub fn registry_snapshot(&self) -> Arc<RegistrySnapshot> {
+        self.shared.snapshot()
     }
 
-    /// The schedule requests of `kind` execute under (tuned or fallback).
+    /// Version of the current registry snapshot (1 at construction, +1
+    /// per [`Server::reload_registry`]).
+    pub fn registry_version(&self) -> u64 {
+        self.shared.snapshot().version
+    }
+
+    /// Atomically install a new registry; returns the new snapshot
+    /// version.
+    ///
+    /// Zero-downtime semantics: queued and in-flight requests are
+    /// untouched; every batch claimed after the swap resolves schedules
+    /// from the new snapshot (a batch claimed concurrently with the swap
+    /// executes wholly under one snapshot or the other, never a mix);
+    /// [`Response::registry_version`] says which.
+    pub fn reload_registry(&self, registry: ScheduleRegistry) -> u64 {
+        self.shared.reload(registry)
+    }
+
+    /// Atomically apply an edit to the **current** registry (read, mutate
+    /// and swap under one lock) and return the new snapshot version.
+    /// Unlike "snapshot, mutate a clone, `reload_registry`", an update
+    /// can never lose a reload that landed while the caller was
+    /// computing its changes — use this to add or revise individual
+    /// entries, and full `reload_registry` for wholesale replacement.
+    pub fn update_registry(&self, f: impl FnOnce(&mut ScheduleRegistry)) -> u64 {
+        self.shared.update(f)
+    }
+
+    /// The schedule requests of `kind` execute under (tuned or fallback),
+    /// per the current snapshot.
     pub fn schedule_for(&self, kind: &str) -> ScheduleConfig {
-        self.shared.registry.schedule_for(kind)
+        self.shared.snapshot().schedule_for(kind)
     }
 
     /// Requests currently queued (not yet claimed by a worker).
@@ -216,16 +440,58 @@ impl Server {
         self.shared.completed.load(Ordering::SeqCst)
     }
 
-    /// Drain the queue and stop the workers.
+    /// Stop accepting, drain, and join the workers.
+    ///
+    /// Drain guarantee: every request `submit` ever returned `Ok` for is
+    /// answered before the workers are joined — the accept cutoff is
+    /// taken under the queue lock, so no request can land after the
+    /// drain accounting starts, and the drain waits on
+    /// `completed == accepted` (not merely "queue empty", which would
+    /// race a batch still in flight on a worker). Submissions racing the
+    /// shutdown atomically either get `Ok` (and will be answered) or
+    /// [`SubmitError::ShuttingDown`].
+    ///
+    /// Caveat: if a worker thread *panicked* (only possible via a
+    /// malformed [`ConvInstance`] whose buffers disagree with its
+    /// workload dims), the requests that worker had claimed can never be
+    /// answered; shutdown then stops waiting instead of hanging —
+    /// surviving workers still drain everything left in the queue before
+    /// joining, and the dead worker's claimants see a closed channel.
     pub fn shutdown(mut self) -> Arc<Metrics> {
-        // wait for queue drain
-        loop {
-            let empty = self.shared.queue.lock().unwrap().is_empty();
-            if empty {
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(1));
+        // 1. accept cutoff, under the queue lock: after this, the set of
+        //    requests to drain is frozen
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.accepting.store(false, Ordering::SeqCst);
         }
+        // 2. drain: wait until every accepted request has been answered.
+        //    A worker that exits while `running` is still true has
+        //    panicked; the requests it had claimed can never complete,
+        //    so keep waiting only while every worker is alive — a
+        //    poisoned request degrades the guarantee instead of hanging
+        //    shutdown forever.
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            loop {
+                let accepted = self.shared.accepted.load(Ordering::SeqCst);
+                let completed = self.shared.completed.load(Ordering::SeqCst);
+                if q.is_empty() && completed >= accepted {
+                    break;
+                }
+                if self.workers.iter().any(|w| w.is_finished()) {
+                    break; // a worker died mid-batch; full drain impossible
+                }
+                // timeout guards against a missed notify; correctness
+                // only needs the re-check
+                let (guard, _) = self
+                    .shared
+                    .idle
+                    .wait_timeout(q, Duration::from_millis(1))
+                    .unwrap();
+                q = guard;
+            }
+        }
+        // 3. stop and join
         self.shared.running.store(false, Ordering::SeqCst);
         self.shared.available.notify_all();
         for w in self.workers.drain(..) {
@@ -235,14 +501,45 @@ impl Server {
     }
 }
 
-/// Worker: pull a head-of-line batch of same-kind requests, execute, time.
+/// Pull up to `room` queued requests of `kind` out of `q` (preserving
+/// the relative order of everything skipped) and append them to `batch`
+/// — the batcher's coalescing rule, factored out so the flush rules are
+/// unit-testable without threads.
+fn drain_same_kind(
+    q: &mut VecDeque<Request>,
+    kind: &str,
+    mut room: usize,
+    batch: &mut Vec<Request>,
+) {
+    let mut i = 0;
+    while room > 0 && i < q.len() {
+        if q[i].kind == kind {
+            batch.push(q.remove(i).unwrap());
+            room -= 1;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Worker: claim a head-of-line batch of same-kind requests (holding it
+/// open up to `max_wait` ticks if underfull), resolve the registry
+/// snapshot once, execute, time.
 ///
 /// Each worker owns one [`ExecScratch`] for its whole lifetime: every
-/// request in every batch reuses the same im2col/accumulator staging
-/// buffers (same-kind batches have identical dims, so the reuse is
-/// allocation-free), and the scratch is shape-safe across kind changes.
-fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize, worker: usize) {
+/// request in every batch reuses the same staging buffers and the cached
+/// im2col gather map (same-kind batches have identical dims, so the
+/// reuse is allocation- and recompute-free), and the scratch is
+/// shape-safe across kind changes.
+fn worker_loop(
+    shared: Arc<Shared>,
+    metrics: Arc<Metrics>,
+    max_batch: usize,
+    max_wait: usize,
+    worker: usize,
+) {
     let mut scratch = ExecScratch::new();
+    let tick = Duration::from_micros(BATCH_WAIT_TICK_US);
     loop {
         let batch = {
             let mut q = shared.queue.lock().unwrap();
@@ -255,34 +552,54 @@ fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize, wor
                 }
                 q = shared.available.wait(q).unwrap();
             }
-            // head-of-line batching: take the first request's kind, then
+            // flush rule 1 — coalesce: take the head request's kind, then
             // greedily pull queued requests of the same kind (preserving
             // order of the rest)
             let head = q.pop_front().unwrap();
             let kind = head.kind.clone();
             let mut batch = vec![head];
-            let mut i = 0;
-            while batch.len() < max_batch && i < q.len() {
-                if q[i].kind == kind {
-                    batch.push(q.remove(i).unwrap());
-                } else {
-                    i += 1;
+            drain_same_kind(&mut q, &kind, max_batch - batch.len(), &mut batch);
+            // flush rule 2 — dynamic wait: hold an underfull batch open
+            // until the max_wait *deadline*, absorbing same-kind
+            // arrivals; flush early the moment max_batch is reached
+            // (rule 3) or the server begins draining. The window is
+            // elapsed time, not a wakeup count: submits of other kinds
+            // notify this condvar too, and those spurious wakeups must
+            // not burn the window (each re-wait covers only the time
+            // remaining).
+            if max_wait > 0 && batch.len() < max_batch {
+                // clamp so a silly max_wait can't overflow Duration math
+                let deadline = Instant::now() + tick * max_wait.min(10_000_000) as u32;
+                while batch.len() < max_batch
+                    && shared.running.load(Ordering::SeqCst)
+                    && shared.accepting.load(Ordering::SeqCst)
+                {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let remaining = (deadline - now).min(tick);
+                    let (guard, _timeout) = shared.available.wait_timeout(q, remaining).unwrap();
+                    q = guard;
+                    drain_same_kind(&mut q, &kind, max_batch - batch.len(), &mut batch);
                 }
             }
             batch
         };
 
         let bsize = batch.len();
-        // one registry lookup per batch: head-of-line batching guarantees
-        // a single kind, hence a single schedule, per batch
-        let schedule = shared.registry.schedule_for(&batch[0].kind);
+        // one snapshot + one schedule lookup per batch: head-of-line
+        // batching guarantees a single kind, hence a single schedule, per
+        // batch — and a reload lands at the next batch boundary
+        let snapshot = shared.snapshot();
+        let schedule = snapshot.schedule_for(&batch[0].kind);
+        metrics.observe_batch(bsize);
         for req in batch {
             let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
             let t = Instant::now();
             let out = qconv2d_scheduled_with(&req.instance, &req.epilogue, &schedule, &mut scratch);
             let exec_us = t.elapsed().as_secs_f64() * 1e6;
             metrics.observe(&req.kind, queue_us, exec_us, bsize, worker);
-            shared.completed.fetch_add(1, Ordering::SeqCst);
             let _ = req.respond.send(Response {
                 id: req.id,
                 kind: req.kind,
@@ -292,8 +609,13 @@ fn worker_loop(shared: Arc<Shared>, metrics: Arc<Metrics>, max_batch: usize, wor
                 batch_size: bsize,
                 worker,
                 schedule,
+                registry_version: snapshot.version(),
             });
+            // after the send, so `completed == accepted` implies every
+            // response has been delivered (the shutdown drain invariant)
+            shared.completed.fetch_add(1, Ordering::SeqCst);
         }
+        shared.idle.notify_all();
     }
 }
 
@@ -306,6 +628,158 @@ mod tests {
     fn tiny_wl() -> ConvWorkload {
         ConvWorkload::new("edge", 1, 8, 8, 8, 8)
     }
+
+    fn entry(cfg: ScheduleConfig) -> TunedEntry {
+        TunedEntry { config: cfg, runtime_us: 1.0, trials: 1, explorer: "test".into() }
+    }
+
+    /// Fabricate a queued request without a server (fields are private to
+    /// this module, so tests can build them directly).
+    fn fake_request(id: u64, kind: &str) -> (Request, Receiver<Response>) {
+        let (tx, rx) = channel();
+        let wl = tiny_wl();
+        let req = Request {
+            id,
+            kind: kind.to_string(),
+            instance: ConvInstance::synthetic(&wl, id),
+            epilogue: Epilogue::default(),
+            enqueued: Instant::now(),
+            respond: tx,
+        };
+        (req, rx)
+    }
+
+    // ---- batcher flush rules (pure, no threads) --------------------------
+
+    #[test]
+    fn drain_same_kind_coalesces_and_preserves_other_order() {
+        // mixed-kind queue: a b a c a b — draining kind "a" with room 3
+        // takes all three a's and leaves b c b in arrival order
+        let mut q = VecDeque::new();
+        let mut rxs = Vec::new();
+        for (i, k) in ["a", "b", "a", "c", "a", "b"].iter().enumerate() {
+            let (req, rx) = fake_request(i as u64, k);
+            q.push_back(req);
+            rxs.push(rx);
+        }
+        let mut batch = Vec::new();
+        drain_same_kind(&mut q, "a", 3, &mut batch);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert_eq!(
+            q.iter().map(|r| (r.id, r.kind.as_str())).collect::<Vec<_>>(),
+            vec![(1, "b"), (3, "c"), (5, "b")],
+            "skipped requests keep arrival order"
+        );
+    }
+
+    #[test]
+    fn drain_same_kind_respects_max_batch_room() {
+        // flush rule: once max_batch is reached, nothing more is pulled
+        // even though more same-kind requests are queued
+        let mut q = VecDeque::new();
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let (req, rx) = fake_request(i, "a");
+            q.push_back(req);
+            rxs.push(rx);
+        }
+        let mut batch = Vec::new();
+        drain_same_kind(&mut q, "a", 2, &mut batch);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(q.len(), 4);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(batch[1].id, 1);
+    }
+
+    #[test]
+    fn drain_same_kind_zero_room_is_noop() {
+        let mut q = VecDeque::new();
+        let (req, _rx) = fake_request(0, "a");
+        q.push_back(req);
+        let mut batch = Vec::new();
+        drain_same_kind(&mut q, "a", 0, &mut batch);
+        assert!(batch.is_empty());
+        assert_eq!(q.len(), 1);
+    }
+
+    // ---- batcher flush rules (live server) -------------------------------
+
+    #[test]
+    fn max_wait_expiry_flushes_a_partial_batch() {
+        // one lone request with a large batch target: the worker must
+        // flush after max_wait ticks instead of holding forever
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: 3,
+            ..Default::default()
+        });
+        let rx = server
+            .submit("edge", ConvInstance::synthetic(&tiny_wl(), 1), Epilogue::default())
+            .unwrap();
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("partial batch must flush on max_wait expiry");
+        assert_eq!(resp.batch_size, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn max_batch_reached_flushes_before_max_wait() {
+        // max_wait is huge (1.2M ticks = a 60 s window per underfull
+        // batch); if the batcher ever waited a window out, the first
+        // recv below would blow its 20 s timeout — reaching max_batch
+        // must flush immediately
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            max_batch: 2,
+            max_wait: 1_200_000,
+            ..Default::default()
+        });
+        let wl = tiny_wl();
+        let epi = Epilogue::default();
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..8u64)
+            .map(|s| server.submit("edge", ConvInstance::synthetic(&wl, s), epi).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(20)).expect("lost");
+            assert!(resp.batch_size <= 2);
+        }
+        // 8 requests, batches of <= 2: at least 4 batches; a full wait
+        // per batch would be >= 4 * 50s
+        assert!(t0.elapsed() < Duration::from_secs(20));
+        server.shutdown();
+    }
+
+    #[test]
+    fn dynamic_wait_coalesces_a_trickled_burst() {
+        // requests trickle in slower than a flush-immediate batcher can
+        // batch, but well inside the max_wait window: the batcher should
+        // coalesce at least some of them
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait: 400, // 20 ms window
+            ..Default::default()
+        });
+        let wl = tiny_wl();
+        let epi = Epilogue::default();
+        let mut rxs = Vec::new();
+        for s in 0..8u64 {
+            rxs.push(server.submit("edge", ConvInstance::synthetic(&wl, s), epi).unwrap());
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        let mut max_seen = 0;
+        for rx in rxs {
+            max_seen = max_seen.max(rx.recv_timeout(Duration::from_secs(20)).unwrap().batch_size);
+        }
+        assert!(max_seen > 1, "max_wait window should coalesce a trickle (saw {max_seen})");
+        assert!(max_seen <= 4);
+        server.shutdown();
+    }
+
+    // ---- original serving behaviour --------------------------------------
 
     #[test]
     fn serves_requests_with_correct_numerics() {
@@ -324,10 +798,14 @@ mod tests {
             assert_eq!(resp.packed_output, want);
             assert!(resp.exec_us > 0.0);
             assert!(resp.worker < 2);
+            assert_eq!(resp.registry_version, 1);
         }
         let m = server.shutdown();
         assert_eq!(m.summary("edge").unwrap().count, 8);
         assert_eq!(m.worker_counts().iter().sum::<u64>(), 8);
+        // every executed batch was observed, every submit sampled depth
+        assert!(m.batch_histogram().count() > 0);
+        assert_eq!(m.queue_depth_histogram().count(), 8);
     }
 
     #[test]
@@ -336,6 +814,7 @@ mod tests {
             workers: 1,
             queue_depth: 2,
             max_batch: 1,
+            max_wait: 0,
         });
         let wl = ConvWorkload::new("big", 1, 24, 24, 32, 32); // slow enough to pile up
         let epi = Epilogue::default();
@@ -365,6 +844,7 @@ mod tests {
             workers: 1,
             queue_depth: 64,
             max_batch: 4,
+            max_wait: 0,
         });
         let wl = tiny_wl();
         let epi = Epilogue::default();
@@ -377,7 +857,10 @@ mod tests {
         }
         assert!(max_batch_seen > 1, "burst should batch (saw {max_batch_seen})");
         assert!(max_batch_seen <= 4);
-        server.shutdown();
+        let m = server.shutdown();
+        // batch histogram counts batches, per-request stats count requests
+        assert!(m.batch_histogram().count() < 16);
+        assert_eq!(m.summary("edge").unwrap().count, 16);
     }
 
     #[test]
@@ -386,31 +869,64 @@ mod tests {
         let wl = tiny_wl();
         let epi = Epilogue::default();
         let n = 24u64;
-        let _rxs: Vec<_> = (0..n)
+        let rxs: Vec<_> = (0..n)
             .map(|s| server.submit("edge", ConvInstance::synthetic(&wl, s), epi).unwrap())
             .collect();
         let metrics = server.shutdown();
         assert_eq!(metrics.total_count(), n);
         assert_eq!(metrics.worker_counts().iter().sum::<u64>(), n);
+        // the drain guarantee: every accepted request has a response
+        // waiting by the time shutdown returns
+        for rx in rxs {
+            rx.try_recv().expect("response must already be delivered");
+        }
     }
 
     #[test]
+    fn shutdown_refuses_new_submits_but_answers_accepted_ones() {
+        // a submitter races shutdown through a ServeHandle: every Ok it
+        // ever saw must be answered, and it must eventually observe
+        // ShuttingDown
+        let server = Server::start(ServerConfig { workers: 2, ..Default::default() });
+        let handle = server.handle();
+        let submitter = std::thread::spawn(move || {
+            let wl = tiny_wl();
+            let epi = Epilogue::default();
+            let mut rxs = Vec::new();
+            for s in 0..100_000u64 {
+                match handle.submit("edge", ConvInstance::synthetic(&wl, s), epi) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(SubmitError::ShuttingDown) => return (rxs, true),
+                    Err(SubmitError::Busy) => std::thread::yield_now(),
+                }
+            }
+            (rxs, false)
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        let metrics = server.shutdown();
+        let (rxs, saw_shutdown) = submitter.join().unwrap();
+        assert!(saw_shutdown, "submitter must observe ShuttingDown");
+        let n = rxs.len() as u64;
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5))
+                .expect("accepted request must be answered despite shutdown race");
+        }
+        assert_eq!(metrics.total_count(), n);
+    }
+
+    // ---- registry routing & hot reload -----------------------------------
+
+    #[test]
     fn registry_routes_tuned_schedule_and_falls_back() {
-        let tuned = ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, chunk: 1, ..Default::default() };
+        let tuned =
+            ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, chunk: 1, ..Default::default() };
         assert_ne!(tuned, ScheduleConfig::default());
         let mut reg = ScheduleRegistry::new();
-        reg.insert(
-            "edge",
-            TunedEntry {
-                config: tuned,
-                runtime_us: 12.0,
-                trials: 64,
-                explorer: "diversity-aware".into(),
-            },
-        );
+        reg.insert("edge", entry(tuned));
         let server = Server::from_registry(ServerConfig { workers: 1, ..Default::default() }, reg);
         assert_eq!(server.schedule_for("edge"), tuned);
         assert_eq!(server.schedule_for("unseen"), ScheduleConfig::default());
+        assert_eq!(server.registry_version(), 1);
 
         let wl = tiny_wl();
         let epi = Epilogue::default();
@@ -426,6 +942,82 @@ mod tests {
         let resp = server.submit("other", inst, epi).unwrap().recv().unwrap();
         assert_eq!(resp.schedule, ScheduleConfig::default());
         assert_eq!(resp.packed_output, want);
+        server.shutdown();
+    }
+
+    #[test]
+    fn reload_swaps_schedule_between_batches() {
+        let cfg_a = ScheduleConfig { chunk: 1, ..Default::default() };
+        let cfg_b = ScheduleConfig { chunk: 4, ..Default::default() };
+        let mut reg_a = ScheduleRegistry::new();
+        reg_a.insert("edge", entry(cfg_a));
+        let server =
+            Server::from_registry(ServerConfig { workers: 1, ..Default::default() }, reg_a);
+        let wl = tiny_wl();
+        let epi = Epilogue::default();
+
+        let inst = ConvInstance::synthetic(&wl, 1);
+        let want = qconv2d(&inst, &epi);
+        let r1 = server.submit("edge", inst, epi).unwrap().recv().unwrap();
+        assert_eq!(r1.schedule, cfg_a);
+        assert_eq!(r1.registry_version, 1);
+        assert_eq!(r1.packed_output, want);
+
+        let mut reg_b = ScheduleRegistry::new();
+        reg_b.insert("edge", entry(cfg_b));
+        let v = server.reload_registry(reg_b);
+        assert_eq!(v, 2);
+        assert_eq!(server.registry_version(), 2);
+        assert_eq!(server.schedule_for("edge"), cfg_b);
+
+        let inst = ConvInstance::synthetic(&wl, 2);
+        let want = qconv2d(&inst, &epi);
+        let r2 = server.submit("edge", inst, epi).unwrap().recv().unwrap();
+        assert_eq!(r2.schedule, cfg_b, "post-reload batch must use the new schedule");
+        assert_eq!(r2.registry_version, 2);
+        assert_eq!(r2.packed_output, want, "reload must never change numerics");
+        server.shutdown();
+    }
+
+    #[test]
+    fn handle_reload_is_visible_to_the_server_and_vice_versa() {
+        let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+        let handle = server.handle();
+        let mut reg = ScheduleRegistry::new();
+        reg.insert("k", entry(ScheduleConfig { chunk: 1, ..Default::default() }));
+        let v = handle.reload_registry(reg);
+        assert_eq!(v, 2);
+        assert_eq!(server.registry_version(), 2);
+        assert_eq!(
+            server.schedule_for("k"),
+            ScheduleConfig { chunk: 1, ..Default::default() }
+        );
+        assert_eq!(handle.registry_snapshot().version(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn update_registry_merges_with_concurrent_reloads() {
+        // the re-tuner's publish path: an update edits the *current*
+        // registry, so a reload that landed after the updater's snapshot
+        // was taken is preserved, not reverted
+        let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+        let cfg_a = ScheduleConfig { chunk: 1, ..Default::default() };
+        let cfg_b = ScheduleConfig { chunk: 4, ..Default::default() };
+
+        // a slow producer takes its snapshot...
+        let stale_snapshot = server.registry_snapshot();
+        assert!(stale_snapshot.registry().is_empty());
+        // ...then an operator reload lands, installing kind "a"
+        let mut reg = ScheduleRegistry::new();
+        reg.insert("a", entry(cfg_a));
+        assert_eq!(server.reload_registry(reg), 2);
+        // ...and the producer publishes kind "b" via update: both survive
+        let v = server.update_registry(|r| r.insert("b", entry(cfg_b)));
+        assert_eq!(v, 3);
+        let snap = server.registry_snapshot();
+        assert_eq!(snap.schedule_for("a"), cfg_a, "update must not revert the reload");
+        assert_eq!(snap.schedule_for("b"), cfg_b);
         server.shutdown();
     }
 
@@ -465,15 +1057,7 @@ mod tests {
         };
         let mut reg = ScheduleRegistry::new();
         for kind in ["srv_dw", "srv_dil"] {
-            reg.insert(
-                kind,
-                TunedEntry {
-                    config: narrow,
-                    runtime_us: 1.0,
-                    trials: 1,
-                    explorer: "test".into(),
-                },
-            );
+            reg.insert(kind, entry(narrow));
         }
         let server = Server::from_registry(ServerConfig { workers: 2, ..Default::default() }, reg);
         let epi = Epilogue::default();
@@ -510,18 +1094,10 @@ mod tests {
         ];
         let mut reg = ScheduleRegistry::new();
         for ((kind, _), cfg) in kinds.iter().zip(&tuned) {
-            reg.insert(
-                kind,
-                TunedEntry {
-                    config: *cfg,
-                    runtime_us: 1.0,
-                    trials: 1,
-                    explorer: "test".into(),
-                },
-            );
+            reg.insert(kind, entry(*cfg));
         }
         let server = Server::from_registry(
-            ServerConfig { workers: 4, queue_depth: 512, max_batch: 4 },
+            ServerConfig { workers: 4, queue_depth: 512, max_batch: 4, max_wait: 2 },
             reg,
         );
         let epi = Epilogue::default();
@@ -556,5 +1132,6 @@ mod tests {
         }
         assert_eq!(m.worker_counts().iter().sum::<u64>(), n);
         assert_eq!(m.total_latency_histogram().count(), n);
+        assert_eq!(m.queue_depth_histogram().count(), n);
     }
 }

@@ -40,7 +40,9 @@ pub struct FeatureTileProfile {
 /// Everything the timing model needs, counted per block and aggregated.
 #[derive(Debug, Clone, Copy)]
 pub struct TrafficAnalysis {
+    /// Total thread blocks launched (all groups).
     pub n_blocks: usize,
+    /// Main-loop K steps per block.
     pub k_steps: usize,
     /// DRAM bytes (whole kernel): cold feature + weight + output store.
     pub dram_bytes: f64,
@@ -70,6 +72,7 @@ pub struct ProfileCache {
 }
 
 impl ProfileCache {
+    /// The (cached) row-block profile for this `block_m`.
     pub fn profile(&mut self, ix: &Im2colIndex, block_m: usize, channels: usize) -> FeatureTileProfile {
         *self
             .map
@@ -77,10 +80,12 @@ impl ProfileCache {
             .or_insert_with(|| compute_profile(ix, block_m, channels))
     }
 
+    /// Distinct `block_m` profiles cached so far.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether nothing has been profiled yet.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

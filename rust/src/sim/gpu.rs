@@ -1,9 +1,10 @@
 //! GPU hardware parameters for the cost simulator.
 
 /// Architecture-level constants of the simulated GPU. Defaults model the
-//  NVIDIA T4 (Turing TU104) the paper measures on.
+/// NVIDIA T4 (Turing TU104) the paper measures on.
 #[derive(Debug, Clone)]
 pub struct GpuSpec {
+    /// Human-readable device name for reports.
     pub name: String,
     /// Streaming multiprocessors.
     pub sms: usize,
@@ -11,8 +12,9 @@ pub struct GpuSpec {
     pub clock_ghz: f64,
     /// DRAM bandwidth (GB/s).
     pub dram_gbps: f64,
-    /// L2 cache size (bytes) and bandwidth (GB/s).
+    /// L2 cache size (bytes).
     pub l2_bytes: usize,
+    /// L2 bandwidth (GB/s).
     pub l2_gbps: f64,
     /// Shared memory per SM (bytes) usable by thread blocks.
     pub smem_per_sm: usize,
@@ -20,8 +22,9 @@ pub struct GpuSpec {
     pub smem_bytes_per_cycle: f64,
     /// 32-bit registers per SM.
     pub regs_per_sm: usize,
-    /// Max resident warps / blocks per SM.
+    /// Max resident warps per SM.
     pub max_warps_per_sm: usize,
+    /// Max resident thread blocks per SM.
     pub max_blocks_per_sm: usize,
     /// INT4 tensor-core MACs per SM per cycle (one 8x8x32 WMMA ≈ 2048
     /// MACs; the T4's 8 tensor cores sustain about one such atom/cycle).

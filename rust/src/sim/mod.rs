@@ -32,26 +32,43 @@ use crate::searchspace::ScheduleConfig;
 /// One simulated hardware measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Simulated kernel runtime, microseconds ([`INFEASIBLE_US`] when
+    /// the schedule cannot run).
     pub runtime_us: f64,
+    /// Whether the schedule was legal and fit the SM.
     pub feasible: bool,
+    /// Per-engine component times and occupancy context.
     pub breakdown: CostBreakdown,
 }
 
 /// Component times and context, for reports and ablations.
 #[derive(Debug, Clone, Default)]
 pub struct CostBreakdown {
+    /// Tensor-core MMA pipeline time, microseconds.
     pub t_mma_us: f64,
+    /// DRAM traffic time, microseconds.
     pub t_dram_us: f64,
+    /// L2 traffic time, microseconds.
     pub t_l2_us: f64,
+    /// Shared-memory traffic time, microseconds.
     pub t_smem_us: f64,
+    /// Warp-shuffle (packing/layout) time, microseconds.
     pub t_shuffle_us: f64,
+    /// Load/store-unit instruction time, microseconds.
     pub t_ldst_us: f64,
+    /// Thread blocks resident per SM.
     pub blocks_per_sm: usize,
+    /// Warps actually resident per SM (grid-limited).
     pub warps_per_sm: usize,
+    /// Total thread blocks launched.
     pub n_blocks: usize,
+    /// Shared-memory footprint per block, bytes.
     pub smem_bytes_per_block: usize,
+    /// im2col duplicate factor the schedule exploited (1.0 if off).
     pub dup_factor: f64,
+    /// Coalescing efficiency of global accesses (1.0 = perfect).
     pub coalesce_efficiency: f64,
+    /// Achieved tensor throughput, TOPS.
     pub achieved_tops: f64,
 }
 
@@ -64,9 +81,11 @@ pub const INFEASIBLE_US: f64 = 1.0e9;
 /// noisy, and the cost model must survive that).
 #[derive(Debug, Clone)]
 pub struct Simulator {
+    /// The simulated hardware.
     pub gpu: GpuSpec,
     /// Relative measurement noise (sigma); 0.0 = noiseless.
     pub noise_sigma: f64,
+    /// Seed keying the deterministic per-candidate jitter.
     pub seed: u64,
 }
 
@@ -77,6 +96,7 @@ impl Default for Simulator {
 }
 
 impl Simulator {
+    /// A deterministic, jitter-free simulator for `gpu`.
     pub fn noiseless(gpu: GpuSpec) -> Self {
         Self { gpu, noise_sigma: 0.0, seed: 0 }
     }

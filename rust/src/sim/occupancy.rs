@@ -11,8 +11,11 @@ use super::gpu::GpuSpec;
 /// Per-block resource demands.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BlockResources {
+    /// Shared-memory footprint per block, bytes.
     pub smem_bytes: usize,
+    /// Registers each thread allocates.
     pub regs_per_thread: usize,
+    /// Threads per block.
     pub threads: usize,
 }
 
@@ -27,18 +30,26 @@ pub struct Occupancy {
     pub limiter: Limiter,
 }
 
+/// Which resource capped a schedule's resident-block count.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Limiter {
+    /// Shared-memory footprint.
     SharedMemory,
+    /// Register file.
     Registers,
+    /// Resident-warp cap.
     Warps,
+    /// Hardware block slots.
     BlockSlots,
+    /// The block exceeds a per-SM resource outright.
     DoesNotFit,
 }
 
 /// CUDA registers are allocated in aligned granules; model 8-reg rounding.
 const REG_GRANULE: usize = 8;
 
+/// How many blocks with the given resource demands fit one SM, and what
+/// capped them.
 pub fn occupancy(gpu: &GpuSpec, block: &BlockResources) -> Occupancy {
     let warps_per_block = block.threads.div_ceil(32);
     let regs_per_thread = block.regs_per_thread.div_ceil(REG_GRANULE) * REG_GRANULE;

@@ -6,6 +6,9 @@ use std::collections::{HashMap, HashSet};
 
 use crate::searchspace::{Genotype, ScheduleConfig};
 
+/// Append-only store of every measurement a session has paid for,
+/// deduplicated by genotype (§4.1's "only picks candidates that have not
+/// been measured before").
 #[derive(Debug, Default)]
 pub struct MeasureDb {
     rows: Vec<(Genotype, ScheduleConfig, f64)>,
@@ -14,6 +17,7 @@ pub struct MeasureDb {
 }
 
 impl MeasureDb {
+    /// An empty database.
     pub fn new() -> Self {
         Self::default()
     }
@@ -30,26 +34,33 @@ impl MeasureDb {
         true
     }
 
+    /// Distinct configurations measured so far.
     pub fn len(&self) -> usize {
         self.rows.len()
     }
 
+    /// Whether nothing has been measured yet.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Whether `g` has already been measured.
     pub fn contains(&self, g: &Genotype) -> bool {
         self.seen.contains(g)
     }
 
+    /// The set of measured genotypes — what explorers exclude from
+    /// proposals.
     pub fn measured_set(&self) -> &HashSet<Genotype> {
         &self.seen
     }
 
+    /// The recorded runtime of `g`, if it was measured.
     pub fn runtime_of(&self, g: &Genotype) -> Option<f64> {
         self.index.get(g).map(|&i| self.rows[i].2)
     }
 
+    /// Every `(genotype, config, runtime_us)` row, in measurement order.
     pub fn iter(&self) -> impl Iterator<Item = &(Genotype, ScheduleConfig, f64)> {
         self.rows.iter()
     }

@@ -6,8 +6,11 @@ use crate::searchspace::ScheduleConfig;
 /// One measured trial.
 #[derive(Debug, Clone)]
 pub struct TrialRecord {
+    /// 1-based trial index within the session.
     pub trial: usize,
+    /// The schedule measured at this trial.
     pub config: ScheduleConfig,
+    /// Its measured runtime, microseconds.
     pub runtime_us: f64,
     /// Best runtime seen up to and including this trial.
     pub best_so_far_us: f64,
@@ -19,15 +22,19 @@ pub struct TrialRecord {
 /// A whole session's trial log.
 #[derive(Debug, Clone)]
 pub struct History {
+    /// Self-reported name of the exploration module that drove the
+    /// session.
     pub explorer: &'static str,
     records: Vec<TrialRecord>,
 }
 
 impl History {
+    /// An empty log attributed to `explorer`.
     pub fn new(explorer: &'static str) -> Self {
         Self { explorer, records: Vec::new() }
     }
 
+    /// Append one measured trial, updating the best-so-far curve.
     pub fn push(&mut self, config: ScheduleConfig, runtime_us: f64, workload_ops: u64) {
         let best = self
             .records
@@ -42,14 +49,17 @@ impl History {
         });
     }
 
+    /// Trials recorded so far.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// Whether no trial has been recorded.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
 
+    /// The full trial log, in measurement order.
     pub fn records(&self) -> &[TrialRecord] {
         &self.records
     }

@@ -19,9 +19,15 @@
 //! [`SessionBuilder::parallelism`] or `repro tune --jobs n`) fans the round
 //! across a worker pool while the results stay in candidate order —
 //! parallel and serial sessions are bit-for-bit identical.
+//!
+//! Tuning also runs *online*: [`online::OnlineTuner`] watches a live
+//! [`crate::serve::Server`]'s metrics for hot or schedule-less request
+//! kinds, retunes them with bounded warm-started sessions, and publishes
+//! the winners through the server's registry hot-reload path.
 
 mod db;
 mod history;
+pub mod online;
 mod session;
 
 pub use db::MeasureDb;
@@ -44,8 +50,12 @@ pub struct TunerOptions {
     pub n_trials: usize,
     /// Configs measured per round (31 model picks + 1 random).
     pub batch_size: usize,
+    /// Builtin exploration module ([`Tuner::with_explorer`] call sites
+    /// ignore this and supply a prebuilt one).
     pub explorer: ExplorerKind,
+    /// Search-space shape (knob ranges / legality rules).
     pub space: SpaceOptions,
+    /// Seed for everything stochastic in the session.
     pub seed: u64,
     /// Measurement substrate (replaces the old concrete `simulator` field;
     /// default: the noisy T4 simulator behind a [`SimMeasurer`]).
@@ -71,9 +81,14 @@ impl Default for TunerOptions {
 /// Best schedule found by a tuning session.
 #[derive(Debug, Clone)]
 pub struct TuneResult {
+    /// The best schedule found.
     pub config: ScheduleConfig,
+    /// Its measured (simulated) runtime, microseconds.
     pub runtime_us: f64,
+    /// Measurements actually spent (≤ `n_trials`; less if the legal
+    /// space was exhausted).
     pub trials_used: usize,
+    /// Full per-trial log (Fig. 14's tuning curve).
     pub history: History,
 }
 
@@ -98,6 +113,9 @@ pub struct Tuner {
 }
 
 impl Tuner {
+    /// Assemble a tuner for one workload from options (builds the search
+    /// space and the `opts.explorer` module; [`Session`] is the
+    /// higher-level front door).
     pub fn new(wl: &ConvWorkload, opts: TunerOptions) -> Self {
         let space = SearchSpace::for_workload(wl, opts.space);
         let explorer = opts.explorer.build(&space);
@@ -162,10 +180,12 @@ impl Tuner {
         }
     }
 
+    /// The search space this tuner explores.
     pub fn space(&self) -> &SearchSpace {
         &self.space
     }
 
+    /// Every measurement paid for so far.
     pub fn db(&self) -> &MeasureDb {
         &self.db
     }

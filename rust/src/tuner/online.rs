@@ -1,0 +1,576 @@
+//! Background re-tuning: the serve→tune side of the loop.
+//!
+//! `repro tune-net` closes tune→serve (schedules found offline are loaded
+//! by the server); this module closes the other direction. An
+//! [`OnlineTuner`] watches a live server's [`Metrics`](crate::serve::Metrics)
+//! for request kinds that are **schedule-less** (served under the default
+//! fallback because the registry has no entry) or **hot but under-tuned**
+//! (a registry entry found with a smaller measurement budget than this
+//! policy's), runs a bounded [`Session`] for each — on spare
+//! [`MeasurePool`](crate::sim::MeasurePool) workers via
+//! [`SessionBuilder::parallelism`](crate::tuner::SessionBuilder::parallelism)
+//! — and publishes improved schedules through the server's hot-reload
+//! path ([`ServeHandle::update_registry`], an atomic in-place edit of
+//! the live registry, so concurrent [`ServeHandle::reload_registry`]
+//! calls are merged with, never reverted by, a slow tuning cycle), and
+//! workers pick them up at the next batch boundary with zero dropped
+//! requests.
+//!
+//! Warm starts reuse tuning state the way the paper's transfer learning
+//! does (§4.1 transfer across workloads): every finished retune's
+//! [`SessionResult`] — which carries its `MeasureDb` and `History` — is
+//! kept per kind, and the next retune of a *different* kind
+//! `transfer_from`s the most recent one, so the cost model never starts
+//! cold once the re-tuner has run anything.
+//!
+//! Two usage modes:
+//!
+//! * **Deterministic, caller-paced**: call [`OnlineTuner::run_cycle`]
+//!   yourself (what the tests and `repro serve --retune` do). Same
+//!   metrics + same seed → same published registry, cycle for cycle.
+//! * **Background**: [`OnlineTuner::spawn`] moves the tuner onto a
+//!   thread that runs a cycle every `interval`; stop and collect the
+//!   cycle reports with [`RetunerHandle::stop`].
+#![deny(missing_docs)]
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::conv::ConvWorkload;
+use crate::serve::{Metrics, RegistrySnapshot, ServeHandle};
+use crate::zoo;
+
+use super::{Session, SessionResult};
+
+/// When and how hard the online tuner retunes.
+#[derive(Debug, Clone)]
+pub struct RetunePolicy {
+    /// A kind must have at least this many completed requests to be
+    /// considered (1 = any observed kind qualifies).
+    pub min_requests: u64,
+    /// Measurement budget per retuning session — deliberately small
+    /// next to the paper's offline 500: the re-tuner runs *beside*
+    /// serving, and warm starts make small budgets productive.
+    pub trials: usize,
+    /// Worker threads each session measures candidate batches on (the
+    /// "spare `MeasurePool` workers"); 1 = serial.
+    pub jobs: usize,
+    /// At most this many kinds are retuned per cycle, hottest first —
+    /// the bound that keeps a cycle's wall-clock predictable.
+    pub max_kinds_per_cycle: usize,
+    /// Publish an already-tuned kind's new schedule only if the tuned
+    /// runtime improves on the registry entry by at least this fraction
+    /// (0.0 = publish any strict improvement). Untuned kinds always
+    /// publish.
+    pub min_improvement: f64,
+    /// Base seed; each kind's session derives a deterministic seed from
+    /// this, the kind name, and the cycle index.
+    pub seed: u64,
+    /// Exploration module, by registry name (same names as
+    /// `repro tune --explorer`).
+    pub explorer: String,
+}
+
+impl Default for RetunePolicy {
+    fn default() -> Self {
+        Self {
+            min_requests: 1,
+            trials: 64,
+            jobs: 2,
+            max_kinds_per_cycle: 2,
+            min_improvement: 0.0,
+            seed: 0,
+            explorer: "diversity-aware".to_string(),
+        }
+    }
+}
+
+/// Why a kind was selected for retuning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetuneReason {
+    /// The registry has no entry — requests run under the default
+    /// fallback schedule.
+    Untuned,
+    /// The registry entry exists but was found with a smaller
+    /// measurement budget than this policy's, and the kind is hot.
+    Hot,
+}
+
+/// One kind the planner decided to retune this cycle.
+#[derive(Debug, Clone)]
+pub struct RetuneTask {
+    /// The request kind (== workload name).
+    pub kind: String,
+    /// Why it was picked.
+    pub reason: RetuneReason,
+    /// Completed requests observed for the kind at planning time.
+    pub requests: u64,
+}
+
+/// What one kind's retuning session produced.
+#[derive(Debug, Clone)]
+pub struct RetuneOutcome {
+    /// The request kind.
+    pub kind: String,
+    /// Why it was retuned.
+    pub reason: RetuneReason,
+    /// Best (simulated) runtime the bounded session found, microseconds.
+    pub tuned_runtime_us: f64,
+    /// The registry entry's runtime before this cycle, if any.
+    pub previous_runtime_us: Option<f64>,
+    /// Whether the result was good enough to publish.
+    pub published: bool,
+}
+
+/// Summary of one [`OnlineTuner::run_cycle`].
+#[derive(Debug, Clone)]
+pub struct CycleReport {
+    /// Kinds the metrics had seen at planning time.
+    pub kinds_observed: usize,
+    /// Per-task outcomes, in execution order.
+    pub outcomes: Vec<RetuneOutcome>,
+    /// Registry snapshot version the cycle published, if any outcome
+    /// published (one reload per cycle, not per kind).
+    pub published_version: Option<u64>,
+}
+
+impl CycleReport {
+    /// How many outcomes were published this cycle.
+    pub fn published_count(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.published).count()
+    }
+}
+
+/// The background re-tuner: watches serve metrics, runs bounded tuning
+/// sessions, publishes improved schedules via registry hot-reload.
+pub struct OnlineTuner {
+    workloads: HashMap<String, ConvWorkload>,
+    policy: RetunePolicy,
+    /// Finished sessions by kind — the warm-start fuel (`MeasureDb` +
+    /// `History` ride inside each [`SessionResult`]).
+    priors: HashMap<String, SessionResult>,
+    /// The kind most recently retuned (its session seeds the next
+    /// kind's transfer).
+    last_kind: Option<String>,
+    cycle: u64,
+}
+
+impl OnlineTuner {
+    /// A tuner that can resolve the given kinds to concrete workloads.
+    /// Kinds missing from the map are ignored by the planner (the server
+    /// can serve kinds the tuner has no shape for).
+    pub fn new(workloads: HashMap<String, ConvWorkload>, policy: RetunePolicy) -> Self {
+        Self { workloads, policy, priors: HashMap::new(), last_kind: None, cycle: 0 }
+    }
+
+    /// Convenience: resolve kinds against every layer of the model
+    /// [`zoo`] at the given batch size (what `repro serve --retune`
+    /// uses — registry kinds written by `tune-net` are zoo layer names).
+    pub fn from_zoo(batch: usize, policy: RetunePolicy) -> Self {
+        let workloads = zoo::all_networks(batch)
+            .into_iter()
+            .flat_map(|n| n.layers)
+            .map(|l| (l.workload.name.clone(), l.workload))
+            .collect();
+        Self::new(workloads, policy)
+    }
+
+    /// The policy this tuner runs under.
+    pub fn policy(&self) -> &RetunePolicy {
+        &self.policy
+    }
+
+    /// Decide what to retune, given live metrics and the current
+    /// registry snapshot. Pure planning — no sessions run, nothing
+    /// published.
+    ///
+    /// Eligible kinds: observed at least `min_requests` times, resolvable
+    /// to a workload, not already retuned by this tuner, and either
+    /// absent from the registry ([`RetuneReason::Untuned`]) or present
+    /// with fewer trials than the policy budget ([`RetuneReason::Hot`]).
+    /// Untuned kinds come first, then hotter kinds first; the list is
+    /// truncated to `max_kinds_per_cycle`.
+    pub fn plan(&self, metrics: &Metrics, snapshot: &RegistrySnapshot) -> Vec<RetuneTask> {
+        let mut tasks: Vec<RetuneTask> = Vec::new();
+        for kind in metrics.kinds() {
+            let requests = metrics.summary(&kind).map(|s| s.count).unwrap_or(0);
+            if requests < self.policy.min_requests {
+                continue;
+            }
+            if !self.workloads.contains_key(&kind) {
+                continue; // no shape to tune against
+            }
+            if self.priors.contains_key(&kind) {
+                continue; // already retuned at this policy's budget
+            }
+            let reason = match snapshot.registry().get(&kind) {
+                None => RetuneReason::Untuned,
+                Some(entry) if entry.trials < self.policy.trials => RetuneReason::Hot,
+                Some(_) => continue, // tuned at or beyond our budget
+            };
+            tasks.push(RetuneTask { kind, reason, requests });
+        }
+        // untuned first (they run under the fallback — the biggest win),
+        // then by traffic, hottest first; kind name breaks ties so the
+        // plan is deterministic regardless of metrics map order
+        tasks.sort_by(|a, b| {
+            let rank = |r: RetuneReason| match r {
+                RetuneReason::Untuned => 0u8,
+                RetuneReason::Hot => 1,
+            };
+            rank(a.reason)
+                .cmp(&rank(b.reason))
+                .then(b.requests.cmp(&a.requests))
+                .then(a.kind.cmp(&b.kind))
+        });
+        tasks.truncate(self.policy.max_kinds_per_cycle);
+        tasks
+    }
+
+    /// Deterministic per-session seed: base seed x kind x cycle.
+    fn session_seed(&self, kind: &str) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.policy.seed.hash(&mut h);
+        kind.hash(&mut h);
+        self.cycle.hash(&mut h);
+        h.finish()
+    }
+
+    /// Run one full cycle against a live server: plan, tune each picked
+    /// kind with a bounded warm-started session, and publish every
+    /// improvement as **one** atomic registry update (so the snapshot
+    /// version advances at most once per cycle). The publish goes
+    /// through [`ServeHandle::reload_registry`]'s sibling
+    /// `update_registry` — an in-place edit of the *current* registry —
+    /// so a reload that lands while the (slow) tuning phase runs is
+    /// merged with, never reverted by, this cycle's winners.
+    pub fn run_cycle(&mut self, handle: &ServeHandle) -> crate::Result<CycleReport> {
+        let snapshot = handle.registry_snapshot();
+        let tasks = self.plan(handle.metrics(), &snapshot);
+        let kinds_observed = handle.metrics().kinds().len();
+
+        let mut winners: Vec<(String, crate::registry::TunedEntry)> = Vec::new();
+        let mut outcomes = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            let wl = self.workloads[&task.kind].clone();
+            let mut builder = Session::for_workload(&wl)
+                .trials(self.policy.trials)
+                .seed(self.session_seed(&task.kind))
+                .parallelism(self.policy.jobs)
+                .explorer(&self.policy.explorer);
+            // warm start from the most recent retune of another kind —
+            // its MeasureDb rows join this session's training set
+            if let Some(prev) = self.last_kind.as_ref().and_then(|k| self.priors.get(k)) {
+                builder = builder.transfer_from(prev);
+            }
+            let res = builder.run()?;
+
+            let previous_runtime_us = snapshot.registry().get(&task.kind).map(|e| e.runtime_us);
+            let published = match previous_runtime_us {
+                None => true, // anything beats the untracked fallback
+                Some(prev) => {
+                    res.best.runtime_us < prev * (1.0 - self.policy.min_improvement)
+                }
+            };
+            if published {
+                winners.push((task.kind.clone(), res.registry_entry()));
+            }
+            outcomes.push(RetuneOutcome {
+                kind: task.kind.clone(),
+                reason: task.reason,
+                tuned_runtime_us: res.best.runtime_us,
+                previous_runtime_us,
+                published,
+            });
+            self.priors.insert(task.kind.clone(), res);
+            self.last_kind = Some(task.kind);
+        }
+
+        let published_version = (!winners.is_empty()).then(|| {
+            handle.update_registry(|registry| {
+                for (kind, entry) in winners {
+                    registry.insert(&kind, entry);
+                }
+            })
+        });
+        self.cycle += 1;
+        Ok(CycleReport { kinds_observed, outcomes, published_version })
+    }
+
+    /// Move the tuner onto a background thread that runs a cycle every
+    /// `interval` until [`RetunerHandle::stop`] is called. A cycle that
+    /// errors (e.g. an unknown explorer name in the policy) ends the
+    /// loop; the error is surfaced by `stop`.
+    pub fn spawn(mut self, handle: ServeHandle, interval: Duration) -> RetunerHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::spawn(move || {
+            let mut reports = Vec::new();
+            let mut error = None;
+            while !stop2.load(Ordering::SeqCst) {
+                match self.run_cycle(&handle) {
+                    Ok(report) => reports.push(report),
+                    Err(e) => {
+                        error = Some(e);
+                        break;
+                    }
+                }
+                // sleep in small slices so stop() stays responsive
+                let mut slept = Duration::ZERO;
+                while slept < interval && !stop2.load(Ordering::SeqCst) {
+                    let step = Duration::from_millis(5).min(interval - slept);
+                    std::thread::sleep(step);
+                    slept += step;
+                }
+            }
+            (reports, error)
+        });
+        RetunerHandle { stop, thread: Some(thread) }
+    }
+}
+
+/// Control handle for a spawned background re-tuner.
+pub struct RetunerHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<(Vec<CycleReport>, Option<anyhow::Error>)>>,
+}
+
+impl RetunerHandle {
+    /// Signal the loop to stop, join the thread, and return every cycle
+    /// report it produced (plus the error that ended the loop early, if
+    /// any).
+    pub fn stop(mut self) -> (Vec<CycleReport>, Option<anyhow::Error>) {
+        self.stop.store(true, Ordering::SeqCst);
+        match self.thread.take() {
+            Some(t) => t.join().expect("retuner thread panicked"),
+            None => (Vec::new(), None),
+        }
+    }
+}
+
+impl Drop for RetunerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvInstance;
+    use crate::quant::Epilogue;
+    use crate::registry::{ScheduleRegistry, TunedEntry};
+    use crate::searchspace::ScheduleConfig;
+    use crate::serve::{Server, ServerConfig};
+
+    /// Small workload whose legal space excludes the default schedule, so
+    /// "the retuner published something better than the fallback" is
+    /// observable in the served schedule itself.
+    fn tiny() -> ConvWorkload {
+        ConvWorkload::new("ot_tiny", 1, 8, 8, 32, 8)
+    }
+
+    fn drive(server: &Server, wl: &ConvWorkload, n: u64) {
+        let epi = Epilogue::default();
+        let rxs: Vec<_> = (0..n)
+            .map(|s| server.submit(&wl.name, ConvInstance::synthetic(wl, s), epi).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+    }
+
+    fn policy(trials: usize) -> RetunePolicy {
+        RetunePolicy { trials, jobs: 1, seed: 5, ..Default::default() }
+    }
+
+    #[test]
+    fn plan_prioritizes_untuned_then_hottest() {
+        let a = ConvWorkload::new("pl_a", 1, 8, 8, 8, 8);
+        let b = ConvWorkload::new("pl_b", 1, 8, 8, 8, 8);
+        let c = ConvWorkload::new("pl_c", 1, 8, 8, 8, 8);
+        let mut reg = ScheduleRegistry::new();
+        // `a` is tuned but with a small budget (Hot candidate); b and c
+        // are untuned
+        reg.insert(
+            "pl_a",
+            TunedEntry {
+                config: ScheduleConfig::default(),
+                runtime_us: 50.0,
+                trials: 8,
+                explorer: "test".into(),
+            },
+        );
+        let server = Server::from_registry(ServerConfig { workers: 1, ..Default::default() }, reg);
+        drive(&server, &a, 6); // hottest
+        drive(&server, &b, 4);
+        drive(&server, &c, 2);
+
+        let workloads: HashMap<String, ConvWorkload> = [a, b, c]
+            .into_iter()
+            .map(|w| (w.name.clone(), w))
+            .collect();
+        let tuner = OnlineTuner::new(
+            workloads,
+            RetunePolicy { max_kinds_per_cycle: 3, trials: 64, ..Default::default() },
+        );
+        let snap = server.registry_snapshot();
+        let tasks = tuner.plan(server.metrics(), &snap);
+        server.shutdown();
+
+        // untuned (b, c — hotter b first) ahead of the hot-but-tuned a
+        let order: Vec<(&str, RetuneReason)> =
+            tasks.iter().map(|t| (t.kind.as_str(), t.reason)).collect();
+        assert_eq!(
+            order,
+            vec![
+                ("pl_b", RetuneReason::Untuned),
+                ("pl_c", RetuneReason::Untuned),
+                ("pl_a", RetuneReason::Hot),
+            ]
+        );
+    }
+
+    #[test]
+    fn plan_skips_cold_unknown_and_converged_kinds() {
+        let known = ConvWorkload::new("ps_known", 1, 8, 8, 8, 8);
+        let mut reg = ScheduleRegistry::new();
+        reg.insert(
+            "ps_known",
+            TunedEntry {
+                config: ScheduleConfig::default(),
+                runtime_us: 50.0,
+                trials: 500, // >= policy budget: converged
+                explorer: "test".into(),
+            },
+        );
+        let server = Server::from_registry(ServerConfig { workers: 1, ..Default::default() }, reg);
+        drive(&server, &known, 3);
+        // a kind the tuner has no workload for
+        let stranger = ConvWorkload::new("ps_stranger", 1, 6, 6, 8, 8);
+        drive(&server, &stranger, 3);
+        // a kind below the traffic threshold
+        let cold = ConvWorkload::new("ps_cold", 1, 6, 6, 8, 8);
+        drive(&server, &cold, 1);
+
+        let mut workloads = HashMap::new();
+        workloads.insert(known.name.clone(), known);
+        workloads.insert(cold.name.clone(), cold);
+        let tuner = OnlineTuner::new(
+            workloads,
+            RetunePolicy { min_requests: 2, trials: 64, ..Default::default() },
+        );
+        let snap = server.registry_snapshot();
+        let tasks = tuner.plan(server.metrics(), &snap);
+        server.shutdown();
+        assert!(tasks.is_empty(), "{tasks:?}");
+    }
+
+    #[test]
+    fn run_cycle_publishes_schedule_for_untuned_hot_kind() {
+        let wl = tiny();
+        let server = Server::start(ServerConfig { workers: 2, ..Default::default() });
+        drive(&server, &wl, 6);
+        assert_eq!(server.schedule_for(&wl.name), ScheduleConfig::default());
+        assert_eq!(server.registry_version(), 1);
+
+        let mut workloads = HashMap::new();
+        workloads.insert(wl.name.clone(), wl.clone());
+        let mut tuner = OnlineTuner::new(workloads, policy(48));
+        let report = tuner.run_cycle(&server.handle()).unwrap();
+
+        assert_eq!(report.outcomes.len(), 1);
+        assert_eq!(report.outcomes[0].reason, RetuneReason::Untuned);
+        assert!(report.outcomes[0].published);
+        assert_eq!(report.published_version, Some(2));
+        assert_eq!(server.registry_version(), 2);
+        // the tiny workload's legal space excludes the default schedule,
+        // so the published schedule is observably non-default...
+        let published = server.schedule_for(&wl.name);
+        assert_ne!(published, ScheduleConfig::default());
+        // ...and the very next request executes under it
+        let resp = server
+            .submit(&wl.name, ConvInstance::synthetic(&wl, 99), Epilogue::default())
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert_eq!(resp.schedule, published);
+        assert_eq!(resp.registry_version, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn second_cycle_does_not_rechurn_the_same_kind() {
+        let wl = tiny();
+        let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+        drive(&server, &wl, 4);
+        let mut workloads = HashMap::new();
+        workloads.insert(wl.name.clone(), wl.clone());
+        let mut tuner = OnlineTuner::new(workloads, policy(32));
+        let r1 = tuner.run_cycle(&server.handle()).unwrap();
+        assert_eq!(r1.outcomes.len(), 1);
+        // same traffic, second cycle: the kind now has a prior — no work,
+        // no version bump
+        let r2 = tuner.run_cycle(&server.handle()).unwrap();
+        assert!(r2.outcomes.is_empty());
+        assert_eq!(r2.published_version, None);
+        assert_eq!(server.registry_version(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn cycles_are_deterministic_for_the_same_traffic_and_seed() {
+        let wl = tiny();
+        let run = || {
+            let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+            drive(&server, &wl, 4);
+            let mut workloads = HashMap::new();
+            workloads.insert(wl.name.clone(), wl.clone());
+            let mut tuner = OnlineTuner::new(workloads, policy(32));
+            let report = tuner.run_cycle(&server.handle()).unwrap();
+            let schedule = server.schedule_for(&wl.name);
+            server.shutdown();
+            (report.outcomes[0].tuned_runtime_us, schedule)
+        };
+        assert_eq!(run(), run(), "same traffic + same seed must publish the same schedule");
+    }
+
+    #[test]
+    fn spawned_retuner_publishes_and_stops_cleanly() {
+        let wl = tiny();
+        let server = Server::start(ServerConfig { workers: 2, ..Default::default() });
+        drive(&server, &wl, 4);
+        let mut workloads = HashMap::new();
+        workloads.insert(wl.name.clone(), wl.clone());
+        let tuner = OnlineTuner::new(workloads, policy(32));
+        let retuner = tuner.spawn(server.handle(), Duration::from_millis(1));
+        // wait until the first cycle's publish lands
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while server.registry_version() < 2 {
+            assert!(std::time::Instant::now() < deadline, "retuner never published");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let (reports, error) = retuner.stop();
+        assert!(error.is_none(), "{error:?}");
+        assert!(!reports.is_empty());
+        assert!(reports.iter().map(|r| r.published_count()).sum::<usize>() >= 1);
+        assert_ne!(server.schedule_for(&wl.name), ScheduleConfig::default());
+        server.shutdown();
+    }
+
+    #[test]
+    fn from_zoo_resolves_tune_net_kinds() {
+        let tuner = OnlineTuner::from_zoo(1, RetunePolicy::default());
+        assert!(tuner.workloads.contains_key("resnet50_stage2"));
+        assert!(tuner.workloads.contains_key("mbv2_dw_28"));
+        assert!(tuner.workloads.contains_key("deeplab_d4"));
+    }
+}

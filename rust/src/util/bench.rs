@@ -9,14 +9,20 @@ use std::time::Instant;
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations run.
     pub iters: usize,
+    /// Mean iteration time, nanoseconds.
     pub mean_ns: f64,
+    /// Median iteration time, nanoseconds.
     pub median_ns: f64,
+    /// 95th-percentile iteration time, nanoseconds.
     pub p95_ns: f64,
 }
 
 impl BenchStats {
+    /// Mean iteration time in microseconds.
     pub fn mean_us(&self) -> f64 {
         self.mean_ns / 1e3
     }

@@ -14,21 +14,29 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (kept as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ----- constructors ---------------------------------------------------
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
     // ----- accessors -------------------------------------------------------
+    /// Object field lookup (`None` for non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -41,6 +49,7 @@ impl Json {
         self.get(key).ok_or_else(|| anyhow!("missing JSON key '{key}'"))
     }
 
+    /// The value as a float, if it is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -48,10 +57,12 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
     }
 
+    /// The value as a bool, if it is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -59,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The value as a string slice, if it is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -66,6 +78,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice, if it is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -83,6 +96,7 @@ impl Json {
     }
 
     // ----- parsing ---------------------------------------------------------
+    /// Parse one complete JSON document (trailing characters error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();

@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed the full 256-bit state from one u64 (SplitMix64 expansion).
     pub fn new(seed: u64) -> Self {
         // SplitMix64 expansion of the seed into the full state
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -25,6 +26,7 @@ impl Rng {
         Self { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -60,6 +62,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn gen_bool(&mut self, p: f64) -> bool {
         self.gen_f64() < p
     }

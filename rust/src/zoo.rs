@@ -15,14 +15,18 @@ use crate::conv::ConvWorkload;
 /// One distinct conv layer of a network and how many times it repeats.
 #[derive(Debug, Clone)]
 pub struct NetworkLayer {
+    /// The layer's conv shape (its name is the tuning/serving kind).
     pub workload: ConvWorkload,
+    /// How many blocks of the network share this exact shape.
     pub repeats: usize,
 }
 
 /// A named collection of conv layers.
 #[derive(Debug, Clone)]
 pub struct Network {
+    /// Network name (`repro tune-net --net` accepts it).
     pub name: &'static str,
+    /// The distinct conv layers, in forward order.
     pub layers: Vec<NetworkLayer>,
 }
 

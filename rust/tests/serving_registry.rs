@@ -132,7 +132,7 @@ fn parallel_tune_to_multiworker_serve_end_to_end() {
     let tuned = parallel.best.config;
 
     let server = Server::from_registry(
-        ServerConfig { workers: 4, queue_depth: 128, max_batch: 4 },
+        ServerConfig { workers: 4, queue_depth: 128, max_batch: 4, max_wait: 0 },
         registry,
     );
     let epi = Epilogue::default();
@@ -198,7 +198,7 @@ fn grouped_and_dilated_kinds_tune_persist_and_serve_end_to_end() {
     assert_eq!(loaded, registry, "grouped/dilated entries survive the JSON roundtrip");
 
     let server = Server::from_registry(
-        ServerConfig { workers: 2, queue_depth: 64, max_batch: 4 },
+        ServerConfig { workers: 2, queue_depth: 64, max_batch: 4, max_wait: 2 },
         loaded,
     );
     let epi = Epilogue::default();
@@ -221,6 +221,189 @@ fn grouped_and_dilated_kinds_tune_persist_and_serve_end_to_end() {
     assert_eq!(metrics.total_count(), 12, "no response may be lost");
     assert_eq!(metrics.summary("rt_mbv2_dw").unwrap().count, 6);
     assert_eq!(metrics.summary("rt_deeplab_d2").unwrap().count, 6);
+}
+
+#[test]
+fn serve_under_reload_100_iterations_deterministic() {
+    // the hot-reload acceptance path: 100 alternating reload->serve
+    // rounds; after every reload the very next responses must carry the
+    // new snapshot version, the registry's schedule for that version,
+    // and bit-exact numerics — deterministically, every iteration
+    let wl = tiny_wl();
+    let cfg_a =
+        ScheduleConfig { blk_col_warps: 1, warp_col_tiles: 1, chunk: 1, ..Default::default() };
+    let cfg_b = ScheduleConfig {
+        blk_col_warps: 1,
+        warp_col_tiles: 1,
+        chunk: 1,
+        blk_row_warps: 1,
+        warp_row_tiles: 1,
+        ..Default::default()
+    };
+    assert_ne!(cfg_a, cfg_b);
+    let reg_with = |cfg: ScheduleConfig| {
+        let mut r = ScheduleRegistry::new();
+        r.insert(
+            &wl.name,
+            TunedEntry { config: cfg, runtime_us: 1.0, trials: 1, explorer: "test".into() },
+        );
+        r
+    };
+
+    let server = Server::from_registry(
+        ServerConfig { workers: 3, queue_depth: 128, max_batch: 4, ..Default::default() },
+        reg_with(cfg_a),
+    );
+    let epi = Epilogue::default();
+    for iter in 0..100u64 {
+        let (cfg, expect_version) = if iter % 2 == 0 {
+            (cfg_b, server.reload_registry(reg_with(cfg_b)))
+        } else {
+            (cfg_a, server.reload_registry(reg_with(cfg_a)))
+        };
+        assert_eq!(expect_version, iter + 2, "one version bump per reload");
+        let mut pending = Vec::new();
+        for s in 0..3u64 {
+            let inst = ConvInstance::synthetic(&wl, iter * 3 + s);
+            let want = qconv2d(&inst, &epi);
+            pending.push((want, server.submit(&wl.name, inst, epi).unwrap()));
+        }
+        for (want, rx) in pending {
+            let resp = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .expect("response lost under reload");
+            assert_eq!(resp.registry_version, expect_version, "iter {iter}");
+            assert_eq!(resp.schedule, cfg, "iter {iter}: post-reload batch on old schedule");
+            assert_eq!(resp.packed_output, want, "iter {iter}: reload changed numerics");
+        }
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.total_count(), 300, "no response lost across 100 reload rounds");
+}
+
+#[test]
+fn concurrent_submit_and_reload_burst_loses_nothing() {
+    // reloads race live submissions: every accepted request must be
+    // answered, with a schedule belonging to *some* installed snapshot
+    // (never a default fallback, never a torn mix) and correct numerics
+    let wl = tiny_wl();
+    let mk_cfg = |chunk: usize| ScheduleConfig {
+        blk_col_warps: 1,
+        warp_col_tiles: 1,
+        chunk,
+        ..Default::default()
+    };
+    let installed = [mk_cfg(1), mk_cfg(2), mk_cfg(4), mk_cfg(8)];
+    fn reg_with(kind: &str, cfg: ScheduleConfig) -> ScheduleRegistry {
+        let mut r = ScheduleRegistry::new();
+        r.insert(
+            kind,
+            TunedEntry { config: cfg, runtime_us: 1.0, trials: 1, explorer: "test".into() },
+        );
+        r
+    }
+
+    let server = Server::from_registry(
+        ServerConfig { workers: 4, queue_depth: 256, max_batch: 4, ..Default::default() },
+        reg_with(&wl.name, installed[0]),
+    );
+    let handle = server.handle();
+    let reload_kind = wl.name.clone();
+    let reloader = std::thread::spawn(move || {
+        let mut last = 1;
+        for i in 0..200usize {
+            last = handle.reload_registry(reg_with(&reload_kind, installed[i % installed.len()]));
+            std::thread::yield_now();
+        }
+        last
+    });
+
+    let epi = Epilogue::default();
+    let n = 240u64;
+    let mut pending = Vec::new();
+    for s in 0..n {
+        let inst = ConvInstance::synthetic(&wl, s);
+        let want = qconv2d(&inst, &epi);
+        // retry on backpressure: every submission must land
+        let rx = loop {
+            match server.submit(&wl.name, inst.clone(), epi) {
+                Ok(rx) => break rx,
+                Err(e) => {
+                    assert_eq!(e, tcconv::serve::SubmitError::Busy);
+                    std::thread::yield_now();
+                }
+            }
+        };
+        pending.push((want, rx));
+    }
+    let final_version = reloader.join().unwrap();
+    assert_eq!(final_version, 201);
+
+    for (want, rx) in pending {
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("response lost during reload burst");
+        assert!(
+            installed.contains(&resp.schedule),
+            "schedule {:?} not from any installed snapshot",
+            resp.schedule
+        );
+        assert!(resp.registry_version >= 1 && resp.registry_version <= 201);
+        assert_eq!(resp.packed_output, want);
+    }
+    // with the reload burst finished, new traffic must see the final
+    // snapshot and the final schedule
+    let inst = ConvInstance::synthetic(&wl, 999);
+    let want = qconv2d(&inst, &epi);
+    let resp = server.submit(&wl.name, inst, epi).unwrap().recv().unwrap();
+    assert_eq!(resp.registry_version, 201);
+    assert_eq!(resp.schedule, installed[(200 - 1) % installed.len()]);
+    assert_eq!(resp.packed_output, want);
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.total_count(), n + 1, "every accepted request answered");
+}
+
+#[test]
+fn online_retuner_fills_an_empty_registry_end_to_end() {
+    // serve -> watch -> retune -> hot-reload -> serve: the whole online
+    // loop against a server that starts with no schedules at all
+    use tcconv::tuner::online::{OnlineTuner, RetunePolicy};
+
+    let wl = tiny_wl();
+    let server = Server::start(ServerConfig { workers: 2, ..Default::default() });
+    let epi = Epilogue::default();
+
+    // cold traffic: everything runs under the default fallback
+    let mut pending = Vec::new();
+    for s in 0..6u64 {
+        pending.push(server.submit(&wl.name, ConvInstance::synthetic(&wl, s), epi).unwrap());
+    }
+    for rx in pending {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.schedule, ScheduleConfig::default());
+        assert_eq!(r.registry_version, 1);
+    }
+
+    let mut workloads = std::collections::HashMap::new();
+    workloads.insert(wl.name.clone(), wl.clone());
+    let mut tuner = OnlineTuner::new(
+        workloads,
+        RetunePolicy { trials: 48, jobs: 2, seed: 3, ..Default::default() },
+    );
+    let report = tuner.run_cycle(&server.handle()).unwrap();
+    assert_eq!(report.published_version, Some(2));
+    let tuned = server.schedule_for(&wl.name);
+    assert_ne!(tuned, ScheduleConfig::default(), "tiny workload's space excludes the default");
+
+    // warm traffic: same kind now executes under the published schedule
+    let inst = ConvInstance::synthetic(&wl, 100);
+    let want = qconv2d(&inst, &epi);
+    let resp = server.submit(&wl.name, inst, epi).unwrap().recv().unwrap();
+    assert_eq!(resp.schedule, tuned);
+    assert_eq!(resp.registry_version, 2);
+    assert_eq!(resp.packed_output, want, "retuned schedule must not change numerics");
+    server.shutdown();
 }
 
 #[test]
