@@ -55,14 +55,14 @@ fn main() {
         tuned_total += res.best.runtime_us * l.repeats as f64;
         println!(
             "{:<22} {:>4} {:>12.2} {:>12.2} {:>8.2}x  {}",
-            l.workload.name,
+            l.workload.name(),
             l.repeats,
             base_us,
             res.best.runtime_us,
             base_us / res.best.runtime_us,
             res.best.config.brief()
         );
-        registry.insert(&l.workload.name, res.registry_entry());
+        registry.insert(&l.workload.kind(), res.registry_entry());
         prior = Some(res);
     }
     println!(

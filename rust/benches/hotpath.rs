@@ -109,7 +109,7 @@ fn main() {
     let reps = if quick() { 3 } else { 6 };
     let batch_n = 256;
     for stage in 2..=5 {
-        let swl = ConvWorkload::resnet50_stage(stage, 8);
+        let swl: tcconv::workload::OpWorkload = ConvWorkload::resnet50_stage(stage, 8).into();
         let sspace = SearchSpace::for_workload(&swl, SpaceOptions::default());
         let mut r = Rng::new(11 + stage as u64);
         let batch: Vec<ScheduleConfig> =

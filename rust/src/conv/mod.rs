@@ -19,44 +19,10 @@ mod im2col;
 pub use execute::{qconv2d, qconv2d_scheduled, qconv2d_scheduled_with, ConvInstance, ExecScratch};
 pub use im2col::{DuplicatesInfo, GemmCoord, Im2colIndex, SourceElem};
 
-/// Reduced-precision data type of a convolution (paper §1: the MMA
-/// operand group doubles as the bit width halves — T4 INT4 MMA takes an
-/// 8x32 operand, twice INT8's 8x16 — doubling peak throughput).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
-pub enum Precision {
-    /// 4-bit integers: 8x32 MMA operand group, the paper's headline
-    /// deployment precision.
-    #[default]
-    Int4,
-    /// 8-bit integers: 8x16 MMA operand group, half the INT4 peak rate.
-    Int8,
-}
-
-impl Precision {
-    /// Bytes per element (INT4 packs two per byte).
-    pub fn element_bytes(self) -> f64 {
-        match self {
-            Precision::Int4 => 0.5,
-            Precision::Int8 => 1.0,
-        }
-    }
-
-    /// K-group of one MMA instruction.
-    pub fn mma_k(self) -> usize {
-        match self {
-            Precision::Int4 => 32,
-            Precision::Int8 => 16,
-        }
-    }
-
-    /// Values packed per 32-bit register.
-    pub fn pack_factor(self) -> usize {
-        match self {
-            Precision::Int4 => 8,
-            Precision::Int8 => 4,
-        }
-    }
-}
+// `Precision` moved to the operator-generic `workload` module (it applies
+// to any reduced-precision GEMM, not just convs); re-exported here so
+// `crate::conv::Precision` call sites keep working.
+pub use crate::workload::Precision;
 
 /// High-level convolution definition (paper §2.2: the "algorithm-level
 /// convolution configuration" the compiler statically knows).

@@ -5,21 +5,25 @@
 //! learn the cost structure from measurements, as in the paper. Only index
 //! arithmetic on (workload, schedule) appears here.
 
-use crate::conv::ConvWorkload;
 use crate::searchspace::ScheduleConfig;
+// the one shared clamped-log2: geometry dims here and every operator's
+// context_features use the same definition, so the halves of the feature
+// space cannot drift apart
+use crate::workload::lg;
+use crate::workload::{Workload, CONTEXT_FEATURES};
 
-/// Number of features [`featurize`] emits.
-pub const FEATURE_DIM: usize = 26;
+/// Number of features [`featurize`] emits (22 schedule/geometry dims plus
+/// the operator's [`CONTEXT_FEATURES`] workload-context dims).
+pub const FEATURE_DIM: usize = 22 + CONTEXT_FEATURES;
 
-fn lg(x: usize) -> f64 {
-    (x.max(1) as f64).log2()
-}
-
-/// Feature vector for one (workload, schedule) pair.
-pub fn featurize(wl: &ConvWorkload, cfg: &ScheduleConfig) -> Vec<f64> {
-    // the tile grid the schedule actually covers: the per-group GEMM,
-    // N/K padded to the MMA atom (same view the legality rule takes)
-    let (m, n, k) = (wl.gemm_m(), wl.gemm_n_padded(), wl.gemm_k_padded());
+/// Feature vector for one (workload, schedule) pair — operator-generic:
+/// everything is computed from the workload's GEMM legality view plus its
+/// own [`Workload::context_features`] contribution.
+pub fn featurize(wl: &dyn Workload, cfg: &ScheduleConfig) -> Vec<f64> {
+    // the tile grid the schedule actually covers: the operator's
+    // legality view (a conv's per-group GEMM with N/K padded to the MMA
+    // atom, a matmul's raw M/N/K)
+    let (m, n, k) = wl.legality_gemm();
     let (bm, bn, bk) = (cfg.block_m(), cfg.block_n(), cfg.block_k());
     let m_pad = cfg.padded_m(m);
     let nm = m_pad / bm;
@@ -37,7 +41,8 @@ pub fn featurize(wl: &ConvWorkload, cfg: &ScheduleConfig) -> Vec<f64> {
     let macs_per_block = (bm * bn * k) as f64;
     let staged = (in_tile + w_tile) * (k / bk) as f64;
 
-    let v = vec![
+    let ctx = wl.context_features();
+    let mut v = vec![
         // raw knobs (log2 for the tree splits)
         lg(cfg.blk_row_warps),
         lg(cfg.blk_col_warps),
@@ -64,13 +69,11 @@ pub fn featurize(wl: &ConvWorkload, cfg: &ScheduleConfig) -> Vec<f64> {
         out_tile_packed / 1024.0,
         out_tile_unpacked / 1024.0,
         macs_per_block / staged.max(1.0) / 1024.0,
-        // workload context (lets one model generalize across stages and
-        // across the grouped/dilated workload families)
-        lg(wl.height * wl.width),
-        lg(wl.in_channels),
-        lg(wl.groups),
-        lg(wl.dilation),
     ];
+    // workload context (lets one model generalize across stages, across
+    // the grouped/dilated conv families, and across operators — the
+    // transfer-learning hook)
+    v.extend_from_slice(&ctx);
     debug_assert_eq!(v.len(), FEATURE_DIM);
     v
 }
@@ -78,7 +81,9 @@ pub fn featurize(wl: &ConvWorkload, cfg: &ScheduleConfig) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvWorkload;
     use crate::searchspace::{MMA_K, MMA_M, MMA_N};
+    use crate::workload::MatmulWorkload;
 
     #[test]
     fn feature_dim_consistent() {
@@ -119,6 +124,30 @@ mod tests {
         assert_ne!(fd, fg);
         assert_ne!(fd, fl);
         for f in fd.iter().chain(&fg).chain(&fl) {
+            assert!(f.is_finite());
+        }
+    }
+
+    #[test]
+    fn matmul_features_are_finite_and_distinct_from_conv() {
+        // one model ranks across operators: a matmul featurizes into the
+        // same FEATURE_DIM space, with context dims telling it apart from
+        // a conv of the same GEMM shape
+        let conv = ConvWorkload::resnet50_stage(2, 8);
+        let mm = MatmulWorkload::new(
+            "f_mm",
+            conv.gemm_m(),
+            conv.gemm_n_padded(),
+            conv.gemm_k_padded(),
+        );
+        let cfg = ScheduleConfig::default();
+        let fc = featurize(&conv, &cfg);
+        let fm = featurize(&mm, &cfg);
+        assert_eq!(fm.len(), FEATURE_DIM);
+        assert_ne!(fc, fm, "context features must distinguish the operators");
+        // ...but the shared geometry dims agree (same legality GEMM)
+        assert_eq!(fc[..22], fm[..22]);
+        for f in &fm {
             assert!(f.is_finite());
         }
     }

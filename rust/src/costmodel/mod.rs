@@ -15,8 +15,8 @@ mod gbt;
 pub use features::{featurize, FEATURE_DIM};
 pub use gbt::{Gbt, GbtParams};
 
-use crate::conv::ConvWorkload;
 use crate::searchspace::ScheduleConfig;
+use crate::workload::Workload;
 
 /// A learned ranker over schedules. Scores are unitless; **higher means
 /// predicted faster**.
@@ -37,8 +37,8 @@ pub trait CostModel {
     /// measurements between sessions).
     fn clone_model(&self) -> Box<dyn CostModel>;
 
-    /// Convenience: featurize and predict in one step.
-    fn predict_config(&self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> f64 {
+    /// Convenience: featurize and predict in one step (any operator).
+    fn predict_config(&self, wl: &dyn Workload, cfg: &ScheduleConfig) -> f64 {
         self.predict(&featurize(wl, cfg))
     }
 }
@@ -64,6 +64,7 @@ impl CostModel for Gbt {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvWorkload;
     use crate::searchspace::{SearchSpace, SpaceOptions};
     use crate::sim::{GpuSpec, ProfileCache, Simulator};
     use crate::util::Rng;

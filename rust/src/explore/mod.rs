@@ -71,20 +71,19 @@ impl ExplorerKind {
 impl FromStr for ExplorerKind {
     type Err = anyhow::Error;
 
-    /// Parse a canonical name or short alias. Name/alias resolution and
-    /// the valid-options list both come from the builtin registry, so the
-    /// shim cannot drift from it (shared by `repro --explorer` and the
-    /// benches' `EXPLORER=` env selector).
+    /// Parse a canonical name or short alias. The whole lookup — alias
+    /// resolution, name→kind mapping, and the valid-options list — lives
+    /// in the builtin registry ([`ExplorerRegistry::kind_of`]), so the
+    /// shim cannot drift from the registered names (shared by
+    /// `repro --explorer` and the benches' `EXPLORER=` env selector).
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         let registry = ExplorerRegistry::with_builtins();
         match registry.resolve(s) {
-            Some("simulated-annealing") => Ok(ExplorerKind::SimulatedAnnealing),
-            Some("diversity-aware") => Ok(ExplorerKind::DiversityAware),
-            Some("random") => Ok(ExplorerKind::Random),
-            Some("exhaustive") => Ok(ExplorerKind::Exhaustive),
-            Some(other) => Err(anyhow::anyhow!(
-                "explorer '{other}' has no ExplorerKind; select it by name via Session"
-            )),
+            Some(canon) => registry.kind_of(canon).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "explorer '{canon}' has no ExplorerKind; select it by name via Session"
+                )
+            }),
             None => Err(anyhow::anyhow!(
                 "unknown explorer '{s}' (valid: {})",
                 registry.names().join(", ")
@@ -125,22 +124,61 @@ pub trait Explorer {
 /// (the "+1 random" and shortfall-fill rules of §4.1). Dedup against the
 /// batch goes through a `HashSet` shadow of `out` — the linear
 /// `out.contains` scan made this O(batch²) per round.
+///
+/// Returns the **shortfall** (`target - out.len()` after filling): `0`
+/// when the batch filled, positive when the legal space has fewer
+/// unmeasured configs left than requested. Rejection sampling alone used
+/// to spin its full 10,000-iteration guard every round once a small
+/// space (e.g. depthwise) was nearly exhausted; now sampling stops as
+/// soon as a run of consecutive failures shows the space is (close to)
+/// drained, the space is *enumerated* once, and the remaining unmeasured
+/// legal configs are appended directly — so a nearly-drained space fills
+/// deterministically and a fully-drained one reports its shortfall
+/// instead of busy-looping round after round.
 pub(crate) fn fill_random(
     space: &SearchSpace,
     out: &mut Vec<Genotype>,
     measured: &HashSet<Genotype>,
     target: usize,
     rng: &mut Rng,
-) {
+) -> usize {
     let mut in_batch: HashSet<Genotype> = out.iter().cloned().collect();
+    // phase 1 — rejection sampling: the healthy-space fast path. A long
+    // run of *consecutive* failed draws (duplicates of measured/batched
+    // configs) is the drained-space signal; in a space with unmeasured
+    // configs left at any realistic density, this run length is
+    // effectively unreachable, so the early bail never perturbs a
+    // healthy round.
+    let bail_after = 500 + 32 * target;
     let mut guard = 0;
-    while out.len() < target && guard < 10_000 {
+    let mut consecutive_failures = 0;
+    while out.len() < target && guard < 10_000 && consecutive_failures < bail_after {
         guard += 1;
         let g = space.random_legal(rng);
-        if !measured.contains(&g) && in_batch.insert(g.clone()) {
+        // re-check legality: random_legal's own fallback can be illegal
+        // on a space with no legal genotypes at all (raw-legality
+        // matmuls) — an illegal config must never enter a proposal batch
+        if space.is_legal(&g) && !measured.contains(&g) && in_batch.insert(g.clone()) {
             out.push(g);
+            consecutive_failures = 0;
+        } else {
+            consecutive_failures += 1;
         }
     }
+    if out.len() < target {
+        // phase 2 — sampling starved: enumerate the legal space once and
+        // take the stragglers directly. If none remain, the shortfall is
+        // exact — the space really is exhausted.
+        for g in space.enumerate_legal() {
+            if out.len() >= target {
+                break;
+            }
+            if !measured.contains(&g) && in_batch.insert(g.clone()) {
+                out.push(g);
+            }
+        }
+    }
+    target.saturating_sub(out.len())
 }
 
 #[cfg(test)]
@@ -213,6 +251,37 @@ mod tests {
         uniq.sort();
         uniq.dedup();
         assert_eq!(uniq.len(), out.len(), "prefilled entry must not repeat");
+    }
+
+    #[test]
+    fn fill_random_reports_shortfall_on_an_exhausted_space() {
+        // a depthwise conv's space is tiny; measure everything legal and
+        // the filler must bail with the full shortfall instead of
+        // spinning its sampling guard
+        let wl = ConvWorkload::new("fr_dw", 1, 8, 8, 16, 16).depthwise();
+        let sp = SearchSpace::for_workload(&wl, SpaceOptions::default());
+        let legal = sp.enumerate_legal();
+        assert!(!legal.is_empty());
+        let measured: HashSet<Genotype> = legal.iter().cloned().collect();
+        let mut rng = Rng::new(1);
+        let mut out = Vec::new();
+        let shortfall = fill_random(&sp, &mut out, &measured, 8, &mut rng);
+        assert_eq!(shortfall, 8, "everything measured: nothing to propose");
+        assert!(out.is_empty());
+
+        // nearly exhausted: all but two measured — enumeration fallback
+        // must surface exactly the stragglers and report the rest short
+        let mut measured = measured;
+        measured.remove(&legal[0]);
+        measured.remove(&legal[legal.len() - 1]);
+        let mut out = Vec::new();
+        let shortfall = fill_random(&sp, &mut out, &measured, 8, &mut rng);
+        assert_eq!(out.len(), 2, "the two unmeasured configs are found");
+        assert_eq!(shortfall, 6);
+        for g in &out {
+            assert!(!measured.contains(g));
+            assert!(sp.is_legal(g));
+        }
     }
 
     #[test]

@@ -11,7 +11,8 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use super::{
-    AnnealingParams, DiversityAware, Exhaustive, Explorer, RandomSearch, SimulatedAnnealing,
+    AnnealingParams, DiversityAware, Exhaustive, Explorer, ExplorerKind, RandomSearch,
+    SimulatedAnnealing,
 };
 use crate::searchspace::SearchSpace;
 
@@ -22,30 +23,38 @@ pub type ExplorerFactory = Box<dyn Fn(&SearchSpace) -> Box<dyn Explorer>>;
 pub struct ExplorerRegistry {
     factories: BTreeMap<String, ExplorerFactory>,
     aliases: BTreeMap<String, String>,
+    /// The [`ExplorerKind`] of each *builtin* canonical name — the single
+    /// source of truth `ExplorerKind::from_str` resolves through (custom
+    /// registrations have no kind and never appear here).
+    kinds: BTreeMap<String, ExplorerKind>,
 }
 
 impl ExplorerRegistry {
     /// An empty registry (no builtins).
     pub fn empty() -> Self {
-        Self { factories: BTreeMap::new(), aliases: BTreeMap::new() }
+        Self { factories: BTreeMap::new(), aliases: BTreeMap::new(), kinds: BTreeMap::new() }
     }
 
     /// The four builtin modules under their canonical names, plus the
     /// short aliases the CLI has always accepted.
     pub fn with_builtins() -> Self {
         let mut r = Self::empty();
-        r.register("simulated-annealing", |s: &SearchSpace| {
-            Box::new(SimulatedAnnealing::new(s.clone(), AnnealingParams::default()))
-                as Box<dyn Explorer>
-        });
-        r.register("diversity-aware", |s: &SearchSpace| {
+        r.register_builtin(
+            "simulated-annealing",
+            ExplorerKind::SimulatedAnnealing,
+            |s: &SearchSpace| {
+                Box::new(SimulatedAnnealing::new(s.clone(), AnnealingParams::default()))
+                    as Box<dyn Explorer>
+            },
+        );
+        r.register_builtin("diversity-aware", ExplorerKind::DiversityAware, |s: &SearchSpace| {
             Box::new(DiversityAware::new(s.clone(), AnnealingParams::default()))
                 as Box<dyn Explorer>
         });
-        r.register("random", |s: &SearchSpace| {
+        r.register_builtin("random", ExplorerKind::Random, |s: &SearchSpace| {
             Box::new(RandomSearch::new(s.clone())) as Box<dyn Explorer>
         });
-        r.register("exhaustive", |s: &SearchSpace| {
+        r.register_builtin("exhaustive", ExplorerKind::Exhaustive, |s: &SearchSpace| {
             Box::new(Exhaustive::new(s.clone())) as Box<dyn Explorer>
         });
         r.alias("sa", "simulated-annealing");
@@ -53,12 +62,27 @@ impl ExplorerRegistry {
         r
     }
 
-    /// Register (or replace) a factory under `name`.
+    /// Register a builtin factory together with its [`ExplorerKind`]
+    /// (keeps the name→kind map from ever drifting from what is actually
+    /// registered).
+    fn register_builtin<F>(&mut self, name: &str, kind: ExplorerKind, factory: F)
+    where
+        F: Fn(&SearchSpace) -> Box<dyn Explorer> + 'static,
+    {
+        self.register(name, factory);
+        self.kinds.insert(name.to_string(), kind);
+    }
+
+    /// Register (or replace) a factory under `name`. Replacing a builtin
+    /// also drops its [`ExplorerKind`] mapping — the name now denotes the
+    /// custom module, which has no kind.
     pub fn register<F>(&mut self, name: impl Into<String>, factory: F)
     where
         F: Fn(&SearchSpace) -> Box<dyn Explorer> + 'static,
     {
-        self.factories.insert(name.into(), Box::new(factory));
+        let name = name.into();
+        self.kinds.remove(&name);
+        self.factories.insert(name, Box::new(factory));
     }
 
     /// Register a short alias for a canonical name.
@@ -86,6 +110,15 @@ impl ExplorerRegistry {
     /// Whether `name` resolves to a registered factory (name or alias).
     pub fn contains(&self, name: &str) -> bool {
         self.resolve(name).is_some()
+    }
+
+    /// The [`ExplorerKind`] `name` (canonical or alias) denotes, if it
+    /// resolves to a *builtin* module — `None` for unknown names and for
+    /// custom registrations, which have no kind. This is the lookup
+    /// `ExplorerKind::from_str` delegates to, so the parse shim can never
+    /// drift from what is actually registered.
+    pub fn kind_of(&self, name: &str) -> Option<ExplorerKind> {
+        self.resolve(name).and_then(|canon| self.kinds.get(canon)).copied()
     }
 
     /// Build the named explorer for `space`; unknown names error, listing
@@ -146,6 +179,28 @@ mod tests {
         assert!(r.contains("random-again"));
         assert!(r.build("random-again", &space()).is_ok());
         assert!(r.names().contains(&"random-again"));
+    }
+
+    #[test]
+    fn kind_of_resolves_builtins_and_rejects_customs() {
+        let mut r = ExplorerRegistry::with_builtins();
+        assert_eq!(r.kind_of("simulated-annealing"), Some(ExplorerKind::SimulatedAnnealing));
+        assert_eq!(r.kind_of("sa"), Some(ExplorerKind::SimulatedAnnealing));
+        assert_eq!(r.kind_of("diversity"), Some(ExplorerKind::DiversityAware));
+        assert_eq!(r.kind_of("random"), Some(ExplorerKind::Random));
+        assert_eq!(r.kind_of("exhaustive"), Some(ExplorerKind::Exhaustive));
+        assert_eq!(r.kind_of("genetic"), None, "unknown names have no kind");
+        // a custom module has no kind...
+        r.register("my-random", |s: &SearchSpace| {
+            Box::new(RandomSearch::new(s.clone())) as Box<dyn Explorer>
+        });
+        assert_eq!(r.kind_of("my-random"), None);
+        // ...and replacing a builtin drops its kind: the name now means
+        // the custom module
+        r.register("random", |s: &SearchSpace| {
+            Box::new(RandomSearch::new(s.clone())) as Box<dyn Explorer>
+        });
+        assert_eq!(r.kind_of("random"), None);
     }
 
     #[test]

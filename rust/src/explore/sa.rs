@@ -144,10 +144,8 @@ pub(crate) fn population_ranked(
 
 /// Featurize a genotype through its space (helper shared by explorers).
 pub(crate) fn featurize_geno(space: &SearchSpace, g: &Genotype) -> Vec<f64> {
-    // the cost model features need the workload; SearchSpace carries the
-    // gemm dims but featurize() wants the ConvWorkload. To keep explorers
-    // decoupled we featurize on the decoded config + the gemm dims baked
-    // into knob-derived features.
+    // explorers stay operator-agnostic: the space carries its workload
+    // (any operator), and featurize() takes it as `&dyn Workload`
     crate::costmodel::featurize(space.workload(), &space.decode(g))
 }
 

@@ -93,6 +93,7 @@ pub mod report;
 pub mod runtime;
 pub mod searchspace;
 pub mod serve;
+pub mod workload;
 pub mod zoo;
 pub mod sim;
 pub mod tuner;

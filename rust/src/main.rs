@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use tcconv::conv::{ConvInstance, ConvWorkload};
+use tcconv::conv::ConvWorkload;
 use tcconv::costmodel::{CostModel, Gbt, GbtParams};
 use tcconv::explore::ExplorerKind;
 use tcconv::quant::Epilogue;
@@ -29,6 +29,7 @@ use tcconv::serve::{Server, ServerConfig, SubmitError};
 use tcconv::sim::{GpuSpec, Simulator};
 use tcconv::tuner::online::{OnlineTuner, RetunePolicy};
 use tcconv::tuner::{Session, SessionResult};
+use tcconv::workload::OpWorkload;
 use tcconv::zoo;
 
 fn main() -> ExitCode {
@@ -81,13 +82,15 @@ COMMANDS
             [--seed N] [--jobs 1] [--out schedule.json]
             --jobs N measures each candidate batch on N worker threads
             (bit-identical results, shorter wall-clock)
-  tune-net  [--net resnet50|resnet18|vgg16|mobilenet_v2|resnext50|deeplab_head|all]
+  tune-net  [--net resnet50|resnet18|vgg16|mobilenet_v2|resnext50|deeplab_head|bert_base|all]
             [--trials 240] [--batch 8] [--explorer diversity] [--seed N]
             [--jobs 1] [--out schedules.json]   (--model is a synonym of --net)
-            tunes every distinct conv of the model zoo — dense 3x3s plus
-            the grouped (resnext50), depthwise+pointwise (mobilenet_v2)
-            and dilated (deeplab_head) families — chaining transfer
-            learning across stages, and writes one registry file
+            tunes every distinct layer of the model zoo — dense 3x3 convs
+            plus the grouped (resnext50), depthwise+pointwise
+            (mobilenet_v2) and dilated (deeplab_head) conv families, and
+            the bert_base attention/FFN GEMMs (the matmul operator) —
+            chaining transfer learning across stages, and writes one
+            registry file keyed by namespaced conv:*/matmul:* kinds
   serve     [--registry schedules.json] [--workers 4] [--requests 16]
             [--max-batch 8] [--max-wait 2] [--retune] [--retune-trials 96]
             [--retune-jobs 2] [--registry-out improved.json]
@@ -222,14 +225,15 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         explorer.name()
     );
     for net in &nets {
-        println!("\n{} ({} distinct convs):", net.name, net.layers.len());
+        println!("\n{} ({} distinct layers):", net.name, net.layers.len());
         // cross-stage transfer: each layer's session warm-starts from the
         // previous layer's measurements (shared tile structure transfers
-        // through the workload-context features)
+        // through the workload-context features — across operators too)
         let mut prior: Option<SessionResult> = None;
         for l in &net.layers {
-            if registry.contains(&l.workload.name) {
-                println!("  {:<22} (already tuned)", l.workload.name);
+            let kind = l.workload.kind();
+            if registry.contains(&kind) {
+                println!("  {kind:<28} (already tuned)");
                 continue;
             }
             // the default measurer is the seeded T4 simulator; with
@@ -246,12 +250,12 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             }
             let res = builder.run()?;
             println!(
-                "  {:<22} {:>8.2} us  {}",
-                l.workload.name,
+                "  {:<28} {:>8.2} us  {}",
+                kind,
                 res.best.runtime_us,
                 res.best.config.brief()
             );
-            registry.insert(&l.workload.name, res.registry_entry());
+            registry.insert(&kind, res.registry_entry());
             prior = Some(res);
         }
     }
@@ -265,12 +269,12 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Submit `requests` synthetic requests round-robin over `kinds` and
-/// wait for every response; returns how many executed under a
-/// registry-tuned (non-default) schedule.
+/// Submit `requests` synthetic requests round-robin over `kinds` (mixed
+/// conv and matmul workloads) and wait for every response; returns how
+/// many executed under a registry-tuned (non-default) schedule.
 fn serve_burst(
     server: &Server,
-    kinds: &[ConvWorkload],
+    kinds: &[OpWorkload],
     requests: usize,
     seed0: u64,
 ) -> anyhow::Result<usize> {
@@ -280,8 +284,8 @@ fn serve_burst(
         let wl = &kinds[i % kinds.len()];
         // retry on backpressure so every requested submission lands
         loop {
-            let inst = ConvInstance::synthetic(wl, seed0 + i as u64);
-            match server.submit(&wl.name, inst, epi) {
+            let inst = wl.synthetic(seed0 + i as u64);
+            match server.submit(&wl.kind(), inst, epi) {
                 Ok(rx) => {
                     pending.push(rx);
                     break;
@@ -325,17 +329,18 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     println!("loaded {} tuned schedules from {path}", registry.len());
 
-    // map registry kinds back to concrete convs (zoo built once, batch 1
-    // so the CPU executor demo stays snappy)
-    let zoo_by_name: HashMap<String, ConvWorkload> = zoo::all_networks(1)
+    // map registry kinds back to concrete workloads (zoo built once,
+    // batch 1 so the CPU executor demo stays snappy); a v1 registry's
+    // bare conv names were namespaced on load, so kind() keys match
+    let zoo_by_kind: HashMap<String, OpWorkload> = zoo::all_networks(1)
         .into_iter()
         .flat_map(|n| n.layers)
-        .map(|l| (l.workload.name.clone(), l.workload))
+        .map(|l| (l.workload.kind(), l.workload))
         .collect();
-    let mut kinds: Vec<ConvWorkload> = Vec::new();
+    let mut kinds: Vec<OpWorkload> = Vec::new();
     let mut unmatched: Vec<&str> = Vec::new();
     for k in registry.kinds() {
-        match zoo_by_name.get(k) {
+        match zoo_by_kind.get(k) {
             Some(wl) => kinds.push(wl.clone()),
             None => unmatched.push(k),
         }

@@ -1,5 +1,5 @@
 //! The durable tune→serve artifact: a JSON-serializable map from workload
-//! key (conv kind) to its best-found [`ScheduleConfig`] and tuned runtime.
+//! kind to its best-found [`ScheduleConfig`] and tuned runtime.
 //!
 //! `repro tune-net` writes one of these for a whole model zoo;
 //! [`crate::serve::Server::from_registry`] loads it and routes every
@@ -7,19 +7,28 @@
 //! schedule found by tuning was printed and dropped — the serving
 //! coordinator never saw it.
 //!
+//! Kinds are **operator-namespaced** since schema version 2:
+//! `conv:resnet50_stage2`, `matmul:bert_ffn_up` — the string
+//! [`crate::workload::Workload::kind`] produces. The registry itself
+//! treats kinds as opaque keys; the namespace exists so two operators can
+//! never collide on a shape name. Version-1 files (written before the
+//! matmul operator existed) carried bare conv names; the reader migrates
+//! them by prefixing `conv:` on load, so old artifacts keep serving.
+//!
 //! Schema (via [`crate::util::json`], interchangeable with the python
 //! tooling):
 //!
 //! ```json
 //! {
-//!   "version": 1,
+//!   "version": 2,
 //!   "schedules": {
-//!     "resnet50_stage2": {
+//!     "conv:resnet50_stage2": {
 //!       "schedule": { "blk_row_warps": 2, ... },
 //!       "runtime_us": 51.3,
 //!       "trials": 500,
 //!       "explorer": "diversity-aware"
-//!     }
+//!     },
+//!     "matmul:bert_ffn_up": { ... }
 //!   }
 //! }
 //! ```
@@ -33,8 +42,13 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::searchspace::ScheduleConfig;
 use crate::util::Json;
 
-/// Schema version written by [`ScheduleRegistry::to_json`].
-pub const REGISTRY_VERSION: usize = 1;
+/// Schema version written by [`ScheduleRegistry::to_json`] (2 =
+/// operator-namespaced kinds).
+pub const REGISTRY_VERSION: usize = 2;
+
+/// Oldest schema version [`ScheduleRegistry::from_json`] still reads
+/// (version-1 kinds are un-namespaced conv names, migrated on load).
+pub const REGISTRY_VERSION_MIN: usize = 1;
 
 /// One tuned workload: the schedule to deploy plus its tune-time record.
 #[derive(Debug, Clone, PartialEq)]
@@ -149,13 +163,22 @@ impl ScheduleRegistry {
     }
 
     /// Parse the versioned JSON schema; rejects unknown versions.
+    ///
+    /// Back-compat: a version-1 file (written before kinds were
+    /// operator-namespaced) is accepted, and every bare kind is migrated
+    /// to `conv:<kind>` — version 1 predates the matmul operator, so a
+    /// bare name can only ever have meant a conv. Re-serializing writes
+    /// the current (namespaced, version-{[`REGISTRY_VERSION`]}) schema.
     pub fn from_json(j: &Json) -> Result<Self> {
         let version = j
             .req("version")?
             .as_usize()
             .ok_or_else(|| anyhow!("registry version not an integer"))?;
-        if version != REGISTRY_VERSION {
-            bail!("unsupported registry version {version} (want {REGISTRY_VERSION})");
+        if !(REGISTRY_VERSION_MIN..=REGISTRY_VERSION).contains(&version) {
+            bail!(
+                "unsupported registry version {version} \
+                 (want {REGISTRY_VERSION_MIN}..={REGISTRY_VERSION})"
+            );
         }
         let schedules = j
             .req("schedules")?
@@ -165,7 +188,13 @@ impl ScheduleRegistry {
         for (kind, entry) in schedules {
             let entry = TunedEntry::from_json(entry)
                 .with_context(|| format!("registry entry '{kind}'"))?;
-            out.entries.insert(kind.clone(), entry);
+            let kind = if version == 1 && !kind.contains(':') {
+                // v1 kinds are bare conv names
+                format!("conv:{kind}")
+            } else {
+                kind.clone()
+            };
+            out.entries.insert(kind, entry);
         }
         Ok(out)
     }
@@ -223,12 +252,36 @@ mod tests {
 
     #[test]
     fn rejects_future_versions_and_garbage() {
-        let j = Json::parse(r#"{"version": 2, "schedules": {}}"#).unwrap();
+        let j = Json::parse(r#"{"version": 3, "schedules": {}}"#).unwrap();
+        assert!(ScheduleRegistry::from_json(&j).is_err());
+        let j = Json::parse(r#"{"version": 0, "schedules": {}}"#).unwrap();
         assert!(ScheduleRegistry::from_json(&j).is_err());
         let j = Json::parse(r#"{"schedules": {}}"#).unwrap();
         assert!(ScheduleRegistry::from_json(&j).is_err());
-        let j = Json::parse(r#"{"version": 1, "schedules": {"x": {"runtime_us": 1}}}"#).unwrap();
+        let j = Json::parse(r#"{"version": 2, "schedules": {"x": {"runtime_us": 1}}}"#).unwrap();
         assert!(ScheduleRegistry::from_json(&j).is_err(), "entry missing schedule");
+    }
+
+    #[test]
+    fn version1_kinds_migrate_to_conv_namespace() {
+        // a pre-matmul registry: bare conv names under version 1
+        let sched = ScheduleConfig::default().to_json().to_string();
+        let text = format!(
+            r#"{{"version": 1, "schedules": {{
+                "resnet50_stage2": {{"schedule": {sched}, "runtime_us": 51.3, "trials": 500, "explorer": "diversity-aware"}},
+                "already:namespaced": {{"schedule": {sched}, "runtime_us": 1.0}}
+            }}}}"#
+        );
+        let reg = ScheduleRegistry::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(reg.contains("conv:resnet50_stage2"), "bare v1 kind gains the conv: namespace");
+        assert!(!reg.contains("resnet50_stage2"));
+        // a kind that already carries a namespace is left alone
+        assert!(reg.contains("already:namespaced"));
+        // re-serialization writes the current namespaced schema
+        let j = reg.to_json();
+        assert_eq!(j.req("version").unwrap().as_usize(), Some(REGISTRY_VERSION));
+        let back = ScheduleRegistry::from_json(&j).unwrap();
+        assert_eq!(back, reg, "v1 -> v2 -> v2 roundtrip is stable");
     }
 
     #[test]

@@ -151,7 +151,33 @@ impl ScheduleConfig {
     }
 
     /// Parse the same schema back (e.g. from artifact metadata).
+    ///
+    /// Strict: unknown keys are rejected by name, matching
+    /// [`crate::registry::ScheduleRegistry::from_json`]'s strictness —
+    /// a typo'd knob in a hand-written `aot.py --schedule-json` file
+    /// fails loudly here instead of silently tuning nothing.
     pub fn from_json(j: &Json) -> Result<Self> {
+        const KNOWN_KEYS: [&str; 9] = [
+            "blk_row_warps",
+            "blk_col_warps",
+            "warp_row_tiles",
+            "warp_col_tiles",
+            "chunk",
+            "reorder_inner",
+            "dup_aware",
+            "reg_packing",
+            "nhwcnc_layout",
+        ];
+        if let Some(obj) = j.as_obj() {
+            for key in obj.keys() {
+                if !KNOWN_KEYS.contains(&key.as_str()) {
+                    anyhow::bail!(
+                        "unknown schedule key '{key}' (valid: {})",
+                        KNOWN_KEYS.join(", ")
+                    );
+                }
+            }
+        }
         let num = |k: &str| -> Result<usize> {
             j.req(k)?
                 .as_usize()
@@ -254,5 +280,19 @@ mod tests {
     fn from_json_rejects_missing_keys() {
         let j = Json::parse(r#"{"chunk": 2}"#).unwrap();
         assert!(ScheduleConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_keys_by_name() {
+        // a schema typo (chunks vs chunk) must fail loudly, naming the
+        // offending key — not silently parse the rest
+        let mut text = ScheduleConfig::default().to_json().to_string();
+        text = text.replacen("{", r#"{"chunks": 4,"#, 1);
+        let err = ScheduleConfig::from_json(&Json::parse(&text).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("chunks"), "{err}");
+        assert!(err.contains("unknown schedule key"), "{err}");
+        assert!(err.contains("blk_row_warps"), "error lists valid keys: {err}");
     }
 }

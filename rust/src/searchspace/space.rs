@@ -3,8 +3,8 @@
 //! diversity-aware explorer uses.
 
 use super::config::ScheduleConfig;
-use crate::conv::ConvWorkload;
 use crate::util::Rng;
+use crate::workload::{OpWorkload, Workload};
 
 /// A schedule encoded as per-knob value *indices* — the representation the
 /// explorers mutate (AutoTVM's "knob" view of a config).
@@ -50,21 +50,23 @@ impl SpaceOptions {
     }
 }
 
-/// The search space for one convolution workload.
+/// The search space for one workload (any operator).
 #[derive(Debug, Clone)]
 pub struct SearchSpace {
     knobs: Vec<Knob>,
     opts: SpaceOptions,
     gemm: (usize, usize, usize),
-    wl: ConvWorkload,
+    wl: OpWorkload,
 }
 
 const POW2: [usize; 4] = [1, 2, 4, 8];
 
 impl SearchSpace {
-    /// The knob space for one workload; legality is judged on its
-    /// per-group GEMM with N/K padded to the MMA atom.
-    pub fn for_workload(wl: &ConvWorkload, opts: SpaceOptions) -> Self {
+    /// The knob space for one workload; legality is judged on the
+    /// workload's [`Workload::legality_gemm`] view (a conv's per-group
+    /// GEMM with N/K padded to the MMA atom; a matmul's raw M/N/K).
+    pub fn for_workload(wl: impl Into<OpWorkload>, opts: SpaceOptions) -> Self {
+        let wl = wl.into();
         let mut knobs = vec![
             Knob { name: "blk_row_warps", values: POW2.to_vec() },
             Knob { name: "blk_col_warps", values: POW2.to_vec() },
@@ -78,15 +80,12 @@ impl SearchSpace {
             knobs.push(Knob { name: "reg_packing", values: vec![0, 1] });
             knobs.push(Knob { name: "nhwcnc_layout", values: vec![0, 1] });
         }
-        // legality is judged on the *per-group* GEMM with N and K padded
-        // to the MMA atom (K-group alignment per group): a depthwise conv
-        // tiles its one padded 8x32 atom, not the raw (1, 9) GEMM
-        Self {
-            knobs,
-            opts,
-            gemm: (wl.gemm_m(), wl.gemm_n_padded(), wl.gemm_k_padded()),
-            wl: wl.clone(),
-        }
+        // legality is judged on the operator's own view: a conv's
+        // *per-group* GEMM with N and K padded to the MMA atom (K-group
+        // alignment per group — a depthwise conv tiles its one padded
+        // 8x32 atom, not the raw (1, 9) GEMM), a matmul's raw (M, N, K)
+        let gemm = wl.legality_gemm();
+        Self { knobs, opts, gemm, wl }
     }
 
     /// The tunable dimensions, in genotype order.
@@ -95,7 +94,7 @@ impl SearchSpace {
     }
 
     /// The workload this space was built for.
-    pub fn workload(&self) -> &ConvWorkload {
+    pub fn workload(&self) -> &OpWorkload {
         &self.wl
     }
 
@@ -156,8 +155,22 @@ impl SearchSpace {
             .collect()
     }
 
-    /// Uniform random *legal* genotype (rejection sampling; every workload
-    /// admits the all-minimum genotype so this terminates).
+    /// Whether the space admits at least one legal schedule. Early-exits
+    /// on the first legal genotype (cheap for tileable workloads, one
+    /// full scan for untileable ones — e.g. a matmul whose raw K no
+    /// `block_k` divides). [`crate::tuner::Session`] checks this before
+    /// tuning so an untileable workload errors instead of burning its
+    /// trial budget on rejection sampling.
+    pub fn has_legal(&self) -> bool {
+        (0..self.cardinality()).any(|i| self.is_legal(&self.from_index(i)))
+    }
+
+    /// Uniform random *legal* genotype (rejection sampling; every conv
+    /// workload admits the all-minimum genotype so this terminates with a
+    /// legal result). Caveat: on a space with **no** legal genotypes at
+    /// all (possible for raw-legality matmuls), the fallback below is
+    /// itself illegal — callers that may face such spaces must gate on
+    /// [`SearchSpace::has_legal`] or re-check [`SearchSpace::is_legal`].
     pub fn random_legal(&self, rng: &mut Rng) -> Genotype {
         for _ in 0..10_000 {
             let g: Genotype = self
@@ -169,7 +182,8 @@ impl SearchSpace {
                 return g;
             }
         }
-        // fall back to the minimal schedule, always legal for our workloads
+        // fall back to the minimal schedule (legal for every conv; for a
+        // legal-space-empty matmul there is nothing legal to return)
         vec![0u8; self.knobs.len()]
     }
 
@@ -206,6 +220,8 @@ impl SearchSpace {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::workload::MatmulWorkload;
 
     fn space() -> SearchSpace {
         SearchSpace::for_workload(
@@ -309,6 +325,30 @@ mod tests {
             assert_eq!(c.block_n(), 8, "depthwise pads N to one atom");
             assert_eq!(c.block_k(), 32, "depthwise pads K to one K-group");
         }
+    }
+
+    #[test]
+    fn matmul_space_judges_raw_gemm() {
+        // bert-ffn-shaped GEMM: every legal schedule divides the raw
+        // (M, N, K) — no atom padding is interposed
+        let mm = MatmulWorkload::new("mm_space", 1024, 768, 768);
+        let s = SearchSpace::for_workload(&mm, SpaceOptions::default());
+        let legal = s.enumerate_legal();
+        assert!(!legal.is_empty());
+        for g in &legal {
+            let c = s.decode(g);
+            assert_eq!(1024 % c.block_m(), 0);
+            assert_eq!(768 % c.block_n(), 0);
+            assert_eq!(768 % c.block_k(), 0);
+        }
+        // a K that no block_k divides admits no schedule at all
+        let odd = MatmulWorkload::new("odd_k", 1024, 768, 48);
+        let s = SearchSpace::for_workload(&odd, SpaceOptions::default());
+        assert!(s.enumerate_legal().is_empty());
+        assert!(!s.has_legal());
+        // ...while every conv space (and this aligned matmul) has one
+        assert!(space().has_legal());
+        assert!(SearchSpace::for_workload(&mm, SpaceOptions::default()).has_legal());
     }
 
     #[test]

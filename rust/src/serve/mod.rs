@@ -65,10 +65,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::conv::{qconv2d_scheduled_with, ConvInstance, ExecScratch};
 use crate::quant::Epilogue;
 use crate::registry::ScheduleRegistry;
 use crate::searchspace::ScheduleConfig;
+use crate::workload::{OpInstance, OpScratch};
 
 /// Length of one batcher wait tick, microseconds: the granularity at
 /// which an underfull batch re-checks the queue for same-kind arrivals
@@ -135,10 +135,11 @@ impl RegistrySnapshot {
 pub struct Request {
     /// Server-assigned submission id (monotonic).
     pub id: u64,
-    /// Conv kind key (e.g. "stage2"); batching groups by this.
+    /// Workload kind key (namespaced, e.g. "conv:resnet50_stage2" or
+    /// "matmul:bert_ffn_up"); batching groups by this.
     pub kind: String,
-    /// The conv problem to execute.
-    pub instance: ConvInstance,
+    /// The problem to execute — either operator.
+    pub instance: OpInstance,
     /// Post-GEMM epilogue (bias / ReLU / requantization shift).
     pub epilogue: Epilogue,
     enqueued: Instant,
@@ -150,7 +151,7 @@ pub struct Request {
 pub struct Response {
     /// The id `submit` assigned to this request.
     pub id: u64,
-    /// The request's conv kind.
+    /// The request's workload kind.
     pub kind: String,
     /// Packed-INT4 output words (same layout as the AOT artifacts).
     pub packed_output: Vec<i32>,
@@ -208,7 +209,7 @@ impl Shared {
         &self,
         metrics: &Metrics,
         kind: &str,
-        instance: ConvInstance,
+        instance: OpInstance,
         epilogue: Epilogue,
     ) -> Result<Receiver<Response>, SubmitError> {
         let (tx, rx) = channel();
@@ -291,10 +292,10 @@ impl ServeHandle {
     pub fn submit(
         &self,
         kind: &str,
-        instance: ConvInstance,
+        instance: impl Into<OpInstance>,
         epilogue: Epilogue,
     ) -> Result<Receiver<Response>, SubmitError> {
-        self.shared.submit(&self.metrics, kind, instance, epilogue)
+        self.shared.submit(&self.metrics, kind, instance.into(), epilogue)
     }
 
     /// Live metrics sink (latency summaries, histograms, worker counters).
@@ -369,14 +370,16 @@ impl Server {
         Self { shared, workers, metrics }
     }
 
-    /// Submit one request; the response arrives on the returned channel.
+    /// Submit one request — either operator: a `ConvInstance`, a
+    /// `MatmulInstance` or an [`OpInstance`] all convert. The response
+    /// arrives on the returned channel.
     pub fn submit(
         &self,
         kind: &str,
-        instance: ConvInstance,
+        instance: impl Into<OpInstance>,
         epilogue: Epilogue,
     ) -> Result<Receiver<Response>, SubmitError> {
-        self.shared.submit(&self.metrics, kind, instance, epilogue)
+        self.shared.submit(&self.metrics, kind, instance.into(), epilogue)
     }
 
     /// A cloneable handle for other threads (submission, metrics,
@@ -526,11 +529,11 @@ fn drain_same_kind(
 /// open up to `max_wait` ticks if underfull), resolve the registry
 /// snapshot once, execute, time.
 ///
-/// Each worker owns one [`ExecScratch`] for its whole lifetime: every
-/// request in every batch reuses the same staging buffers and the cached
-/// im2col gather map (same-kind batches have identical dims, so the
-/// reuse is allocation- and recompute-free), and the scratch is
-/// shape-safe across kind changes.
+/// Each worker owns one [`OpScratch`] for its whole lifetime: every
+/// request in every batch reuses the same staging buffers (and, for conv
+/// kinds, the cached im2col gather map — same-kind batches have identical
+/// dims, so the reuse is allocation- and recompute-free), and the scratch
+/// is shape-safe across kind and operator changes.
 fn worker_loop(
     shared: Arc<Shared>,
     metrics: Arc<Metrics>,
@@ -538,7 +541,7 @@ fn worker_loop(
     max_wait: usize,
     worker: usize,
 ) {
-    let mut scratch = ExecScratch::new();
+    let mut scratch = OpScratch::new();
     let tick = Duration::from_micros(BATCH_WAIT_TICK_US);
     loop {
         let batch = {
@@ -597,7 +600,7 @@ fn worker_loop(
         for req in batch {
             let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
             let t = Instant::now();
-            let out = qconv2d_scheduled_with(&req.instance, &req.epilogue, &schedule, &mut scratch);
+            let out = req.instance.execute_scheduled_with(&req.epilogue, &schedule, &mut scratch);
             let exec_us = t.elapsed().as_secs_f64() * 1e6;
             metrics.observe(&req.kind, queue_us, exec_us, bsize, worker);
             let _ = req.respond.send(Response {
@@ -622,8 +625,9 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::{qconv2d, ConvWorkload};
+    use crate::conv::{qconv2d, ConvInstance, ConvWorkload};
     use crate::registry::TunedEntry;
+    use crate::workload::{qmatmul, MatmulInstance, MatmulWorkload};
 
     fn tiny_wl() -> ConvWorkload {
         ConvWorkload::new("edge", 1, 8, 8, 8, 8)
@@ -641,7 +645,7 @@ mod tests {
         let req = Request {
             id,
             kind: kind.to_string(),
-            instance: ConvInstance::synthetic(&wl, id),
+            instance: ConvInstance::synthetic(&wl, id).into(),
             epilogue: Epilogue::default(),
             enqueued: Instant::now(),
             respond: tx,
@@ -1038,6 +1042,52 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.summary("a").unwrap().count, 6);
         assert_eq!(m.summary("b").unwrap().count, 6);
+    }
+
+    #[test]
+    fn mixed_conv_and_matmul_burst_routes_and_computes_correctly() {
+        // the operator-generic serving path: conv and matmul requests
+        // interleave through one worker pool, each kind routed to its own
+        // tuned schedule, with reference numerics for both operators under
+        // per-worker scratch reuse
+        let cwl = tiny_wl();
+        let mwl = MatmulWorkload::new("srv_mm", 32, 16, 64);
+        let conv_cfg = ScheduleConfig { chunk: 1, ..Default::default() };
+        let mm_cfg =
+            ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, blk_col_warps: 1, warp_col_tiles: 2, chunk: 1, ..Default::default() };
+        // the matmul schedule tiles the raw (32, 16, 64) exactly
+        assert!(mm_cfg.is_legal_for(32, 16, 64));
+        let mut reg = ScheduleRegistry::new();
+        reg.insert("conv:edge", entry(conv_cfg));
+        reg.insert("matmul:srv_mm", entry(mm_cfg));
+        let server = Server::from_registry(
+            ServerConfig { workers: 2, max_batch: 4, max_wait: 2, ..Default::default() },
+            reg,
+        );
+        let epi = Epilogue::default();
+        let mut pending = Vec::new();
+        for s in 0..16u64 {
+            if s % 2 == 0 {
+                let inst = ConvInstance::synthetic(&cwl, s);
+                let want = qconv2d(&inst, &epi);
+                pending.push(("conv:edge", conv_cfg, want, server.submit("conv:edge", inst, epi).unwrap()));
+            } else {
+                let inst = MatmulInstance::synthetic(&mwl, s);
+                let want = qmatmul(&inst, &epi);
+                pending.push(("matmul:srv_mm", mm_cfg, want, server.submit("matmul:srv_mm", inst, epi).unwrap()));
+            }
+        }
+        for (kind, cfg, want, rx) in pending {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("response lost");
+            assert_eq!(resp.kind, kind);
+            assert_eq!(resp.schedule, cfg, "kind {kind} routed to wrong schedule");
+            assert_eq!(resp.packed_output, want, "kind {kind} numerics");
+        }
+        let m = server.shutdown();
+        assert_eq!(m.summary("conv:edge").unwrap().count, 8);
+        assert_eq!(m.summary("matmul:srv_mm").unwrap().count, 8);
     }
 
     #[test]

@@ -6,36 +6,21 @@
 
 use std::collections::HashMap;
 
-use crate::conv::{ConvWorkload, Im2colIndex};
-use crate::layout::{self, Layout, TensorDims};
+use crate::layout;
 use crate::searchspace::{ScheduleConfig, MMA_M, MMA_N};
+use crate::workload::Workload;
+
+// The profile struct lives with the operator abstraction (each operator
+// computes its own); re-exported here because this module is its main
+// consumer.
+pub use crate::workload::FeatureTileProfile;
 
 /// INT4 element size in bytes (packed two per byte). Workloads carry
-/// their own [`crate::conv::Precision`]; this constant remains for INT4
-/// call sites and tests.
+/// their own [`crate::workload::Precision`]; this constant remains for
+/// INT4 call sites and tests.
 pub const INT4_BYTES: f64 = 0.5;
 /// int32 accumulator size.
 pub const ACC_BYTES: f64 = 4.0;
-
-/// Duplicate/padding statistics of one M-row-block's feature data.
-///
-/// The im2col duplicates live *across kernel positions* (paper Fig. 3): the
-/// same feature element appears at columns `p*C + c` for several kernel
-/// positions `p`. A duplicate-aware block therefore loads its pixels'
-/// *receptive-field patch* once (`unique_per_row_block` elements over the
-/// whole K walk), where a naive im2col load touches every non-padding cell
-/// (`naive_per_row_block`).
-#[derive(Debug, Clone, Copy)]
-pub struct FeatureTileProfile {
-    /// Non-padding im2col cells across a (block_m x K) row-block.
-    pub naive_per_row_block: f64,
-    /// Distinct feature elements across the row-block — what a
-    /// duplicate-aware block loads, and what DRAM serves cold.
-    pub unique_per_row_block: f64,
-    /// Distinct (pixel) positions behind the row-block, i.e.
-    /// `unique_per_row_block / C` — sizes the raw-patch staging buffer.
-    pub unique_pixels: f64,
-}
 
 /// Everything the timing model needs, counted per block and aggregated.
 #[derive(Debug, Clone, Copy)]
@@ -64,23 +49,30 @@ pub struct TrafficAnalysis {
     pub dup_factor: f64,
 }
 
-/// Cache of feature-tile profiles: keyed by block_m and the number of
-/// channels — the only schedule inputs the im2col row-block stats depend on.
+/// Cache of operand row-block profiles, keyed by
+/// `(workload profile key, block_m)` — the only inputs a workload's
+/// [`Workload::row_block_profile`] depends on. The key
+/// ([`Workload::profile_key`]) hashes the operator *and the full
+/// operand value* — never just a name — so one cache can serve a
+/// measurer that sees several workloads (e.g. a pool worker's cache
+/// surviving across tuning sessions) without ever handing one workload
+/// another's profile, even for same-named workloads of different shapes
+/// or operators.
 #[derive(Default)]
 pub struct ProfileCache {
-    map: HashMap<usize, FeatureTileProfile>,
+    map: HashMap<(u64, usize), FeatureTileProfile>,
 }
 
 impl ProfileCache {
-    /// The (cached) row-block profile for this `block_m`.
-    pub fn profile(&mut self, ix: &Im2colIndex, block_m: usize, channels: usize) -> FeatureTileProfile {
+    /// The (cached) row-block profile of `wl` for this `block_m`.
+    pub fn profile(&mut self, wl: &dyn Workload, block_m: usize) -> FeatureTileProfile {
         *self
             .map
-            .entry(block_m)
-            .or_insert_with(|| compute_profile(ix, block_m, channels))
+            .entry((wl.profile_key(), block_m))
+            .or_insert_with(|| wl.row_block_profile(block_m))
     }
 
-    /// Distinct `block_m` profiles cached so far.
+    /// Distinct `(workload, block_m)` profiles cached so far.
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -88,30 +80,6 @@ impl ProfileCache {
     /// Whether nothing has been profiled yet.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
-    }
-}
-
-/// Exact row-block statistics, sampled at the first / middle / last block
-/// rows and averaged (interior blocks dominate and are
-/// translation-invariant, so three samples suffice).
-fn compute_profile(ix: &Im2colIndex, block_m: usize, channels: usize) -> FeatureTileProfile {
-    let rows = ix.rows();
-    let cols = ix.cols();
-    let n_row_blocks = rows.div_ceil(block_m).max(1);
-    let row_samples = [0, n_row_blocks / 2, n_row_blocks.saturating_sub(1)];
-
-    let mut naive = 0.0;
-    let mut unique = 0.0;
-    for &rb in row_samples.iter() {
-        let s = ix.tile_stats(rb * block_m, block_m, 0, cols);
-        naive += s.naive_loads() as f64;
-        unique += s.unique as f64;
-    }
-    let n = row_samples.len() as f64;
-    FeatureTileProfile {
-        naive_per_row_block: naive / n,
-        unique_per_row_block: unique / n,
-        unique_pixels: unique / n / channels as f64,
     }
 }
 
@@ -123,15 +91,16 @@ fn smem_granule(bytes: f64) -> usize {
 /// Count everything the schedule moves. This is the single source of truth
 /// both for the timing model and for the reports.
 pub fn analyze(
-    wl: &ConvWorkload,
+    wl: &dyn Workload,
     cfg: &ScheduleConfig,
     cache: &mut ProfileCache,
 ) -> TrafficAnalysis {
-    // per-group GEMM, N/K padded to the MMA atom; a grouped conv launches
-    // `groups` structurally identical grids over disjoint channel ranges,
-    // so per-group counts scale by `groups`
-    let (m, n, k) = (wl.gemm_m(), wl.gemm_n_padded(), wl.gemm_k_padded());
-    let groups = wl.groups;
+    // the operator's legality view: a conv's per-group GEMM with N/K
+    // padded to the MMA atom, a matmul's raw (M, N, K). A grouped conv
+    // launches `groups` structurally identical grids over disjoint
+    // channel ranges, so per-group counts scale by `groups`.
+    let (m, n, k) = wl.legality_gemm();
+    let groups = wl.groups();
     let (bm, bn, bk) = (cfg.block_m(), cfg.block_n(), cfg.block_k());
     debug_assert!(cfg.is_legal_for(m, n, k));
     let m_pad = cfg.padded_m(m); // ragged M-tiles padded like TVM
@@ -140,26 +109,19 @@ pub fn analyze(
     let n_blocks = nm * nn * groups;
     let k_steps = k / bk;
 
-    let eb = wl.precision.element_bytes();
-    let ix = wl.im2col(); // group 0 stands in for every group
-    let prof = cache.profile(&ix, bm, wl.in_channels_per_group());
+    let eb = wl.precision().element_bytes();
+    let prof = cache.profile(wl, bm);
 
-    // --- coalescing: derived from WMMA-tile byte addresses (layout mod) --
-    let dims = TensorDims {
-        n: wl.batch.max(layout::WMMA_TILE_ROWS),
-        h: wl.height,
-        w: wl.width,
-        // channel bytes at the workload's precision
-        c: ((wl.in_channels as f64 * eb) as usize).max(layout::WMMA_TILE_BYTES_PER_ROW),
-    };
-    let lay = if cfg.nhwcnc_layout { Layout::Nhwcnc } else { Layout::Nhwc };
-    let coalesce_efficiency = layout::wmma_tile_coalescing(&dims, lay).efficiency();
+    // --- coalescing: the operator's own model (conv derives it from
+    //     WMMA-tile byte addresses over NHWC/NHWCnc; a row-major matmul
+    //     operand is naturally coalesced) -------------------------------
+    let coalesce_efficiency = wl.coalesce_efficiency(cfg.nhwcnc_layout);
 
     // --- feature traffic -------------------------------------------------
     // global->smem loads issued by one block over the whole K loop:
-    // duplicate-aware blocks fetch their receptive-field patch once;
-    // naive im2col touches every non-padding cell (kernel-position
-    // duplicates included).
+    // duplicate-aware blocks fetch their source patch once (for conv, the
+    // receptive field); naive loads touch every operand cell
+    // (kernel-position duplicates included).
     let feat_loads_per_block = if cfg.dup_aware {
         prof.unique_per_row_block
     } else {
@@ -195,7 +157,7 @@ pub fn analyze(
     // naive: the expanded im2col tile is re-staged per step (double
     // buffered to overlap the next load).
     let smem_feat_per_block = if cfg.dup_aware {
-        prof.unique_pixels * bk.min(wl.in_channels_per_group()) as f64 * eb
+        prof.unique_pixels * bk.min(wl.staging_channels()) as f64 * eb
     } else {
         (bm * bk) as f64 * eb * 2.0
     };
@@ -264,6 +226,8 @@ pub fn analyze(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::workload::MatmulWorkload;
 
     fn stage2() -> ConvWorkload {
         ConvWorkload::resnet50_stage(2, 8)
@@ -402,5 +366,56 @@ mod tests {
         let n1 = cache.len();
         let _ = analyze(&wl, &ScheduleConfig::default(), &mut cache);
         assert_eq!(cache.len(), n1);
+    }
+
+    #[test]
+    fn profile_cache_keys_by_workload_not_just_block_m() {
+        // two workloads sharing block_m must not share a profile: stage2
+        // and stage5 have very different duplicate structure
+        let mut cache = ProfileCache::default();
+        let a = cache.profile(&stage2(), 32);
+        let b = cache.profile(&ConvWorkload::resnet50_stage(5, 8), 32);
+        assert_eq!(cache.len(), 2, "one entry per (workload, block_m)");
+        assert_ne!(a.unique_per_row_block, b.unique_per_row_block);
+        // operators sharing a *name* stay distinct too: the key encodes
+        // the operator and shape, so a matmul named like a conv cannot
+        // inherit the conv's im2col duplicate profile
+        let conv = ConvWorkload::new("same_name", 1, 8, 8, 16, 16);
+        let mm = MatmulWorkload::new("same_name", 64, 16, 144);
+        let pc = cache.profile(&conv, 8);
+        let pm = cache.profile(&mm, 8);
+        assert_eq!(cache.len(), 4);
+        assert!(pc.naive_per_row_block > pc.unique_per_row_block, "conv has duplicates");
+        assert_eq!(pm.naive_per_row_block, pm.unique_per_row_block, "matmul must not");
+        // and same-named, same-operator workloads of *different shape*
+        // (the same zoo layer at two batch sizes through one long-lived
+        // measurer) never share an entry either
+        let b8 = cache.profile(&stage2(), 32); // already cached above
+        let b1 = cache.profile(&ConvWorkload::resnet50_stage(2, 1), 32);
+        assert_eq!(cache.len(), 5, "batch is part of the key");
+        assert!(b8.unique_per_row_block >= b1.unique_per_row_block);
+    }
+
+    #[test]
+    fn matmul_has_no_duplicates_and_full_coalescing() {
+        // the operator-generic path: a dense GEMM analyzes with
+        // dup_factor 1 (nothing to elide) whatever the flags say, and
+        // its row-major operand coalesces perfectly under either layout
+        let mm = MatmulWorkload::new("an_mm", 1024, 768, 768);
+        let cfg = ScheduleConfig::default();
+        let a = analyze(&mm, &cfg, &mut ProfileCache::default());
+        assert_eq!(a.dup_factor, 1.0);
+        assert_eq!(a.coalesce_efficiency, 1.0);
+        let off = analyze(
+            &mm,
+            &ScheduleConfig { dup_aware: false, nhwcnc_layout: false, ..cfg },
+            &mut ProfileCache::default(),
+        );
+        assert_eq!(off.coalesce_efficiency, 1.0);
+        // DRAM cold traffic is identical either way: every element is
+        // already unique
+        assert!((a.dram_bytes - off.dram_bytes).abs() < 1.0);
+        // grid covers the raw GEMM exactly
+        assert_eq!(a.n_blocks, (1024 / cfg.block_m()) * (768 / cfg.block_n()));
     }
 }

@@ -25,15 +25,19 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::conv::ConvWorkload;
 use crate::searchspace::ScheduleConfig;
+use crate::workload::OpWorkload;
 
 use super::{Measurement, ProfileCache, Simulator};
 
 /// A measurement substrate: produces the ground-truth cost of one schedule.
+///
+/// Workloads arrive as [`OpWorkload`] (the operator enum) rather than
+/// `&dyn Workload` so substrates can clone, hash and compare them — the
+/// memoizing decorator keys its cache on the workload value.
 pub trait Measurer {
     /// Measure one schedule on one workload.
-    fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement;
+    fn measure(&mut self, wl: &OpWorkload, cfg: &ScheduleConfig) -> Measurement;
 
     /// Measure a whole candidate batch, returning measurements in
     /// candidate order (`out[i]` belongs to `cfgs[i]`).
@@ -43,7 +47,7 @@ pub trait Measurer {
     /// this to fan the batch across workers. [`crate::tuner::Tuner`]
     /// measures every proposal round through this entry point, so the
     /// substrate — not the tuner — decides the execution strategy.
-    fn measure_batch(&mut self, wl: &ConvWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
+    fn measure_batch(&mut self, wl: &OpWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
         cfgs.iter().map(|c| self.measure(wl, c)).collect()
     }
 
@@ -83,7 +87,7 @@ impl Default for SimMeasurer {
 }
 
 impl Measurer for SimMeasurer {
-    fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement {
+    fn measure(&mut self, wl: &OpWorkload, cfg: &ScheduleConfig) -> Measurement {
         self.sim.measure(wl, cfg, &mut self.cache)
     }
 
@@ -104,7 +108,7 @@ impl Simulator {
 /// meaningfully inflating the footprint.
 const MEMO_STRIPES: usize = 16;
 
-type MemoKey = (ConvWorkload, ScheduleConfig);
+type MemoKey = (OpWorkload, ScheduleConfig);
 
 /// Lock-striped memoization map: `MEMO_STRIPES` independently locked
 /// shards, selected by key hash. All operations take `&self` (interior
@@ -177,7 +181,7 @@ impl CachedMeasurer {
 }
 
 impl Measurer for CachedMeasurer {
-    fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement {
+    fn measure(&mut self, wl: &OpWorkload, cfg: &ScheduleConfig) -> Measurement {
         let key = (wl.clone(), *cfg);
         if let Some(m) = self.memo.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -189,7 +193,7 @@ impl Measurer for CachedMeasurer {
         m
     }
 
-    fn measure_batch(&mut self, wl: &ConvWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
+    fn measure_batch(&mut self, wl: &OpWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
         let mut out: Vec<Option<Measurement>> = vec![None; cfgs.len()];
         let mut miss_idx = Vec::new();
         for (i, cfg) in cfgs.iter().enumerate() {
@@ -224,7 +228,13 @@ impl Measurer for CachedMeasurer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvWorkload;
     use crate::sim::{GpuSpec, ParallelMeasurer};
+    use crate::workload::MatmulWorkload;
+
+    fn stage(s: usize) -> OpWorkload {
+        ConvWorkload::resnet50_stage(s, 8).into()
+    }
 
     /// Counts invocations so the decorator's dedup is observable.
     struct CountingMeasurer {
@@ -233,7 +243,7 @@ mod tests {
     }
 
     impl Measurer for CountingMeasurer {
-        fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement {
+        fn measure(&mut self, wl: &OpWorkload, cfg: &ScheduleConfig) -> Measurement {
             self.calls.set(self.calls.get() + 1);
             self.inner.measure(wl, cfg)
         }
@@ -241,7 +251,7 @@ mod tests {
 
     #[test]
     fn sim_measurer_matches_direct_simulator() {
-        let wl = ConvWorkload::resnet50_stage(2, 8);
+        let wl = stage(2);
         let cfg = ScheduleConfig::default();
         let sim = Simulator::noiseless(GpuSpec::t4());
         let direct = sim.measure_once(&wl, &cfg).runtime_us;
@@ -258,7 +268,7 @@ mod tests {
             calls: std::rc::Rc::clone(&calls),
         };
         let mut cached = CachedMeasurer::new(Box::new(counting));
-        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let wl = stage(3);
         let a = ScheduleConfig::default();
         let b = ScheduleConfig { chunk: 1, ..a };
 
@@ -276,10 +286,34 @@ mod tests {
     fn different_workloads_do_not_collide_in_the_memo() {
         let mut cached = CachedMeasurer::new(SimMeasurer::boxed(Simulator::noiseless(GpuSpec::t4())));
         let cfg = ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, ..Default::default() };
-        let a = cached.measure(&ConvWorkload::resnet50_stage(2, 8), &cfg).runtime_us;
-        let b = cached.measure(&ConvWorkload::resnet50_stage(5, 8), &cfg).runtime_us;
+        let a = cached.measure(&stage(2), &cfg).runtime_us;
+        let b = cached.measure(&stage(5), &cfg).runtime_us;
         assert_ne!(a, b);
         assert_eq!(cached.misses(), 2);
+    }
+
+    #[test]
+    fn measurers_accept_both_operators() {
+        // one substrate, conv and matmul interleaved: the profile cache
+        // and the memo both key by workload, so neither operator sees
+        // the other's numbers
+        let conv = stage(2);
+        let mm: OpWorkload = MatmulWorkload::new("meas_mm", 1024, 768, 768).into();
+        let cfg = ScheduleConfig::default();
+        let mut m = SimMeasurer::new(Simulator::noiseless(GpuSpec::t4()));
+        let rc = m.measure(&conv, &cfg).runtime_us;
+        let rm = m.measure(&mm, &cfg).runtime_us;
+        assert_ne!(rc, rm);
+        // repeat measurements are stable
+        assert_eq!(m.measure(&conv, &cfg).runtime_us, rc);
+        assert_eq!(m.measure(&mm, &cfg).runtime_us, rm);
+        // and the memoizing decorator dedupes per (workload, config)
+        let mut cached = CachedMeasurer::new(SimMeasurer::boxed(Simulator::noiseless(GpuSpec::t4())));
+        cached.measure(&conv, &cfg);
+        cached.measure(&mm, &cfg);
+        cached.measure(&mm, &cfg);
+        assert_eq!(cached.misses(), 2);
+        assert_eq!(cached.hits(), 1);
     }
 
     #[test]
@@ -290,7 +324,7 @@ mod tests {
             calls: std::rc::Rc::clone(&calls),
         };
         let mut cached = CachedMeasurer::new(Box::new(counting));
-        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let wl = stage(3);
         let a = ScheduleConfig::default();
         let b = ScheduleConfig { chunk: 1, ..a };
         let c = ScheduleConfig { chunk: 4, ..a };
@@ -312,7 +346,7 @@ mod tests {
     #[test]
     fn cached_over_parallel_is_bit_identical_to_serial() {
         // the intended composition: memo in front, pool behind
-        let wl = ConvWorkload::resnet50_stage(2, 8);
+        let wl = stage(2);
         let sim = Simulator { noise_sigma: 0.02, seed: 3, ..Default::default() };
         let cfgs: Vec<ScheduleConfig> = [1usize, 2, 4, 8]
             .iter()

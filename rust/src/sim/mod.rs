@@ -26,8 +26,8 @@ pub use pool::{MeasurePool, ParallelMeasurer};
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
 
-use crate::conv::ConvWorkload;
 use crate::searchspace::ScheduleConfig;
+use crate::workload::{Precision, Workload};
 
 /// One simulated hardware measurement.
 #[derive(Debug, Clone)]
@@ -101,17 +101,18 @@ impl Simulator {
         Self { gpu, noise_sigma: 0.0, seed: 0 }
     }
 
-    /// Simulate one schedule. `cache` amortizes the im2col tile analysis
-    /// across configs sharing (block_m, block_k).
+    /// Simulate one schedule (any operator). `cache` amortizes the
+    /// operand tile analysis across configs sharing `block_m`.
     pub fn measure(
         &self,
-        wl: &ConvWorkload,
+        wl: &dyn Workload,
         cfg: &ScheduleConfig,
         cache: &mut ProfileCache,
     ) -> Measurement {
-        // legality on the per-group GEMM with N/K padded to the MMA atom
-        // (matches SearchSpace; grouped/depthwise convs tile padded atoms)
-        let (m, n, k) = (wl.gemm_m(), wl.gemm_n_padded(), wl.gemm_k_padded());
+        // legality on the operator's own view (matches SearchSpace): a
+        // conv's per-group GEMM with N/K padded to the MMA atom, a
+        // matmul's raw (M, N, K)
+        let (m, n, k) = wl.legality_gemm();
         if !cfg.is_legal_for(m, n, k) {
             return infeasible();
         }
@@ -149,10 +150,10 @@ impl Simulator {
         // so are the N/K pad lanes of grouped convs; every group runs its
         // own padded per-group GEMM
         let total_macs =
-            (cfg.padded_m(m) as f64) * (n as f64) * (k as f64) * wl.groups as f64;
-        let macs_per_cycle = match wl.precision {
-            crate::conv::Precision::Int4 => g.int4_macs_per_cycle,
-            crate::conv::Precision::Int8 => g.int8_macs_per_cycle,
+            (cfg.padded_m(m) as f64) * (n as f64) * (k as f64) * wl.groups() as f64;
+        let macs_per_cycle = match wl.precision() {
+            Precision::Int4 => g.int4_macs_per_cycle,
+            Precision::Int8 => g.int8_macs_per_cycle,
         };
         let t_mma = total_macs
             / (g.sms as f64
@@ -248,16 +249,16 @@ impl Simulator {
     }
 
     /// Convenience: measure without an external cache.
-    pub fn measure_once(&self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement {
+    pub fn measure_once(&self, wl: &dyn Workload, cfg: &ScheduleConfig) -> Measurement {
         self.measure(wl, cfg, &mut ProfileCache::default())
     }
 
     /// Deterministic multiplicative jitter in [exp(-3σ), exp(3σ)] keyed by
     /// (workload, config, seed) — repeated measurement of the same config
     /// returns the same value, like a stable hardware measurement mean.
-    fn noise(&self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> f64 {
+    fn noise(&self, wl: &dyn Workload, cfg: &ScheduleConfig) -> f64 {
         let mut h = DefaultHasher::new();
-        wl.name.hash(&mut h);
+        wl.name().hash(&mut h);
         cfg.hash(&mut h);
         self.seed.hash(&mut h);
         let u = (h.finish() >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
@@ -278,6 +279,8 @@ fn infeasible() -> Measurement {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::workload::MatmulWorkload;
 
     fn sim() -> Simulator {
         Simulator::noiseless(GpuSpec::t4())
@@ -450,6 +453,47 @@ mod tests {
         let m = sim().measure_once(&stage(2), &ScheduleConfig::default());
         assert!(m.breakdown.achieved_tops < GpuSpec::t4().peak_int4_tops());
         assert!(m.breakdown.achieved_tops > 1.0);
+    }
+
+    #[test]
+    fn matmul_simulates_feasibly_and_scales_with_work() {
+        // the second operator through the same simulator: a bert-ffn GEMM
+        // is feasible under the default schedule, its runtime scales with
+        // the MAC count, and an untileable shape is infeasible
+        let sim = sim();
+        let small = MatmulWorkload::new("mm_small", 1024, 768, 768);
+        let big = MatmulWorkload::new("mm_big", 1024, 3072, 768);
+        let ms = sim.measure_once(&small, &ScheduleConfig::default());
+        let mb = sim.measure_once(&big, &ScheduleConfig::default());
+        assert!(ms.feasible && mb.feasible);
+        assert!(
+            mb.runtime_us > ms.runtime_us * 2.0,
+            "4x the MACs must cost clearly more: {} vs {}",
+            mb.runtime_us,
+            ms.runtime_us
+        );
+        // raw-K legality: K = 48 admits no block_k
+        let odd = MatmulWorkload::new("mm_odd", 1024, 768, 48);
+        assert!(!sim.measure_once(&odd, &ScheduleConfig::default()).feasible);
+        // INT4 beats INT8 on the same GEMM, like for convs
+        let t4 = sim.measure_once(&small, &ScheduleConfig::default()).runtime_us;
+        let t8 = sim
+            .measure_once(
+                &small.clone().with_precision(Precision::Int8),
+                &ScheduleConfig::default(),
+            )
+            .runtime_us;
+        assert!(t4 < t8, "int4 {t4} vs int8 {t8}");
+    }
+
+    #[test]
+    fn matmul_noise_is_deterministic_per_candidate() {
+        let mut sim = Simulator::default();
+        sim.noise_sigma = 0.02;
+        let mm = MatmulWorkload::new("mm_noise", 1024, 768, 768);
+        let a = sim.measure_once(&mm, &ScheduleConfig::default()).runtime_us;
+        let b = sim.measure_once(&mm, &ScheduleConfig::default()).runtime_us;
+        assert_eq!(a, b);
     }
 }
 

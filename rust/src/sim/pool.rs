@@ -42,8 +42,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::conv::ConvWorkload;
 use crate::searchspace::ScheduleConfig;
+use crate::workload::OpWorkload;
 
 use super::{Measurement, Measurer, ProfileCache, Simulator};
 
@@ -180,12 +180,12 @@ impl ParallelMeasurer {
 }
 
 impl Measurer for ParallelMeasurer {
-    fn measure(&mut self, wl: &ConvWorkload, cfg: &ScheduleConfig) -> Measurement {
+    fn measure(&mut self, wl: &OpWorkload, cfg: &ScheduleConfig) -> Measurement {
         let mut cache = self.caches[0].lock().unwrap();
         self.sim.measure(wl, cfg, &mut cache)
     }
 
-    fn measure_batch(&mut self, wl: &ConvWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
+    fn measure_batch(&mut self, wl: &OpWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
         let sim = &self.sim;
         let caches = &self.caches;
         self.pool.run_with(
@@ -206,6 +206,7 @@ impl Measurer for ParallelMeasurer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvWorkload;
     use crate::searchspace::{SearchSpace, SpaceOptions};
     use crate::sim::{GpuSpec, SimMeasurer};
     use crate::util::Rng;
@@ -255,7 +256,7 @@ mod tests {
 
     #[test]
     fn parallel_batch_is_bit_identical_to_serial() {
-        let wl = ConvWorkload::resnet50_stage(2, 8);
+        let wl: OpWorkload = ConvWorkload::resnet50_stage(2, 8).into();
         let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
         let mut rng = Rng::new(17);
         let cfgs: Vec<ScheduleConfig> =
@@ -281,7 +282,7 @@ mod tests {
 
     #[test]
     fn single_job_parallel_measurer_matches_plain_sim() {
-        let wl = ConvWorkload::resnet50_stage(4, 8);
+        let wl: OpWorkload = ConvWorkload::resnet50_stage(4, 8).into();
         let cfg = ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, ..Default::default() };
         let sim = Simulator::noiseless(GpuSpec::t4());
         let direct = sim.measure_once(&wl, &cfg).runtime_us;

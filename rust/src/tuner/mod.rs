@@ -37,12 +37,12 @@ pub use session::{Session, SessionBuilder, SessionResult};
 // Re-export the measurement seam here too: tuning code is its main client.
 pub use crate::sim::{CachedMeasurer, Measurer, ParallelMeasurer, SimMeasurer};
 
-use crate::conv::ConvWorkload;
 use crate::costmodel::{featurize, CostModel, Gbt, GbtParams};
 use crate::explore::{Explorer, ExplorerKind};
 use crate::searchspace::{Genotype, ScheduleConfig, SearchSpace, SpaceOptions};
 use crate::sim::Simulator;
 use crate::util::Rng;
+use crate::workload::{OpWorkload, Workload};
 
 /// Tuning-session options (§4.1 defaults).
 pub struct TunerOptions {
@@ -92,11 +92,11 @@ pub struct TuneResult {
     pub history: History,
 }
 
-/// One tuning session over one convolution workload. Every collaborator is
-/// a trait object — no concrete model or measurement substrate appears in
-/// the fields.
+/// One tuning session over one workload (any operator). Every
+/// collaborator is a trait object — no concrete model or measurement
+/// substrate appears in the fields.
 pub struct Tuner {
-    wl: ConvWorkload,
+    wl: OpWorkload,
     space: SearchSpace,
     explorer: Box<dyn Explorer>,
     model: Box<dyn CostModel>,
@@ -116,8 +116,9 @@ impl Tuner {
     /// Assemble a tuner for one workload from options (builds the search
     /// space and the `opts.explorer` module; [`Session`] is the
     /// higher-level front door).
-    pub fn new(wl: &ConvWorkload, opts: TunerOptions) -> Self {
-        let space = SearchSpace::for_workload(wl, opts.space);
+    pub fn new(wl: impl Into<OpWorkload>, opts: TunerOptions) -> Self {
+        let wl = wl.into();
+        let space = SearchSpace::for_workload(&wl, opts.space);
         let explorer = opts.explorer.build(&space);
         Self::assemble(wl, space, explorer, opts)
     }
@@ -126,16 +127,17 @@ impl Tuner {
     /// registry-resolved or custom exploration modules); `opts.explorer`
     /// is ignored.
     pub fn with_explorer(
-        wl: &ConvWorkload,
+        wl: impl Into<OpWorkload>,
         opts: TunerOptions,
         explorer: Box<dyn Explorer>,
     ) -> Self {
-        let space = SearchSpace::for_workload(wl, opts.space);
+        let wl = wl.into();
+        let space = SearchSpace::for_workload(&wl, opts.space);
         Self::assemble(wl, space, explorer, opts)
     }
 
     fn assemble(
-        wl: &ConvWorkload,
+        wl: OpWorkload,
         space: SearchSpace,
         explorer: Box<dyn Explorer>,
         opts: TunerOptions,
@@ -144,7 +146,7 @@ impl Tuner {
         let model = model
             .unwrap_or_else(|| Box::new(Gbt::new(GbtParams { seed, ..Default::default() })));
         Self {
-            wl: wl.clone(),
+            wl,
             space,
             explorer,
             model,
@@ -161,10 +163,13 @@ impl Tuner {
     /// (config, runtime) rows are featurized under `prior_wl` and kept in
     /// the training set, and the cost model is trained immediately, so the
     /// very first proposal batch is already model-guided instead of random.
-    pub fn with_transfer(mut self, prior_wl: &ConvWorkload, prior_db: &MeasureDb) -> Self {
+    /// The prior may be any operator — cross-operator transfer works
+    /// through the shared feature space.
+    pub fn with_transfer(mut self, prior_wl: impl Into<OpWorkload>, prior_db: &MeasureDb) -> Self {
+        let prior_wl = prior_wl.into();
         let rows = prior_db
             .iter()
-            .map(|(_, cfg, rt)| (featurize(prior_wl, cfg), *rt))
+            .map(|(_, cfg, rt)| (featurize(&prior_wl, cfg), *rt))
             .collect();
         self.set_prior(rows);
         self
@@ -230,10 +235,11 @@ impl Tuner {
     }
 
     fn retrain(&mut self) {
+        let wl = &self.wl;
         let (mut xs, mut ys): (Vec<Vec<f64>>, Vec<f64>) = self
             .db
             .iter()
-            .map(|(_, cfg, rt)| (featurize(&self.wl, cfg), *rt))
+            .map(|(_, cfg, rt)| (featurize(wl, cfg), *rt))
             .unzip();
         for (x, y) in &self.prior {
             xs.push(x.clone());
@@ -264,18 +270,19 @@ impl Tuner {
 /// Exhaustively measure the whole space (Table 1's "Exhaustive" row).
 /// Returns (best config, best runtime, configs measured).
 pub fn exhaustive_best(
-    wl: &ConvWorkload,
+    wl: impl Into<OpWorkload>,
     space_opts: SpaceOptions,
     sim: &Simulator,
 ) -> (ScheduleConfig, f64, usize) {
-    let space = SearchSpace::for_workload(wl, space_opts);
+    let wl = wl.into();
+    let space = SearchSpace::for_workload(&wl, space_opts);
     let mut measurer = SimMeasurer::new(sim.clone());
     let mut best: Option<(ScheduleConfig, f64)> = None;
     let legal = space.enumerate_legal();
     let n = legal.len();
     for g in legal {
         let cfg = space.decode(&g);
-        let rt = measurer.measure(wl, &cfg).runtime_us;
+        let rt = measurer.measure(&wl, &cfg).runtime_us;
         if best.as_ref().map_or(true, |(_, b)| rt < *b) {
             best = Some((cfg, rt));
         }
@@ -287,6 +294,7 @@ pub fn exhaustive_best(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvWorkload;
     use crate::sim::GpuSpec;
 
     #[test]

@@ -41,8 +41,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::conv::ConvWorkload;
 use crate::serve::{Metrics, RegistrySnapshot, ServeHandle};
+use crate::workload::OpWorkload;
 use crate::zoo;
 
 use super::{Session, SessionResult};
@@ -149,7 +149,7 @@ impl CycleReport {
 /// The background re-tuner: watches serve metrics, runs bounded tuning
 /// sessions, publishes improved schedules via registry hot-reload.
 pub struct OnlineTuner {
-    workloads: HashMap<String, ConvWorkload>,
+    workloads: HashMap<String, OpWorkload>,
     policy: RetunePolicy,
     /// Finished sessions by kind — the warm-start fuel (`MeasureDb` +
     /// `History` ride inside each [`SessionResult`]).
@@ -161,21 +161,37 @@ pub struct OnlineTuner {
 }
 
 impl OnlineTuner {
-    /// A tuner that can resolve the given kinds to concrete workloads.
+    /// A tuner that can resolve the given kinds to concrete workloads
+    /// (any operator — the map values convert into [`OpWorkload`]).
     /// Kinds missing from the map are ignored by the planner (the server
-    /// can serve kinds the tuner has no shape for).
-    pub fn new(workloads: HashMap<String, ConvWorkload>, policy: RetunePolicy) -> Self {
+    /// can serve kinds the tuner has no shape for), and so are workloads
+    /// whose search space admits **no legal schedule** (possible for
+    /// raw-legality matmuls): [`crate::tuner::Session`] would error on
+    /// them, and one such kind must not abort a whole retune cycle — or
+    /// kill a spawned re-tuner loop — every time it gets traffic, so
+    /// they are dropped here, once, at construction.
+    pub fn new<W: Into<OpWorkload>>(
+        workloads: HashMap<String, W>,
+        policy: RetunePolicy,
+    ) -> Self {
+        use crate::searchspace::{SearchSpace, SpaceOptions};
+        let workloads = workloads
+            .into_iter()
+            .map(|(k, w)| (k, w.into()))
+            .filter(|(_, w)| SearchSpace::for_workload(w, SpaceOptions::default()).has_legal())
+            .collect();
         Self { workloads, policy, priors: HashMap::new(), last_kind: None, cycle: 0 }
     }
 
     /// Convenience: resolve kinds against every layer of the model
     /// [`zoo`] at the given batch size (what `repro serve --retune`
-    /// uses — registry kinds written by `tune-net` are zoo layer names).
+    /// uses — registry kinds written by `tune-net` are the zoo layers'
+    /// namespaced `conv:*` / `matmul:*` kinds).
     pub fn from_zoo(batch: usize, policy: RetunePolicy) -> Self {
-        let workloads = zoo::all_networks(batch)
+        let workloads: HashMap<String, OpWorkload> = zoo::all_networks(batch)
             .into_iter()
             .flat_map(|n| n.layers)
-            .map(|l| (l.workload.name.clone(), l.workload))
+            .map(|l| (l.workload.kind(), l.workload))
             .collect();
         Self::new(workloads, policy)
     }
@@ -365,7 +381,7 @@ impl Drop for RetunerHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::ConvInstance;
+    use crate::conv::{ConvInstance, ConvWorkload};
     use crate::quant::Epilogue;
     use crate::registry::{ScheduleRegistry, TunedEntry};
     use crate::searchspace::ScheduleConfig;
@@ -567,10 +583,29 @@ mod tests {
     }
 
     #[test]
+    fn untileable_workloads_are_dropped_at_construction() {
+        // a raw-legality matmul no block_k divides would make Session
+        // error; the planner must never select it, and a cycle over it
+        // must be a clean no-op rather than an aborted loop
+        use crate::workload::MatmulWorkload;
+        let good = ConvWorkload::new("ot_good", 1, 8, 8, 8, 8);
+        let mut workloads: HashMap<String, crate::workload::OpWorkload> = HashMap::new();
+        workloads.insert("ot_good".into(), (&good).into());
+        workloads.insert("ot_bad".into(), MatmulWorkload::new("ot_bad", 1024, 768, 48).into());
+        let tuner = OnlineTuner::new(workloads, policy(16));
+        assert!(tuner.workloads.contains_key("ot_good"));
+        assert!(!tuner.workloads.contains_key("ot_bad"), "untileable kind must be dropped");
+    }
+
+    #[test]
     fn from_zoo_resolves_tune_net_kinds() {
+        // zoo kinds are namespaced per operator — exactly what tune-net
+        // writes into the registry and what serve traffic routes on
         let tuner = OnlineTuner::from_zoo(1, RetunePolicy::default());
-        assert!(tuner.workloads.contains_key("resnet50_stage2"));
-        assert!(tuner.workloads.contains_key("mbv2_dw_28"));
-        assert!(tuner.workloads.contains_key("deeplab_d4"));
+        assert!(tuner.workloads.contains_key("conv:resnet50_stage2"));
+        assert!(tuner.workloads.contains_key("conv:mbv2_dw_28"));
+        assert!(tuner.workloads.contains_key("conv:deeplab_d4"));
+        assert!(tuner.workloads.contains_key("matmul:bert_ffn_up"));
+        assert!(!tuner.workloads.contains_key("resnet50_stage2"));
     }
 }

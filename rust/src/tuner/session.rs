@@ -39,12 +39,12 @@
 //! loads.
 #![deny(missing_docs)]
 
-use crate::conv::ConvWorkload;
 use crate::costmodel::{featurize, CostModel};
 use crate::explore::{Explorer, ExplorerRegistry};
 use crate::registry::TunedEntry;
 use crate::searchspace::{SearchSpace, SpaceOptions};
 use crate::sim::Measurer;
+use crate::workload::OpWorkload;
 
 use super::{MeasureDb, TuneResult, Tuner, TunerOptions};
 
@@ -52,10 +52,12 @@ use super::{MeasureDb, TuneResult, Tuner, TunerOptions};
 pub struct Session;
 
 impl Session {
-    /// Start configuring a tuning session for one workload.
-    pub fn for_workload(wl: &ConvWorkload) -> SessionBuilder {
+    /// Start configuring a tuning session for one workload — any
+    /// operator: a `&ConvWorkload`, a `&MatmulWorkload`, or an
+    /// [`OpWorkload`] all convert.
+    pub fn for_workload(wl: impl Into<OpWorkload>) -> SessionBuilder {
         SessionBuilder {
-            wl: wl.clone(),
+            wl: wl.into(),
             trials: 500,
             batch_size: 32,
             seed: 0,
@@ -72,7 +74,7 @@ impl Session {
 
 /// Fluent configuration of one tuning session.
 pub struct SessionBuilder {
-    wl: ConvWorkload,
+    wl: OpWorkload,
     trials: usize,
     batch_size: usize,
     seed: u64,
@@ -193,6 +195,18 @@ impl SessionBuilder {
             prior,
         } = self;
         let search_space = SearchSpace::for_workload(&wl, space);
+        // untileable workloads (possible since raw-legality matmuls: a
+        // shape no block configuration divides) error up front instead of
+        // spending the whole trial budget rejection-sampling an empty
+        // legal space and publishing an infeasible "best"
+        if !search_space.has_legal() {
+            anyhow::bail!(
+                "workload '{}' admits no legal schedule: its legality GEMM {:?} \
+                 is not divisible by any block configuration",
+                crate::workload::Workload::kind(&wl),
+                crate::workload::Workload::legality_gemm(&wl),
+            );
+        }
         // provenance: the canonical registry name this session selected
         // (Explorer::name() may differ for custom modules)
         let explorer_name = registry
@@ -218,7 +232,7 @@ impl SessionBuilder {
         };
         // assemble directly with the space already built for the registry
         // lookup (Tuner::with_explorer would re-derive the identical one)
-        let mut tuner = Tuner::assemble(&wl, search_space, explorer, opts);
+        let mut tuner = Tuner::assemble(wl.clone(), search_space, explorer, opts);
         if !prior.is_empty() {
             tuner.set_prior(prior);
         }
@@ -231,7 +245,7 @@ impl SessionBuilder {
 /// Outcome of one tuning session: the best schedule plus everything a
 /// follow-up session (transfer) or a deployment (registry entry) needs.
 pub struct SessionResult {
-    workload: ConvWorkload,
+    workload: OpWorkload,
     /// The best schedule found and the full tuning history.
     pub best: TuneResult,
     db: MeasureDb,
@@ -241,8 +255,15 @@ pub struct SessionResult {
 
 impl SessionResult {
     /// The workload this session tuned.
-    pub fn workload(&self) -> &ConvWorkload {
+    pub fn workload(&self) -> &OpWorkload {
         &self.workload
+    }
+
+    /// The namespaced registry kind of the tuned workload (`conv:<name>`
+    /// / `matmul:<name>`) — the key to insert
+    /// [`SessionResult::registry_entry`] under.
+    pub fn kind(&self) -> String {
+        self.workload.kind()
     }
 
     /// Every measurement the session paid for (transfer-learning fuel).
@@ -271,8 +292,10 @@ impl SessionResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvWorkload;
     use crate::explore::RandomSearch;
     use crate::sim::{GpuSpec, SimMeasurer, Simulator};
+    use crate::workload::MatmulWorkload;
 
     /// Small real workload whose legal space excludes the default
     /// schedule (gemm N = 8 forces 8-wide block columns), so every tuned
@@ -389,6 +412,50 @@ mod tests {
         // transfer only changes guidance, never the accounting
         assert_eq!(warm.db().len(), 64);
         assert!(warm.best.runtime_us <= warm.best.history.best_after(64) * 1.0001);
+    }
+
+    #[test]
+    fn matmul_session_tunes_and_transfers_from_conv() {
+        // the tentpole path: a conv session's measurements warm-start a
+        // matmul session through the shared feature space, and the matmul
+        // result is a deployable registry entry under a matmul: kind
+        let conv = ConvWorkload::resnet50_stage(3, 8);
+        let src = Session::for_workload(&conv)
+            .trials(48)
+            .seed(4)
+            .measurer(Simulator { seed: 4, ..Default::default() }.into_measurer())
+            .run()
+            .unwrap();
+        let mm = MatmulWorkload::new("bert_ffn_up_t", 1024, 3072, 768);
+        let res = Session::for_workload(&mm)
+            .trials(48)
+            .seed(4)
+            .measurer(Simulator { seed: 4, ..Default::default() }.into_measurer())
+            .transfer_from(&src)
+            .run()
+            .unwrap();
+        assert!(res.best.runtime_us.is_finite());
+        assert_eq!(res.db().len(), 48);
+        assert_eq!(res.kind(), "matmul:bert_ffn_up_t");
+        assert_eq!(res.workload().name(), "bert_ffn_up_t");
+        let entry = res.registry_entry();
+        assert_eq!(entry.config, res.best.config);
+        // the tuned schedule tiles the raw GEMM exactly
+        assert!(entry.config.is_legal_for(1024, 3072, 768));
+    }
+
+    #[test]
+    fn untileable_workload_errors_instead_of_tuning() {
+        // raw-legality matmul with K = 48: no block_k divides it, so the
+        // session must refuse up front — not burn 500 trials rejection-
+        // sampling an empty legal space and publish an infeasible best
+        let err = Session::for_workload(&MatmulWorkload::new("untileable", 1024, 768, 48))
+            .trials(500)
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("matmul:untileable"), "{err}");
+        assert!(err.contains("no legal schedule"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Quantized matrix multiply — the second first-class operator.
+//!
+//! A plain (M x K) by (K x N) GEMM in the INT4/INT8 domain: exactly the
+//! kernel shape the paper's tile/warp search space was built for, minus
+//! the im2col lowering (related work — Bhaskaracharya et al., Markidis et
+//! al. — treats this as the canonical Tensor Core workload). Execution
+//! reuses the conv executor's blocked i32 GEMM
+//! ([`crate::conv::execute::gemm_i32_blocked_with`]) and the padded INT4
+//! packing ([`crate::quant::pack_int4_padded_into`]), so matmul numerics
+//! inherit the conv path's golden-validated integer pipeline.
+//!
+//! Unlike a convolution — whose per-group GEMM is padded up to the MMA
+//! atom before legality is judged — a matmul's tile legality is judged on
+//! the **raw (M, N, K)**: there is no im2col structure to hide padding
+//! behind, so a shape either tiles exactly or admits no schedule.
+
+use anyhow::{anyhow, Result};
+
+use crate::conv::execute::gemm_i32_blocked_with;
+use crate::quant::{pack_int4_padded_into, Epilogue};
+use crate::searchspace::ScheduleConfig;
+use crate::util::Json;
+
+use super::{lg, Precision, Workload, CONTEXT_FEATURES};
+
+/// A quantized GEMM workload: `(m x k) . (k x n)` at reduced precision.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MatmulWorkload {
+    /// Workload key — the un-namespaced half of the `matmul:<name>`
+    /// registry/serving kind.
+    pub name: String,
+    /// Output rows (e.g. `batch x sequence` for a transformer GEMM).
+    pub m: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Accumulation depth.
+    pub k: usize,
+    /// Reduced-precision data type (INT4 or INT8).
+    pub precision: Precision,
+}
+
+impl MatmulWorkload {
+    /// An INT4 GEMM of the given shape; adjust with
+    /// [`MatmulWorkload::with_precision`].
+    pub fn new(name: impl Into<String>, m: usize, n: usize, k: usize) -> Self {
+        Self { name: name.into(), m, n, k, precision: Precision::Int4 }
+    }
+
+    /// Same GEMM at a different precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+}
+
+impl Workload for MatmulWorkload {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn op_name(&self) -> &'static str {
+        "matmul"
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn gemm_m(&self) -> usize {
+        self.m
+    }
+
+    fn gemm_n(&self) -> usize {
+        self.n
+    }
+
+    fn gemm_k(&self) -> usize {
+        self.k
+    }
+
+    /// Raw (M, N, K): a matmul has no im2col padding to tile over, so a
+    /// schedule is legal only if it divides the real operand exactly.
+    fn legality_gemm(&self) -> (usize, usize, usize) {
+        (self.m, self.n, self.k)
+    }
+
+    fn profile_key(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        "matmul".hash(&mut h);
+        self.hash(&mut h);
+        h.finish()
+    }
+
+    fn context_features(&self) -> [f64; CONTEXT_FEATURES] {
+        // a GEMM is "all channels": M and K describe the operand, and the
+        // spatial/group/dilation dims a conv would report are identity
+        [lg(self.m), lg(self.k), 0.0, 0.0]
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::Str("matmul".into())),
+            ("name", Json::Str(self.name.clone())),
+            ("m", Json::Num(self.m as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("precision", Json::Str(self.precision.tag().into())),
+        ])
+    }
+}
+
+/// Parse the schema [`MatmulWorkload`]'s `to_json` writes (called from
+/// [`super::OpWorkload::from_json`] once the `"op"` tag selected matmul).
+pub(super) fn matmul_from_json(j: &Json) -> Result<MatmulWorkload> {
+    let num = |k: &str| -> Result<usize> {
+        let v = j
+            .req(k)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("matmul workload key '{k}' not an integer"))?;
+        if v == 0 {
+            anyhow::bail!("matmul workload key '{k}' must be >= 1");
+        }
+        Ok(v)
+    };
+    Ok(MatmulWorkload {
+        name: j
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("matmul workload 'name' not a string"))?
+            .to_string(),
+        m: num("m")?,
+        n: num("n")?,
+        k: num("k")?,
+        precision: Precision::from_tag(
+            j.req("precision")?
+                .as_str()
+                .ok_or_else(|| anyhow!("matmul workload 'precision' not a string"))?,
+        )?,
+    })
+}
+
+/// A quantized matmul problem instance: INT4/INT8-domain values held in
+/// i8 (the same value domain the conv executor uses).
+#[derive(Debug, Clone)]
+pub struct MatmulInstance {
+    /// The GEMM shape this data instantiates.
+    pub wl: MatmulWorkload,
+    /// Row-major `m x k` left operand, values in [-8, 7].
+    pub a: Vec<i8>,
+    /// Row-major `k x n` right operand, values in [-8, 7].
+    pub b: Vec<i8>,
+    /// Per-output-column bias.
+    pub bias: Vec<i32>,
+}
+
+impl MatmulInstance {
+    /// Deterministic synthetic instance (same value domain as
+    /// [`crate::conv::ConvInstance::synthetic`]).
+    pub fn synthetic(wl: &MatmulWorkload, seed: u64) -> Self {
+        let mut rng = crate::util::Rng::new(seed);
+        let a = (0..wl.m * wl.k).map(|_| rng.gen_range(16) as i8 - 8).collect();
+        let b = (0..wl.k * wl.n).map(|_| rng.gen_range(16) as i8 - 8).collect();
+        let bias = (0..wl.n).map(|_| rng.gen_range(128) as i32 - 64).collect();
+        Self { wl: wl.clone(), a, b, bias }
+    }
+}
+
+/// Reusable matmul execution buffers (the accumulator and the epilogue
+/// row buffer); the matmul half of [`super::OpScratch`].
+#[derive(Debug, Default)]
+pub struct MatmulScratch {
+    acc: Vec<i32>,
+    rowbuf: Vec<i32>,
+}
+
+impl MatmulScratch {
+    /// Empty scratch; buffers grow to the first workload's sizes on use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Execute the matmul under the default schedule, returning packed-INT4
+/// words, row-major over `(m, n/8)` — the same output layout as the conv
+/// executor (rows padded to the packing granule when `n % 8 != 0`).
+pub fn qmatmul(inst: &MatmulInstance, epi: &Epilogue) -> Vec<i32> {
+    qmatmul_scheduled(inst, epi, &ScheduleConfig::default())
+}
+
+/// Execute the matmul under a specific schedule — the serving path. On
+/// this CPU substrate the schedule steers the GEMM blocking only;
+/// numerics are schedule-invariant by construction (pinned by the
+/// conformance harness).
+pub fn qmatmul_scheduled(
+    inst: &MatmulInstance,
+    epi: &Epilogue,
+    cfg: &ScheduleConfig,
+) -> Vec<i32> {
+    qmatmul_scheduled_with(inst, epi, cfg, &mut MatmulScratch::new())
+}
+
+/// [`qmatmul_scheduled`] with caller-owned buffers — the batched serving
+/// hot path. Output is identical; only the allocation behaviour differs.
+pub fn qmatmul_scheduled_with(
+    inst: &MatmulInstance,
+    epi: &Epilogue,
+    cfg: &ScheduleConfig,
+    scratch: &mut MatmulScratch,
+) -> Vec<i32> {
+    let wl = &inst.wl;
+    let (m, n, k) = (wl.m, wl.n, wl.k);
+    debug_assert_eq!(inst.a.len(), m * k);
+    debug_assert_eq!(inst.b.len(), k * n);
+    debug_assert_eq!(inst.bias.len(), n);
+
+    // blocked i32 GEMM, blocking steered by the tuned schedule (clamped
+    // to cache-sane bounds, matching the conv executor's policy)
+    let bm = cfg.block_m().clamp(8, 64);
+    let bk = cfg.block_k().clamp(32, 128);
+    scratch.acc.clear();
+    scratch.acc.resize(m * n, 0);
+    gemm_i32_blocked_with(&inst.a, &inst.b, &mut scratch.acc, m, n, k, bm, bk);
+
+    // fused epilogue + padded-INT4 packing, row-major
+    let mut out = Vec::with_capacity(m * n.div_ceil(8));
+    scratch.rowbuf.clear();
+    scratch.rowbuf.resize(n, 0);
+    for row in 0..m {
+        for c in 0..n {
+            scratch.rowbuf[c] = epi.apply(scratch.acc[row * n + c], inst.bias[c]);
+        }
+        pack_int4_padded_into(&scratch.rowbuf, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::unpack_int4;
+
+    /// Independent scalar reference: the dumbest possible triple loop.
+    fn matmul_reference(inst: &MatmulInstance, epi: &Epilogue) -> Vec<i32> {
+        let wl = &inst.wl;
+        let mut out = Vec::new();
+        let mut row = vec![0i32; wl.n];
+        for i in 0..wl.m {
+            for j in 0..wl.n {
+                let mut acc = 0i32;
+                for kk in 0..wl.k {
+                    acc += inst.a[i * wl.k + kk] as i32 * inst.b[kk * wl.n + j] as i32;
+                }
+                row[j] = epi.apply(acc, inst.bias[j]);
+            }
+            pack_int4_padded_into(&row, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn executor_matches_scalar_reference() {
+        let wl = MatmulWorkload::new("t", 16, 24, 32);
+        let inst = MatmulInstance::synthetic(&wl, 1);
+        let epi = Epilogue::default();
+        assert_eq!(qmatmul(&inst, &epi), matmul_reference(&inst, &epi));
+    }
+
+    #[test]
+    fn scheduled_execution_is_numerics_invariant() {
+        let wl = MatmulWorkload::new("s", 32, 16, 64);
+        let inst = MatmulInstance::synthetic(&wl, 9);
+        let epi = Epilogue { relu: true, requant_shift: 4 };
+        let want = qmatmul(&inst, &epi);
+        let mut scratch = MatmulScratch::new();
+        for cfg in [
+            ScheduleConfig::default(),
+            ScheduleConfig::tvm_baseline(),
+            ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, chunk: 1, ..Default::default() },
+            ScheduleConfig { blk_row_warps: 8, warp_row_tiles: 8, chunk: 8, ..Default::default() },
+        ] {
+            assert_eq!(qmatmul_scheduled(&inst, &epi, &cfg), want, "{cfg:?}");
+            assert_eq!(
+                qmatmul_scheduled_with(&inst, &epi, &cfg, &mut scratch),
+                want,
+                "scratch reuse, {cfg:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_mixed_shapes_is_numerics_invariant() {
+        let epi = Epilogue::default();
+        let mut scratch = MatmulScratch::new();
+        let shapes = [
+            MatmulWorkload::new("a", 16, 8, 32),
+            MatmulWorkload::new("b", 8, 24, 64),
+            MatmulWorkload::new("a2", 16, 8, 32),
+        ];
+        for (i, wl) in shapes.iter().enumerate() {
+            let inst = MatmulInstance::synthetic(wl, 40 + i as u64);
+            let fresh = qmatmul(&inst, &epi);
+            let reused = qmatmul_scheduled_with(
+                &inst,
+                &epi,
+                &ScheduleConfig::default(),
+                &mut scratch,
+            );
+            assert_eq!(fresh, reused, "{}", wl.name);
+        }
+    }
+
+    #[test]
+    fn ragged_n_packs_with_zero_tail() {
+        // n = 12 packs each row into 2 words, the second half-empty
+        let wl = MatmulWorkload::new("r", 4, 12, 32);
+        let inst = MatmulInstance::synthetic(&wl, 5);
+        let out = qmatmul(&inst, &Epilogue::default());
+        assert_eq!(out.len(), 4 * 2);
+        for v in unpack_int4(&out) {
+            assert!((-8..=7).contains(&v));
+        }
+    }
+
+    #[test]
+    fn bert_shapes_have_aligned_gemms() {
+        // the zoo's bert_base shapes tile the raw GEMM exactly
+        for (m, n, k) in [(1024, 768, 768), (1024, 3072, 768), (12288, 128, 64)] {
+            let wl = MatmulWorkload::new("b", m, n, k);
+            assert_eq!(wl.legality_gemm(), (m, n, k));
+            assert_eq!(wl.gemm_n_padded(), n, "already atom-aligned");
+            assert_eq!(wl.gemm_k_padded(), k.div_ceil(32) * 32);
+            assert!(ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, chunk: 1, ..Default::default() }
+                .is_legal_for(m, n, k));
+        }
+    }
+
+    #[test]
+    fn ops_counts_macs_x2() {
+        let wl = MatmulWorkload::new("o", 16, 8, 32);
+        assert_eq!(Workload::ops(&wl), 2 * 16 * 8 * 32);
+    }
+}

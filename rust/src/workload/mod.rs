@@ -1,0 +1,816 @@
+//! The operator abstraction: what the tuning/serving stack knows about a
+//! workload, independent of *which* operator it is.
+//!
+//! The paper's method — a tile/warp search space over reduced-precision
+//! MMA atoms, explored by learning from distinctive candidates — is not
+//! conv-specific: its operand-shape constraints apply to any int4/int8
+//! GEMM-shaped kernel on Tensor Cores (related work treats plain matrix
+//! multiply as *the* canonical Tensor Core workload). This module is the
+//! seam that keeps the rest of the stack operator-generic:
+//!
+//! * [`Workload`] — the trait every operator implements: a GEMM view
+//!   (`m`/`n`/`k` plus MMA-atom-padded variants and the legality view),
+//!   [`Precision`], the per-row-block duplicate profile and coalescing
+//!   model the simulator charges, the workload-context feature
+//!   contribution the cost model trains on, the namespaced `kind` string
+//!   the registry and server route by, and a JSON round-trip.
+//! * [`OpWorkload`] — the enum dispatch used at serialization and serving
+//!   boundaries (`Conv` | `Matmul`); everything internal takes
+//!   `&dyn Workload` or stores an `OpWorkload`.
+//! * [`OpInstance`] / [`OpScratch`] — the executable counterpart: a
+//!   request payload the serving workers run under a tuned schedule,
+//!   whatever the operator.
+//!
+//! [`MatmulWorkload`] (in [`matmul`]) is the second first-class operator:
+//! a quantized GEMM reusing the conv executor's blocked i32 GEMM and the
+//! padded INT4 packing.
+
+pub mod matmul;
+
+pub use matmul::{
+    qmatmul, qmatmul_scheduled, qmatmul_scheduled_with, MatmulInstance, MatmulScratch,
+    MatmulWorkload,
+};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::conv::{qconv2d_scheduled_with, ConvInstance, ConvWorkload, ExecScratch};
+use crate::quant::Epilogue;
+use crate::searchspace::{ScheduleConfig, MMA_N};
+use crate::util::Json;
+
+/// Reduced-precision data type of a workload (paper §1: the MMA operand
+/// group doubles as the bit width halves — T4 INT4 MMA takes an 8x32
+/// operand, twice INT8's 8x16 — doubling peak throughput).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// 4-bit integers: 8x32 MMA operand group, the paper's headline
+    /// deployment precision.
+    #[default]
+    Int4,
+    /// 8-bit integers: 8x16 MMA operand group, half the INT4 peak rate.
+    Int8,
+}
+
+impl Precision {
+    /// Bytes per element (INT4 packs two per byte).
+    pub fn element_bytes(self) -> f64 {
+        match self {
+            Precision::Int4 => 0.5,
+            Precision::Int8 => 1.0,
+        }
+    }
+
+    /// K-group of one MMA instruction.
+    pub fn mma_k(self) -> usize {
+        match self {
+            Precision::Int4 => 32,
+            Precision::Int8 => 16,
+        }
+    }
+
+    /// Values packed per 32-bit register.
+    pub fn pack_factor(self) -> usize {
+        match self {
+            Precision::Int4 => 8,
+            Precision::Int8 => 4,
+        }
+    }
+
+    /// The serialization tag (`"int4"` / `"int8"`).
+    pub fn tag(self) -> &'static str {
+        match self {
+            Precision::Int4 => "int4",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Parse the [`Precision::tag`] form back.
+    pub fn from_tag(tag: &str) -> Result<Self> {
+        match tag {
+            "int4" => Ok(Precision::Int4),
+            "int8" => Ok(Precision::Int8),
+            other => bail!("unknown precision '{other}' (valid: int4, int8)"),
+        }
+    }
+}
+
+/// Number of workload-context features every operator contributes to the
+/// cost model's feature vector (see [`Workload::context_features`]).
+pub const CONTEXT_FEATURES: usize = 4;
+
+/// Duplicate/padding statistics of one M-row-block of the GEMM's feature
+/// operand — what the simulator's traffic model charges.
+///
+/// For a convolution the im2col duplicates live *across kernel positions*
+/// (paper Fig. 3): the same feature element appears at several columns, so
+/// a duplicate-aware block loads its pixels' receptive-field patch once
+/// (`unique_per_row_block`) where a naive im2col load touches every
+/// non-padding cell (`naive_per_row_block`). A plain matrix multiply has
+/// no duplicates: naive and unique coincide.
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureTileProfile {
+    /// Operand loads a naive (duplicate-oblivious) block issues across a
+    /// (block_m x K) row-block.
+    pub naive_per_row_block: f64,
+    /// Distinct operand elements across the row-block — what a
+    /// duplicate-aware block loads, and what DRAM serves cold.
+    pub unique_per_row_block: f64,
+    /// Distinct source positions behind the row-block
+    /// (`unique_per_row_block / staging channels`) — sizes the raw-patch
+    /// staging buffer.
+    pub unique_pixels: f64,
+}
+
+/// Clamped log2 used for every log-scaled feature dim — one definition
+/// shared by [`Workload::context_features`] impls and
+/// [`crate::costmodel::featurize`]'s geometry dims, so the two halves of
+/// the feature space can never drift apart.
+pub(crate) fn lg(x: usize) -> f64 {
+    (x.max(1) as f64).log2()
+}
+
+/// One operator workload, as seen by the search space, the simulator, the
+/// cost model, the registry and the serving router.
+///
+/// The trait deliberately speaks only the GEMM language: every method is
+/// answerable from the workload's lowered matrix view plus whatever static
+/// structure the operator knows about its own operand (conv: the im2col
+/// index algebra; matmul: nothing special). Anything conv-only stays on
+/// [`ConvWorkload`]'s inherent API.
+pub trait Workload: std::fmt::Debug {
+    /// Workload key (unique per shape; the un-namespaced half of
+    /// [`Workload::kind`]).
+    fn name(&self) -> &str;
+
+    /// Operator family tag (`"conv"`, `"matmul"`) — the namespace of the
+    /// registry/serving kind.
+    fn op_name(&self) -> &'static str;
+
+    /// The namespaced registry/serving kind, `"<op>:<name>"` — what
+    /// `tune-net` writes, the schedule registry keys by, and requests
+    /// route on.
+    fn kind(&self) -> String {
+        format!("{}:{}", self.op_name(), self.name())
+    }
+
+    /// Reduced-precision data type.
+    fn precision(&self) -> Precision;
+
+    /// GEMM rows.
+    fn gemm_m(&self) -> usize;
+
+    /// GEMM columns (*per group*, unpadded — real outputs).
+    fn gemm_n(&self) -> usize;
+
+    /// GEMM accumulation depth (*per group*, unpadded).
+    fn gemm_k(&self) -> usize;
+
+    /// [`Workload::gemm_n`] padded up to the 8-column WMMA atom.
+    fn gemm_n_padded(&self) -> usize {
+        self.gemm_n().div_ceil(MMA_N) * MMA_N
+    }
+
+    /// [`Workload::gemm_k`] padded up to this precision's MMA K-group.
+    fn gemm_k_padded(&self) -> usize {
+        let kg = self.precision().mma_k();
+        self.gemm_k().div_ceil(kg) * kg
+    }
+
+    /// The (M, N, K) view tile legality is judged on — also the compute
+    /// grid the simulator charges. Convolutions pad N/K to the MMA atom
+    /// (a depthwise conv tiles one padded 8x32 atom, not its raw (1, 9)
+    /// GEMM); a plain matmul judges the raw (M, N, K).
+    fn legality_gemm(&self) -> (usize, usize, usize) {
+        (self.gemm_m(), self.gemm_n_padded(), self.gemm_k_padded())
+    }
+
+    /// Independent GEMM grids this workload launches (conv channel
+    /// groups; `1` for dense operators).
+    fn groups(&self) -> usize {
+        1
+    }
+
+    /// Multiply-accumulate operation count, x2 (the GFLOPS denominator).
+    fn ops(&self) -> u64 {
+        2 * self.groups() as u64
+            * self.gemm_m() as u64
+            * self.gemm_n() as u64
+            * self.gemm_k() as u64
+    }
+
+    /// Paper §4.4 taxonomy: whether the operand is "larger height &
+    /// width" rather than "larger channels & filters". Only convolutions
+    /// have a spatial axis; dense GEMMs are channel-shaped by definition.
+    fn is_spatial_heavy(&self) -> bool {
+        false
+    }
+
+    /// Channels resident per staged source position — sizes the
+    /// duplicate-aware staging buffer (conv: input channels per group;
+    /// matmul: the whole K axis).
+    fn staging_channels(&self) -> usize {
+        self.gemm_k()
+    }
+
+    /// Cache key covering everything [`Workload::row_block_profile`]
+    /// depends on: a 64-bit hash of the operator tag plus the **full
+    /// operand value** — never just the name, so same-named workloads of
+    /// different shapes (or operators) can share one
+    /// [`ProfileCache`](crate::sim::ProfileCache) without receiving each
+    /// other's profiles. A hash (not a formatted string) keeps the
+    /// per-measurement cache lookup allocation-free.
+    fn profile_key(&self) -> u64;
+
+    /// Operand-load statistics of one (block_m x K) row-block. The default
+    /// models a dense operand with no duplicates (every cell is a distinct
+    /// element); convolutions override it with the exact im2col duplicate
+    /// analysis.
+    fn row_block_profile(&self, block_m: usize) -> FeatureTileProfile {
+        let cells = block_m as f64 * self.gemm_k() as f64;
+        FeatureTileProfile {
+            naive_per_row_block: cells,
+            unique_per_row_block: cells,
+            unique_pixels: cells / self.staging_channels().max(1) as f64,
+        }
+    }
+
+    /// Coalescing efficiency of the operand's global loads under the
+    /// schedule's layout flag (1.0 = every transaction byte useful). A
+    /// row-major matmul operand is naturally coalesced either way;
+    /// convolutions derive this from WMMA-tile byte addresses.
+    fn coalesce_efficiency(&self, nhwcnc: bool) -> f64 {
+        let _ = nhwcnc;
+        1.0
+    }
+
+    /// The [`CONTEXT_FEATURES`] workload-context dims of the cost-model
+    /// feature vector — what lets one model rank across workloads (and
+    /// operators) for transfer learning.
+    fn context_features(&self) -> [f64; CONTEXT_FEATURES];
+
+    /// Serialize to the tagged-object JSON schema ([`OpWorkload::from_json`]
+    /// parses it back).
+    fn to_json(&self) -> Json;
+}
+
+impl Workload for ConvWorkload {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn op_name(&self) -> &'static str {
+        "conv"
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn gemm_m(&self) -> usize {
+        ConvWorkload::gemm_m(self)
+    }
+
+    fn gemm_n(&self) -> usize {
+        ConvWorkload::gemm_n(self)
+    }
+
+    fn gemm_k(&self) -> usize {
+        ConvWorkload::gemm_k(self)
+    }
+
+    fn gemm_n_padded(&self) -> usize {
+        ConvWorkload::gemm_n_padded(self)
+    }
+
+    fn gemm_k_padded(&self) -> usize {
+        ConvWorkload::gemm_k_padded(self)
+    }
+
+    fn groups(&self) -> usize {
+        self.groups
+    }
+
+    fn ops(&self) -> u64 {
+        ConvWorkload::ops(self)
+    }
+
+    fn is_spatial_heavy(&self) -> bool {
+        ConvWorkload::is_spatial_heavy(self)
+    }
+
+    fn staging_channels(&self) -> usize {
+        self.in_channels_per_group()
+    }
+
+    /// Hash of the operator tag and the whole conv value — covers every
+    /// field the im2col row-block statistics depend on (and a few they
+    /// don't, which only splits entries, never aliases them).
+    fn profile_key(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        "conv".hash(&mut h);
+        self.hash(&mut h);
+        h.finish()
+    }
+
+    /// Exact row-block statistics from the im2col index algebra, sampled
+    /// at the first / middle / last block rows and averaged (interior
+    /// blocks dominate and are translation-invariant, so three samples
+    /// suffice).
+    fn row_block_profile(&self, block_m: usize) -> FeatureTileProfile {
+        let ix = self.im2col(); // group 0 stands in for every group
+        let rows = ix.rows();
+        let cols = ix.cols();
+        let n_row_blocks = rows.div_ceil(block_m).max(1);
+        let row_samples = [0, n_row_blocks / 2, n_row_blocks.saturating_sub(1)];
+
+        let mut naive = 0.0;
+        let mut unique = 0.0;
+        for &rb in row_samples.iter() {
+            let s = ix.tile_stats(rb * block_m, block_m, 0, cols);
+            naive += s.naive_loads() as f64;
+            unique += s.unique as f64;
+        }
+        let n = row_samples.len() as f64;
+        FeatureTileProfile {
+            naive_per_row_block: naive / n,
+            unique_per_row_block: unique / n,
+            unique_pixels: unique / n / self.in_channels_per_group() as f64,
+        }
+    }
+
+    /// Derived from WMMA-tile byte addresses over the NHWC / NHWCnc
+    /// feature map (the §3.3 coalescing analysis).
+    fn coalesce_efficiency(&self, nhwcnc: bool) -> f64 {
+        use crate::layout::{self, Layout, TensorDims};
+        let eb = self.precision.element_bytes();
+        let dims = TensorDims {
+            n: self.batch.max(layout::WMMA_TILE_ROWS),
+            h: self.height,
+            w: self.width,
+            // channel bytes at the workload's precision
+            c: ((self.in_channels as f64 * eb) as usize).max(layout::WMMA_TILE_BYTES_PER_ROW),
+        };
+        let lay = if nhwcnc { Layout::Nhwcnc } else { Layout::Nhwc };
+        layout::wmma_tile_coalescing(&dims, lay).efficiency()
+    }
+
+    fn context_features(&self) -> [f64; CONTEXT_FEATURES] {
+        [
+            lg(self.height * self.width),
+            lg(self.in_channels),
+            lg(self.groups),
+            lg(self.dilation),
+        ]
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::Str("conv".into())),
+            ("name", Json::Str(self.name.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("height", Json::Num(self.height as f64)),
+            ("width", Json::Num(self.width as f64)),
+            ("in_channels", Json::Num(self.in_channels as f64)),
+            ("out_channels", Json::Num(self.out_channels as f64)),
+            ("kernel", Json::Num(self.kernel as f64)),
+            ("stride", Json::Num(self.stride as f64)),
+            ("padding", Json::Num(self.padding as f64)),
+            ("groups", Json::Num(self.groups as f64)),
+            ("dilation", Json::Num(self.dilation as f64)),
+            ("precision", Json::Str(self.precision.tag().into())),
+        ])
+    }
+}
+
+fn conv_from_json(j: &Json) -> Result<ConvWorkload> {
+    let num = |k: &str| -> Result<usize> {
+        j.req(k)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("conv workload key '{k}' not an integer"))
+    };
+    // validate the builder invariants the struct relies on — malformed
+    // JSON must error here, not divide-by-zero (groups/stride 0) or
+    // silently miscompute (groups not dividing the channels) downstream
+    let pos = |k: &str| -> Result<usize> {
+        let v = num(k)?;
+        if v == 0 {
+            bail!("conv workload key '{k}' must be >= 1");
+        }
+        Ok(v)
+    };
+    let (in_channels, out_channels) = (pos("in_channels")?, pos("out_channels")?);
+    let groups = pos("groups")?;
+    if in_channels % groups != 0 || out_channels % groups != 0 {
+        bail!(
+            "conv workload groups {groups} must divide in_channels {in_channels} \
+             and out_channels {out_channels}"
+        );
+    }
+    let mut wl = ConvWorkload::new(
+        j.req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("conv workload 'name' not a string"))?,
+        pos("batch")?,
+        pos("height")?,
+        pos("width")?,
+        in_channels,
+        out_channels,
+    );
+    wl.kernel = pos("kernel")?;
+    wl.stride = pos("stride")?;
+    wl.padding = num("padding")?;
+    wl.groups = groups;
+    wl.dilation = pos("dilation")?;
+    wl.precision = Precision::from_tag(
+        j.req("precision")?
+            .as_str()
+            .ok_or_else(|| anyhow!("conv workload 'precision' not a string"))?,
+    )?;
+    Ok(wl)
+}
+
+/// Enum dispatch over the first-class operators — the concrete type the
+/// stack stores and ships across serialization/serving boundaries
+/// (internally everything speaks `&dyn Workload`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum OpWorkload {
+    /// A 2-D convolution lowered to an im2col GEMM.
+    Conv(ConvWorkload),
+    /// A plain quantized matrix multiply.
+    Matmul(MatmulWorkload),
+}
+
+impl OpWorkload {
+    /// The inner workload as a trait object (for explicit dispatch).
+    pub fn as_workload(&self) -> &dyn Workload {
+        match self {
+            OpWorkload::Conv(w) => w,
+            OpWorkload::Matmul(w) => w,
+        }
+    }
+
+    /// The conv inside, if this is one.
+    pub fn as_conv(&self) -> Option<&ConvWorkload> {
+        match self {
+            OpWorkload::Conv(w) => Some(w),
+            _ => None,
+        }
+    }
+
+    /// The matmul inside, if this is one.
+    pub fn as_matmul(&self) -> Option<&MatmulWorkload> {
+        match self {
+            OpWorkload::Matmul(w) => Some(w),
+            _ => None,
+        }
+    }
+
+    /// Workload key (see [`Workload::name`]).
+    pub fn name(&self) -> &str {
+        self.as_workload().name()
+    }
+
+    /// The namespaced registry/serving kind (see [`Workload::kind`]).
+    pub fn kind(&self) -> String {
+        self.as_workload().kind()
+    }
+
+    /// A deterministic synthetic problem instance of this workload (the
+    /// serving demos' traffic generator).
+    pub fn synthetic(&self, seed: u64) -> OpInstance {
+        match self {
+            OpWorkload::Conv(w) => OpInstance::Conv(ConvInstance::synthetic(w, seed)),
+            OpWorkload::Matmul(w) => OpInstance::Matmul(MatmulInstance::synthetic(w, seed)),
+        }
+    }
+
+    /// Parse the tagged-object schema [`Workload::to_json`] writes; the
+    /// `"op"` tag selects the operator.
+    pub fn from_json(j: &Json) -> Result<OpWorkload> {
+        match j.req("op")?.as_str() {
+            Some("conv") => Ok(OpWorkload::Conv(conv_from_json(j)?)),
+            Some("matmul") => Ok(OpWorkload::Matmul(matmul::matmul_from_json(j)?)),
+            Some(other) => bail!("unknown workload op '{other}' (valid: conv, matmul)"),
+            None => bail!("workload 'op' tag not a string"),
+        }
+    }
+}
+
+impl Workload for OpWorkload {
+    fn name(&self) -> &str {
+        self.as_workload().name()
+    }
+
+    fn op_name(&self) -> &'static str {
+        self.as_workload().op_name()
+    }
+
+    fn precision(&self) -> Precision {
+        self.as_workload().precision()
+    }
+
+    fn gemm_m(&self) -> usize {
+        self.as_workload().gemm_m()
+    }
+
+    fn gemm_n(&self) -> usize {
+        self.as_workload().gemm_n()
+    }
+
+    fn gemm_k(&self) -> usize {
+        self.as_workload().gemm_k()
+    }
+
+    fn gemm_n_padded(&self) -> usize {
+        self.as_workload().gemm_n_padded()
+    }
+
+    fn gemm_k_padded(&self) -> usize {
+        self.as_workload().gemm_k_padded()
+    }
+
+    fn legality_gemm(&self) -> (usize, usize, usize) {
+        self.as_workload().legality_gemm()
+    }
+
+    fn groups(&self) -> usize {
+        self.as_workload().groups()
+    }
+
+    fn ops(&self) -> u64 {
+        self.as_workload().ops()
+    }
+
+    fn is_spatial_heavy(&self) -> bool {
+        self.as_workload().is_spatial_heavy()
+    }
+
+    fn staging_channels(&self) -> usize {
+        self.as_workload().staging_channels()
+    }
+
+    fn profile_key(&self) -> u64 {
+        self.as_workload().profile_key()
+    }
+
+    fn row_block_profile(&self, block_m: usize) -> FeatureTileProfile {
+        self.as_workload().row_block_profile(block_m)
+    }
+
+    fn coalesce_efficiency(&self, nhwcnc: bool) -> f64 {
+        self.as_workload().coalesce_efficiency(nhwcnc)
+    }
+
+    fn context_features(&self) -> [f64; CONTEXT_FEATURES] {
+        self.as_workload().context_features()
+    }
+
+    fn to_json(&self) -> Json {
+        self.as_workload().to_json()
+    }
+}
+
+impl From<ConvWorkload> for OpWorkload {
+    fn from(w: ConvWorkload) -> Self {
+        OpWorkload::Conv(w)
+    }
+}
+
+impl From<&ConvWorkload> for OpWorkload {
+    fn from(w: &ConvWorkload) -> Self {
+        OpWorkload::Conv(w.clone())
+    }
+}
+
+impl From<MatmulWorkload> for OpWorkload {
+    fn from(w: MatmulWorkload) -> Self {
+        OpWorkload::Matmul(w)
+    }
+}
+
+impl From<&MatmulWorkload> for OpWorkload {
+    fn from(w: &MatmulWorkload) -> Self {
+        OpWorkload::Matmul(w.clone())
+    }
+}
+
+impl From<&OpWorkload> for OpWorkload {
+    fn from(w: &OpWorkload) -> Self {
+        w.clone()
+    }
+}
+
+/// One executable problem instance of either operator — what a serving
+/// request carries.
+#[derive(Debug, Clone)]
+pub enum OpInstance {
+    /// A quantized conv problem (NHWC feature map + HWIO weights).
+    Conv(ConvInstance),
+    /// A quantized matmul problem (row-major A and B).
+    Matmul(MatmulInstance),
+}
+
+impl OpInstance {
+    /// The workload this instance instantiates.
+    pub fn workload(&self) -> OpWorkload {
+        match self {
+            OpInstance::Conv(i) => OpWorkload::Conv(i.wl.clone()),
+            OpInstance::Matmul(i) => OpWorkload::Matmul(i.wl.clone()),
+        }
+    }
+
+    /// Execute under the default schedule with fresh buffers.
+    pub fn execute(&self, epi: &Epilogue) -> Vec<i32> {
+        self.execute_scheduled(epi, &ScheduleConfig::default())
+    }
+
+    /// Execute under a specific schedule with fresh buffers.
+    pub fn execute_scheduled(&self, epi: &Epilogue, cfg: &ScheduleConfig) -> Vec<i32> {
+        self.execute_scheduled_with(epi, cfg, &mut OpScratch::new())
+    }
+
+    /// Execute under a specific schedule with caller-owned buffers — the
+    /// batched serving hot path (each worker threads one [`OpScratch`]
+    /// through its request stream). Output bits are schedule- and
+    /// scratch-invariant for both operators.
+    pub fn execute_scheduled_with(
+        &self,
+        epi: &Epilogue,
+        cfg: &ScheduleConfig,
+        scratch: &mut OpScratch,
+    ) -> Vec<i32> {
+        match self {
+            OpInstance::Conv(i) => qconv2d_scheduled_with(i, epi, cfg, &mut scratch.conv),
+            OpInstance::Matmul(i) => qmatmul_scheduled_with(i, epi, cfg, &mut scratch.matmul),
+        }
+    }
+}
+
+impl From<ConvInstance> for OpInstance {
+    fn from(i: ConvInstance) -> Self {
+        OpInstance::Conv(i)
+    }
+}
+
+impl From<MatmulInstance> for OpInstance {
+    fn from(i: MatmulInstance) -> Self {
+        OpInstance::Matmul(i)
+    }
+}
+
+/// Reusable execution buffers covering both operators — what a serving
+/// worker owns for its lifetime. Each operator's scratch keeps its own
+/// staging/accumulator buffers (and, for conv, the cached im2col gather
+/// map), so same-kind batches stay allocation- and recompute-free
+/// regardless of which operator the batch is.
+#[derive(Debug, Default)]
+pub struct OpScratch {
+    conv: ExecScratch,
+    matmul: MatmulScratch,
+}
+
+impl OpScratch {
+    /// Empty scratch; buffers grow to the first workload's sizes on use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv() -> ConvWorkload {
+        ConvWorkload::resnet50_stage(2, 8)
+    }
+
+    fn matmul() -> MatmulWorkload {
+        MatmulWorkload::new("mm", 1024, 768, 768)
+    }
+
+    #[test]
+    fn kinds_are_namespaced_per_operator() {
+        assert_eq!(OpWorkload::from(conv()).kind(), "conv:resnet50_stage2");
+        assert_eq!(OpWorkload::from(matmul()).kind(), "matmul:mm");
+        assert_eq!(conv().op_name(), "conv");
+        assert_eq!(matmul().op_name(), "matmul");
+    }
+
+    #[test]
+    fn conv_trait_view_matches_inherent_api() {
+        let wl = conv();
+        let op: OpWorkload = (&wl).into();
+        assert_eq!(Workload::gemm_m(&wl), wl.gemm_m());
+        assert_eq!(op.gemm_n_padded(), wl.gemm_n_padded());
+        assert_eq!(op.gemm_k_padded(), wl.gemm_k_padded());
+        assert_eq!(op.legality_gemm(), (wl.gemm_m(), wl.gemm_n_padded(), wl.gemm_k_padded()));
+        assert_eq!(Workload::ops(&op), wl.ops());
+        assert_eq!(Workload::groups(&op), wl.groups);
+    }
+
+    #[test]
+    fn matmul_legality_is_raw_conv_legality_is_padded() {
+        // the depthwise conv pads (1, 9) to one (8, 32) atom...
+        let dw = ConvWorkload::new("dw", 1, 8, 8, 64, 64).depthwise();
+        assert_eq!(dw.legality_gemm(), (dw.gemm_m(), 8, 32));
+        // ...while the matmul judges raw (M, N, K)
+        let mm = matmul();
+        assert_eq!(mm.legality_gemm(), (1024, 768, 768));
+    }
+
+    #[test]
+    fn conv_profile_has_duplicates_matmul_does_not() {
+        let c = conv().row_block_profile(32);
+        assert!(c.naive_per_row_block > c.unique_per_row_block);
+        let m = matmul().row_block_profile(32);
+        assert_eq!(m.naive_per_row_block, m.unique_per_row_block);
+        assert_eq!(m.naive_per_row_block, 32.0 * 768.0);
+    }
+
+    #[test]
+    fn coalescing_conv_layout_sensitive_matmul_not() {
+        let wl = conv();
+        assert!((Workload::coalesce_efficiency(&wl, true) - 1.0).abs() < 1e-9);
+        assert!(Workload::coalesce_efficiency(&wl, false) < 0.75);
+        let mm = matmul();
+        assert_eq!(mm.coalesce_efficiency(true), 1.0);
+        assert_eq!(mm.coalesce_efficiency(false), 1.0);
+    }
+
+    #[test]
+    fn json_roundtrips_both_operators() {
+        for op in [
+            OpWorkload::from(conv()),
+            OpWorkload::from(ConvWorkload::new("g", 2, 9, 9, 16, 32).with_groups(4).with_dilation(2)),
+            OpWorkload::from(matmul()),
+            OpWorkload::from(matmul().with_precision(Precision::Int8)),
+        ] {
+            let text = op.to_json().to_string();
+            let back = OpWorkload::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, op);
+        }
+        // unknown op tags error
+        let j = Json::parse(r#"{"op": "softmax", "name": "x"}"#).unwrap();
+        assert!(OpWorkload::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_validates_builder_invariants() {
+        // malformed JSON must error at parse time, not divide-by-zero or
+        // silently miscompute downstream
+        let base = OpWorkload::from(conv()).to_json().to_string();
+        for (field, bad) in [("\"groups\":1", "\"groups\":0"),
+                             ("\"stride\":1", "\"stride\":0"),
+                             ("\"groups\":1", "\"groups\":3")] {
+            let text = base.replacen(field, bad, 1);
+            assert_ne!(text, base, "fixture must actually change {field}");
+            let j = Json::parse(&text).unwrap();
+            assert!(OpWorkload::from_json(&j).is_err(), "{bad} must be rejected");
+        }
+        let mm = OpWorkload::from(matmul()).to_json().to_string();
+        let text = mm.replacen("\"k\":768", "\"k\":0", 1);
+        assert_ne!(text, mm);
+        assert!(OpWorkload::from_json(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn context_features_distinguish_operators() {
+        let c = Workload::context_features(&conv());
+        let m = matmul().context_features();
+        assert_ne!(c, m);
+        for f in c.iter().chain(m.iter()) {
+            assert!(f.is_finite());
+        }
+    }
+
+    #[test]
+    fn op_instance_executes_either_operator() {
+        let epi = Epilogue::default();
+        let cwl = ConvWorkload::new("oi_c", 1, 6, 6, 8, 8);
+        let conv_inst: OpInstance = ConvInstance::synthetic(&cwl, 3).into();
+        let mwl = MatmulWorkload::new("oi_m", 16, 16, 32);
+        let mm_inst = OpWorkload::from(&mwl).synthetic(3);
+        let mut scratch = OpScratch::new();
+        for inst in [&conv_inst, &mm_inst] {
+            let want = inst.execute(&epi);
+            let got = inst.execute_scheduled_with(
+                &epi,
+                &ScheduleConfig::default(),
+                &mut scratch,
+            );
+            assert_eq!(got, want);
+        }
+        assert_eq!(conv_inst.workload().name(), "oi_c");
+        assert_eq!(mm_inst.workload().kind(), "matmul:oi_m");
+    }
+
+    #[test]
+    fn precision_tags_roundtrip() {
+        for p in [Precision::Int4, Precision::Int8] {
+            assert_eq!(Precision::from_tag(p.tag()).unwrap(), p);
+        }
+        assert!(Precision::from_tag("fp16").is_err());
+    }
+}

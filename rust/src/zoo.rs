@@ -1,40 +1,45 @@
-//! Model zoo: the convolution workloads of the "popular neural networks"
-//! the paper's abstract targets. Each network is described as its list of
-//! *distinct* conv layers with repetition counts, so network-level speedup
-//! aggregates per-layer tuning results correctly.
+//! Model zoo: the workloads of the "popular neural networks" the paper's
+//! abstract targets. Each network is described as its list of *distinct*
+//! layers with repetition counts, so network-level speedup aggregates
+//! per-layer tuning results correctly.
 //!
 //! Beyond the paper's dense ResNet/VGG evaluation the zoo carries the
-//! grouped/depthwise/dilated workload families: [`resnext50`]
+//! grouped/depthwise/dilated conv families — [`resnext50`]
 //! (cardinality-32 grouped 3x3), [`mobilenet_v2`] (depthwise 3x3 +
-//! pointwise 1x1) and [`deeplab_head`] (dilated 3x3 segmentation head).
+//! pointwise 1x1), [`deeplab_head`] (dilated 3x3 segmentation head) —
+//! and, since the operator-generic redesign, a **matmul** network:
+//! [`bert_base`], the attention/FFN GEMM shapes of a transformer encoder.
 
 use anyhow::{bail, Result};
 
 use crate::conv::ConvWorkload;
+use crate::workload::{MatmulWorkload, OpWorkload};
 
-/// One distinct conv layer of a network and how many times it repeats.
+/// One distinct layer of a network and how many times it repeats.
 #[derive(Debug, Clone)]
 pub struct NetworkLayer {
-    /// The layer's conv shape (its name is the tuning/serving kind).
-    pub workload: ConvWorkload,
+    /// The layer's workload — either operator; its namespaced
+    /// [`OpWorkload::kind`] is the tuning/serving kind.
+    pub workload: OpWorkload,
     /// How many blocks of the network share this exact shape.
     pub repeats: usize,
 }
 
-/// A named collection of conv layers.
+/// A named collection of layers.
 #[derive(Debug, Clone)]
 pub struct Network {
     /// Network name (`repro tune-net --net` accepts it).
     pub name: &'static str,
-    /// The distinct conv layers, in forward order.
+    /// The distinct layers, in forward order.
     pub layers: Vec<NetworkLayer>,
 }
 
 impl Network {
-    /// Total conv MACs x2 of one forward pass (the convs this repo's
-    /// scheduler targets: the paper's 3x3s plus the grouped/depthwise/
-    /// dilated and pointwise layers of the extended zoo).
+    /// Total MACs x2 of one forward pass (the layers this repo's
+    /// scheduler targets: the paper's 3x3s, the grouped/depthwise/dilated
+    /// and pointwise conv families, and the transformer GEMMs).
     pub fn total_ops(&self) -> u64 {
+        use crate::workload::Workload;
         self.layers
             .iter()
             .map(|l| l.workload.ops() * l.repeats as u64)
@@ -42,8 +47,8 @@ impl Network {
     }
 
     /// Network forward time given per-distinct-layer runtimes (us),
-    /// keyed by workload name.
-    pub fn forward_us(&self, runtime_of: impl Fn(&ConvWorkload) -> f64) -> f64 {
+    /// keyed by workload.
+    pub fn forward_us(&self, runtime_of: impl Fn(&OpWorkload) -> f64) -> f64 {
         self.layers
             .iter()
             .map(|l| runtime_of(&l.workload) * l.repeats as f64)
@@ -53,7 +58,7 @@ impl Network {
 
 fn layer(name: &str, batch: usize, hw: usize, cin: usize, cout: usize, reps: usize) -> NetworkLayer {
     NetworkLayer {
-        workload: ConvWorkload::new(name, batch, hw, hw, cin, cout),
+        workload: ConvWorkload::new(name, batch, hw, hw, cin, cout).into(),
         repeats: reps,
     }
 }
@@ -116,7 +121,7 @@ pub fn resnet50_with_transitions(batch: usize) -> Network {
         ("resnet50_trans5", 14, 512),
     ] {
         net.layers.push(NetworkLayer {
-            workload: ConvWorkload::new(name, batch, hw, hw, c, c).with_stride(2),
+            workload: ConvWorkload::new(name, batch, hw, hw, c, c).with_stride(2).into(),
             repeats: 1,
         });
     }
@@ -129,11 +134,11 @@ pub fn resnet50_with_transitions(batch: usize) -> Network {
 /// with repeats standing in for the blocks sharing a shape.
 pub fn mobilenet_v2(batch: usize) -> Network {
     let dw = |name: &str, hw: usize, ch: usize, reps: usize| NetworkLayer {
-        workload: ConvWorkload::new(name, batch, hw, hw, ch, ch).depthwise(),
+        workload: ConvWorkload::new(name, batch, hw, hw, ch, ch).depthwise().into(),
         repeats: reps,
     };
     let pw = |name: &str, hw: usize, cin: usize, cout: usize, reps: usize| NetworkLayer {
-        workload: ConvWorkload::new(name, batch, hw, hw, cin, cout).with_kernel(1, 0),
+        workload: ConvWorkload::new(name, batch, hw, hw, cin, cout).with_kernel(1, 0).into(),
         repeats: reps,
     };
     Network {
@@ -156,7 +161,7 @@ pub fn mobilenet_v2(batch: usize) -> Network {
 /// 1/32 of a dense one.
 pub fn resnext50(batch: usize) -> Network {
     let grp = |name: &str, hw: usize, ch: usize, reps: usize| NetworkLayer {
-        workload: ConvWorkload::new(name, batch, hw, hw, ch, ch).with_groups(32),
+        workload: ConvWorkload::new(name, batch, hw, hw, ch, ch).with_groups(32).into(),
         repeats: reps,
     };
     Network {
@@ -176,7 +181,7 @@ pub fn resnext50(batch: usize) -> Network {
 /// plus the pointwise classifier.
 pub fn deeplab_head(batch: usize) -> Network {
     let dil = |name: &str, ch: usize, d: usize, reps: usize| NetworkLayer {
-        workload: ConvWorkload::new(name, batch, 28, 28, ch, ch).with_dilation(d),
+        workload: ConvWorkload::new(name, batch, 28, 28, ch, ch).with_dilation(d).into(),
         repeats: reps,
     };
     Network {
@@ -187,9 +192,42 @@ pub fn deeplab_head(batch: usize) -> Network {
             dil("deeplab_d8", 256, 8, 1),
             NetworkLayer {
                 workload: ConvWorkload::new("deeplab_cls", batch, 28, 28, 256, 32)
-                    .with_kernel(1, 0),
+                    .with_kernel(1, 0)
+                    .into(),
                 repeats: 1,
             },
+        ],
+    }
+}
+
+/// BERT-base encoder GEMMs — the zoo's first **matmul** network, proving
+/// the operator-generic stack end to end. Twelve encoder layers at
+/// sequence length 128, hidden 768, 12 heads of 64, FFN 3072: the QKV +
+/// output projections, the per-head attention-score and context GEMMs
+/// (batched over `batch x heads`), and the two FFN GEMMs. Every shape is
+/// MMA-atom-aligned, so the raw-(M, N, K) legality rule admits schedules.
+pub fn bert_base(batch: usize) -> Network {
+    const LAYERS: usize = 12;
+    const SEQ: usize = 128;
+    const HIDDEN: usize = 768;
+    const HEADS: usize = 12;
+    const HEAD_DIM: usize = 64;
+    const FFN: usize = 3072;
+    let mm = |name: &str, m: usize, n: usize, k: usize, reps: usize| NetworkLayer {
+        workload: MatmulWorkload::new(name, m, n, k).into(),
+        repeats: reps,
+    };
+    Network {
+        name: "bert_base",
+        layers: vec![
+            // Q, K, V and the attention output projection share one shape
+            mm("bert_qkv_proj", batch * SEQ, HIDDEN, HIDDEN, 4 * LAYERS),
+            // per-head scores (seq x seq over head_dim) and context
+            // (seq x head_dim over seq), batched over batch x heads
+            mm("bert_attn_scores", batch * HEADS * SEQ, SEQ, HEAD_DIM, LAYERS),
+            mm("bert_attn_context", batch * HEADS * SEQ, HEAD_DIM, SEQ, LAYERS),
+            mm("bert_ffn_up", batch * SEQ, FFN, HIDDEN, LAYERS),
+            mm("bert_ffn_down", batch * SEQ, HIDDEN, FFN, LAYERS),
         ],
     }
 }
@@ -203,6 +241,7 @@ pub fn all_networks(batch: usize) -> Vec<Network> {
         mobilenet_v2(batch),
         resnext50(batch),
         deeplab_head(batch),
+        bert_base(batch),
     ]
 }
 
@@ -225,19 +264,19 @@ pub fn by_name(name: &str, batch: usize) -> Result<Network> {
     }
 }
 
-/// Find one workload by its layer name anywhere in the zoo (maps a
-/// schedule-registry kind back to a concrete conv; for many lookups,
-/// build a name map from [`all_networks`] once instead). Unknown names
+/// Find one workload by its layer name anywhere in the zoo (for many
+/// lookups, build a map from [`all_networks`] once instead — keyed by
+/// [`OpWorkload::kind`] when resolving registry kinds). Unknown names
 /// error, listing the networks searched.
-pub fn workload_by_name(name: &str, batch: usize) -> Result<ConvWorkload> {
+pub fn workload_by_name(name: &str, batch: usize) -> Result<OpWorkload> {
     match all_networks(batch)
         .into_iter()
         .flat_map(|n| n.layers)
-        .find(|l| l.workload.name == name)
+        .find(|l| l.workload.name() == name)
     {
         Some(l) => Ok(l.workload),
         None => bail!(
-            "no conv layer named '{name}' in any zoo network (searched: {})",
+            "no layer named '{name}' in any zoo network (searched: {})",
             network_names().join(", ")
         ),
     }
@@ -246,6 +285,7 @@ pub fn workload_by_name(name: &str, batch: usize) -> Result<ConvWorkload> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::Workload;
 
     #[test]
     fn resnet50_matches_table1_shapes() {
@@ -274,29 +314,57 @@ mod tests {
         for net in all_networks(8) {
             for l in &net.layers {
                 let wl = &l.workload;
-                assert_eq!(wl.gemm_n_padded() % 8, 0, "{}", wl.name);
-                assert_eq!(wl.gemm_k_padded() % 32, 0, "{}", wl.name);
-                assert_eq!(wl.gemm_m() % 8, 0, "{}", wl.name);
+                assert_eq!(wl.gemm_n_padded() % 8, 0, "{}", wl.name());
+                assert_eq!(wl.gemm_k_padded() % 32, 0, "{}", wl.name());
+                assert_eq!(wl.gemm_m() % 8, 0, "{}", wl.name());
                 let space = SearchSpace::for_workload(wl, SpaceOptions::default());
-                assert!(!space.enumerate_legal().is_empty(), "{}", wl.name);
+                assert!(!space.enumerate_legal().is_empty(), "{}", wl.name());
             }
         }
     }
 
     #[test]
     fn new_workload_families_are_present_and_typed() {
+        let conv = |l: &NetworkLayer| l.workload.as_conv().unwrap().clone();
         let mb = mobilenet_v2(8);
-        assert!(mb.layers.iter().any(|l| l.workload.groups == l.workload.in_channels
-            && l.workload.groups > 1), "mobilenet has depthwise convs");
-        assert!(mb.layers.iter().any(|l| l.workload.kernel == 1), "and pointwise convs");
+        assert!(
+            mb.layers.iter().any(|l| {
+                let w = conv(l);
+                w.groups == w.in_channels && w.groups > 1
+            }),
+            "mobilenet has depthwise convs"
+        );
+        assert!(mb.layers.iter().any(|l| conv(l).kernel == 1), "and pointwise convs");
         let rx = resnext50(8);
-        assert!(rx.layers.iter().all(|l| l.workload.groups == 32));
+        assert!(rx.layers.iter().all(|l| conv(l).groups == 32));
         let dl = deeplab_head(8);
-        assert!(dl.layers.iter().any(|l| l.workload.dilation > 1));
+        assert!(dl.layers.iter().any(|l| conv(l).dilation > 1));
         // dilated "same" convention: the head never decimates the map
         for l in &dl.layers {
-            assert_eq!(l.workload.out_height(), l.workload.height, "{}", l.workload.name);
+            let w = conv(l);
+            assert_eq!(w.out_height(), w.height, "{}", w.name);
         }
+    }
+
+    #[test]
+    fn bert_base_is_matmul_end_to_end() {
+        let bert = bert_base(8);
+        assert_eq!(bert.layers.len(), 5);
+        for l in &bert.layers {
+            let mm = l.workload.as_matmul().expect("bert layers are matmuls");
+            assert!(l.workload.kind().starts_with("matmul:"), "{}", mm.name);
+            // raw legality: every shape tiles without padding
+            assert_eq!(l.workload.legality_gemm(), (mm.m, mm.n, mm.k));
+        }
+        // the FFN shapes the issue names
+        let up = workload_by_name("bert_ffn_up", 8).unwrap();
+        let up = up.as_matmul().unwrap();
+        assert_eq!((up.m, up.n, up.k), (8 * 128, 3072, 768));
+        let qkv = workload_by_name("bert_qkv_proj", 1).unwrap();
+        let qkv = qkv.as_matmul().unwrap();
+        assert_eq!((qkv.m, qkv.n, qkv.k), (128, 768, 768));
+        // a transformer forward is GEMM-dominated: ops must be large
+        assert!(bert.total_ops() > 1_000_000_000);
     }
 
     #[test]
@@ -304,27 +372,31 @@ mod tests {
         use crate::searchspace::{SearchSpace, SpaceOptions};
         use crate::sim::Simulator;
         let net = resnet50_with_transitions(8);
-        let trans: Vec<_> =
-            net.layers.iter().filter(|l| l.workload.stride == 2).collect();
+        let trans: Vec<ConvWorkload> = net
+            .layers
+            .iter()
+            .filter_map(|l| l.workload.as_conv())
+            .filter(|w| w.stride == 2)
+            .cloned()
+            .collect();
         assert_eq!(trans.len(), 3);
         let sim = Simulator::noiseless(crate::sim::GpuSpec::t4());
-        for l in trans {
-            assert_eq!(l.workload.out_height() * 2, l.workload.height);
-            let space = SearchSpace::for_workload(&l.workload, SpaceOptions::default());
+        for wl in trans {
+            assert_eq!(wl.out_height() * 2, wl.height);
+            let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
             let legal = space.enumerate_legal();
-            assert!(!legal.is_empty(), "{}", l.workload.name);
+            assert!(!legal.is_empty(), "{}", wl.name);
             // strided conv has lower duplicate factor than its stride-1 twin
-            let s2 = l.workload.im2col().duplicates_info().duplicate_factor();
-            let s1 = l
-                .workload
+            let s2 = wl.im2col().duplicates_info().duplicate_factor();
+            let s1 = wl
                 .clone()
                 .with_stride(1)
                 .im2col()
                 .duplicates_info()
                 .duplicate_factor();
-            assert!(s2 < s1, "{}: {s2} vs {s1}", l.workload.name);
+            assert!(s2 < s1, "{}: {s2} vs {s1}", wl.name);
             // and it simulates fine
-            let m = sim.measure_once(&l.workload, &space.decode(&legal[0]));
+            let m = sim.measure_once(&wl, &space.decode(&legal[0]));
             assert!(m.feasible);
         }
     }
@@ -335,6 +407,7 @@ mod tests {
         assert!(by_name("mobilenet_v2", 1).is_ok());
         assert!(by_name("resnext50", 1).is_ok());
         assert!(by_name("deeplab_head", 1).is_ok());
+        assert!(by_name("bert_base", 1).is_ok());
         // unknown names error, listing every valid name
         let err = by_name("alexnet", 1).unwrap_err().to_string();
         assert!(err.contains("alexnet"), "{err}");
@@ -346,10 +419,18 @@ mod tests {
     #[test]
     fn workload_by_name_spans_all_networks() {
         let wl = workload_by_name("vgg16_conv3_1", 4).unwrap();
+        let wl = wl.as_conv().unwrap();
         assert_eq!((wl.batch, wl.in_channels, wl.out_channels), (4, 128, 256));
         assert!(workload_by_name("resnet18_stage4", 1).is_ok());
-        assert_eq!(workload_by_name("mbv2_dw_28", 2).unwrap().groups, 192);
-        assert_eq!(workload_by_name("deeplab_d4", 1).unwrap().dilation, 4);
+        assert_eq!(
+            workload_by_name("mbv2_dw_28", 2).unwrap().as_conv().unwrap().groups,
+            192
+        );
+        assert_eq!(
+            workload_by_name("deeplab_d4", 1).unwrap().as_conv().unwrap().dilation,
+            4
+        );
+        assert!(workload_by_name("bert_attn_scores", 1).unwrap().as_matmul().is_some());
         let err = workload_by_name("nope", 1).unwrap_err().to_string();
         assert!(err.contains("nope") && err.contains("resnext50"), "{err}");
     }

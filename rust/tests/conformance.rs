@@ -182,6 +182,118 @@ fn conformance_scratch_reuse_across_random_workload_stream() {
 }
 
 // ---------------------------------------------------------------------------
+// matmul conformance (the second first-class operator): scheduled GEMM
+// output pinned bit-equal to an independent i32 reference across seeded
+// shapes
+// ---------------------------------------------------------------------------
+
+mod matmul_conformance {
+    use super::{Rng, ScheduleConfig, SearchSpace, SpaceOptions};
+    use tcconv::quant::{pack_int4_padded_into, Epilogue};
+    use tcconv::workload::{
+        qmatmul, qmatmul_scheduled, qmatmul_scheduled_with, MatmulInstance, MatmulScratch,
+        MatmulWorkload, Precision,
+    };
+
+    /// Independent reference: the dumbest possible i32 triple loop plus
+    /// the shared epilogue/packing. Shares no code with the blocked GEMM.
+    fn matmul_reference(inst: &MatmulInstance, epi: &Epilogue) -> Vec<i32> {
+        let wl = &inst.wl;
+        let mut out = Vec::new();
+        let mut row = vec![0i32; wl.n];
+        for i in 0..wl.m {
+            for j in 0..wl.n {
+                let mut acc = 0i32;
+                for kk in 0..wl.k {
+                    acc += inst.a[i * wl.k + kk] as i32 * inst.b[kk * wl.n + j] as i32;
+                }
+                row[j] = epi.apply(acc, inst.bias[j]);
+            }
+            pack_int4_padded_into(&row, &mut out);
+        }
+        out
+    }
+
+    /// Draw one random GEMM. Dims are atom-aligned (M, N multiples of 8,
+    /// K a multiple of 32) so legal schedules exist — the raw-(M, N, K)
+    /// legality rule pads nothing — except every fifth case, whose N is
+    /// deliberately ragged to exercise the zero-tail packing.
+    fn random_matmul(rng: &mut Rng, case: usize) -> MatmulWorkload {
+        let m = 8 * (1 + rng.gen_range(8)); // 8..=64
+        let n = if case % 5 == 4 {
+            8 * (1 + rng.gen_range(8)) + 4 // ragged: packing pads the row tail
+        } else {
+            8 * (1 + rng.gen_range(8))
+        };
+        let k = 32 * (1 + rng.gen_range(4)); // 32..=128
+        let mut wl = MatmulWorkload::new(format!("mm_conf_{case}"), m, n, k);
+        if rng.gen_bool(0.5) {
+            wl = wl.with_precision(Precision::Int8);
+        }
+        wl
+    }
+
+    #[test]
+    fn conformance_scheduled_matmul_matches_reference() {
+        // ~20 seeded shapes x (default + baseline + sampled legal
+        // schedules): every combination must be bit-equal to the
+        // reference i32 matmul
+        let mut rng = Rng::new(0x4A7_4A7);
+        let mut legal_checked = 0usize;
+        let mut ragged_seen = 0usize;
+        for case in 0..20 {
+            let wl = random_matmul(&mut rng, case);
+            if wl.n % 8 != 0 {
+                ragged_seen += 1;
+            }
+            let inst = MatmulInstance::synthetic(&wl, 0xFACE + case as u64);
+            let epi = Epilogue {
+                relu: rng.gen_bool(0.5),
+                requant_shift: rng.gen_range(8) as u32,
+            };
+            let want = matmul_reference(&inst, &epi);
+            assert_eq!(qmatmul(&inst, &epi), want, "default schedule, {wl:?}");
+            let mut cfgs = vec![ScheduleConfig::default(), ScheduleConfig::tvm_baseline()];
+            let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
+            let legal = space.enumerate_legal();
+            for _ in 0..3 {
+                if !legal.is_empty() {
+                    cfgs.push(space.decode(&legal[rng.gen_range(legal.len())]));
+                    legal_checked += 1;
+                }
+            }
+            for cfg in cfgs {
+                assert_eq!(
+                    qmatmul_scheduled(&inst, &epi, &cfg),
+                    want,
+                    "schedule {cfg:?} on {wl:?}"
+                );
+            }
+        }
+        assert!(legal_checked >= 30, "only {legal_checked} legal-schedule checks");
+        assert!(ragged_seen >= 1, "no ragged-N draw");
+    }
+
+    #[test]
+    fn conformance_matmul_scratch_reuse_across_random_stream() {
+        // a serving worker threads one scratch through an arbitrary
+        // matmul request stream; stale buffer contents must never leak
+        let mut rng = Rng::new(0x5C4A7C12);
+        let mut scratch = MatmulScratch::new();
+        let epi = Epilogue::default();
+        for case in 0..16 {
+            let wl = random_matmul(&mut rng, case);
+            let inst = MatmulInstance::synthetic(&wl, 9_000 + case as u64);
+            let fresh = qmatmul(&inst, &epi);
+            let reused =
+                qmatmul_scheduled_with(&inst, &epi, &ScheduleConfig::default(), &mut scratch);
+            assert_eq!(fresh, reused, "{wl:?}");
+            assert_eq!(fresh, matmul_reference(&inst, &epi), "{wl:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // im2col index-algebra properties (the §3.1 duplicates analysis under
 // groups and dilation)
 // ---------------------------------------------------------------------------

@@ -4,12 +4,13 @@
 
 use tcconv::conv::{qconv2d, ConvInstance, ConvWorkload};
 use tcconv::quant::Epilogue;
-use tcconv::registry::{ScheduleRegistry, TunedEntry};
+use tcconv::registry::{ScheduleRegistry, TunedEntry, REGISTRY_VERSION};
 use tcconv::searchspace::ScheduleConfig;
 use tcconv::serve::{Server, ServerConfig};
 use tcconv::sim::{GpuSpec, Simulator};
 use tcconv::tuner::Session;
 use tcconv::util::Json;
+use tcconv::workload::{qmatmul, MatmulInstance, MatmulWorkload};
 
 /// A small conv whose legal schedule space excludes the default config
 /// (gemm N = 8 admits only 8-wide block columns; the default is 32-wide),
@@ -221,6 +222,182 @@ fn grouped_and_dilated_kinds_tune_persist_and_serve_end_to_end() {
     assert_eq!(metrics.total_count(), 12, "no response may be lost");
     assert_eq!(metrics.summary("rt_mbv2_dw").unwrap().count, 6);
     assert_eq!(metrics.summary("rt_deeplab_d2").unwrap().count, 6);
+}
+
+#[test]
+fn version1_registry_fixture_loads_resolves_and_upgrades() {
+    // a version-1 schedules.json exactly as PR-1's tune-net wrote it:
+    // bare conv names, no operator namespace
+    let tuned =
+        ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, chunk: 1, ..Default::default() };
+    let fixture = format!(
+        r#"{{"version": 1, "schedules": {{
+            "resnet50_stage2": {{"schedule": {}, "runtime_us": 51.3, "trials": 500, "explorer": "diversity-aware"}},
+            "tiny_serve": {{"schedule": {}, "runtime_us": 9.5, "trials": 64, "explorer": "diversity-aware"}}
+        }}}}"#,
+        ScheduleConfig::default().to_json(),
+        tuned.to_json(),
+    );
+    let path = std::env::temp_dir().join("tcconv_v1_fixture_registry.json");
+    std::fs::write(&path, &fixture).unwrap();
+    let loaded = ScheduleRegistry::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // every v1 kind resolves under the conv: namespace
+    assert_eq!(loaded.len(), 2);
+    assert!(loaded.contains("conv:resnet50_stage2"));
+    assert!(loaded.contains("conv:tiny_serve"));
+    assert!(!loaded.contains("resnet50_stage2"), "bare v1 kinds are migrated, not kept");
+    assert_eq!(loaded.get("conv:tiny_serve").unwrap().config, tuned);
+
+    // round-trips to the namespaced version-2 schema
+    let j = loaded.to_json();
+    assert_eq!(j.req("version").unwrap().as_usize(), Some(REGISTRY_VERSION));
+    assert_eq!(REGISTRY_VERSION, 2);
+    let text = j.to_string();
+    assert!(text.contains("conv:resnet50_stage2"), "{text}");
+    let back = ScheduleRegistry::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, loaded);
+
+    // and the migrated registry routes a server exactly like a native
+    // v2 one: submitting under the namespaced kind hits the tuned entry
+    let wl = tiny_wl();
+    let server =
+        Server::from_registry(ServerConfig { workers: 1, ..Default::default() }, loaded);
+    assert_eq!(server.schedule_for("conv:tiny_serve"), tuned);
+    let epi = Epilogue::default();
+    let inst = ConvInstance::synthetic(&wl, 5);
+    let want = qconv2d(&inst, &epi);
+    let resp = server.submit("conv:tiny_serve", inst, epi).unwrap().recv().unwrap();
+    assert_eq!(resp.schedule, tuned);
+    assert_eq!(resp.packed_output, want);
+    server.shutdown();
+}
+
+#[test]
+fn matmul_tunes_persists_reloads_and_serves_end_to_end() {
+    // the tentpole acceptance path for the second operator: a quantized
+    // GEMM goes tune -> registry file -> reload -> serve, unchanged
+    let mm = MatmulWorkload::new("rt_bert_tiny", 64, 16, 64);
+    let res = Session::for_workload(&mm)
+        .trials(48)
+        .seed(13)
+        .explorer("diversity")
+        .measurer(Simulator::noiseless(GpuSpec::t4()).into_measurer())
+        .run()
+        .expect("builtin explorer");
+    let tuned = res.best.config;
+    assert!(tuned.is_legal_for(64, 16, 64), "tuned schedule tiles the raw GEMM");
+    // N = 16 excludes the default 32-wide block columns, so registry
+    // routing is observable in the served schedule
+    assert_ne!(tuned, ScheduleConfig::default());
+    assert_eq!(res.kind(), "matmul:rt_bert_tiny");
+
+    let mut registry = ScheduleRegistry::new();
+    registry.insert(&res.kind(), res.registry_entry());
+    let path = std::env::temp_dir().join("tcconv_rt_matmul_registry.json");
+    registry.save(&path).unwrap();
+    let loaded = ScheduleRegistry::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, registry, "matmul entries survive the JSON roundtrip");
+    assert!(loaded.contains("matmul:rt_bert_tiny"));
+
+    let server = Server::from_registry(
+        ServerConfig { workers: 2, max_batch: 4, max_wait: 2, ..Default::default() },
+        loaded,
+    );
+    let epi = Epilogue::default();
+    let mut pending = Vec::new();
+    for seed in 0..8u64 {
+        let inst = MatmulInstance::synthetic(&mm, seed);
+        let want = qmatmul(&inst, &epi);
+        pending.push((want, server.submit("matmul:rt_bert_tiny", inst, epi).unwrap()));
+    }
+    for (want, rx) in pending {
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("response lost");
+        assert_eq!(resp.schedule, tuned, "matmul request must execute under its tuned schedule");
+        assert_eq!(resp.packed_output, want, "tuned schedule must not change matmul numerics");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.summary("matmul:rt_bert_tiny").unwrap().count, 8);
+}
+
+#[test]
+fn mixed_conv_and_matmul_registry_serves_both_operators() {
+    // one registry, both operators: tune a conv and a matmul, persist
+    // together, reload, and serve an interleaved burst — each kind routed
+    // to its own tuned schedule with bit-exact numerics
+    let cwl = tiny_wl();
+    let mm = MatmulWorkload::new("rt_mm_mixed", 32, 8, 96);
+    let mut registry = ScheduleRegistry::new();
+    let mut tuned = std::collections::HashMap::new();
+
+    let conv_res = Session::for_workload(&cwl)
+        .trials(48)
+        .seed(2)
+        .measurer(Simulator::noiseless(GpuSpec::t4()).into_measurer())
+        .run()
+        .unwrap();
+    registry.insert(&conv_res.kind(), conv_res.registry_entry());
+    tuned.insert(conv_res.kind(), conv_res.best.config);
+    // cross-operator transfer: the matmul session warm-starts from the
+    // conv session's rows
+    let mm_res = Session::for_workload(&mm)
+        .trials(48)
+        .seed(2)
+        .measurer(Simulator::noiseless(GpuSpec::t4()).into_measurer())
+        .transfer_from(&conv_res)
+        .run()
+        .unwrap();
+    registry.insert(&mm_res.kind(), mm_res.registry_entry());
+    tuned.insert(mm_res.kind(), mm_res.best.config);
+
+    let path = std::env::temp_dir().join("tcconv_rt_mixed_registry.json");
+    registry.save(&path).unwrap();
+    let loaded = ScheduleRegistry::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let kinds: Vec<&str> = loaded.kinds().collect();
+    assert_eq!(kinds, vec!["conv:tiny_serve", "matmul:rt_mm_mixed"]);
+
+    let server = Server::from_registry(
+        ServerConfig { workers: 2, queue_depth: 64, max_batch: 4, max_wait: 2 },
+        loaded,
+    );
+    let epi = Epilogue::default();
+    let mut pending = Vec::new();
+    for seed in 0..12u64 {
+        if seed % 2 == 0 {
+            let inst = ConvInstance::synthetic(&cwl, seed);
+            let want = qconv2d(&inst, &epi);
+            pending.push((
+                "conv:tiny_serve".to_string(),
+                want,
+                server.submit("conv:tiny_serve", inst, epi).unwrap(),
+            ));
+        } else {
+            let inst = MatmulInstance::synthetic(&mm, seed);
+            let want = qmatmul(&inst, &epi);
+            pending.push((
+                "matmul:rt_mm_mixed".to_string(),
+                want,
+                server.submit("matmul:rt_mm_mixed", inst, epi).unwrap(),
+            ));
+        }
+    }
+    for (kind, want, rx) in pending {
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("response lost");
+        assert_eq!(resp.kind, kind);
+        assert_eq!(resp.schedule, tuned[&kind], "kind {kind} routed to wrong schedule");
+        assert_eq!(resp.packed_output, want, "kind {kind} numerics");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.total_count(), 12, "no response may be lost");
+    assert_eq!(metrics.summary("conv:tiny_serve").unwrap().count, 6);
+    assert_eq!(metrics.summary("matmul:rt_mm_mixed").unwrap().count, 6);
 }
 
 #[test]
