@@ -1,0 +1,222 @@
+//! Bench: whole-network graph execution vs chained per-layer serving.
+//!
+//! The same resnet50 forward pass is served two ways against one server:
+//!
+//! * **graph**: one `graph:resnet50` request per inference — the
+//!   [`GraphPlan`](tcconv::graph::GraphPlan) executes every layer with
+//!   weights int4-packed once at install, inter-layer activations kept
+//!   unpacked in a liveness-planned arena (slots reused after their last
+//!   consumer), and the requantize/ReLU/residual epilogue fused on the
+//!   i32 accumulator.
+//! * **per-layer**: one op request per layer per inference, the way a
+//!   client without the graph API would chain them — awaiting each
+//!   response, unpacking the int4 rows, applying residual adds on the
+//!   client, and re-submitting the activation to the next layer. Every
+//!   layer boundary pays the pack → channel → unpack round trip the
+//!   graph plan fuses away, plus 16x the queue/dispatch overhead.
+//!
+//! Outputs are asserted bit-identical across both paths (and against the
+//! graph module's chained reference) before anything is timed. The
+//! summary is written to `BENCH_graph.json` at the repository root (the
+//! artifact CI uploads).
+//!
+//! ```bash
+//! cargo bench --bench graph
+//! BENCH_QUICK=1 cargo bench --bench graph   # CI smoke mode (edge-scaled net)
+//! ```
+
+use std::time::Instant;
+
+use tcconv::conv::{ConvInstance, ConvWorkload};
+use tcconv::graph::{reference_forward, GraphInput, GraphTopology, GraphWeights, NodeInput};
+use tcconv::quant::{clip_int4, pack_int4_padded_into, unpack_int4, Epilogue, RequantParams};
+use tcconv::serve::{Server, ServerConfig};
+use tcconv::util::bench::{quick, section};
+use tcconv::util::Json;
+use tcconv::zoo;
+
+/// Edge-scaled resnet50: the same 4-stage residual topology (16 layers,
+/// 12 skip connections) at 1/8 the channels and reduced spatial extent,
+/// so the quick CI run finishes in milliseconds while exercising every
+/// graph feature the full net does.
+fn edge_resnet50() -> GraphTopology {
+    let stages = [(28usize, 8usize, 3usize), (14, 16, 4), (7, 32, 6), (4, 64, 3)];
+    let mut topo = GraphTopology::new("resnet50_edge");
+    for (hw, c, reps) in stages {
+        for r in 0..reps {
+            let idx = topo.add_layer(ConvWorkload::new(
+                format!("rn50ge_{hw}x{c}_{r}"),
+                1,
+                hw,
+                hw,
+                c,
+                c,
+            ));
+            if r > 0 {
+                topo.add_residual(idx - 1, idx).unwrap();
+            }
+        }
+    }
+    topo
+}
+
+/// One inference the pre-graph way: each layer is its own serve request;
+/// activations are unpacked from the response, residuals added on the
+/// client, and the result fed to the next layer's request.
+fn per_layer_inference(
+    server: &Server,
+    topo: &GraphTopology,
+    weights: &GraphWeights,
+    input: &GraphInput,
+    epi: Epilogue,
+) -> Vec<i32> {
+    let mut acts: Vec<Vec<i8>> = Vec::with_capacity(topo.node_count());
+    for (i, node) in topo.nodes().iter().enumerate() {
+        let wl = node.workload.as_conv().expect("conv-only nets here").clone();
+        let x = match node.input {
+            NodeInput::Entry(e) => input.entries[e].clone(),
+            NodeInput::Node(p) => acts[p].clone(),
+        };
+        let inst = ConvInstance {
+            wl: wl.clone(),
+            x,
+            w: weights.nodes[i].w.clone(),
+            bias: weights.nodes[i].bias.clone(),
+        };
+        let packed = server
+            .submit(&node.workload.kind(), inst, epi)
+            .expect("submit")
+            .recv()
+            .expect("response lost")
+            .packed_output;
+        // unpack per row, stripping the per-row padding nibbles
+        let (rows, cols) = (wl.gemm_m(), wl.out_channels);
+        let mut act = Vec::with_capacity(rows * cols);
+        for row in packed.chunks(cols.div_ceil(8)) {
+            let vals = unpack_int4(row);
+            act.extend(vals[..cols].iter().map(|&v| v as i8));
+        }
+        if let Some(src) = node.residual {
+            for (a, b) in act.iter_mut().zip(&acts[src]) {
+                *a = clip_int4(*a as i32 + *b as i32) as i8;
+            }
+        }
+        acts.push(act);
+    }
+    let mut out = Vec::new();
+    for o in topo.outputs() {
+        let cols = topo.nodes()[o].workload.as_conv().unwrap().out_channels;
+        for row in acts[o].chunks(cols) {
+            let row: Vec<i32> = row.iter().map(|&v| v as i32).collect();
+            pack_int4_padded_into(&row, &mut out);
+        }
+    }
+    out
+}
+
+fn main() {
+    let (topo, label) = if quick() {
+        (edge_resnet50(), "resnet50 (edge-scaled)")
+    } else {
+        (GraphTopology::from_network(&zoo::resnet50(1)), "resnet50")
+    };
+    let inferences: usize = std::env::var("REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick() { 4 } else { 3 });
+    let weights = GraphWeights::synthetic(&topo, 7);
+    let epi = RequantParams::default();
+    let op_epi = Epilogue::from(epi);
+
+    section("graph execution: whole-network submit vs chained per-layer submits");
+    println!(
+        "{label}: {} layers, {} entries, batch 1, {inferences} timed inference(s)/mode",
+        topo.node_count(),
+        topo.entry_count()
+    );
+
+    let server = Server::start(ServerConfig {
+        workers: 2,
+        queue_depth: 256,
+        max_batch: 8,
+        max_wait: 0,
+    });
+    let kind = server
+        .install_graph(topo.clone(), weights.clone(), epi)
+        .expect("installable net");
+    let plan = server.graph_plan(topo.name()).expect("just installed");
+    println!(
+        "installed {kind}: {} fused epilogues ({} residual adds fused), \
+         arena {} B vs {} B unshared ({} slot reuses), {} packed weight words",
+        plan.fused_epilogues(),
+        plan.fused_residuals(),
+        plan.arena_len(),
+        plan.naive_activation_len(),
+        plan.arena_reuses(),
+        plan.packed_weight_words()
+    );
+
+    // bit-equality gate: both serving paths must agree with the chained
+    // reference before either is timed
+    let probe = GraphInput::synthetic(&topo, 0);
+    let want = reference_forward(&topo, &weights, &probe, epi).expect("reference");
+    let got = server
+        .submit_graph(topo.name(), probe.clone())
+        .expect("submit")
+        .recv()
+        .expect("response lost")
+        .packed_output;
+    assert_eq!(got, want, "graph submit diverged from the chained reference");
+    let chained = per_layer_inference(&server, &topo, &weights, &probe, op_epi);
+    assert_eq!(chained, want, "per-layer chain diverged from the chained reference");
+    println!("verified: graph and per-layer outputs bit-identical ({} words)", want.len());
+
+    let inputs: Vec<GraphInput> =
+        (0..inferences).map(|i| GraphInput::synthetic(&topo, 100 + i as u64)).collect();
+
+    // per-inference latency, sequential (a client awaiting each result)
+    let t0 = Instant::now();
+    for input in &inputs {
+        server
+            .submit_graph(topo.name(), input.clone())
+            .expect("submit")
+            .recv()
+            .expect("response lost");
+    }
+    let graph_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for input in &inputs {
+        per_layer_inference(&server, &topo, &weights, input, op_epi);
+    }
+    let per_layer_s = t0.elapsed().as_secs_f64();
+    server.shutdown();
+
+    let graph_ms = graph_s * 1e3 / inferences as f64;
+    let per_layer_ms = per_layer_s * 1e3 / inferences as f64;
+    let speedup = per_layer_s / graph_s;
+    println!("graph submit:     {graph_ms:>9.2} ms/inference");
+    println!("per-layer chain:  {per_layer_ms:>9.2} ms/inference");
+    println!("-> one graph request is {speedup:.2}x faster than chained per-layer submits");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("graph".into())),
+        ("net", Json::Str(topo.name().into())),
+        ("quick", Json::Num(if quick() { 1.0 } else { 0.0 })),
+        ("layers", Json::Num(topo.node_count() as f64)),
+        ("entries", Json::Num(topo.entry_count() as f64)),
+        ("inferences", Json::Num(inferences as f64)),
+        ("fused_epilogues", Json::Num(plan.fused_epilogues() as f64)),
+        ("fused_residuals", Json::Num(plan.fused_residuals() as f64)),
+        ("arena_reuses", Json::Num(plan.arena_reuses() as f64)),
+        ("arena_bytes", Json::Num(plan.arena_len() as f64)),
+        ("unshared_bytes", Json::Num(plan.naive_activation_len() as f64)),
+        ("packed_weight_words", Json::Num(plan.packed_weight_words() as f64)),
+        ("graph_ms_per_inference", Json::Num(graph_ms)),
+        ("per_layer_ms_per_inference", Json::Num(per_layer_ms)),
+        ("speedup", Json::Num(speedup)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_graph.json");
+    std::fs::write(path, doc.to_string()).expect("writing BENCH_graph.json");
+    println!("summary written to BENCH_graph.json");
+}

@@ -104,6 +104,16 @@ impl ExecScratch {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// The i32 accumulator left by the most recent
+    /// [`qconv2d_accumulate_with`] call: row-major `(gemm_m x
+    /// out_channels)`. The graph executor reads it to run a *fused*
+    /// epilogue (bias/ReLU/residual-add via
+    /// [`crate::quant::RequantParams`]) instead of the per-op
+    /// pack-to-words path.
+    pub fn accumulator(&self) -> &[i32] {
+        &self.acc
+    }
 }
 
 /// Everything the im2col gather map depends on: the conv shape minus
@@ -165,8 +175,13 @@ fn build_im2col_map(wl: &ConvWorkload, map: &mut Vec<i64>) {
 /// zero run. Bit-identical to [`im2col_group_into`] (pinned by
 /// `map_staging_equals_reference_im2col`), just without the per-cell
 /// index arithmetic.
-fn im2col_group_from_map(inst: &ConvInstance, group: usize, map: &[i64], cols: &mut Vec<i8>) {
-    let wl = &inst.wl;
+fn im2col_group_from_map(
+    wl: &ConvWorkload,
+    x: &[i8],
+    group: usize,
+    map: &[i64],
+    cols: &mut Vec<i8>,
+) {
     let (m, k) = (wl.gemm_m(), wl.gemm_k());
     let cpg = wl.in_channels_per_group();
     let kpos = wl.kernel * wl.kernel;
@@ -180,7 +195,7 @@ fn im2col_group_from_map(inst: &ConvInstance, group: usize, map: &[i64], cols: &
             let base = map[row * kpos + kp];
             if base >= 0 {
                 let src = (base + off) as usize;
-                crow[kp * cpg..(kp + 1) * cpg].copy_from_slice(&inst.x[src..src + cpg]);
+                crow[kp * cpg..(kp + 1) * cpg].copy_from_slice(&x[src..src + cpg]);
             }
             // padding runs stay at the resize-filled zero
         }
@@ -212,6 +227,39 @@ pub fn qconv2d_scheduled_with(
     scratch: &mut ExecScratch,
 ) -> Vec<i32> {
     let wl = &inst.wl;
+    qconv2d_accumulate_with(wl, &inst.x, &inst.w, cfg, scratch);
+    let (m, n) = (wl.gemm_m(), wl.out_channels);
+
+    // fused epilogue + packing, row-major (rows padded to the packing
+    // granule when out_channels is not a multiple of 8)
+    let mut out = Vec::with_capacity(m * n.div_ceil(8));
+    scratch.rowbuf.clear();
+    scratch.rowbuf.resize(n, 0);
+    for row in 0..m {
+        for c in 0..n {
+            scratch.rowbuf[c] = epi.apply(scratch.acc[row * n + c], inst.bias[c]);
+        }
+        pack_int4_padded_into(&scratch.rowbuf, &mut out);
+    }
+    out
+}
+
+/// The GEMM front half of [`qconv2d_scheduled_with`]: im2col-stage the
+/// input and run the per-group blocked i32 GEMMs, leaving the raw
+/// `(gemm_m x out_channels)` accumulator in the scratch
+/// ([`ExecScratch::accumulator`]) with **no epilogue applied**. The graph
+/// executor ([`crate::graph`]) calls this per node and then fuses
+/// bias/ReLU/residual-add/requantization on the accumulator in one pass,
+/// so inter-layer activations never round-trip through the packed-word
+/// epilogue. Borrows the input and weights as plain slices because graph
+/// weights are plan-owned, not per-request [`ConvInstance`]s.
+pub fn qconv2d_accumulate_with(
+    wl: &ConvWorkload,
+    x: &[i8],
+    w: &[i8],
+    cfg: &crate::searchspace::ScheduleConfig,
+    scratch: &mut ExecScratch,
+) {
     // per-group GEMM dims: a grouped conv runs `groups` independent
     // (m x k_g) by (k_g x n_g) GEMMs into disjoint accumulator columns
     let (m, n_g, k_g) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
@@ -230,11 +278,11 @@ pub fn qconv2d_scheduled_with(
         scratch.map_key = Some(key);
     }
     for group in 0..wl.groups {
-        im2col_group_from_map(inst, group, &scratch.map, &mut scratch.cols);
+        im2col_group_from_map(wl, x, group, &scratch.map, &mut scratch.cols);
         debug_assert_eq!(scratch.cols.len(), m * k_g);
         gemm_i32_blocked_group(
             &scratch.cols,
-            &inst.w,
+            w,
             &mut scratch.acc,
             m,
             k_g,
@@ -245,19 +293,6 @@ pub fn qconv2d_scheduled_with(
             bk,
         );
     }
-
-    // fused epilogue + packing, row-major (rows padded to the packing
-    // granule when out_channels is not a multiple of 8)
-    let mut out = Vec::with_capacity(m * n.div_ceil(8));
-    scratch.rowbuf.clear();
-    scratch.rowbuf.resize(n, 0);
-    for row in 0..m {
-        for c in 0..n {
-            scratch.rowbuf[c] = epi.apply(scratch.acc[row * n + c], inst.bias[c]);
-        }
-        pack_int4_padded_into(&scratch.rowbuf, &mut out);
-    }
-    out
 }
 
 /// im2col lowering of group 0 (== the whole conv for dense workloads):
@@ -575,7 +610,7 @@ mod tests {
                 let mut want = Vec::new();
                 im2col_group_into(&inst, g, &mut want);
                 let mut got = Vec::new();
-                im2col_group_from_map(&inst, g, &map, &mut got);
+                im2col_group_from_map(wl, &inst.x, g, &map, &mut got);
                 assert_eq!(got, want, "{} group {g}", wl.name);
             }
         }

@@ -16,7 +16,10 @@
 pub mod execute;
 mod im2col;
 
-pub use execute::{qconv2d, qconv2d_scheduled, qconv2d_scheduled_with, ConvInstance, ExecScratch};
+pub use execute::{
+    qconv2d, qconv2d_accumulate_with, qconv2d_scheduled, qconv2d_scheduled_with, ConvInstance,
+    ExecScratch,
+};
 pub use im2col::{DuplicatesInfo, GemmCoord, Im2colIndex, SourceElem};
 
 // `Precision` moved to the operator-generic `workload` module (it applies

@@ -1,0 +1,972 @@
+//! Whole-network graph execution: compile a [`crate::zoo::Network`] into
+//! an executable plan and run the full forward pass as one unit.
+//!
+//! The per-op serving path treats every layer as an independent request:
+//! each hop packs its i32 accumulator to INT4 words, ships them through a
+//! channel, unpacks them, and re-stages the next layer — a
+//! dequantize→quantize memory round-trip per edge plus a queue round-trip
+//! per layer. This module removes both:
+//!
+//! * **[`GraphTopology`]** — the dataflow of a network: one node per
+//!   unrolled layer repeat, chained where shapes connect, with explicit
+//!   residual-add edges for the ResNet family
+//!   ([`crate::zoo::Network::residual_blocks`]) or hand-built branch
+//!   topologies ([`GraphTopology::add_residual`]).
+//! * **[`GraphPlan`]** — the compiled artifact: every node's weights are
+//!   INT4-**packed once** at plan build (the deployment image; execution
+//!   reads the unpacked mirror), every node's schedule is resolved from
+//!   one [`ScheduleRegistry`] snapshot, and all inter-layer activations
+//!   live in one **liveness-planned arena** whose slots are recycled the
+//!   moment their last consumer has run.
+//! * **Fused epilogues** — each node runs the GEMM front half only
+//!   ([`crate::conv::qconv2d_accumulate_with`] /
+//!   [`crate::workload::qmatmul_accumulate_with`]) and then applies
+//!   bias/ReLU/requantization/residual-add **on the i32 accumulator in
+//!   one pass** ([`RequantParams::apply`]), writing INT4-domain bytes
+//!   straight into the arena. Quantization to packed words happens only
+//!   at the graph's output edges.
+//!
+//! Bit-equality with the chained per-layer path is by construction
+//! (`Epilogue::apply` delegates to `RequantParams::apply` with residual
+//! 0) and pinned by [`reference_forward`] plus the conformance harness.
+#![deny(missing_docs)]
+
+use anyhow::{anyhow, bail};
+
+use crate::conv::{qconv2d_accumulate_with, ExecScratch};
+use crate::quant::{clip_int4, pack_int4_padded, pack_int4_padded_into, unpack_int4, RequantParams};
+use crate::registry::ScheduleRegistry;
+use crate::searchspace::ScheduleConfig;
+use crate::workload::{qmatmul_accumulate_with, MatmulScratch, OpWorkload};
+use crate::zoo::Network;
+use crate::Result;
+
+// ----- shape algebra over OpWorkload ------------------------------------
+
+/// Activation rows a node produces (one per output pixel / GEMM row).
+fn out_rows(wl: &OpWorkload) -> usize {
+    match wl {
+        OpWorkload::Conv(w) => w.gemm_m(),
+        OpWorkload::Matmul(w) => w.m,
+    }
+}
+
+/// Activation columns a node produces (total output channels).
+fn out_cols(wl: &OpWorkload) -> usize {
+    match wl {
+        OpWorkload::Conv(w) => w.out_channels,
+        OpWorkload::Matmul(w) => w.n,
+    }
+}
+
+/// Unpacked activation elements a node produces.
+fn out_len(wl: &OpWorkload) -> usize {
+    out_rows(wl) * out_cols(wl)
+}
+
+/// Unpacked activation elements a node consumes (its data input).
+fn in_len(wl: &OpWorkload) -> usize {
+    match wl {
+        OpWorkload::Conv(w) => w.batch * w.height * w.width * w.in_channels,
+        OpWorkload::Matmul(w) => w.m * w.k,
+    }
+}
+
+/// Weight elements a node owns (HWIO for conv, `k x n` for matmul).
+fn weight_len(wl: &OpWorkload) -> usize {
+    match wl {
+        OpWorkload::Conv(w) => w.kernel * w.kernel * w.in_channels_per_group() * w.out_channels,
+        OpWorkload::Matmul(w) => w.k * w.n,
+    }
+}
+
+/// Bias elements a node owns (one per output channel / column).
+fn bias_len(wl: &OpWorkload) -> usize {
+    out_cols(wl)
+}
+
+/// Whether `next` can consume `prev`'s output directly: same operator
+/// family and the activation tensors agree element for element (conv:
+/// NHWC output of `prev` is exactly the NHWC input of `next`; matmul:
+/// `prev`'s `(m, n)` is `next`'s `(m, k)`).
+fn chains(prev: &OpWorkload, next: &OpWorkload) -> bool {
+    match (prev, next) {
+        (OpWorkload::Conv(p), OpWorkload::Conv(n)) => {
+            p.batch == n.batch
+                && p.out_height() == n.height
+                && p.out_width() == n.width
+                && p.out_channels == n.in_channels
+        }
+        (OpWorkload::Matmul(p), OpWorkload::Matmul(n)) => p.m == n.m && p.n == n.k,
+        _ => false,
+    }
+}
+
+// ----- topology ----------------------------------------------------------
+
+/// Where a node's data input comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeInput {
+    /// A graph entry (an externally supplied activation), by entry index.
+    Entry(usize),
+    /// Another node's output, by node index (always an earlier node).
+    Node(usize),
+}
+
+/// One layer instance in the unrolled dataflow graph.
+#[derive(Debug, Clone)]
+pub struct GraphNode {
+    /// The layer's workload (either operator).
+    pub workload: OpWorkload,
+    /// Data input: a graph entry or an earlier node's output.
+    pub input: NodeInput,
+    /// Residual-add edge: an earlier node whose (shape-identical) output
+    /// is added to this node's requantized activation.
+    pub residual: Option<usize>,
+}
+
+/// The dataflow of a network: unrolled layer nodes, chained where shapes
+/// connect, plus explicit residual edges. Pure structure — no weights, no
+/// schedules; [`GraphPlan::compile`] binds both.
+#[derive(Debug, Clone)]
+pub struct GraphTopology {
+    name: String,
+    nodes: Vec<GraphNode>,
+    entry_lens: Vec<usize>,
+}
+
+impl GraphTopology {
+    /// An empty topology; grow it with [`GraphTopology::add_layer`] and
+    /// [`GraphTopology::add_residual`].
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), nodes: Vec::new(), entry_lens: Vec::new() }
+    }
+
+    /// Append one layer. If the previous node's output shape matches this
+    /// layer's input, the node chains from it; otherwise the layer opens
+    /// a fresh graph entry (the zoo's stage shapes do not chain across
+    /// stages, so a ResNet unrolls into per-stage chains with one entry
+    /// each). Returns the new node's index.
+    pub fn add_layer(&mut self, workload: impl Into<OpWorkload>) -> usize {
+        let workload = workload.into();
+        let input = match self.nodes.last() {
+            Some(prev) if chains(&prev.workload, &workload) => {
+                NodeInput::Node(self.nodes.len() - 1)
+            }
+            _ => {
+                self.entry_lens.push(in_len(&workload));
+                NodeInput::Entry(self.entry_lens.len() - 1)
+            }
+        };
+        self.nodes.push(GraphNode { workload, input, residual: None });
+        self.nodes.len() - 1
+    }
+
+    /// Add a residual-add edge: node `from`'s output is added (in the
+    /// INT4 domain, post-requantization) to node `to`'s activation.
+    /// Errors unless `from` precedes `to` and both outputs have the same
+    /// shape.
+    pub fn add_residual(&mut self, from: usize, to: usize) -> Result<()> {
+        if from >= to || to >= self.nodes.len() {
+            bail!("residual edge {from}->{to} must go forward within {} nodes", self.nodes.len());
+        }
+        let (a, b) = (out_len(&self.nodes[from].workload), out_len(&self.nodes[to].workload));
+        if a != b {
+            bail!("residual edge {from}->{to} shape mismatch: {a} vs {b} elements");
+        }
+        self.nodes[to].residual = Some(from);
+        Ok(())
+    }
+
+    /// Unroll a zoo network (layers x repeats, forward order) into a
+    /// topology. For residual networks ([`Network::residual_blocks`])
+    /// every shape-preserving chained node also gets a residual edge from
+    /// its data-input producer — the identity skip connection of the
+    /// repeated blocks.
+    pub fn from_network(net: &Network) -> Self {
+        let mut topo = Self::new(net.name);
+        for layer in &net.layers {
+            for _ in 0..layer.repeats.max(1) {
+                let i = topo.add_layer(layer.workload.clone());
+                if net.residual_blocks() {
+                    if let NodeInput::Node(p) = topo.nodes[i].input {
+                        if out_len(&topo.nodes[p].workload) == out_len(&topo.nodes[i].workload) {
+                            topo.nodes[i].residual = Some(p);
+                        }
+                    }
+                }
+            }
+        }
+        topo
+    }
+
+    /// The topology's name (the un-namespaced half of the `graph:<name>`
+    /// serving kind).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The unrolled nodes, in execution order.
+    pub fn nodes(&self) -> &[GraphNode] {
+        &self.nodes
+    }
+
+    /// How many nodes the unrolled graph has.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// How many externally supplied activations a forward pass needs.
+    pub fn entry_count(&self) -> usize {
+        self.entry_lens.len()
+    }
+
+    /// Unpacked activation elements entry `e` must supply.
+    pub fn entry_len(&self, e: usize) -> usize {
+        self.entry_lens[e]
+    }
+
+    /// Graph outputs: nodes no other node consumes (neither as data input
+    /// nor as residual source), in node order.
+    pub fn outputs(&self) -> Vec<usize> {
+        let mut consumed = vec![false; self.nodes.len()];
+        for node in &self.nodes {
+            if let NodeInput::Node(p) = node.input {
+                consumed[p] = true;
+            }
+            if let Some(r) = node.residual {
+                consumed[r] = true;
+            }
+        }
+        (0..self.nodes.len()).filter(|&i| !consumed[i]).collect()
+    }
+}
+
+// ----- weights & inputs --------------------------------------------------
+
+/// One node's parameters, INT4-domain values held in i8 (weights) and i32
+/// (bias) — the same domains the per-op instances use.
+#[derive(Debug, Clone)]
+pub struct NodeWeights {
+    /// Weights: HWIO for conv, row-major `k x n` for matmul, in [-8, 7].
+    pub w: Vec<i8>,
+    /// Per-output-channel bias.
+    pub bias: Vec<i32>,
+}
+
+/// Parameters for every node of a topology, in node order.
+#[derive(Debug, Clone)]
+pub struct GraphWeights {
+    /// Per-node parameters, aligned with [`GraphTopology::nodes`].
+    pub nodes: Vec<NodeWeights>,
+}
+
+impl GraphWeights {
+    /// Deterministic synthetic parameters for a topology (same value
+    /// domains as the per-op `synthetic` constructors).
+    pub fn synthetic(topo: &GraphTopology, seed: u64) -> Self {
+        let mut rng = crate::util::Rng::new(seed);
+        let nodes = topo
+            .nodes()
+            .iter()
+            .map(|n| NodeWeights {
+                w: (0..weight_len(&n.workload)).map(|_| rng.gen_range(16) as i8 - 8).collect(),
+                bias: (0..bias_len(&n.workload)).map(|_| rng.gen_range(128) as i32 - 64).collect(),
+            })
+            .collect();
+        Self { nodes }
+    }
+}
+
+/// One forward pass's external activations: one INT4-domain tensor per
+/// graph entry, in entry order.
+#[derive(Debug, Clone)]
+pub struct GraphInput {
+    /// Per-entry activations, values in [-8, 7]; entry `e` must have
+    /// [`GraphTopology::entry_len`]`(e)` elements.
+    pub entries: Vec<Vec<i8>>,
+}
+
+impl GraphInput {
+    /// Deterministic synthetic activations for a topology.
+    pub fn synthetic(topo: &GraphTopology, seed: u64) -> Self {
+        let mut rng = crate::util::Rng::new(seed);
+        let entries = (0..topo.entry_count())
+            .map(|e| (0..topo.entry_len(e)).map(|_| rng.gen_range(16) as i8 - 8).collect())
+            .collect();
+        Self { entries }
+    }
+}
+
+// ----- the compiled plan -------------------------------------------------
+
+/// One compiled node: plan-owned parameters, the tuned schedule, the
+/// fused epilogue, and this node's arena slot.
+#[derive(Debug, Clone)]
+struct PlannedNode {
+    wl: OpWorkload,
+    input: NodeInput,
+    residual: Option<usize>,
+    /// The packed-INT4 deployment image of the weights — built **once**
+    /// at compile; requests never re-pack.
+    w_packed: Vec<i32>,
+    /// Execution mirror of `w_packed` (the blocked GEMM consumes i8).
+    w: Vec<i8>,
+    bias: Vec<i32>,
+    epi: RequantParams,
+    schedule: ScheduleConfig,
+    /// `(offset, len)` of this node's output in the activation arena.
+    slot: (usize, usize),
+}
+
+/// Reusable buffers for [`GraphPlan::execute`]: the per-operator GEMM
+/// scratches, the activation arena, and the residual staging buffer. A
+/// serving worker owns one for its lifetime, so consecutive graph
+/// requests re-run allocation-free.
+#[derive(Debug, Default)]
+pub struct GraphScratch {
+    conv: ExecScratch,
+    matmul: MatmulScratch,
+    arena: Vec<i8>,
+    resbuf: Vec<i8>,
+    rowbuf: Vec<i32>,
+}
+
+impl GraphScratch {
+    /// Empty scratch; buffers grow to the plan's sizes on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A network compiled against one registry snapshot: pack-once weights,
+/// per-node tuned schedules, fused epilogues, and a liveness-planned
+/// activation arena. Build with [`GraphPlan::compile`], run with
+/// [`GraphPlan::execute`].
+#[derive(Debug, Clone)]
+pub struct GraphPlan {
+    name: String,
+    topo: GraphTopology,
+    nodes: Vec<PlannedNode>,
+    arena_len: usize,
+    arena_reuses: usize,
+    tuned_nodes: usize,
+}
+
+impl GraphPlan {
+    /// Compile `topo` + `weights` against `registry`: validate every
+    /// node's parameter shapes and value domains, pack each node's
+    /// weights to INT4 words once, resolve each node's tuned schedule
+    /// (default fallback for unknown kinds), attach the fused epilogue,
+    /// and lay all inter-layer activations out in one arena with
+    /// last-consumer liveness (a slot is recycled the moment the node
+    /// that last reads it has run).
+    pub fn compile(
+        topo: &GraphTopology,
+        weights: &GraphWeights,
+        registry: &ScheduleRegistry,
+        epi: RequantParams,
+    ) -> Result<Self> {
+        if weights.nodes.len() != topo.node_count() {
+            bail!(
+                "graph '{}': {} weight sets for {} nodes",
+                topo.name(),
+                weights.nodes.len(),
+                topo.node_count()
+            );
+        }
+
+        // liveness: the last node index that reads each node's output
+        // (data input or residual source); graph outputs live to the end
+        let n = topo.node_count();
+        let mut last_use = vec![usize::MAX; n]; // MAX = never recycled
+        for (i, node) in topo.nodes().iter().enumerate() {
+            if let NodeInput::Node(p) = node.input {
+                last_use[p] = i;
+            }
+            if let Some(r) = node.residual {
+                last_use[r] = i;
+            }
+        }
+        for &o in &topo.outputs() {
+            last_use[o] = usize::MAX;
+        }
+
+        // arena layout: a node's own slot is claimed *before* its inputs
+        // are freed (an output must never alias a live input); first-fit
+        // over the free list, else grow the arena
+        let mut free: Vec<(usize, usize)> = Vec::new(); // (offset, capacity)
+        let mut arena_len = 0usize;
+        let mut arena_reuses = 0usize;
+        let mut slots: Vec<(usize, usize)> = Vec::with_capacity(n); // (offset, used len)
+        let mut caps: Vec<usize> = Vec::with_capacity(n); // full region capacity
+        for (i, node) in topo.nodes().iter().enumerate() {
+            let need = out_len(&node.workload);
+            match free.iter().position(|&(_, cap)| cap >= need) {
+                Some(fi) => {
+                    let (off, cap) = free.remove(fi);
+                    arena_reuses += 1;
+                    slots.push((off, need));
+                    caps.push(cap); // the region refrees at full capacity
+                }
+                None => {
+                    slots.push((arena_len, need));
+                    caps.push(need);
+                    arena_len += need;
+                }
+            }
+            for p in 0..i {
+                if last_use[p] == i {
+                    free.push((slots[p].0, caps[p]));
+                }
+            }
+        }
+
+        let mut nodes = Vec::with_capacity(n);
+        let mut tuned_nodes = 0usize;
+        for (i, (node, nw)) in topo.nodes().iter().zip(&weights.nodes).enumerate() {
+            let kind = node.workload.kind();
+            let want_w = weight_len(&node.workload);
+            if nw.w.len() != want_w {
+                bail!(
+                    "graph '{}' node {i} ({kind}): weight len {} != {want_w}",
+                    topo.name(),
+                    nw.w.len()
+                );
+            }
+            let want_b = bias_len(&node.workload);
+            if nw.bias.len() != want_b {
+                bail!(
+                    "graph '{}' node {i} ({kind}): bias len {} != {want_b}",
+                    topo.name(),
+                    nw.bias.len()
+                );
+            }
+            if let Some(&bad) = nw.w.iter().find(|v| !(-8..=7).contains(&(**v as i32))) {
+                bail!(
+                    "graph '{}' node {i} ({kind}): weight {bad} outside the INT4 domain",
+                    topo.name()
+                );
+            }
+            // pack once: the deployment image; execution reads the
+            // unpacked mirror (lossless for in-domain values)
+            let as_i32: Vec<i32> = nw.w.iter().map(|&v| v as i32).collect();
+            let w_packed = pack_int4_padded(&as_i32);
+            let w: Vec<i8> =
+                unpack_int4(&w_packed)[..nw.w.len()].iter().map(|&v| v as i8).collect();
+            debug_assert_eq!(w, nw.w, "packed-weight round-trip must be lossless");
+            if registry.contains(&kind) {
+                tuned_nodes += 1;
+            }
+            nodes.push(PlannedNode {
+                wl: node.workload.clone(),
+                input: node.input,
+                residual: node.residual,
+                w_packed,
+                w,
+                bias: nw.bias.clone(),
+                epi,
+                schedule: registry.schedule_for(&kind),
+                slot: slots[i],
+            });
+        }
+
+        Ok(Self {
+            name: topo.name().to_string(),
+            topo: topo.clone(),
+            nodes,
+            arena_len,
+            arena_reuses,
+            tuned_nodes,
+        })
+    }
+
+    /// The network name this plan executes.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The topology this plan was compiled from.
+    pub fn topology(&self) -> &GraphTopology {
+        &self.topo
+    }
+
+    /// Nodes in the plan (== unrolled layers).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Activation arena size, elements. Compare against
+    /// [`GraphPlan::naive_activation_len`] for the liveness win.
+    pub fn arena_len(&self) -> usize {
+        self.arena_len
+    }
+
+    /// How many nodes wrote into a recycled arena slot (0 would mean the
+    /// liveness planner never reused anything — every within-stage chain
+    /// of a ResNet guarantees at least one reuse).
+    pub fn arena_reuses(&self) -> usize {
+        self.arena_reuses
+    }
+
+    /// What per-node allocation would have cost: the sum of every node's
+    /// activation size.
+    pub fn naive_activation_len(&self) -> usize {
+        self.nodes.iter().map(|n| out_len(&n.wl)).sum()
+    }
+
+    /// How many nodes run a fused accumulator epilogue (all of them —
+    /// bias/ReLU/requantization/residual-add never leave the i32
+    /// accumulator pass).
+    pub fn fused_epilogues(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// How many of those epilogues fuse a residual add.
+    pub fn fused_residuals(&self) -> usize {
+        self.nodes.iter().filter(|n| n.residual.is_some()).count()
+    }
+
+    /// Nodes whose schedule came from a registry entry (vs the default
+    /// fallback).
+    pub fn tuned_nodes(&self) -> usize {
+        self.tuned_nodes
+    }
+
+    /// Total packed-INT4 weight words the plan carries (packed once at
+    /// compile; amortized over every request).
+    pub fn packed_weight_words(&self) -> usize {
+        self.nodes.iter().map(|n| n.w_packed.len()).sum()
+    }
+
+    /// The schedule node `i` executes under.
+    pub fn schedule_of(&self, i: usize) -> ScheduleConfig {
+        self.nodes[i].schedule
+    }
+
+    /// Packed words one forward pass returns (per-row padded packing of
+    /// every graph output, concatenated in node order).
+    pub fn output_words(&self) -> usize {
+        self.topo
+            .outputs()
+            .iter()
+            .map(|&o| out_rows(&self.nodes[o].wl) * out_cols(&self.nodes[o].wl).div_ceil(8))
+            .sum()
+    }
+
+    /// Run one forward pass: every node's GEMM into the worker scratch,
+    /// fused epilogue straight into the arena, packing only at the graph
+    /// outputs. Returns the concatenated packed-INT4 words of every
+    /// output node (per-row padded, the per-op executors' layout) —
+    /// bit-identical to chaining the per-layer path
+    /// ([`reference_forward`]).
+    pub fn execute(&self, input: &GraphInput, scratch: &mut GraphScratch) -> Result<Vec<i32>> {
+        if input.entries.len() != self.topo.entry_count() {
+            bail!(
+                "graph '{}': {} entries supplied, {} needed",
+                self.name,
+                input.entries.len(),
+                self.topo.entry_count()
+            );
+        }
+        for (e, act) in input.entries.iter().enumerate() {
+            if act.len() != self.topo.entry_len(e) {
+                bail!(
+                    "graph '{}' entry {e}: {} elements supplied, {} needed",
+                    self.name,
+                    act.len(),
+                    self.topo.entry_len(e)
+                );
+            }
+        }
+
+        let GraphScratch { conv, matmul, arena, resbuf, rowbuf } = scratch;
+        arena.clear();
+        arena.resize(self.arena_len, 0);
+
+        for pn in &self.nodes {
+            // the residual source is staged out of the arena first: its
+            // slot stays live while this node's output slot is written,
+            // and the two regions may not be borrowed simultaneously
+            let has_res = match pn.residual {
+                Some(r) => {
+                    let (off, len) = self.nodes[r].slot;
+                    resbuf.clear();
+                    resbuf.extend_from_slice(&arena[off..off + len]);
+                    true
+                }
+                None => false,
+            };
+
+            // GEMM front half only — the epilogue stays on the accumulator
+            let acc: &[i32] = match (&pn.wl, pn.input) {
+                (OpWorkload::Conv(cw), NodeInput::Entry(e)) => {
+                    qconv2d_accumulate_with(cw, &input.entries[e], &pn.w, &pn.schedule, conv);
+                    conv.accumulator()
+                }
+                (OpWorkload::Conv(cw), NodeInput::Node(p)) => {
+                    let (off, len) = self.nodes[p].slot;
+                    qconv2d_accumulate_with(cw, &arena[off..off + len], &pn.w, &pn.schedule, conv);
+                    conv.accumulator()
+                }
+                (OpWorkload::Matmul(mw), NodeInput::Entry(e)) => {
+                    qmatmul_accumulate_with(mw, &input.entries[e], &pn.w, &pn.schedule, matmul);
+                    matmul.accumulator()
+                }
+                (OpWorkload::Matmul(mw), NodeInput::Node(p)) => {
+                    let (off, len) = self.nodes[p].slot;
+                    let x = &arena[off..off + len];
+                    qmatmul_accumulate_with(mw, x, &pn.w, &pn.schedule, matmul);
+                    matmul.accumulator()
+                }
+            };
+
+            // fused epilogue: bias -> ReLU -> requantize -> residual add,
+            // one pass over the accumulator, INT4-domain bytes into the
+            // arena — no packed-word round-trip on the inter-layer edge
+            let cols = out_cols(&pn.wl);
+            let (off, len) = pn.slot;
+            debug_assert_eq!(acc.len(), len);
+            let out = &mut arena[off..off + len];
+            for (i, (o, &a)) in out.iter_mut().zip(acc).enumerate() {
+                let res = if has_res { resbuf[i] as i32 } else { 0 };
+                *o = pn.epi.apply(a, pn.bias[i % cols], res) as i8;
+            }
+        }
+
+        // quantize to packed words only at the graph edge
+        let mut out = Vec::with_capacity(self.output_words());
+        for o in self.topo.outputs() {
+            let pn = &self.nodes[o];
+            let (off, _) = pn.slot;
+            let (rows, cols) = (out_rows(&pn.wl), out_cols(&pn.wl));
+            for row in 0..rows {
+                rowbuf.clear();
+                rowbuf.extend(
+                    arena[off + row * cols..off + (row + 1) * cols].iter().map(|&v| v as i32),
+                );
+                pack_int4_padded_into(rowbuf, &mut out);
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ----- chained per-layer reference ---------------------------------------
+
+/// The chained per-layer reference a [`GraphPlan`] must be bit-identical
+/// to: every node executes through the **per-op** path
+/// ([`crate::conv::qconv2d`] / [`crate::workload::qmatmul`] on fresh
+/// instances), its packed output is unpacked back to activations,
+/// residuals are added in the INT4 domain, and the graph outputs are
+/// re-packed. This is exactly what a client chaining per-layer serving
+/// requests computes — the dequantize→quantize round-trip per edge that
+/// the graph path removes.
+pub fn reference_forward(
+    topo: &GraphTopology,
+    weights: &GraphWeights,
+    input: &GraphInput,
+    epi: RequantParams,
+) -> Result<Vec<i32>> {
+    use crate::conv::ConvInstance;
+    use crate::quant::Epilogue;
+    use crate::workload::{qmatmul, MatmulInstance};
+
+    if weights.nodes.len() != topo.node_count() {
+        bail!("{} weight sets for {} nodes", weights.nodes.len(), topo.node_count());
+    }
+    let per_op: Epilogue = epi.into();
+    let mut acts: Vec<Vec<i8>> = Vec::with_capacity(topo.node_count());
+    for (node, nw) in topo.nodes().iter().zip(&weights.nodes) {
+        let x: &[i8] = match node.input {
+            NodeInput::Entry(e) => {
+                input.entries.get(e).ok_or_else(|| anyhow!("missing entry {e}"))?
+            }
+            NodeInput::Node(p) => &acts[p],
+        };
+        let packed = match &node.workload {
+            OpWorkload::Conv(cw) => crate::conv::qconv2d(
+                &ConvInstance {
+                    wl: cw.clone(),
+                    x: x.to_vec(),
+                    w: nw.w.clone(),
+                    bias: nw.bias.clone(),
+                },
+                &per_op,
+            ),
+            OpWorkload::Matmul(mw) => qmatmul(
+                &MatmulInstance {
+                    wl: mw.clone(),
+                    a: x.to_vec(),
+                    b: nw.w.clone(),
+                    bias: nw.bias.clone(),
+                },
+                &per_op,
+            ),
+        };
+        // unpack, stripping each row's pad nibbles
+        let (rows, cols) = (out_rows(&node.workload), out_cols(&node.workload));
+        let wpr = cols.div_ceil(8);
+        let vals = unpack_int4(&packed);
+        let mut act: Vec<i8> = Vec::with_capacity(rows * cols);
+        for row in 0..rows {
+            act.extend(vals[row * wpr * 8..row * wpr * 8 + cols].iter().map(|&v| v as i8));
+        }
+        if let Some(r) = node.residual {
+            let res = &acts[r];
+            for (a, &rv) in act.iter_mut().zip(res.iter()) {
+                *a = clip_int4(*a as i32 + rv as i32) as i8;
+            }
+        }
+        acts.push(act);
+    }
+    let mut out = Vec::new();
+    for o in topo.outputs() {
+        let cols = out_cols(&topo.nodes()[o].workload);
+        for row in acts[o].chunks(cols) {
+            let vals: Vec<i32> = row.iter().map(|&v| v as i32).collect();
+            pack_int4_padded_into(&vals, &mut out);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::registry::TunedEntry;
+    use crate::workload::MatmulWorkload;
+    use crate::zoo;
+
+    fn chain3() -> GraphTopology {
+        // three shape-preserving 3x3 convs: one entry, one chain
+        let mut topo = GraphTopology::new("chain3");
+        for i in 0..3 {
+            topo.add_layer(ConvWorkload::new(format!("c{i}"), 1, 6, 6, 8, 8));
+        }
+        topo
+    }
+
+    #[test]
+    fn topology_chains_where_shapes_connect() {
+        let topo = chain3();
+        assert_eq!(topo.entry_count(), 1);
+        assert_eq!(topo.nodes()[0].input, NodeInput::Entry(0));
+        assert_eq!(topo.nodes()[1].input, NodeInput::Node(0));
+        assert_eq!(topo.nodes()[2].input, NodeInput::Node(1));
+        assert_eq!(topo.outputs(), vec![2]);
+        // a shape break opens a new entry
+        let mut topo = chain3();
+        topo.add_layer(ConvWorkload::new("break", 1, 12, 12, 16, 8));
+        assert_eq!(topo.entry_count(), 2);
+        assert_eq!(topo.nodes()[3].input, NodeInput::Entry(1));
+        assert_eq!(topo.outputs(), vec![2, 3]);
+    }
+
+    #[test]
+    fn from_network_unrolls_repeats_and_marks_residuals() {
+        let topo = GraphTopology::from_network(&zoo::resnet50(1));
+        // 3+4+6+3 unrolled bottleneck 3x3s, one entry per stage
+        assert_eq!(topo.node_count(), 16);
+        assert_eq!(topo.entry_count(), 4);
+        assert_eq!(topo.outputs().len(), 4);
+        // every chained node carries the identity skip edge
+        let with_res = topo.nodes().iter().filter(|n| n.residual.is_some()).count();
+        assert_eq!(with_res, 16 - 4, "all but the stage-entry nodes are residual blocks");
+        for (i, n) in topo.nodes().iter().enumerate() {
+            if let Some(r) = n.residual {
+                assert_eq!(NodeInput::Node(r), n.input, "skip comes from the data producer");
+                assert!(r < i);
+            }
+        }
+        // a non-residual net gets none, but still chains where channels
+        // carry over
+        let vgg = GraphTopology::from_network(&zoo::vgg16(1));
+        assert!(vgg.nodes().iter().all(|n| n.residual.is_none()));
+        assert!(vgg.nodes().iter().any(|n| matches!(n.input, NodeInput::Node(_))));
+    }
+
+    #[test]
+    fn residual_edge_validation() {
+        let mut topo = chain3();
+        assert!(topo.add_residual(0, 2).is_ok());
+        assert!(topo.add_residual(2, 1).is_err(), "must go forward");
+        assert!(topo.add_residual(1, 9).is_err(), "out of range");
+        let mut mixed = chain3();
+        mixed.add_layer(ConvWorkload::new("small", 1, 6, 6, 8, 16));
+        assert!(mixed.add_residual(0, 3).is_err(), "shape mismatch");
+    }
+
+    #[test]
+    fn arena_reuses_slots_after_last_consumer() {
+        let topo = chain3();
+        let weights = GraphWeights::synthetic(&topo, 1);
+        let plan =
+            GraphPlan::compile(&topo, &weights, &ScheduleRegistry::new(), RequantParams::default())
+                .unwrap();
+        // n0 frees after n1 reads it; n2 writes into n0's slot
+        assert!(plan.arena_reuses() >= 1, "chain must recycle at least one slot");
+        assert!(
+            plan.arena_len() < plan.naive_activation_len(),
+            "arena {} must beat naive {}",
+            plan.arena_len(),
+            plan.naive_activation_len()
+        );
+        // with a residual edge 0 -> 2, node 0 stays live through node 2:
+        // longer liveness can only grow the arena
+        let mut topo_r = chain3();
+        topo_r.add_residual(0, 2).unwrap();
+        let plan_r = GraphPlan::compile(
+            &topo_r,
+            &GraphWeights::synthetic(&topo_r, 1),
+            &ScheduleRegistry::new(),
+            RequantParams::default(),
+        )
+        .unwrap();
+        assert!(plan_r.arena_len() >= plan.arena_len());
+    }
+
+    #[test]
+    fn graph_matches_chained_reference_feedforward() {
+        let topo = chain3();
+        let weights = GraphWeights::synthetic(&topo, 7);
+        let input = GraphInput::synthetic(&topo, 8);
+        let epi = RequantParams::default();
+        let plan = GraphPlan::compile(&topo, &weights, &ScheduleRegistry::new(), epi).unwrap();
+        let got = plan.execute(&input, &mut GraphScratch::new()).unwrap();
+        let want = reference_forward(&topo, &weights, &input, epi).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(got.len(), plan.output_words());
+    }
+
+    #[test]
+    fn graph_matches_chained_reference_with_residuals() {
+        let mut topo = chain3();
+        topo.add_residual(0, 2).unwrap();
+        topo.nodes[1].residual = Some(0); // block-style skip on node 1 too
+        let weights = GraphWeights::synthetic(&topo, 3);
+        let input = GraphInput::synthetic(&topo, 4);
+        for epi in [
+            RequantParams::default(),
+            RequantParams { relu: false, shift: 4 },
+            RequantParams { relu: true, shift: 0 },
+        ] {
+            let plan = GraphPlan::compile(&topo, &weights, &ScheduleRegistry::new(), epi).unwrap();
+            assert_eq!(plan.fused_residuals(), 2);
+            let got = plan.execute(&input, &mut GraphScratch::new()).unwrap();
+            let want = reference_forward(&topo, &weights, &input, epi).unwrap();
+            assert_eq!(got, want, "{epi:?}");
+        }
+    }
+
+    #[test]
+    fn graph_matches_reference_on_matmul_chain() {
+        let mut topo = GraphTopology::new("mm_chain");
+        topo.add_layer(MatmulWorkload::new("mm0", 16, 24, 32));
+        topo.add_layer(MatmulWorkload::new("mm1", 16, 12, 24)); // chains: n == k
+        assert_eq!(topo.entry_count(), 1);
+        let weights = GraphWeights::synthetic(&topo, 5);
+        let input = GraphInput::synthetic(&topo, 6);
+        let epi = RequantParams::default();
+        let plan = GraphPlan::compile(&topo, &weights, &ScheduleRegistry::new(), epi).unwrap();
+        let got = plan.execute(&input, &mut GraphScratch::new()).unwrap();
+        assert_eq!(got, reference_forward(&topo, &weights, &input, epi).unwrap());
+    }
+
+    #[test]
+    fn tuned_schedules_resolve_per_node_and_never_change_bits() {
+        let topo = chain3();
+        let weights = GraphWeights::synthetic(&topo, 9);
+        let input = GraphInput::synthetic(&topo, 10);
+        let epi = RequantParams::default();
+        let base = GraphPlan::compile(&topo, &weights, &ScheduleRegistry::new(), epi).unwrap();
+        assert_eq!(base.tuned_nodes(), 0);
+        let want = base.execute(&input, &mut GraphScratch::new()).unwrap();
+
+        let tuned = ScheduleConfig {
+            blk_row_warps: 1,
+            warp_row_tiles: 1,
+            chunk: 1,
+            ..Default::default()
+        };
+        let mut reg = ScheduleRegistry::new();
+        reg.insert(
+            "conv:c1",
+            TunedEntry { config: tuned, runtime_us: 1.0, trials: 8, explorer: "t".into() },
+        );
+        let plan = GraphPlan::compile(&topo, &weights, &reg, epi).unwrap();
+        assert_eq!(plan.tuned_nodes(), 1);
+        assert_eq!(plan.schedule_of(1), tuned);
+        assert_eq!(plan.schedule_of(0), ScheduleConfig::default());
+        assert_eq!(
+            plan.execute(&input, &mut GraphScratch::new()).unwrap(),
+            want,
+            "schedules steer blocking, never numerics"
+        );
+    }
+
+    #[test]
+    fn scratch_reuse_across_plans_is_numerics_invariant() {
+        let mut scratch = GraphScratch::new();
+        let epi = RequantParams::default();
+        for seed in 0..3u64 {
+            let topo = chain3();
+            let weights = GraphWeights::synthetic(&topo, seed);
+            let input = GraphInput::synthetic(&topo, seed + 50);
+            let plan = GraphPlan::compile(&topo, &weights, &ScheduleRegistry::new(), epi).unwrap();
+            let fresh = plan.execute(&input, &mut GraphScratch::new()).unwrap();
+            let reused = plan.execute(&input, &mut scratch).unwrap();
+            assert_eq!(fresh, reused, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn compile_validates_weights_and_execute_validates_input() {
+        let topo = chain3();
+        let reg = ScheduleRegistry::new();
+        let epi = RequantParams::default();
+        let mut bad = GraphWeights::synthetic(&topo, 1);
+        bad.nodes.pop();
+        assert!(GraphPlan::compile(&topo, &bad, &reg, epi).is_err(), "missing node weights");
+        let mut bad = GraphWeights::synthetic(&topo, 1);
+        bad.nodes[1].w.pop();
+        assert!(GraphPlan::compile(&topo, &bad, &reg, epi).is_err(), "short weights");
+        let mut bad = GraphWeights::synthetic(&topo, 1);
+        bad.nodes[0].w[0] = 9;
+        assert!(GraphPlan::compile(&topo, &bad, &reg, epi).is_err(), "out-of-domain weight");
+        let mut bad = GraphWeights::synthetic(&topo, 1);
+        bad.nodes[2].bias.push(0);
+        assert!(GraphPlan::compile(&topo, &bad, &reg, epi).is_err(), "long bias");
+
+        let plan =
+            GraphPlan::compile(&topo, &GraphWeights::synthetic(&topo, 1), &reg, epi).unwrap();
+        let mut scratch = GraphScratch::new();
+        let empty = GraphInput { entries: vec![] };
+        assert!(plan.execute(&empty, &mut scratch).is_err(), "entry count");
+        let short = GraphInput { entries: vec![vec![0i8; 7]] };
+        assert!(plan.execute(&short, &mut scratch).is_err(), "entry length");
+    }
+
+    #[test]
+    fn resnet50_plan_packs_weights_once_and_reuses_arena() {
+        // the acceptance shape: the headline network's plan must show >= 1
+        // fused epilogue and >= 1 arena reuse on the hot path (execution
+        // equality at this size runs in the release-mode conformance /
+        // bench lanes; this unit test pins the compiled structure)
+        let topo = GraphTopology::from_network(&zoo::resnet50(1));
+        let weights = GraphWeights::synthetic(&topo, 11);
+        let plan =
+            GraphPlan::compile(&topo, &weights, &ScheduleRegistry::new(), RequantParams::default())
+                .unwrap();
+        assert!(plan.fused_epilogues() >= 1);
+        assert!(plan.fused_residuals() >= 1);
+        assert!(plan.arena_reuses() >= 1);
+        assert!(plan.arena_len() < plan.naive_activation_len());
+        // pack-once bookkeeping: every node's weights land in ceil(len/8)
+        // packed words
+        let want: usize =
+            topo.nodes().iter().map(|n| super::weight_len(&n.workload).div_ceil(8)).sum();
+        assert_eq!(plan.packed_weight_words(), want);
+    }
+}

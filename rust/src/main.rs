@@ -20,7 +20,8 @@ use std::process::ExitCode;
 use tcconv::conv::ConvWorkload;
 use tcconv::costmodel::{CostModel, Gbt, GbtParams};
 use tcconv::explore::ExplorerKind;
-use tcconv::quant::Epilogue;
+use tcconv::graph::{reference_forward, GraphInput, GraphTopology, GraphWeights};
+use tcconv::quant::{Epilogue, RequantParams};
 use tcconv::registry::ScheduleRegistry;
 use tcconv::report::{self, experiments};
 use tcconv::runtime;
@@ -82,7 +83,8 @@ COMMANDS
             [--seed N] [--jobs 1] [--out schedule.json]
             --jobs N measures each candidate batch on N worker threads
             (bit-identical results, shorter wall-clock)
-  tune-net  [--net resnet50|resnet18|vgg16|mobilenet_v2|resnext50|deeplab_head|bert_base|all]
+  tune-net  [--net resnet50|resnet50+transitions|resnet18|vgg16|mobilenet_v2|
+             resnext50|deeplab_head|bert_base|all]
             [--trials 240] [--batch 8] [--explorer diversity] [--seed N]
             [--jobs 1] [--out schedules.json]   (--model is a synonym of --net)
             tunes every distinct layer of the model zoo — dense 3x3 convs
@@ -92,20 +94,28 @@ COMMANDS
             chaining transfer learning across stages, and writes one
             registry file keyed by namespaced conv:*/matmul:* kinds
   serve     [--registry schedules.json] [--workers 4] [--requests 16]
-            [--max-batch 8] [--max-wait 2] [--retune] [--retune-trials 96]
-            [--retune-jobs 2] [--registry-out improved.json]
+            [--max-batch 8] [--max-wait 2] [--graph resnet50]
+            [--retune] [--retune-trials 96] [--retune-jobs 2]
+            [--registry-out improved.json]
             loads the registry and routes synthetic requests through the
             worker pool using the tuned schedule per kind; reports per-kind
             latency, end-to-end latency / batch-size / queue-depth
             histograms and per-worker load. --max-wait N holds underfull
-            batches open N ticks of 50 us for same-kind arrivals. --retune
-            runs an online re-tuning cycle after the burst: hot or
-            schedule-less kinds get a bounded warm-started Session on
-            --retune-jobs measurement workers and improvements publish via
-            registry hot-reload (a second burst then shows the effect);
+            batches open N ticks of 50 us for same-kind arrivals.
+            --graph <net> compiles the named zoo network into a GraphPlan
+            (weights packed once, liveness-planned activation arena, fused
+            requantize/ReLU/residual epilogues) and serves each request as
+            ONE whole-network forward pass (`graph:<net>`), verifying the
+            first response bit-exactly against the chained per-layer
+            reference. --retune runs an online re-tuning cycle after the
+            burst: hot or schedule-less kinds get a bounded warm-started
+            Session on --retune-jobs measurement workers and improvements
+            publish via registry hot-reload (a second burst then shows the
+            effect; graph traffic counts toward its member layers, and the
+            plan recompiles against the new registry).
             --registry-out persists the final (possibly improved) registry.
-            With --retune, a missing --registry file starts empty instead
-            of erroring — the re-tuner fills it in
+            With --retune or --graph, a missing --registry file starts
+            empty instead of erroring
   table1    [--trials 500] [--seed N]
   fig14     [--trials 500] [--seeds 3]
   fig15     (accumulated ablation)
@@ -313,21 +323,28 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let requests = flag_usize(flags, "requests", 16);
     let max_batch = flag_usize(flags, "max-batch", 8);
     let max_wait = flag_usize(flags, "max-wait", 2);
+    let graph_net = flags.get("graph").cloned();
     let retune = flags.contains_key("retune");
     let retune_trials = flag_usize(flags, "retune-trials", 96);
     let retune_jobs = flag_usize(flags, "retune-jobs", 2);
 
-    // with --retune, a *missing* registry file starts empty (the
-    // re-tuner fills it in); a present-but-unreadable/corrupt file still
-    // errors — silently starting empty there could let --registry-out
-    // overwrite a recoverable file and lose every tuned entry
-    let registry = if retune && !std::path::Path::new(&path).exists() {
-        eprintln!("note: {path} not found; starting with an empty registry (--retune fills it in)");
-        ScheduleRegistry::new()
-    } else {
-        ScheduleRegistry::load(&path)?
-    };
+    // with --retune or --graph, a *missing* registry file starts empty
+    // (the re-tuner fills it in; graph requests run under the fallback);
+    // a present-but-unreadable/corrupt file still errors — silently
+    // starting empty there could let --registry-out overwrite a
+    // recoverable file and lose every tuned entry
+    let registry =
+        if (retune || graph_net.is_some()) && !std::path::Path::new(&path).exists() {
+            eprintln!("note: {path} not found; starting with an empty registry");
+            ScheduleRegistry::new()
+        } else {
+            ScheduleRegistry::load(&path)?
+        };
     println!("loaded {} tuned schedules from {path}", registry.len());
+
+    if let Some(net) = graph_net {
+        return serve_graph(flags, registry, &net, workers, requests, max_batch, max_wait);
+    }
 
     // map registry kinds back to concrete workloads (zoo built once,
     // batch 1 so the CPU executor demo stays snappy); a v1 registry's
@@ -441,6 +458,175 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "{tuned_hits} of {} responses executed under a registry-tuned (non-default) schedule",
         metrics.total_count()
     );
+    Ok(())
+}
+
+/// Submit `requests` whole-network forward passes (one `graph:<net>`
+/// request each) and wait for every response.
+fn graph_burst(
+    server: &Server,
+    topo: &GraphTopology,
+    net: &str,
+    requests: usize,
+    seed0: u64,
+) -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        // retry on backpressure so every requested submission lands
+        loop {
+            let input = GraphInput::synthetic(topo, seed0 + i as u64);
+            match server.submit_graph(net, input) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(SubmitError::Busy) => {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => anyhow::bail!("graph submit failed: {e:?}"),
+            }
+        }
+    }
+    let mut exec_us = 0.0;
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?;
+        exec_us += resp.exec_us;
+    }
+    println!(
+        "{requests} whole-network request(s) in {:.1} ms wall ({:.2} ms mean exec/inference)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        exec_us / requests.max(1) as f64 / 1e3
+    );
+    Ok(())
+}
+
+/// `serve --graph <net>`: compile the named zoo network against the
+/// registry into a [`tcconv::graph::GraphPlan`]-backed `graph:<net>`
+/// request kind — weights int4-packed once at install, inter-layer
+/// activations in one liveness-planned arena, requantize/ReLU/residual
+/// epilogues fused on the i32 accumulator — and serve each request as
+/// ONE whole-network forward pass.
+fn serve_graph(
+    flags: &HashMap<String, String>,
+    registry: ScheduleRegistry,
+    net: &str,
+    workers: usize,
+    requests: usize,
+    max_batch: usize,
+    max_wait: usize,
+) -> anyhow::Result<()> {
+    let network = zoo::by_name(net, 1)?;
+    let topo = GraphTopology::from_network(&network);
+    let weights = GraphWeights::synthetic(&topo, 7);
+    let epi = RequantParams::default();
+
+    let server = Server::from_registry(
+        ServerConfig { workers, queue_depth: 256, max_batch, max_wait },
+        registry,
+    );
+    let kind = server.install_graph(topo.clone(), weights.clone(), epi)?;
+    let plan = server.graph_plan(net).expect("graph just installed");
+    println!(
+        "installed {kind}: {} layers, {} fused epilogues ({} residual adds fused), \
+         {} packed int4 weight words",
+        plan.node_count(),
+        plan.fused_epilogues(),
+        plan.fused_residuals(),
+        plan.packed_weight_words(),
+    );
+    println!(
+        "activation arena: {} bytes shared across layers vs {} unshared \
+         ({} slot reuses); {} node(s) under a registry-tuned schedule",
+        plan.arena_len(),
+        plan.naive_activation_len(),
+        plan.arena_reuses(),
+        plan.tuned_nodes(),
+    );
+
+    // verify request 0 bit-exactly against the chained per-layer
+    // reference before trusting the burst
+    let probe = GraphInput::synthetic(&topo, 0);
+    let want = reference_forward(&topo, &weights, &probe, epi)?;
+    let got = server
+        .submit_graph(net, probe)
+        .map_err(|e| anyhow::anyhow!("graph submit failed: {e:?}"))?
+        .recv()
+        .map_err(|_| anyhow::anyhow!("worker died"))?;
+    anyhow::ensure!(
+        got.packed_output == want,
+        "graph output diverged from the chained per-layer reference"
+    );
+    println!(
+        "verification: GraphPlan output bit-identical to the chained per-layer \
+         reference ({} packed words)",
+        want.len()
+    );
+
+    graph_burst(&server, &topo, net, requests, 1)?;
+
+    if flags.contains_key("retune") {
+        let retune_trials = flag_usize(flags, "retune-trials", 96);
+        let retune_jobs = flag_usize(flags, "retune-jobs", 2);
+        println!(
+            "\nonline re-tuning cycle ({retune_trials} trials/kind, {retune_jobs} \
+             measurement jobs; graph traffic votes for its member layers):"
+        );
+        let mut tuner = OnlineTuner::from_zoo(
+            1,
+            RetunePolicy {
+                trials: retune_trials,
+                jobs: retune_jobs,
+                max_kinds_per_cycle: topo.node_count(),
+                ..Default::default()
+            },
+        );
+        let report = tuner.run_cycle(&server.handle())?;
+        for o in &report.outcomes {
+            println!(
+                "  {:<22} {:?}: tuned {:.2} us (prev {}) -> {}",
+                o.kind,
+                o.reason,
+                o.tuned_runtime_us,
+                o.previous_runtime_us
+                    .map(|p| format!("{p:.2} us"))
+                    .unwrap_or_else(|| "fallback".into()),
+                if o.published { "published" } else { "kept previous" }
+            );
+        }
+        match report.published_version {
+            Some(v) => {
+                let plan = server.graph_plan(net).expect("still installed");
+                println!(
+                    "  registry hot-reloaded to snapshot v{v}; plan recompiled with \
+                     {} tuned node(s) — second burst under the new plan:",
+                    plan.tuned_nodes()
+                );
+                graph_burst(&server, &topo, net, requests, 1_000_000)?;
+            }
+            None => println!("  nothing improved enough to publish"),
+        }
+    }
+
+    if let Some(out) = flags.get("registry-out") {
+        let snap = server.registry_snapshot();
+        snap.registry().save(out)?;
+        println!(
+            "registry snapshot v{} ({} entries) written to {out}",
+            snap.version(),
+            snap.registry().len()
+        );
+    }
+
+    let metrics = server.shutdown();
+    println!("\nper-kind latency (us):");
+    for k in metrics.kinds() {
+        let s = metrics.summary(&k).unwrap();
+        println!(
+            "  {:<22} n={:<4} exec p50 {:>8.0}  p95 {:>8.0}  mean batch {:.2}",
+            s.kind, s.count, s.exec_p50_us, s.exec_p95_us, s.mean_batch
+        );
+    }
     Ok(())
 }
 

@@ -111,11 +111,9 @@ impl Epilogue {
     /// Apply to one accumulator value.
     #[inline]
     pub fn apply(&self, acc: i32, bias: i32) -> i32 {
-        let mut v = acc.wrapping_add(bias);
-        if self.relu {
-            v = v.max(0);
-        }
-        requantize(v, self.requant_shift)
+        // single definition of the epilogue arithmetic: the per-op path is
+        // the graph path with no residual input
+        RequantParams::from(*self).apply(acc, bias, 0)
     }
 
     /// Apply to a row-major accumulator tile with per-column bias, packing
@@ -132,6 +130,85 @@ impl Epilogue {
             .iter()
             .enumerate()
             .map(|(i, &a)| self.apply(a, bias[i % cols]))
+            .collect();
+        pack_int4(&vals)
+    }
+}
+
+/// The fused graph-edge epilogue of the whole-network executor: bias add →
+/// optional ReLU → power-of-two requantization → optional residual add.
+///
+/// This is [`Epilogue`] generalized with a residual input: the skip
+/// connection of a residual block is already in the INT4 domain (it is a
+/// previous layer's requantized activation), so it is added *after*
+/// requantization and the sum re-saturated to `[-8, 7]`. With a residual
+/// of `0` the arithmetic is exactly `Epilogue::apply` — the per-op serving
+/// path and the graph path share one definition (`Epilogue::apply`
+/// delegates here), which is what makes graph execution bit-identical to
+/// chained per-layer execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequantParams {
+    /// Clamp negative accumulators to zero before requantization.
+    pub relu: bool,
+    /// Power-of-two requantization scale (arithmetic right shift).
+    pub shift: u32,
+}
+
+impl Default for RequantParams {
+    fn default() -> Self {
+        Epilogue::default().into()
+    }
+}
+
+impl From<Epilogue> for RequantParams {
+    fn from(e: Epilogue) -> Self {
+        RequantParams { relu: e.relu, shift: e.requant_shift }
+    }
+}
+
+impl From<RequantParams> for Epilogue {
+    fn from(p: RequantParams) -> Self {
+        Epilogue { relu: p.relu, requant_shift: p.shift }
+    }
+}
+
+impl RequantParams {
+    /// Apply to one i32 accumulator value: `acc + bias`, optional ReLU,
+    /// requantize to INT4, then add the (already-INT4) `residual` and
+    /// re-saturate. The whole chain runs in-register on the accumulator —
+    /// no intermediate ever round-trips through a dequantize→quantize
+    /// memory pass.
+    #[inline]
+    pub fn apply(&self, acc: i32, bias: i32, residual: i32) -> i32 {
+        let mut v = acc.wrapping_add(bias);
+        if self.relu {
+            v = v.max(0);
+        }
+        clip_int4(requantize(v, self.shift).wrapping_add(residual))
+    }
+
+    /// Apply to a row-major accumulator tile with per-column bias and an
+    /// optional elementwise residual tile (same layout as `acc`), packing
+    /// the result — the fused register-level path of the graph executor.
+    pub fn apply_tile_packed(
+        &self,
+        acc: &[i32],
+        bias: &[i32],
+        residual: Option<&[i32]>,
+        cols: usize,
+    ) -> Vec<i32> {
+        assert_eq!(acc.len() % cols, 0);
+        assert_eq!(bias.len(), cols);
+        if let Some(r) = residual {
+            assert_eq!(r.len(), acc.len());
+        }
+        let vals: Vec<i32> = acc
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                let res = residual.map_or(0, |r| r[i]);
+                self.apply(a, bias[i % cols], res)
+            })
             .collect();
         pack_int4(&vals)
     }
@@ -242,5 +319,125 @@ mod tests {
                 assert!((INT4_MIN..=INT4_MAX).contains(&v));
             }
         });
+    }
+
+    // ----- RequantParams / saturation-edge coverage ------------------------
+
+    #[test]
+    fn requantize_saturates_at_accumulator_bits_limit() {
+        // §3.2.1: a 4-bit conv accumulating over k steps needs
+        // accumulator_bits_required(k) bits — feed accumulators right at
+        // that magnitude and verify the requantizer saturates cleanly
+        // instead of wrapping
+        for k in [128usize, 576, 4608, 9 * 100_000] {
+            let bits = crate::quant::accumulator_bits_required(k);
+            let peak = (k as i32) * 8 * 8; // every step at max magnitude
+            assert!(peak.unsigned_abs() < 1u32 << bits, "bound too tight for k={k}");
+            for shift in [0u32, 1, 6, 11] {
+                let v = requantize(peak, shift);
+                assert!((INT4_MIN..=INT4_MAX).contains(&v), "k={k} shift={shift}");
+            }
+            assert_eq!(requantize(peak, 0), INT4_MAX, "k={k}");
+            assert_eq!(requantize(-peak, 0), INT4_MIN, "k={k}");
+            // a shift large enough to bring the peak into range must not
+            // saturate: the requantized value equals the shifted value
+            let full_shift = bits; // peak >> bits < 8 always
+            assert_eq!(
+                requantize(peak, full_shift),
+                (peak + (1 << (full_shift - 1))) >> full_shift,
+                "k={k}"
+            );
+        }
+        // i32 extremes: round-half-up must not overflow (wrapping_add)
+        assert_eq!(requantize(i32::MAX, 6), INT4_MAX);
+        assert_eq!(requantize(i32::MIN, 6), INT4_MIN);
+        assert_eq!(requantize(i32::MIN, 0), INT4_MIN);
+    }
+
+    #[test]
+    fn requant_params_with_zero_residual_equals_epilogue() {
+        // the graph epilogue must be the per-op epilogue when no residual
+        // edge feeds the node — this identity is what the graph-vs-chained
+        // bit-equality acceptance rests on
+        check::forall(300, |rng| {
+            let e = Epilogue {
+                relu: rng.gen_bool(0.5),
+                requant_shift: rng.gen_range(12) as u32,
+            };
+            let p = RequantParams::from(e);
+            let acc = rng.gen_range(1 << 22) as i32 - (1 << 21);
+            let bias = rng.gen_range(256) as i32 - 128;
+            assert_eq!(p.apply(acc, bias, 0), e.apply(acc, bias), "{e:?} acc={acc} bias={bias}");
+        });
+    }
+
+    #[test]
+    fn requant_params_bias_pushes_past_clip_range() {
+        // bias large enough to overshoot the int4 clip range in either
+        // direction: the epilogue must saturate, never wrap
+        let p = RequantParams { relu: false, shift: 0 };
+        assert_eq!(p.apply(0, 1_000_000, 0), INT4_MAX);
+        assert_eq!(p.apply(0, -1_000_000, 0), INT4_MIN);
+        // bias + accumulator together overflow i32: wrapping_add keeps the
+        // arithmetic defined and the clip still lands on a domain value
+        let wrapped = p.apply(i32::MAX, i32::MAX, 0);
+        assert!((INT4_MIN..=INT4_MAX).contains(&wrapped));
+        // relu clamps the overshoot *before* requantization
+        let pr = RequantParams { relu: true, shift: 2 };
+        assert_eq!(pr.apply(5, -1_000_000, 0), 0);
+    }
+
+    #[test]
+    fn requant_params_residual_add_saturates_in_int4_domain() {
+        let p = RequantParams { relu: false, shift: 0 };
+        // 7 + 7 saturates to 7, -8 + -8 to -8: the residual add happens
+        // after requantization, in the int4 domain, and re-clips
+        assert_eq!(p.apply(7, 0, 7), INT4_MAX);
+        assert_eq!(p.apply(-8, 0, -8), INT4_MIN);
+        assert_eq!(p.apply(3, 0, -5), -2);
+        // residual can rescue a relu-zeroed accumulator
+        let pr = RequantParams { relu: true, shift: 0 };
+        assert_eq!(pr.apply(-100, 0, -3), -3);
+    }
+
+    #[test]
+    fn prop_requant_params_apply_always_in_domain() {
+        check::forall(500, |rng| {
+            let p = RequantParams {
+                relu: rng.gen_bool(0.5),
+                shift: rng.gen_range(16) as u32,
+            };
+            let acc = rng.next_u64() as i32;
+            let bias = rng.next_u64() as i32;
+            let residual = rng.gen_range(16) as i32 - 8;
+            let v = p.apply(acc, bias, residual);
+            assert!(
+                (INT4_MIN..=INT4_MAX).contains(&v),
+                "{p:?} acc={acc} bias={bias} residual={residual} -> {v}"
+            );
+        });
+    }
+
+    #[test]
+    fn requant_params_tile_packed_matches_scalar_and_epilogue() {
+        let p = RequantParams { relu: true, shift: 2 };
+        let cols = 8;
+        let acc: Vec<i32> = (0..3 * cols as i32).map(|i| i * 37 - 400).collect();
+        let bias: Vec<i32> = (0..cols as i32).map(|i| i - 4).collect();
+        let residual: Vec<i32> = (0..3 * cols as i32).map(|i| (i % 16) - 8).collect();
+
+        // no residual: must agree with Epilogue::apply_tile_packed
+        let e = Epilogue { relu: true, requant_shift: 2 };
+        assert_eq!(
+            p.apply_tile_packed(&acc, &bias, None, cols),
+            e.apply_tile_packed(&acc, &bias, cols)
+        );
+
+        // with residual: every unpacked nibble equals the scalar chain
+        let packed = p.apply_tile_packed(&acc, &bias, Some(&residual), cols);
+        let got = unpack_int4(&packed);
+        for (i, &a) in acc.iter().enumerate() {
+            assert_eq!(got[i], p.apply(a, bias[i % cols], residual[i]), "cell {i}");
+        }
     }
 }

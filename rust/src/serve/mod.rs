@@ -52,20 +52,40 @@
 //! log-scaled [`LatencyHistogram`]s), batch-size and queue-depth
 //! [`SizeHistogram`]s, plus per-worker completion counters, so skewed
 //! load-balance and a non-coalescing batcher are visible, not guessed.
+//!
+//! # Graph serving
+//!
+//! Beyond per-op requests, a whole network can be served as **one**
+//! request: [`Server::install_graph`] registers a
+//! [`crate::graph::GraphTopology`] + [`crate::graph::GraphWeights`]
+//! under the kind `graph:<net>`, and [`Server::submit_graph`] runs the
+//! full forward pass in a single submit. The worker executes a
+//! [`crate::graph::GraphPlan`] — weights INT4-packed once at install,
+//! every layer's tuned schedule resolved from one registry snapshot,
+//! inter-layer activations in a liveness-planned arena, and
+//! bias/ReLU/requant/residual epilogues fused on the i32 accumulator —
+//! so an N-layer inference costs one queue round-trip instead of N, and
+//! no packed-word quantize/dequantize on any inter-layer edge. Plans are
+//! cached per graph and recompiled lazily when a registry reload bumps
+//! the snapshot version, so hot reload (and the online re-tuner's
+//! publishes) reach graph traffic exactly like per-op traffic. Output is
+//! bit-identical to chaining the per-layer path
+//! ([`crate::graph::reference_forward`]).
 #![deny(missing_docs)]
 
 mod metrics;
 
 pub use metrics::{LatencyHistogram, LatencySummary, Metrics, SizeHistogram};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::quant::Epilogue;
+use crate::graph::{GraphInput, GraphPlan, GraphScratch, GraphTopology, GraphWeights};
+use crate::quant::{Epilogue, RequantParams};
 use crate::registry::ScheduleRegistry;
 use crate::searchspace::ScheduleConfig;
 use crate::workload::{OpInstance, OpScratch};
@@ -131,16 +151,29 @@ impl RegistrySnapshot {
     }
 }
 
+/// What a request asks the worker to execute.
+pub enum Payload {
+    /// A single-operator problem (the per-layer path).
+    Op(OpInstance),
+    /// A whole-network forward input, resolved against the graph
+    /// installed under the request's kind ([`Server::install_graph`]).
+    Graph(GraphInput),
+}
+
 /// One inference request.
 pub struct Request {
     /// Server-assigned submission id (monotonic).
     pub id: u64,
-    /// Workload kind key (namespaced, e.g. "conv:resnet50_stage2" or
-    /// "matmul:bert_ffn_up"); batching groups by this.
+    /// Workload kind key (namespaced, e.g. "conv:resnet50_stage2",
+    /// "matmul:bert_ffn_up" or "graph:resnet50"); batching groups by
+    /// this.
     pub kind: String,
-    /// The problem to execute — either operator.
-    pub instance: OpInstance,
-    /// Post-GEMM epilogue (bias / ReLU / requantization shift).
+    /// The problem to execute — one operator instance or one whole-graph
+    /// forward input.
+    pub payload: Payload,
+    /// Post-GEMM epilogue (bias / ReLU / requantization shift). For
+    /// graph requests this records the plan's edge epilogue; the fused
+    /// per-node epilogues live in the installed plan.
     pub epilogue: Epilogue,
     enqueued: Instant,
     respond: Sender<Response>,
@@ -164,7 +197,9 @@ pub struct Response {
     /// Index of the worker that executed this request.
     pub worker: usize,
     /// The schedule the worker executed this request with (tuned per kind
-    /// via the registry, or the default fallback).
+    /// via the registry, or the default fallback). Graph requests report
+    /// the default here — their schedules are per *node*, resolved inside
+    /// the compiled [`GraphPlan`].
     pub schedule: ScheduleConfig,
     /// Version of the [`RegistrySnapshot`] the batch resolved its
     /// schedule from — how a caller (or test) proves a hot reload took
@@ -179,6 +214,43 @@ pub enum SubmitError {
     Busy,
     /// Server stopping; no new requests are accepted.
     ShuttingDown,
+    /// `submit_graph` named a graph kind that was never installed.
+    UnknownGraph(String),
+    /// A graph input failed shape validation against the installed
+    /// topology (wrong entry count or entry length).
+    InvalidGraphInput(String),
+}
+
+/// An installed whole-network graph: the immutable definition plus a
+/// cached compiled plan tagged with the registry-snapshot version it was
+/// compiled against. Workers recompile lazily when a reload bumps the
+/// version, so graph traffic picks up tuned schedules exactly like
+/// per-op traffic — at the next batch boundary.
+struct GraphDef {
+    topo: GraphTopology,
+    weights: GraphWeights,
+    epi: RequantParams,
+    plan: Mutex<Option<(u64, Arc<GraphPlan>)>>,
+}
+
+impl GraphDef {
+    /// The plan compiled against `snapshot`, from cache when the version
+    /// matches. Compile cannot fail here: install already validated the
+    /// weights against the topology, and schedules never affect validity.
+    fn plan_for(&self, snapshot: &RegistrySnapshot) -> crate::Result<Arc<GraphPlan>> {
+        {
+            let cached = self.plan.lock().unwrap();
+            if let Some((v, plan)) = cached.as_ref() {
+                if *v == snapshot.version() {
+                    return Ok(Arc::clone(plan));
+                }
+            }
+        }
+        let plan =
+            Arc::new(GraphPlan::compile(&self.topo, &self.weights, snapshot.registry(), self.epi)?);
+        *self.plan.lock().unwrap() = Some((snapshot.version(), Arc::clone(&plan)));
+        Ok(plan)
+    }
 }
 
 struct Shared {
@@ -202,6 +274,8 @@ struct Shared {
     next_id: AtomicU64,
     /// Current registry snapshot; swapped whole on reload.
     registry: Mutex<Arc<RegistrySnapshot>>,
+    /// Installed whole-network graphs, keyed by `graph:<net>` kind.
+    graphs: Mutex<HashMap<String, Arc<GraphDef>>>,
 }
 
 impl Shared {
@@ -209,7 +283,7 @@ impl Shared {
         &self,
         metrics: &Metrics,
         kind: &str,
-        instance: OpInstance,
+        payload: Payload,
         epilogue: Epilogue,
     ) -> Result<Receiver<Response>, SubmitError> {
         let (tx, rx) = channel();
@@ -224,7 +298,7 @@ impl Shared {
             q.push_back(Request {
                 id: self.next_id.fetch_add(1, Ordering::SeqCst),
                 kind: kind.to_string(),
-                instance,
+                payload,
                 epilogue,
                 enqueued: Instant::now(),
                 respond: tx,
@@ -238,6 +312,64 @@ impl Shared {
         // sibling; waking everyone lets whoever can act, act
         self.available.notify_all();
         Ok(rx)
+    }
+
+    /// Register (or replace) a whole-network graph under `graph:<net>`.
+    /// The trial compile validates the weights against the topology once,
+    /// so worker-side recompiles can never fail.
+    fn install_graph(
+        &self,
+        topo: GraphTopology,
+        weights: GraphWeights,
+        epi: RequantParams,
+    ) -> crate::Result<String> {
+        let kind = format!("graph:{}", topo.name());
+        let snapshot = self.snapshot();
+        let plan = GraphPlan::compile(&topo, &weights, snapshot.registry(), epi)?;
+        let def = Arc::new(GraphDef {
+            topo,
+            weights,
+            epi,
+            plan: Mutex::new(Some((snapshot.version(), Arc::new(plan)))),
+        });
+        self.graphs.lock().unwrap().insert(kind.clone(), def);
+        Ok(kind)
+    }
+
+    fn graph_def(&self, kind: &str) -> Option<Arc<GraphDef>> {
+        self.graphs.lock().unwrap().get(kind).cloned()
+    }
+
+    /// Validate a graph input against the installed topology and enqueue
+    /// the whole forward pass as one request.
+    fn submit_graph(
+        &self,
+        metrics: &Metrics,
+        net: &str,
+        input: GraphInput,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        let kind =
+            if net.starts_with("graph:") { net.to_string() } else { format!("graph:{net}") };
+        let def = self
+            .graph_def(&kind)
+            .ok_or_else(|| SubmitError::UnknownGraph(kind.clone()))?;
+        if input.entries.len() != def.topo.entry_count() {
+            return Err(SubmitError::InvalidGraphInput(format!(
+                "{kind}: {} entries supplied, {} needed",
+                input.entries.len(),
+                def.topo.entry_count()
+            )));
+        }
+        for (e, act) in input.entries.iter().enumerate() {
+            if act.len() != def.topo.entry_len(e) {
+                return Err(SubmitError::InvalidGraphInput(format!(
+                    "{kind} entry {e}: {} elements supplied, {} needed",
+                    act.len(),
+                    def.topo.entry_len(e)
+                )));
+            }
+        }
+        self.submit(metrics, &kind, Payload::Graph(input), def.epi.into())
     }
 
     fn snapshot(&self) -> Arc<RegistrySnapshot> {
@@ -295,7 +427,34 @@ impl ServeHandle {
         instance: impl Into<OpInstance>,
         epilogue: Epilogue,
     ) -> Result<Receiver<Response>, SubmitError> {
-        self.shared.submit(&self.metrics, kind, instance.into(), epilogue)
+        self.shared.submit(&self.metrics, kind, Payload::Op(instance.into()), epilogue)
+    }
+
+    /// Submit one whole-network forward pass as a single request (see
+    /// [`Server::submit_graph`]).
+    pub fn submit_graph(
+        &self,
+        net: &str,
+        input: GraphInput,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        self.shared.submit_graph(&self.metrics, net, input)
+    }
+
+    /// Register a whole-network graph on the running server (see
+    /// [`Server::install_graph`]).
+    pub fn install_graph(
+        &self,
+        topo: GraphTopology,
+        weights: GraphWeights,
+        epi: RequantParams,
+    ) -> crate::Result<String> {
+        self.shared.install_graph(topo, weights, epi)
+    }
+
+    /// The compiled plan a graph request of `net` would execute right
+    /// now (see [`Server::graph_plan`]).
+    pub fn graph_plan(&self, net: &str) -> Option<Arc<GraphPlan>> {
+        graph_plan_of(&self.shared, net)
     }
 
     /// Live metrics sink (latency summaries, histograms, worker counters).
@@ -356,6 +515,7 @@ impl Server {
             queue_depth: cfg.queue_depth,
             next_id: AtomicU64::new(1),
             registry: Mutex::new(Arc::new(RegistrySnapshot { version: 1, registry })),
+            graphs: Mutex::new(HashMap::new()),
         });
         let metrics = Arc::new(Metrics::new());
         let workers = (0..cfg.workers.max(1))
@@ -379,7 +539,52 @@ impl Server {
         instance: impl Into<OpInstance>,
         epilogue: Epilogue,
     ) -> Result<Receiver<Response>, SubmitError> {
-        self.shared.submit(&self.metrics, kind, instance.into(), epilogue)
+        self.shared.submit(&self.metrics, kind, Payload::Op(instance.into()), epilogue)
+    }
+
+    /// Register (or replace) a whole-network graph under the kind
+    /// `graph:<net>` and return that kind. The topology + weights are
+    /// validated by a trial compile against the current registry
+    /// snapshot; afterwards [`Server::submit_graph`] serves the full
+    /// forward pass as one request. Install is cheap relative to
+    /// serving: weights are INT4-packed once here, never per request.
+    pub fn install_graph(
+        &self,
+        topo: GraphTopology,
+        weights: GraphWeights,
+        epi: RequantParams,
+    ) -> crate::Result<String> {
+        self.shared.install_graph(topo, weights, epi)
+    }
+
+    /// Submit one whole-network forward pass as a single request. `net`
+    /// is the network name (or the full `graph:<net>` kind) previously
+    /// registered with [`Server::install_graph`]; `input` carries one
+    /// activation tensor per graph entry. The response's
+    /// `packed_output` is the concatenated packed-INT4 words of every
+    /// graph output — bit-identical to chaining per-layer submits.
+    pub fn submit_graph(
+        &self,
+        net: &str,
+        input: GraphInput,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        self.shared.submit_graph(&self.metrics, net, input)
+    }
+
+    /// The compiled plan a graph request of `net` would execute right now
+    /// (compiled/cached against the current registry snapshot), or `None`
+    /// if no such graph is installed. Exposes the plan's arena/fusion
+    /// accounting for observability and benchmarks.
+    pub fn graph_plan(&self, net: &str) -> Option<Arc<GraphPlan>> {
+        graph_plan_of(&self.shared, net)
+    }
+
+    /// The `graph:<net>` kinds currently installed, sorted.
+    pub fn installed_graphs(&self) -> Vec<String> {
+        let mut kinds: Vec<String> =
+            self.shared.graphs.lock().unwrap().keys().cloned().collect();
+        kinds.sort();
+        kinds
     }
 
     /// A cloneable handle for other threads (submission, metrics,
@@ -504,6 +709,15 @@ impl Server {
     }
 }
 
+/// Resolve the current compiled plan for `net` (shared by [`Server`] and
+/// [`ServeHandle`]): accepts a bare network name or the full
+/// `graph:<net>` kind.
+fn graph_plan_of(shared: &Shared, net: &str) -> Option<Arc<GraphPlan>> {
+    let kind = if net.starts_with("graph:") { net.to_string() } else { format!("graph:{net}") };
+    let def = shared.graph_def(&kind)?;
+    def.plan_for(&shared.snapshot()).ok()
+}
+
 /// Pull up to `room` queued requests of `kind` out of `q` (preserving
 /// the relative order of everything skipped) and append them to `batch`
 /// — the batcher's coalescing rule, factored out so the flush rules are
@@ -542,6 +756,7 @@ fn worker_loop(
     worker: usize,
 ) {
     let mut scratch = OpScratch::new();
+    let mut gscratch = GraphScratch::new();
     let tick = Duration::from_micros(BATCH_WAIT_TICK_US);
     loop {
         let batch = {
@@ -600,7 +815,26 @@ fn worker_loop(
         for req in batch {
             let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
             let t = Instant::now();
-            let out = req.instance.execute_scheduled_with(&req.epilogue, &schedule, &mut scratch);
+            let out = match &req.payload {
+                Payload::Op(instance) => {
+                    instance.execute_scheduled_with(&req.epilogue, &schedule, &mut scratch)
+                }
+                Payload::Graph(input) => {
+                    // submit_graph validated the kind is installed and the
+                    // input shapes match, and install_graph's trial
+                    // compile proved the weights valid — so the lookup
+                    // and both fallible calls cannot fail on this path.
+                    // Degrade to an empty output rather than poisoning
+                    // the worker if that invariant is ever broken.
+                    match shared.graph_def(&req.kind) {
+                        Some(def) => def
+                            .plan_for(&snapshot)
+                            .and_then(|plan| plan.execute(input, &mut gscratch))
+                            .unwrap_or_default(),
+                        None => Vec::new(),
+                    }
+                }
+            };
             let exec_us = t.elapsed().as_secs_f64() * 1e6;
             metrics.observe(&req.kind, queue_us, exec_us, bsize, worker);
             let _ = req.respond.send(Response {
@@ -645,12 +879,24 @@ mod tests {
         let req = Request {
             id,
             kind: kind.to_string(),
-            instance: ConvInstance::synthetic(&wl, id).into(),
+            payload: Payload::Op(ConvInstance::synthetic(&wl, id).into()),
             epilogue: Epilogue::default(),
             enqueued: Instant::now(),
             respond: tx,
         };
         (req, rx)
+    }
+
+    /// A small residual chain for graph-serving tests: three 6x6x8
+    /// shape-preserving convs with an identity skip into the last node.
+    fn tiny_graph() -> (crate::graph::GraphTopology, crate::graph::GraphWeights) {
+        let mut topo = crate::graph::GraphTopology::new("tinynet");
+        for i in 0..3 {
+            topo.add_layer(ConvWorkload::new(format!("tg{i}"), 1, 6, 6, 8, 8));
+        }
+        topo.add_residual(0, 2).unwrap();
+        let weights = crate::graph::GraphWeights::synthetic(&topo, 42);
+        (topo, weights)
     }
 
     // ---- batcher flush rules (pure, no threads) --------------------------
@@ -1023,6 +1269,135 @@ mod tests {
         assert_eq!(snap.schedule_for("a"), cfg_a, "update must not revert the reload");
         assert_eq!(snap.schedule_for("b"), cfg_b);
         server.shutdown();
+    }
+
+    // ---- whole-network graph serving -------------------------------------
+
+    #[test]
+    fn graph_request_serves_whole_network_in_one_submit() {
+        use crate::graph::{reference_forward, GraphInput};
+        let server = Server::start(ServerConfig { workers: 2, ..Default::default() });
+        let (topo, weights) = tiny_graph();
+        let epi = RequantParams::default();
+        let kind = server.install_graph(topo.clone(), weights.clone(), epi).unwrap();
+        assert_eq!(kind, "graph:tinynet");
+        assert_eq!(server.installed_graphs(), vec!["graph:tinynet".to_string()]);
+
+        // the installed plan fuses every epilogue (incl. the residual)
+        // and recycles at least one arena slot on the hot path
+        let plan = server.graph_plan("tinynet").unwrap();
+        assert!(plan.fused_epilogues() >= 1);
+        assert_eq!(plan.fused_residuals(), 1);
+        assert!(plan.arena_reuses() >= 1);
+
+        let mut pending = Vec::new();
+        for seed in 0..6u64 {
+            let input = GraphInput::synthetic(&topo, seed);
+            let want = reference_forward(&topo, &weights, &input, epi).unwrap();
+            // bare name and full kind both address the graph
+            let net = if seed % 2 == 0 { "tinynet" } else { "graph:tinynet" };
+            pending.push((want, server.submit_graph(net, input).unwrap()));
+        }
+        for (want, rx) in pending {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+            assert_eq!(resp.kind, "graph:tinynet");
+            assert_eq!(
+                resp.packed_output, want,
+                "one graph submit must be bit-identical to the chained per-layer reference"
+            );
+            assert_eq!(resp.registry_version, 1);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.summary("graph:tinynet").unwrap().count, 6);
+    }
+
+    #[test]
+    fn submit_graph_validates_kind_and_input() {
+        use crate::graph::GraphInput;
+        let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+        // unknown graph
+        match server.submit_graph("nope", GraphInput { entries: vec![] }) {
+            Err(SubmitError::UnknownGraph(k)) => assert_eq!(k, "graph:nope"),
+            other => panic!("expected UnknownGraph, got {:?}", other.map(|_| ())),
+        }
+        let (topo, weights) = tiny_graph();
+        server.install_graph(topo.clone(), weights, RequantParams::default()).unwrap();
+        // wrong entry count
+        match server.submit_graph("tinynet", GraphInput { entries: vec![] }) {
+            Err(SubmitError::InvalidGraphInput(_)) => {}
+            other => panic!("expected InvalidGraphInput, got {:?}", other.map(|_| ())),
+        }
+        // wrong entry length
+        match server.submit_graph("tinynet", GraphInput { entries: vec![vec![0i8; 3]] }) {
+            Err(SubmitError::InvalidGraphInput(_)) => {}
+            other => panic!("expected InvalidGraphInput, got {:?}", other.map(|_| ())),
+        }
+        // install rejects weights that do not fit the topology
+        let (topo2, mut bad) = tiny_graph();
+        bad.nodes[0].w.pop();
+        assert!(server.install_graph(topo2, bad, RequantParams::default()).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn graph_plan_recompiles_after_registry_reload() {
+        use crate::graph::{reference_forward, GraphInput};
+        let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+        let (topo, weights) = tiny_graph();
+        let epi = RequantParams::default();
+        server.install_graph(topo.clone(), weights.clone(), epi).unwrap();
+        assert_eq!(server.graph_plan("tinynet").unwrap().tuned_nodes(), 0);
+
+        let input = GraphInput::synthetic(&topo, 9);
+        let want = reference_forward(&topo, &weights, &input, epi).unwrap();
+        let r1 = server.submit_graph("tinynet", input.clone()).unwrap().recv().unwrap();
+        assert_eq!(r1.packed_output, want);
+        assert_eq!(r1.registry_version, 1);
+
+        // publish a tuned schedule for a member layer: the next graph
+        // request recompiles against the new snapshot, picks it up, and
+        // keeps the numerics bit-identical
+        let tuned =
+            ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, chunk: 1, ..Default::default() };
+        let v = server.update_registry(|r| r.insert("conv:tg1", entry(tuned)));
+        assert_eq!(v, 2);
+        let plan = server.graph_plan("tinynet").unwrap();
+        assert_eq!(plan.tuned_nodes(), 1);
+        assert_eq!(plan.schedule_of(1), tuned);
+        let r2 = server.submit_graph("tinynet", input).unwrap().recv().unwrap();
+        assert_eq!(r2.registry_version, 2);
+        assert_eq!(r2.packed_output, want, "reload must never change graph numerics");
+        server.shutdown();
+    }
+
+    #[test]
+    fn mixed_graph_and_op_traffic_share_the_pool() {
+        use crate::graph::{reference_forward, GraphInput};
+        let server = Server::start(ServerConfig { workers: 2, ..Default::default() });
+        let (topo, weights) = tiny_graph();
+        let epi = RequantParams::default();
+        server.install_graph(topo.clone(), weights.clone(), epi).unwrap();
+        let wl = tiny_wl();
+        let op_epi = Epilogue::default();
+        let mut graph_pending = Vec::new();
+        let mut op_pending = Vec::new();
+        for seed in 0..4u64 {
+            let input = GraphInput::synthetic(&topo, seed);
+            let want = reference_forward(&topo, &weights, &input, epi).unwrap();
+            graph_pending.push((want, server.submit_graph("tinynet", input).unwrap()));
+            let inst = ConvInstance::synthetic(&wl, seed);
+            let want = qconv2d(&inst, &op_epi);
+            op_pending.push((want, server.submit("edge", inst, op_epi).unwrap()));
+        }
+        for (want, rx) in graph_pending {
+            assert_eq!(rx.recv_timeout(Duration::from_secs(30)).unwrap().packed_output, want);
+        }
+        for (want, rx) in op_pending {
+            assert_eq!(rx.recv_timeout(Duration::from_secs(30)).unwrap().packed_output, want);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.summary("graph:tinynet").unwrap().count, 4);
+        assert_eq!(m.summary("edge").unwrap().count, 4);
     }
 
     #[test]

@@ -150,6 +150,11 @@ impl CycleReport {
 /// sessions, publishes improved schedules via registry hot-reload.
 pub struct OnlineTuner {
     workloads: HashMap<String, OpWorkload>,
+    /// Whole-network request kinds (`graph:<net>`) mapped to the member
+    /// layer kinds they execute, one entry per unrolled layer — the
+    /// planner folds graph traffic onto these so a hot graph retunes
+    /// all of its layers jointly.
+    graphs: HashMap<String, Vec<String>>,
     policy: RetunePolicy,
     /// Finished sessions by kind — the warm-start fuel (`MeasureDb` +
     /// `History` ride inside each [`SessionResult`]).
@@ -180,20 +185,49 @@ impl OnlineTuner {
             .map(|(k, w)| (k, w.into()))
             .filter(|(_, w)| SearchSpace::for_workload(w, SpaceOptions::default()).has_legal())
             .collect();
-        Self { workloads, policy, priors: HashMap::new(), last_kind: None, cycle: 0 }
+        Self {
+            workloads,
+            graphs: HashMap::new(),
+            policy,
+            priors: HashMap::new(),
+            last_kind: None,
+            cycle: 0,
+        }
     }
 
     /// Convenience: resolve kinds against every layer of the model
     /// [`zoo`] at the given batch size (what `repro serve --retune`
     /// uses — registry kinds written by `tune-net` are the zoo layers'
-    /// namespaced `conv:*` / `matmul:*` kinds).
+    /// namespaced `conv:*` / `matmul:*` kinds). Every network is also
+    /// registered as a graph kind (`graph:<net>`, the kind
+    /// [`crate::serve::Server::install_graph`] serves under), so
+    /// whole-network traffic retunes member layers jointly.
     pub fn from_zoo(batch: usize, policy: RetunePolicy) -> Self {
         let workloads: HashMap<String, OpWorkload> = zoo::all_networks(batch)
             .into_iter()
             .flat_map(|n| n.layers)
             .map(|l| (l.workload.kind(), l.workload))
             .collect();
-        Self::new(workloads, policy)
+        let mut tuner = Self::new(workloads, policy);
+        for net in zoo::all_networks(batch) {
+            let members: Vec<String> = net
+                .layers
+                .iter()
+                .flat_map(|l| (0..l.repeats).map(|_| l.workload.kind()))
+                .collect();
+            tuner.register_graph(format!("graph:{}", net.name), members);
+        }
+        tuner
+    }
+
+    /// Teach the planner that requests of `kind` (a `graph:<net>` kind)
+    /// execute the given member layer kinds — one entry per executed
+    /// layer, repeats included. [`OnlineTuner::plan`] then counts each
+    /// graph request as traffic on every member, so one hot graph can
+    /// pull all of its layers into joint retuning even though the
+    /// member kinds never appear in the metrics themselves.
+    pub fn register_graph(&mut self, kind: impl Into<String>, members: Vec<String>) {
+        self.graphs.insert(kind.into(), members);
     }
 
     /// The policy this tuner runs under.
@@ -211,10 +245,27 @@ impl OnlineTuner {
     /// with fewer trials than the policy budget ([`RetuneReason::Hot`]).
     /// Untuned kinds come first, then hotter kinds first; the list is
     /// truncated to `max_kinds_per_cycle`.
+    ///
+    /// Traffic on a registered graph kind (see
+    /// [`OnlineTuner::register_graph`]) is folded onto its member layer
+    /// kinds first: each `graph:<net>` request counts once per unrolled
+    /// member layer, and sums with any direct per-op traffic the member
+    /// also receives.
     pub fn plan(&self, metrics: &Metrics, snapshot: &RegistrySnapshot) -> Vec<RetuneTask> {
-        let mut tasks: Vec<RetuneTask> = Vec::new();
+        let mut traffic: HashMap<String, u64> = HashMap::new();
         for kind in metrics.kinds() {
             let requests = metrics.summary(&kind).map(|s| s.count).unwrap_or(0);
+            match self.graphs.get(&kind) {
+                Some(members) => {
+                    for member in members {
+                        *traffic.entry(member.clone()).or_insert(0) += requests;
+                    }
+                }
+                None => *traffic.entry(kind).or_insert(0) += requests,
+            }
+        }
+        let mut tasks: Vec<RetuneTask> = Vec::new();
+        for (kind, requests) in traffic {
             if requests < self.policy.min_requests {
                 continue;
             }
@@ -595,6 +646,104 @@ mod tests {
         let tuner = OnlineTuner::new(workloads, policy(16));
         assert!(tuner.workloads.contains_key("ot_good"));
         assert!(!tuner.workloads.contains_key("ot_bad"), "untileable kind must be dropped");
+    }
+
+    #[test]
+    fn plan_folds_graph_traffic_onto_member_layers() {
+        // two member layers; "conv:gt_a" appears twice in the graph
+        // (a repeated block), so each graph request votes twice for it
+        let a = ConvWorkload::new("gt_a", 1, 8, 8, 8, 8);
+        let b = ConvWorkload::new("gt_b", 1, 8, 8, 8, 8);
+        let mut workloads: HashMap<String, crate::workload::OpWorkload> = HashMap::new();
+        workloads.insert("conv:gt_a".into(), (&a).into());
+        workloads.insert("conv:gt_b".into(), (&b).into());
+        let mut tuner = OnlineTuner::new(
+            workloads,
+            RetunePolicy { min_requests: 4, max_kinds_per_cycle: 4, ..Default::default() },
+        );
+        tuner.register_graph(
+            "graph:gt_net",
+            vec!["conv:gt_a".into(), "conv:gt_a".into(), "conv:gt_b".into()],
+        );
+
+        // 3 whole-network requests; the member kinds never hit the
+        // metrics directly
+        let metrics = Metrics::new();
+        for _ in 0..3 {
+            metrics.observe("graph:gt_net", 10.0, 100.0, 1, 0);
+        }
+        let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+        let snap = server.registry_snapshot();
+        let tasks = tuner.plan(&metrics, &snap);
+        server.shutdown();
+
+        // gt_a: 2 votes x 3 requests = 6; gt_b: 3 — below min_requests 4
+        let order: Vec<(&str, u64)> =
+            tasks.iter().map(|t| (t.kind.as_str(), t.requests)).collect();
+        assert_eq!(order, vec![("conv:gt_a", 6)]);
+        assert_eq!(tasks[0].reason, RetuneReason::Untuned);
+    }
+
+    #[test]
+    fn graph_traffic_sums_with_direct_op_traffic() {
+        let a = ConvWorkload::new("gs_a", 1, 8, 8, 8, 8);
+        let mut workloads: HashMap<String, crate::workload::OpWorkload> = HashMap::new();
+        workloads.insert("conv:gs_a".into(), (&a).into());
+        let mut tuner = OnlineTuner::new(workloads, RetunePolicy::default());
+        tuner.register_graph("graph:gs_net", vec!["conv:gs_a".into()]);
+
+        let metrics = Metrics::new();
+        metrics.observe("graph:gs_net", 10.0, 100.0, 1, 0);
+        metrics.observe("graph:gs_net", 10.0, 100.0, 1, 0);
+        metrics.observe("conv:gs_a", 10.0, 50.0, 1, 0);
+        let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+        let snap = server.registry_snapshot();
+        let tasks = tuner.plan(&metrics, &snap);
+        server.shutdown();
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].kind, "conv:gs_a");
+        assert_eq!(tasks[0].requests, 3, "graph votes and direct traffic must sum");
+    }
+
+    #[test]
+    fn graph_traffic_retunes_members_and_plan_picks_them_up() {
+        // end-to-end serve->tune->serve for a whole-network kind: only
+        // graph requests flow, yet the cycle publishes schedules for the
+        // member layers and the lazily recompiled GraphPlan uses them
+        use crate::graph::{GraphInput, GraphTopology, GraphWeights};
+        use crate::quant::RequantParams;
+
+        let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+        let mut topo = GraphTopology::new("gr_net");
+        let mut members = Vec::new();
+        for i in 0..2 {
+            let wl = ConvWorkload::new(format!("gr_l{i}"), 1, 8, 8, 8, 8);
+            members.push(crate::workload::OpWorkload::from(&wl).kind());
+            topo.add_layer(wl);
+        }
+        let weights = GraphWeights::synthetic(&topo, 3);
+        server.install_graph(topo.clone(), weights, RequantParams::default()).unwrap();
+        let rxs: Vec<_> = (0..4u64)
+            .map(|s| server.submit_graph("gr_net", GraphInput::synthetic(&topo, s)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert_eq!(server.graph_plan("gr_net").unwrap().tuned_nodes(), 0);
+
+        let mut workloads: HashMap<String, crate::workload::OpWorkload> = HashMap::new();
+        for (kind, node) in members.iter().zip(topo.nodes()) {
+            workloads.insert(kind.clone(), node.workload.clone());
+        }
+        let mut tuner = OnlineTuner::new(workloads, policy(16));
+        tuner.register_graph("graph:gr_net", members);
+        let report = tuner.run_cycle(&server.handle()).unwrap();
+        assert_eq!(report.outcomes.len(), 2);
+        assert!(report.outcomes.iter().all(|o| o.published));
+        assert_eq!(server.registry_version(), 2);
+        // the next plan lookup recompiles against the published registry
+        assert_eq!(server.graph_plan("gr_net").unwrap().tuned_nodes(), 2);
+        server.shutdown();
     }
 
     #[test]

@@ -179,6 +179,14 @@ impl MatmulScratch {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// The i32 accumulator left by the most recent
+    /// [`qmatmul_accumulate_with`] call: row-major `(m x n)`. The graph
+    /// executor reads it to run the fused
+    /// [`crate::quant::RequantParams`] epilogue.
+    pub fn accumulator(&self) -> &[i32] {
+        &self.acc
+    }
 }
 
 /// Execute the matmul under the default schedule, returning packed-INT4
@@ -209,18 +217,9 @@ pub fn qmatmul_scheduled_with(
     scratch: &mut MatmulScratch,
 ) -> Vec<i32> {
     let wl = &inst.wl;
-    let (m, n, k) = (wl.m, wl.n, wl.k);
-    debug_assert_eq!(inst.a.len(), m * k);
-    debug_assert_eq!(inst.b.len(), k * n);
+    let (m, n) = (wl.m, wl.n);
     debug_assert_eq!(inst.bias.len(), n);
-
-    // blocked i32 GEMM, blocking steered by the tuned schedule (clamped
-    // to cache-sane bounds, matching the conv executor's policy)
-    let bm = cfg.block_m().clamp(8, 64);
-    let bk = cfg.block_k().clamp(32, 128);
-    scratch.acc.clear();
-    scratch.acc.resize(m * n, 0);
-    gemm_i32_blocked_with(&inst.a, &inst.b, &mut scratch.acc, m, n, k, bm, bk);
+    qmatmul_accumulate_with(wl, &inst.a, &inst.b, cfg, scratch);
 
     // fused epilogue + padded-INT4 packing, row-major
     let mut out = Vec::with_capacity(m * n.div_ceil(8));
@@ -233,6 +232,32 @@ pub fn qmatmul_scheduled_with(
         pack_int4_padded_into(&scratch.rowbuf, &mut out);
     }
     out
+}
+
+/// The GEMM half of [`qmatmul_scheduled_with`]: run the blocked i32 GEMM,
+/// leaving the raw `(m x n)` accumulator in the scratch
+/// ([`MatmulScratch::accumulator`]) with no epilogue applied — the graph
+/// executor's entry point, mirroring
+/// [`crate::conv::qconv2d_accumulate_with`]. Operands are plain slices
+/// because graph weights are plan-owned, not per-request instances.
+pub fn qmatmul_accumulate_with(
+    wl: &MatmulWorkload,
+    a: &[i8],
+    b: &[i8],
+    cfg: &ScheduleConfig,
+    scratch: &mut MatmulScratch,
+) {
+    let (m, n, k) = (wl.m, wl.n, wl.k);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+
+    // blocked i32 GEMM, blocking steered by the tuned schedule (clamped
+    // to cache-sane bounds, matching the conv executor's policy)
+    let bm = cfg.block_m().clamp(8, 64);
+    let bk = cfg.block_k().clamp(32, 128);
+    scratch.acc.clear();
+    scratch.acc.resize(m * n, 0);
+    gemm_i32_blocked_with(a, b, &mut scratch.acc, m, n, k, bm, bk);
 }
 
 #[cfg(test)]

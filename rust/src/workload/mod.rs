@@ -28,8 +28,8 @@
 pub mod matmul;
 
 pub use matmul::{
-    qmatmul, qmatmul_scheduled, qmatmul_scheduled_with, MatmulInstance, MatmulScratch,
-    MatmulWorkload,
+    qmatmul, qmatmul_accumulate_with, qmatmul_scheduled, qmatmul_scheduled_with, MatmulInstance,
+    MatmulScratch, MatmulWorkload,
 };
 
 use anyhow::{anyhow, bail, Result};

@@ -54,6 +54,19 @@ impl Network {
             .map(|l| runtime_of(&l.workload) * l.repeats as f64)
             .sum()
     }
+
+    /// Whether this network's repeated blocks carry identity skip
+    /// connections (the ResNet family). The graph compiler
+    /// (`graph::GraphTopology::from_network`) uses this to add a
+    /// residual-add edge into every shape-preserving block beyond the
+    /// first of a stage; non-residual networks chain purely
+    /// feed-forward.
+    pub fn residual_blocks(&self) -> bool {
+        matches!(
+            self.name,
+            "resnet50" | "resnet50+transitions" | "resnet18" | "resnext50"
+        )
+    }
 }
 
 fn layer(name: &str, batch: usize, hw: usize, cin: usize, cout: usize, reps: usize) -> NetworkLayer {
@@ -236,6 +249,7 @@ pub fn bert_base(batch: usize) -> Network {
 pub fn all_networks(batch: usize) -> Vec<Network> {
     vec![
         resnet50(batch),
+        resnet50_with_transitions(batch),
         resnet18(batch),
         vgg16(batch),
         mobilenet_v2(batch),
@@ -398,6 +412,31 @@ mod tests {
             // and it simulates fine
             let m = sim.measure_once(&wl, &space.decode(&legal[0]));
             assert!(m.feasible);
+        }
+    }
+
+    #[test]
+    fn transitions_network_is_registered() {
+        // resnet50+transitions must be reachable through every lookup
+        // path, not just its constructor
+        assert!(network_names().contains(&"resnet50+transitions"));
+        let net = by_name("resnet50+transitions", 2).unwrap();
+        assert_eq!(net.layers.len(), 7);
+        assert!(net.residual_blocks());
+        assert_eq!(
+            workload_by_name("resnet50_trans4", 1).unwrap().as_conv().unwrap().stride,
+            2
+        );
+    }
+
+    #[test]
+    fn residual_marker_covers_the_resnet_family_only() {
+        for net in all_networks(1) {
+            let expect = matches!(
+                net.name,
+                "resnet50" | "resnet50+transitions" | "resnet18" | "resnext50"
+            );
+            assert_eq!(net.residual_blocks(), expect, "{}", net.name);
         }
     }
 

@@ -294,6 +294,155 @@ mod matmul_conformance {
 }
 
 // ---------------------------------------------------------------------------
+// graph conformance: whole-network GraphPlan execution pinned bit-equal
+// to BOTH the graph module's own chained reference and a fully
+// independent per-layer chain built on the dumb direct-conv reference
+// above — across seeded multi-layer nets, residual topologies, fused
+// epilogue variants and tuned-registry recompiles
+// ---------------------------------------------------------------------------
+
+mod graph_conformance {
+    use super::{conv_reference, Rng};
+    use tcconv::conv::{ConvInstance, ConvWorkload};
+    use tcconv::graph::{
+        reference_forward, GraphInput, GraphPlan, GraphScratch, GraphTopology, GraphWeights,
+        NodeInput,
+    };
+    use tcconv::quant::{clip_int4, pack_int4_padded_into, unpack_int4, Epilogue, RequantParams};
+    use tcconv::registry::{ScheduleRegistry, TunedEntry};
+    use tcconv::searchspace::{SearchSpace, SpaceOptions};
+
+    /// Independent whole-network chain: every layer through the sextuple
+    /// direct-conv loop ([`conv_reference`] — no im2col, no GEMM, no
+    /// graph code), activations unpacked between layers, residuals added
+    /// in the int4 domain, outputs re-packed per row. The slowest and
+    /// most trustworthy implementation possible.
+    fn direct_chain(
+        topo: &GraphTopology,
+        weights: &GraphWeights,
+        input: &GraphInput,
+        epi: RequantParams,
+    ) -> Vec<i32> {
+        let op_epi = Epilogue::from(epi);
+        let mut acts: Vec<Vec<i8>> = Vec::new();
+        for (i, node) in topo.nodes().iter().enumerate() {
+            let wl = node.workload.as_conv().expect("conv-only nets here").clone();
+            let x = match node.input {
+                NodeInput::Entry(e) => input.entries[e].clone(),
+                NodeInput::Node(p) => acts[p].clone(),
+            };
+            let inst = ConvInstance {
+                wl: wl.clone(),
+                x,
+                w: weights.nodes[i].w.clone(),
+                bias: weights.nodes[i].bias.clone(),
+            };
+            let packed = conv_reference(&inst, &op_epi);
+            // unpack per row, stripping the per-row padding nibbles
+            let (rows, cols) = (wl.gemm_m(), wl.out_channels);
+            let mut act = Vec::with_capacity(rows * cols);
+            for row in packed.chunks(cols.div_ceil(8)) {
+                let vals = unpack_int4(row);
+                act.extend(vals[..cols].iter().map(|&v| v as i8));
+            }
+            if let Some(src) = node.residual {
+                for (a, b) in act.iter_mut().zip(&acts[src]) {
+                    *a = clip_int4(*a as i32 + *b as i32) as i8;
+                }
+            }
+            acts.push(act);
+        }
+        let mut out = Vec::new();
+        for o in topo.outputs() {
+            let wl = topo.nodes()[o].workload.as_conv().unwrap();
+            let cols = wl.out_channels;
+            for row in acts[o].chunks(cols) {
+                let row: Vec<i32> = row.iter().map(|&v| v as i32).collect();
+                pack_int4_padded_into(&row, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Draw a random shape-preserving conv chain (stride-1 3x3 pad-1, so
+    /// every layer chains) with up to two forward residual edges.
+    fn random_net(rng: &mut Rng, case: usize) -> (GraphTopology, GraphWeights) {
+        let hw = 4 + rng.gen_range(3); // 4..=6
+        let c = [8, 16][rng.gen_range(2)];
+        let depth = 2 + rng.gen_range(3); // 2..=4
+        let mut topo = GraphTopology::new("gconf");
+        for i in 0..depth {
+            topo.add_layer(ConvWorkload::new(format!("gc{case}_{i}"), 1, hw, hw, c, c));
+        }
+        // all nodes share one output shape, so any forward edge is valid
+        if depth >= 2 && rng.gen_bool(0.7) {
+            topo.add_residual(0, depth - 1).unwrap();
+        }
+        if depth >= 3 && rng.gen_bool(0.4) {
+            topo.add_residual(1, 2).unwrap();
+        }
+        let weights = GraphWeights::synthetic(&topo, 0xAB0 + case as u64);
+        (topo, weights)
+    }
+
+    #[test]
+    fn conformance_graph_plan_matches_independent_direct_chain() {
+        let mut rng = Rng::new(0x64A9_11);
+        let registry = ScheduleRegistry::new();
+        let mut scratch = GraphScratch::new();
+        let mut residuals_seen = 0usize;
+        for case in 0..10 {
+            let (topo, weights) = random_net(&mut rng, case);
+            let epi = RequantParams { relu: rng.gen_bool(0.5), shift: rng.gen_range(8) as u32 };
+            let plan = GraphPlan::compile(&topo, &weights, &registry, epi).unwrap();
+            residuals_seen += plan.fused_residuals();
+            let input = GraphInput::synthetic(&topo, 0xF00D + case as u64);
+            let got = plan.execute(&input, &mut scratch).unwrap();
+            let module_ref = reference_forward(&topo, &weights, &input, epi).unwrap();
+            let independent = direct_chain(&topo, &weights, &input, epi);
+            assert_eq!(got, module_ref, "plan vs module reference, case {case}");
+            assert_eq!(got, independent, "plan vs direct chain, case {case}");
+        }
+        assert!(residuals_seen >= 3, "only {residuals_seen} residual edges drawn");
+    }
+
+    #[test]
+    fn conformance_tuned_schedules_never_change_graph_bits() {
+        // recompiling the same net against a registry full of sampled
+        // legal per-layer schedules must leave every output bit in place
+        let mut rng = Rng::new(0x64A9_22);
+        let mut scratch = GraphScratch::new();
+        for case in 0..6 {
+            let (topo, weights) = random_net(&mut rng, case);
+            let epi = RequantParams::default();
+            let baseline =
+                GraphPlan::compile(&topo, &weights, &ScheduleRegistry::new(), epi).unwrap();
+
+            let mut registry = ScheduleRegistry::new();
+            for node in topo.nodes() {
+                let space = SearchSpace::for_workload(&node.workload, SpaceOptions::default());
+                let legal = space.enumerate_legal();
+                if legal.is_empty() {
+                    continue;
+                }
+                let cfg = space.decode(&legal[rng.gen_range(legal.len())]);
+                registry.insert(
+                    &node.workload.kind(),
+                    TunedEntry { config: cfg, runtime_us: 1.0, trials: 1, explorer: "t".into() },
+                );
+            }
+            let tuned = GraphPlan::compile(&topo, &weights, &registry, epi).unwrap();
+            assert_eq!(tuned.tuned_nodes(), registry.len(), "case {case}");
+
+            let input = GraphInput::synthetic(&topo, 0xBEE + case as u64);
+            let a = baseline.execute(&input, &mut scratch).unwrap();
+            let b = tuned.execute(&input, &mut scratch).unwrap();
+            assert_eq!(a, b, "schedules are numerics-invariant, case {case}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // im2col index-algebra properties (the §3.1 duplicates analysis under
 // groups and dilation)
 // ---------------------------------------------------------------------------
