@@ -1,0 +1,201 @@
+//! Bench: sharded cluster vs one big server at an equal worker budget.
+//!
+//! The same skewed mixed-kind burst (half the traffic on one hot kind,
+//! the rest spread over three cold kinds) is served twice: by a single
+//! `Server` with all six workers, and by a 3-shard `Cluster` of two
+//! workers each with the hot kind round-robined over a 2-shard replica
+//! set. Same requests, same total worker count, same numerics — the
+//! variables are routing and queue isolation.
+//!
+//! What sharding buys on this substrate: consistent-hash routing pins
+//! each kind to a shard, so a shard's workers see fewer distinct shapes
+//! and their per-worker `ExecScratch` im2col caches stay warm (the same
+//! lever `BENCH_serving.json` shows for same-kind batching, applied
+//! spatially instead of temporally). The cost is the per-submit routing
+//! hop and less worker fungibility. `BENCH_cluster.json` (the artifact
+//! CI uploads) records both configurations.
+//!
+//! ```bash
+//! cargo bench --bench cluster
+//! BENCH_QUICK=1 cargo bench --bench cluster   # CI smoke mode
+//! ```
+
+use std::time::Instant;
+
+use tcconv::conv::{ConvInstance, ConvWorkload};
+use tcconv::quant::Epilogue;
+use tcconv::serve::{Cluster, ClusterConfig, Server, ServerConfig, SubmitError};
+use tcconv::util::bench::{quick, section};
+use tcconv::util::{Json, Rng};
+
+struct RunStats {
+    label: &'static str,
+    wall_s: f64,
+    rps: f64,
+    shed_retries: u64,
+}
+
+/// The benchmark's traffic: index 0 is the hot kind (half the stream).
+fn kinds() -> Vec<ConvWorkload> {
+    vec![
+        ConvWorkload::new("cb_hot", 1, 14, 14, 8, 8),
+        ConvWorkload::new("cb_cold_a", 1, 28, 28, 4, 4),
+        ConvWorkload::new("cb_cold_b", 1, 7, 7, 16, 16),
+        ConvWorkload::new("cb_cold_c", 1, 4, 4, 32, 32),
+    ]
+}
+
+fn make_stream(requests: usize, kinds: &[ConvWorkload]) -> Vec<(usize, ConvInstance)> {
+    let mut rng = Rng::new(42);
+    (0..requests)
+        .map(|i| {
+            // half the stream hits the hot kind, the rest round-robins
+            // the cold kinds with a seeded scatter
+            let k = if i % 2 == 0 { 0 } else { 1 + rng.gen_range(kinds.len() - 1) };
+            (k, ConvInstance::synthetic(&kinds[k], i as u64))
+        })
+        .collect()
+}
+
+fn run_single(
+    workers: usize,
+    stream: &[(usize, ConvInstance)],
+    kinds: &[ConvWorkload],
+) -> RunStats {
+    let server = Server::start(ServerConfig {
+        workers,
+        queue_depth: 256,
+        max_batch: 4,
+        max_wait: 0,
+    });
+    let epi = Epilogue::default();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(stream.len());
+    let mut shed_retries = 0u64;
+    for (k, inst) in stream {
+        loop {
+            match server.submit(&kinds[*k].name, inst.clone(), epi) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(SubmitError::Busy) => {
+                    shed_retries += 1;
+                    std::thread::yield_now();
+                }
+                Err(e) => panic!("submit failed: {e:?}"),
+            }
+        }
+    }
+    for rx in pending {
+        rx.recv().expect("response lost");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    RunStats { label: "single", wall_s, rps: stream.len() as f64 / wall_s, shed_retries }
+}
+
+fn run_cluster(
+    shards: usize,
+    workers_per_shard: usize,
+    stream: &[(usize, ConvInstance)],
+    kinds: &[ConvWorkload],
+) -> RunStats {
+    let cluster = Cluster::start(ClusterConfig {
+        shards,
+        shard: ServerConfig {
+            workers: workers_per_shard,
+            queue_depth: 256,
+            max_batch: 4,
+            max_wait: 0,
+        },
+        replicas: 1,
+        hot_replicas: 2,
+        hot_kinds: vec![kinds[0].name.clone()],
+        ..Default::default()
+    });
+    let epi = Epilogue::default();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(stream.len());
+    let mut shed_retries = 0u64;
+    for (k, inst) in stream {
+        loop {
+            match cluster.submit(&kinds[*k].name, inst.clone(), epi) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(SubmitError::Busy) | Err(SubmitError::Overloaded) => {
+                    shed_retries += 1;
+                    std::thread::yield_now();
+                }
+                Err(e) => panic!("submit failed: {e:?}"),
+            }
+        }
+    }
+    for rx in pending {
+        rx.recv().expect("response lost");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    cluster.shutdown();
+    RunStats { label: "cluster", wall_s, rps: stream.len() as f64 / wall_s, shed_retries }
+}
+
+fn main() {
+    let requests: usize = std::env::var("REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick() { 160 } else { 480 });
+    let kinds = kinds();
+    let stream = make_stream(requests, &kinds);
+
+    section("sharded cluster vs single server (6 workers total)");
+    println!(
+        "{requests} requests, {} kinds (half the stream on the hot kind)",
+        kinds.len()
+    );
+
+    // warm the allocator / caches once, untimed
+    run_single(6, &stream[..stream.len().min(32)], &kinds);
+
+    let reps = if quick() { 2 } else { 3 };
+    let mut best: Vec<RunStats> = Vec::new();
+    for config in 0..2usize {
+        let mut fastest: Option<RunStats> = None;
+        for _ in 0..reps {
+            let r = if config == 0 {
+                run_single(6, &stream, &kinds)
+            } else {
+                run_cluster(3, 2, &stream, &kinds)
+            };
+            if fastest.as_ref().is_none_or(|b| r.wall_s < b.wall_s) {
+                fastest = Some(r);
+            }
+        }
+        let r = fastest.unwrap();
+        println!(
+            "{:<8} {:>8.1} req/s  ({:.3} s wall, {} backpressure retries)",
+            r.label, r.rps, r.wall_s, r.shed_retries
+        );
+        best.push(r);
+    }
+
+    let ratio = best[1].rps / best[0].rps;
+    println!("\ncluster (3x2 workers) vs single (1x6 workers): {ratio:.2}x throughput");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("cluster".into())),
+        ("requests", Json::Num(requests as f64)),
+        (
+            "kinds",
+            Json::Arr(kinds.iter().map(|w| Json::Str(w.name.clone())).collect()),
+        ),
+        ("single_rps", Json::Num(best[0].rps)),
+        ("cluster_rps", Json::Num(best[1].rps)),
+        ("ratio", Json::Num(ratio)),
+        ("single_wall_s", Json::Num(best[0].wall_s)),
+        ("cluster_wall_s", Json::Num(best[1].wall_s)),
+    ]);
+    std::fs::write("BENCH_cluster.json", doc.to_string()).expect("writing BENCH_cluster.json");
+    println!("results written to BENCH_cluster.json");
+}

@@ -26,7 +26,7 @@ use tcconv::registry::ScheduleRegistry;
 use tcconv::report::{self, experiments};
 use tcconv::runtime;
 use tcconv::searchspace::{SearchSpace, SpaceOptions};
-use tcconv::serve::{Server, ServerConfig, SubmitError};
+use tcconv::serve::{Cluster, ClusterConfig, Server, ServerConfig, SloPolicy, SubmitError};
 use tcconv::sim::{GpuSpec, Simulator};
 use tcconv::tuner::online::{OnlineTuner, RetunePolicy};
 use tcconv::tuner::{Session, SessionResult};
@@ -96,6 +96,7 @@ COMMANDS
   serve     [--registry schedules.json] [--workers 4] [--requests 16]
             [--max-batch 8] [--max-wait 2] [--graph resnet50]
             [--retune] [--retune-trials 96] [--retune-jobs 2]
+            [--shards 2] [--replicas 1] [--slo-p99-us 50000]
             [--registry-out improved.json]
             loads the registry and routes synthetic requests through the
             worker pool using the tuned schedule per kind; reports per-kind
@@ -115,7 +116,16 @@ COMMANDS
             plan recompiles against the new registry).
             --registry-out persists the final (possibly improved) registry.
             With --retune or --graph, a missing --registry file starts
-            empty instead of erroring
+            empty instead of erroring.
+            --shards N serves through a consistent-hash cluster of N
+            server shards instead of one server: bounded per-shard queues
+            with admission control (saturated replica sets shed instead
+            of queueing unboundedly), [--replicas 1] [--hot-replicas 2]
+            [--queue-depth 256] routing knobs, and a closing per-kind
+            p50/p99 SLO report ([--slo-p99-us X] sets the target; PASS
+            or VIOLATED per kind). Composes with --graph (the network
+            installs on every shard) and --retune (one cluster-wide
+            cycle, winners published to every shard's registry)
   table1    [--trials 500] [--seed N]
   fig14     [--trials 500] [--seeds 3]
   fig15     (accumulated ablation)
@@ -341,6 +351,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             ScheduleRegistry::load(&path)?
         };
     println!("loaded {} tuned schedules from {path}", registry.len());
+
+    if flags.contains_key("shards") {
+        return serve_cluster(flags, registry);
+    }
 
     if let Some(net) = graph_net {
         return serve_graph(flags, registry, &net, workers, requests, max_batch, max_wait);
@@ -627,6 +641,232 @@ fn serve_graph(
             s.kind, s.count, s.exec_p50_us, s.exec_p95_us, s.mean_batch
         );
     }
+    Ok(())
+}
+
+/// Submit `requests` synthetic requests through the cluster — round-robin
+/// over the op kinds, with every fourth request a whole-network forward
+/// pass when a graph is installed — retrying shed submissions until each
+/// one is accepted. Returns how many responses executed under a
+/// registry-tuned (non-default) schedule.
+fn cluster_burst(
+    cluster: &Cluster,
+    kinds: &[OpWorkload],
+    graph: Option<&GraphTopology>,
+    requests: usize,
+    seed0: u64,
+) -> anyhow::Result<usize> {
+    let epi = Epilogue::default();
+    let mut pending = Vec::new();
+    let mut retries = 0usize;
+    for i in 0..requests {
+        let as_graph = graph.is_some() && (kinds.is_empty() || i % 4 == 3);
+        loop {
+            let result = match (as_graph, graph) {
+                (true, Some(topo)) => {
+                    cluster.submit_graph(topo.name(), GraphInput::synthetic(topo, seed0 + i as u64))
+                }
+                _ => {
+                    let wl = &kinds[i % kinds.len()];
+                    cluster.submit(&wl.kind(), wl.synthetic(seed0 + i as u64), epi)
+                }
+            };
+            match result {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                // every replica saturated: back off briefly and retry —
+                // the shed is explicit, never silent queueing
+                Err(SubmitError::Busy) | Err(SubmitError::Overloaded) => {
+                    retries += 1;
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => anyhow::bail!("submit failed: {e:?}"),
+            }
+        }
+    }
+    let mut tuned_hits = 0usize;
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?;
+        if resp.schedule != tcconv::searchspace::ScheduleConfig::default() {
+            tuned_hits += 1;
+        }
+    }
+    if retries > 0 {
+        println!("  (admission control shed {retries} submit attempt(s); each was retried)");
+    }
+    Ok(tuned_hits)
+}
+
+/// `serve --shards N`: the sharded serving path. Same synthetic traffic
+/// model as the single-server command, routed through a consistent-hash
+/// [`Cluster`] with bounded per-shard queues and admission control.
+/// Composes with `--graph <net>` (the network installs on every shard
+/// and a quarter of the burst becomes whole-network requests, verified
+/// bit-exactly against the chained reference first) and `--retune` (one
+/// cluster-wide cycle whose winners publish to every shard). Ends with
+/// the per-kind p50/p99 SLO report.
+fn serve_cluster(
+    flags: &HashMap<String, String>,
+    registry: ScheduleRegistry,
+) -> anyhow::Result<()> {
+    let shards = flag_usize(flags, "shards", 2).max(1);
+    let workers = flag_usize(flags, "workers", 2);
+    let requests = flag_usize(flags, "requests", 16);
+    let max_batch = flag_usize(flags, "max-batch", 8);
+    let max_wait = flag_usize(flags, "max-wait", 2);
+    let queue_depth = flag_usize(flags, "queue-depth", 256);
+    let replicas = flag_usize(flags, "replicas", 1);
+    let hot_replicas = flag_usize(flags, "hot-replicas", 2);
+    let slo_p99_us = match flags.get("slo-p99-us") {
+        Some(s) => Some(
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--slo-p99-us {s}: not a number"))?,
+        ),
+        None => None,
+    };
+    let retune = flags.contains_key("retune");
+    let graph_net = flags.get("graph").cloned();
+
+    // resolve traffic kinds exactly like the single-server path
+    let zoo_by_kind: HashMap<String, OpWorkload> = zoo::all_networks(1)
+        .into_iter()
+        .flat_map(|n| n.layers)
+        .map(|l| (l.workload.kind(), l.workload))
+        .collect();
+    let mut kinds: Vec<OpWorkload> = Vec::new();
+    for k in registry.kinds() {
+        if let Some(wl) = zoo_by_kind.get(k) {
+            kinds.push(wl.clone());
+        }
+    }
+    if kinds.is_empty() && retune && graph_net.is_none() {
+        kinds = zoo::resnet50(1).layers.into_iter().map(|l| l.workload).collect();
+        println!("registry empty: serving resnet50 kinds under the fallback schedule");
+    }
+    anyhow::ensure!(
+        !kinds.is_empty() || graph_net.is_some(),
+        "no registry kind matches a zoo workload (was the registry written by tune-net?)"
+    );
+
+    let cluster = Cluster::from_registry(
+        ClusterConfig {
+            shards,
+            shard: ServerConfig { workers, queue_depth, max_batch, max_wait },
+            replicas,
+            hot_replicas,
+            ..Default::default()
+        },
+        registry,
+    );
+    println!(
+        "cluster up: {shards} shard(s) x {workers} worker(s), queue depth {queue_depth}, \
+         {replicas} replica(s) per kind ({hot_replicas} for hot kinds)"
+    );
+
+    // --graph: install on every shard and verify one forward pass
+    // bit-exactly against the chained per-layer reference
+    let graph = match &graph_net {
+        Some(net) => {
+            let network = zoo::by_name(net, 1)?;
+            let topo = GraphTopology::from_network(&network);
+            let weights = GraphWeights::synthetic(&topo, 7);
+            let gepi = RequantParams::default();
+            let kind = cluster.install_graph(topo.clone(), weights.clone(), gepi)?;
+            let probe = GraphInput::synthetic(&topo, 0);
+            let want = reference_forward(&topo, &weights, &probe, gepi)?;
+            let got = cluster
+                .submit_graph(net, probe)
+                .map_err(|e| anyhow::anyhow!("graph submit failed: {e:?}"))?
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker died"))?;
+            anyhow::ensure!(
+                got.packed_output == want,
+                "graph output diverged from the chained per-layer reference"
+            );
+            println!("installed {kind} on every shard (verified bit-identical to reference)");
+            Some(topo)
+        }
+        None => None,
+    };
+
+    println!(
+        "serving {requests} synthetic requests across {} kind(s) on {shards} shard(s)",
+        kinds.len() + usize::from(graph.is_some())
+    );
+    let mut tuned_hits = cluster_burst(&cluster, &kinds, graph.as_ref(), requests, 0)?;
+
+    if retune {
+        let retune_trials = flag_usize(flags, "retune-trials", 96);
+        let retune_jobs = flag_usize(flags, "retune-jobs", 2);
+        println!(
+            "\ncluster-wide re-tuning cycle ({retune_trials} trials/kind, {retune_jobs} \
+             measurement jobs; traffic merged across shards):"
+        );
+        let mut tuner = OnlineTuner::from_zoo(
+            1,
+            RetunePolicy {
+                trials: retune_trials,
+                jobs: retune_jobs,
+                max_kinds_per_cycle: (kinds.len() + 8).max(1),
+                ..Default::default()
+            },
+        );
+        let report = tuner.run_cycle_on(&cluster.handle())?;
+        for o in &report.outcomes {
+            println!(
+                "  {:<22} {:?}: tuned {:.2} us (prev {}) -> {}",
+                o.kind,
+                o.reason,
+                o.tuned_runtime_us,
+                o.previous_runtime_us
+                    .map(|p| format!("{p:.2} us"))
+                    .unwrap_or_else(|| "fallback".into()),
+                if o.published { "published" } else { "kept previous" }
+            );
+        }
+        match report.published_version {
+            Some(v) => {
+                println!(
+                    "  published to every shard (newest snapshot v{v}) — second burst \
+                     under the new schedules:"
+                );
+                tuned_hits += cluster_burst(&cluster, &kinds, graph.as_ref(), requests, 1_000_000)?;
+            }
+            None => println!("  nothing improved enough to publish"),
+        }
+    }
+
+    if let Some(out) = flags.get("registry-out") {
+        let snap = cluster.registry_snapshot();
+        snap.registry().save(out)?;
+        println!(
+            "registry snapshot v{} ({} entries) written to {out}",
+            snap.version(),
+            snap.registry().len()
+        );
+    }
+
+    let policy = match slo_p99_us {
+        Some(target) => SloPolicy::all(target),
+        None => SloPolicy::default(),
+    };
+    let report = cluster.slo_report(&policy);
+    println!("\nper-kind SLO report (end-to-end p50/p99 vs target):");
+    print!("{}", report.render());
+    println!("SLO: {}", if report.pass() { "PASS" } else { "VIOLATED" });
+    println!(
+        "admission control: {} request(s) shed, {} spilled to a non-primary replica",
+        cluster.shed_count(),
+        cluster.spill_count()
+    );
+
+    let metrics = cluster.shutdown();
+    println!(
+        "{tuned_hits} of {} responses executed under a registry-tuned (non-default) schedule",
+        metrics.total_count()
+    );
     Ok(())
 }
 

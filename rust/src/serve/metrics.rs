@@ -11,6 +11,8 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::util::json::Json;
+
 /// Number of log-2 histogram buckets: bucket 0 covers `< 1 us`, bucket
 /// `i >= 1` covers `[2^(i-1), 2^i) us`, and the last bucket is open-ended
 /// (everything from `2^22` us ≈ 4.2 s up) so no sample is ever dropped.
@@ -34,10 +36,14 @@ pub struct LatencySummary {
     pub queue_p50_us: f64,
     /// 95th-percentile time spent queued, microseconds.
     pub queue_p95_us: f64,
+    /// 99th-percentile time spent queued, microseconds.
+    pub queue_p99_us: f64,
     /// Median execution time, microseconds.
     pub exec_p50_us: f64,
     /// 95th-percentile execution time, microseconds.
     pub exec_p95_us: f64,
+    /// 99th-percentile execution time, microseconds.
+    pub exec_p99_us: f64,
     /// Mean number of requests sharing a worker batch.
     pub mean_batch: f64,
 }
@@ -54,14 +60,43 @@ pub struct LatencyHistogram {
     counts: Vec<u64>,
 }
 
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self { counts: vec![0u64; HIST_BUCKETS] }
+    }
+
     /// Build the histogram of `samples_us` (microseconds).
     pub fn from_samples(samples_us: &[f64]) -> Self {
-        let mut counts = vec![0u64; HIST_BUCKETS];
+        let mut h = Self::new();
         for &s in samples_us {
-            counts[Self::bucket_of(s)] += 1;
+            h.record(s);
         }
-        Self { counts }
+        h
+    }
+
+    /// Record one latency sample (microseconds).
+    pub fn record(&mut self, us: f64) {
+        self.counts[Self::bucket_of(us)] += 1;
+    }
+
+    /// Fold `other` into `self`, bucket by bucket. Because the bucket
+    /// boundaries are fixed (log-2, shared by every instance), merging
+    /// per-shard histograms is exact: the merge of N shard histograms is
+    /// bit-identical to the histogram of the concatenated sample streams,
+    /// and each sample is counted exactly once — the property that lets a
+    /// [`Cluster`](crate::serve::cluster::Cluster) aggregate shard metrics
+    /// without double counting.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
     }
 
     fn bucket_of(us: f64) -> usize {
@@ -75,6 +110,48 @@ impl LatencyHistogram {
     /// Total samples recorded.
     pub fn count(&self) -> u64 {
         self.counts.iter().sum()
+    }
+
+    /// Estimate the `q`-quantile (`q` in `[0, 1]`) of the recorded
+    /// samples from the bucket counts alone.
+    ///
+    /// The rank convention matches the exact-percentile helper the
+    /// summaries use (`index = round((n - 1) * q)`), so on the same
+    /// stream the estimate and the exact quantile land in the same
+    /// bucket; within the bucket the estimate interpolates linearly by
+    /// rank. Log-2 buckets bound the error at one octave: the estimate
+    /// is always within a factor of 2 of the exact value (for samples
+    /// ≥ 1 µs; the sub-microsecond bucket reports its midpoint, and the
+    /// open-ended last bucket extrapolates one more doubling). Returns
+    /// 0.0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((total - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c > target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                // the open-ended last bucket extrapolates one doubling;
+                // every other bucket's upper edge is exact
+                let hi = if i >= HIST_BUCKETS - 1 {
+                    lo * 2.0
+                } else if i == 0 {
+                    1.0
+                } else {
+                    (1u64 << i) as f64
+                };
+                let frac = ((target - cum) as f64 + 0.5) / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            cum += c;
+        }
+        unreachable!("target rank {target} beyond total {total}")
     }
 
     /// The non-empty `(lo_us, hi_us, count)` buckets, in latency order.
@@ -170,6 +247,15 @@ impl SizeHistogram {
     /// Record one observation of `size`.
     pub fn record(&mut self, size: usize) {
         self.counts[Self::bucket_of(size)] += 1;
+    }
+
+    /// Fold `other` into `self`, bucket by bucket — same exact-merge
+    /// property as [`LatencyHistogram::merge`] (fixed shared boundaries,
+    /// each observation counted exactly once).
+    pub fn merge(&mut self, other: &SizeHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
     }
 
     /// Total observations recorded.
@@ -336,8 +422,10 @@ impl Metrics {
             count: e.len() as u64,
             queue_p50_us: pct(&q, 0.5),
             queue_p95_us: pct(&q, 0.95),
+            queue_p99_us: pct(&q, 0.99),
             exec_p50_us: pct(&e, 0.5),
             exec_p95_us: pct(&e, 0.95),
+            exec_p99_us: pct(&e, 0.99),
             mean_batch: s.batch_sizes.iter().sum::<usize>() as f64
                 / s.batch_sizes.len().max(1) as f64,
         })
@@ -358,6 +446,190 @@ impl Metrics {
             .flat_map(|s| s.queue_us.iter().zip(&s.exec_us).map(|(q, e)| q + e))
             .collect();
         LatencyHistogram::from_samples(&all)
+    }
+
+    /// Fold every observation recorded in `other` into `self`: per-kind
+    /// latency/batch samples are appended, per-worker counters added
+    /// index-wise, batch and queue-depth histograms merged bucket-wise.
+    ///
+    /// Each observation is counted exactly once, so aggregating N
+    /// disjoint shard sinks (live or archived from killed shards) yields
+    /// the same totals as if every worker had reported to one sink — the
+    /// cluster-level rollup [`crate::serve::cluster::Cluster::metrics`]
+    /// is built from this.
+    pub fn merge_from(&self, other: &Metrics) {
+        {
+            let theirs = other.inner.lock().unwrap();
+            let mut ours = self.inner.lock().unwrap();
+            for (kind, s) in theirs.iter() {
+                let dst = ours.entry(kind.clone()).or_default();
+                dst.queue_us.extend_from_slice(&s.queue_us);
+                dst.exec_us.extend_from_slice(&s.exec_us);
+                dst.batch_sizes.extend_from_slice(&s.batch_sizes);
+            }
+        }
+        {
+            let theirs = other.worker_counts.lock().unwrap();
+            let mut ours = self.worker_counts.lock().unwrap();
+            if ours.len() < theirs.len() {
+                ours.resize(theirs.len(), 0);
+            }
+            for (a, b) in ours.iter_mut().zip(theirs.iter()) {
+                *a += b;
+            }
+        }
+        self.batch_hist
+            .lock()
+            .unwrap()
+            .merge(&other.batch_hist.lock().unwrap());
+        self.queue_depth_hist
+            .lock()
+            .unwrap()
+            .merge(&other.queue_depth_hist.lock().unwrap());
+    }
+
+    /// Evaluate `policy` against the recorded traffic: one row per
+    /// observed kind, with exact end-to-end (queue + exec) p50/p99 and
+    /// the pass/fail verdict against that kind's target.
+    pub fn slo_report(&self, policy: &SloPolicy) -> SloReport {
+        let m = self.inner.lock().unwrap();
+        let mut kinds: Vec<&String> = m.keys().collect();
+        kinds.sort();
+        let rows = kinds
+            .into_iter()
+            .map(|kind| {
+                let s = &m[kind];
+                let mut total: Vec<f64> =
+                    s.queue_us.iter().zip(&s.exec_us).map(|(q, e)| q + e).collect();
+                total.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let target = policy.target_for(kind);
+                let p99_us = pct(&total, 0.99);
+                SloRow {
+                    kind: kind.clone(),
+                    count: total.len() as u64,
+                    p50_us: pct(&total, 0.5),
+                    p99_us,
+                    target_p99_us: target,
+                    within: target.is_none_or(|t| p99_us <= t),
+                }
+            })
+            .collect();
+        SloReport { rows }
+    }
+}
+
+impl Clone for Metrics {
+    /// Snapshot clone: locks each interior map/histogram briefly and
+    /// copies it. The clone is a plain value — updates to the original
+    /// after the clone are not reflected.
+    fn clone(&self) -> Self {
+        Self {
+            inner: Mutex::new(self.inner.lock().unwrap().clone()),
+            worker_counts: Mutex::new(self.worker_counts.lock().unwrap().clone()),
+            batch_hist: Mutex::new(self.batch_hist.lock().unwrap().clone()),
+            queue_depth_hist: Mutex::new(self.queue_depth_hist.lock().unwrap().clone()),
+        }
+    }
+}
+
+/// Per-kind p99 latency targets (end-to-end: queue + exec,
+/// microseconds). A kind resolves to its `per_kind` entry if present,
+/// else `default_p99_us`, else no target (always within SLO).
+#[derive(Debug, Clone, Default)]
+pub struct SloPolicy {
+    /// Target applied to kinds without a `per_kind` entry; `None`
+    /// disables the default gate.
+    pub default_p99_us: Option<f64>,
+    /// Kind-specific overrides.
+    pub per_kind: HashMap<String, f64>,
+}
+
+impl SloPolicy {
+    /// Policy with one default p99 target for every kind.
+    pub fn all(p99_us: f64) -> Self {
+        Self { default_p99_us: Some(p99_us), per_kind: HashMap::new() }
+    }
+
+    /// Add a kind-specific p99 target (builder-style).
+    pub fn with_kind(mut self, kind: &str, p99_us: f64) -> Self {
+        self.per_kind.insert(kind.to_string(), p99_us);
+        self
+    }
+
+    /// The target (if any) that applies to `kind`.
+    pub fn target_for(&self, kind: &str) -> Option<f64> {
+        self.per_kind.get(kind).copied().or(self.default_p99_us)
+    }
+}
+
+/// One kind's verdict in an [`SloReport`].
+#[derive(Debug, Clone)]
+pub struct SloRow {
+    /// The request kind.
+    pub kind: String,
+    /// Requests observed.
+    pub count: u64,
+    /// Exact end-to-end median latency, microseconds.
+    pub p50_us: f64,
+    /// Exact end-to-end 99th-percentile latency, microseconds.
+    pub p99_us: f64,
+    /// The target that applied (`None` = no gate for this kind).
+    pub target_p99_us: Option<f64>,
+    /// Whether `p99_us` met the target (vacuously true with no target).
+    pub within: bool,
+}
+
+/// The result of checking recorded traffic against an [`SloPolicy`]:
+/// one [`SloRow`] per observed kind, sorted by kind.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    /// Per-kind verdicts, sorted by kind.
+    pub rows: Vec<SloRow>,
+}
+
+impl SloReport {
+    /// True when every kind met its target.
+    pub fn pass(&self) -> bool {
+        self.rows.iter().all(|r| r.within)
+    }
+
+    /// The rows that missed their target.
+    pub fn violations(&self) -> Vec<&SloRow> {
+        self.rows.iter().filter(|r| !r.within).collect()
+    }
+
+    /// JSON rendering (the chaos harness's CI artifact).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let target = r.target_p99_us.map_or(Json::Null, Json::Num);
+                Json::obj(vec![
+                    ("kind", Json::Str(r.kind.clone())),
+                    ("count", Json::Num(r.count as f64)),
+                    ("p50_us", Json::Num(r.p50_us)),
+                    ("p99_us", Json::Num(r.p99_us)),
+                    ("target_p99_us", target),
+                    ("within", Json::Bool(r.within)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("pass", Json::Bool(self.pass())), ("rows", Json::Arr(rows))])
+    }
+
+    /// One line per kind — what `repro serve --shards` prints.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.rows {
+            let target = r.target_p99_us.map_or("none".to_string(), |t| format!("{t:.0}"));
+            let verdict = if r.within { "ok" } else { "VIOLATION" };
+            out.push_str(&format!(
+                "{:<28} n={:<6} p50={:>9.1}us p99={:>9.1}us target={:>8} {}\n",
+                r.kind, r.count, r.p50_us, r.p99_us, target, verdict
+            ));
+        }
+        out
     }
 }
 
@@ -500,5 +772,234 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert_eq!(h.buckets()[0], (0.0, 1.0, 1));
         assert_eq!(h.buckets()[1], (4.0, 8.0, 1));
+    }
+
+    #[test]
+    fn summary_reports_p99() {
+        let m = Metrics::new();
+        for i in 1..=200 {
+            m.observe("k", i as f64, i as f64, 1, 0);
+        }
+        let s = m.summary("k").unwrap();
+        // round((200-1) * 0.99) = 197 -> sorted[197] = 198
+        assert_eq!(s.queue_p99_us, 198.0);
+        assert_eq!(s.exec_p99_us, 198.0);
+        assert!(s.exec_p95_us <= s.exec_p99_us);
+    }
+
+    // ---- satellite: LatencyHistogram merge (no double counting) --------
+
+    #[test]
+    fn latency_histogram_merge_equals_concatenated_stream() {
+        let a: Vec<f64> = (0..300).map(|i| (i as f64 * 7.3) % 900.0).collect();
+        let b: Vec<f64> = (0..500).map(|i| 0.4 + (i as f64 * 13.7) % 40_000.0).collect();
+        let mut merged = LatencyHistogram::from_samples(&a);
+        merged.merge(&LatencyHistogram::from_samples(&b));
+        let concat: Vec<f64> = a.iter().chain(&b).copied().collect();
+        assert_eq!(merged, LatencyHistogram::from_samples(&concat));
+        assert_eq!(merged.count(), 800);
+        // merging an empty histogram is the identity
+        let before = merged.clone();
+        merged.merge(&LatencyHistogram::new());
+        assert_eq!(merged, before);
+    }
+
+    #[test]
+    fn size_histogram_merge_equals_concatenated_stream() {
+        let mut a = SizeHistogram::new();
+        let mut b = SizeHistogram::new();
+        let mut concat = SizeHistogram::new();
+        for s in [1usize, 3, 3, 40, 255] {
+            a.record(s);
+            concat.record(s);
+        }
+        for s in [2usize, 3, 64, 5000] {
+            b.record(s);
+            concat.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a, concat);
+        assert_eq!(a.count(), 9);
+    }
+
+    #[test]
+    fn metrics_merge_from_aggregates_without_double_counting() {
+        // two disjoint "shard" sinks vs one sink fed everything
+        let shard_a = Metrics::new();
+        let shard_b = Metrics::new();
+        let single = Metrics::new();
+        for i in 0..50 {
+            let (q, e) = (i as f64, (i * 2) as f64);
+            shard_a.observe("conv", q, e, 2, 0);
+            single.observe("conv", q, e, 2, 0);
+        }
+        for i in 0..30 {
+            let (q, e) = ((i * 3) as f64, i as f64);
+            shard_b.observe("conv", q, e, 1, 1);
+            single.observe("conv", q, e, 1, 1);
+            shard_b.observe("matmul", q, e, 1, 0);
+            single.observe("matmul", q, e, 1, 0);
+        }
+        shard_a.observe_batch(4);
+        single.observe_batch(4);
+        shard_b.observe_queue_depth(9);
+        single.observe_queue_depth(9);
+
+        let agg = Metrics::new();
+        agg.merge_from(&shard_a);
+        agg.merge_from(&shard_b);
+        assert_eq!(agg.total_count(), single.total_count());
+        assert_eq!(agg.kinds(), single.kinds());
+        assert_eq!(agg.worker_counts(), single.worker_counts());
+        assert_eq!(agg.batch_histogram(), single.batch_histogram());
+        assert_eq!(agg.queue_depth_histogram(), single.queue_depth_histogram());
+        let (a, s) = (agg.summary("conv").unwrap(), single.summary("conv").unwrap());
+        assert_eq!(a.count, s.count);
+        assert_eq!(a.queue_p99_us, s.queue_p99_us);
+        assert_eq!(a.exec_p50_us, s.exec_p50_us);
+        assert_eq!(
+            agg.total_latency_histogram(),
+            single.total_latency_histogram()
+        );
+        // merging the same sink twice WOULD double count — clone is a
+        // snapshot, so the caller controls exactly-once aggregation
+        let twice = Metrics::new();
+        twice.merge_from(&shard_a);
+        twice.merge_from(&shard_a);
+        assert_eq!(twice.total_count(), 2 * shard_a.total_count());
+    }
+
+    #[test]
+    fn metrics_clone_is_a_snapshot() {
+        let m = Metrics::new();
+        m.observe("k", 1.0, 2.0, 1, 0);
+        let snap = m.clone();
+        m.observe("k", 1.0, 2.0, 1, 0);
+        assert_eq!(snap.total_count(), 1);
+        assert_eq!(m.total_count(), 2);
+    }
+
+    // ---- satellite: quantile estimates vs exact quantiles --------------
+
+    fn exact_pct(samples: &[f64], q: f64) -> f64 {
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        pct(&s, q)
+    }
+
+    #[test]
+    fn quantile_estimate_within_factor_two_of_exact() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        // three shapes: uniform, heavy-tailed (log-uniform across five
+        // octave decades), and bimodal (fast path + slow path)
+        let streams: Vec<Vec<f64>> = vec![
+            (0..2000).map(|_| 1.0 + rng.gen_f64() * 999.0).collect(),
+            (0..2000)
+                .map(|_| 10f64.powf(rng.gen_f64() * 5.0))
+                .collect(),
+            (0..2000)
+                .map(|_| {
+                    if rng.gen_bool(0.8) {
+                        2.0 + rng.gen_f64() * 2.0
+                    } else {
+                        4000.0 + rng.gen_f64() * 4000.0
+                    }
+                })
+                .collect(),
+        ];
+        for samples in &streams {
+            let h = LatencyHistogram::from_samples(samples);
+            for q in [0.5, 0.95, 0.99] {
+                let exact = exact_pct(samples, q);
+                let est = h.quantile(q);
+                assert!(
+                    est >= exact / 2.0 && est <= exact * 2.0,
+                    "q={q}: est {est} vs exact {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_log2_bucket_edge_cases() {
+        // empty -> 0.0
+        assert_eq!(LatencyHistogram::new().quantile(0.5), 0.0);
+        // single sample: any quantile lands in its bucket
+        let h = LatencyHistogram::from_samples(&[100.0]);
+        for q in [0.0, 0.5, 1.0] {
+            let v = h.quantile(q);
+            assert!((64.0..128.0).contains(&v), "q={q}: {v}");
+        }
+        // samples exactly on power-of-two boundaries fall in [2^k, 2^(k+1))
+        let h = LatencyHistogram::from_samples(&[1.0, 2.0, 4.0, 8.0]);
+        assert!((1.0..2.0).contains(&h.quantile(0.0)));
+        assert!((8.0..16.0).contains(&h.quantile(1.0)));
+        // median rank round((4-1)*0.5) = 2 -> the 4.0 sample's bucket
+        assert!((4.0..8.0).contains(&h.quantile(0.5)));
+        // sub-microsecond bucket reports within [0, 1)
+        let h = LatencyHistogram::from_samples(&[0.01, 0.5, 0.99]);
+        assert!((0.0..1.0).contains(&h.quantile(0.5)));
+        // the open-ended last bucket extrapolates one doubling, never inf
+        let h = LatencyHistogram::from_samples(&[1e18]);
+        let v = h.quantile(0.99);
+        assert!(v.is_finite());
+        assert!(v >= (1u64 << (HIST_BUCKETS - 2)) as f64);
+        // q is clamped
+        let h = LatencyHistogram::from_samples(&[3.0]);
+        assert_eq!(h.quantile(-1.0), h.quantile(0.0));
+        assert_eq!(h.quantile(2.0), h.quantile(1.0));
+    }
+
+    #[test]
+    fn quantile_and_exact_agree_on_bucket() {
+        // the rank conventions match, so estimate and exact always land
+        // in the same log-2 bucket — the factor-of-2 bound's mechanism
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let h = LatencyHistogram::from_samples(&samples);
+        for q in [0.1, 0.25, 0.5, 0.9, 0.95, 0.99] {
+            let exact = exact_pct(&samples, q);
+            let est = h.quantile(q);
+            assert_eq!(
+                LatencyHistogram::bucket_of(exact),
+                LatencyHistogram::bucket_of(est),
+                "q={q}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    // ---- SLO policy & report -------------------------------------------
+
+    #[test]
+    fn slo_report_checks_p99_against_targets() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("fast", 0.0, i as f64, 1, 0); // p99 = 99 us
+            m.observe("slow", 0.0, (i * 100) as f64, 1, 0); // p99 = 9900 us
+        }
+        let policy = SloPolicy::all(500.0).with_kind("slow", 10_000.0);
+        let report = m.slo_report(&policy);
+        assert!(report.pass(), "{}", report.render());
+        assert_eq!(report.rows.len(), 2);
+        assert_eq!(report.rows[0].kind, "fast");
+        assert_eq!(report.rows[0].p99_us, 99.0);
+        assert_eq!(report.rows[0].target_p99_us, Some(500.0));
+
+        // tighten the override: slow now violates
+        let report = m.slo_report(&SloPolicy::all(500.0));
+        assert!(!report.pass());
+        let v = report.violations();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].kind, "slow");
+        assert!(report.render().contains("VIOLATION"));
+
+        // no targets at all -> vacuously within
+        assert!(m.slo_report(&SloPolicy::default()).pass());
+
+        let json = report.to_json().to_string();
+        assert!(json.contains("\"pass\""), "{json}");
+        assert!(json.contains("\"p99_us\""), "{json}");
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("pass").unwrap().as_bool(), Some(false));
     }
 }

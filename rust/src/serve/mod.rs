@@ -71,11 +71,23 @@
 //! publishes) reach graph traffic exactly like per-op traffic. Output is
 //! bit-identical to chaining the per-layer path
 //! ([`crate::graph::reference_forward`]).
+//!
+//! # Scaling out
+//!
+//! One server is one shard. [`cluster::Cluster`] composes many of them:
+//! consistent-hash routing on the request kind, replica spill for hot
+//! kinds, per-shard registries, kill/restart lifecycle, and explicit
+//! load-shedding ([`SubmitError::Overloaded`]) when every eligible
+//! shard's bounded queue is full — see the module docs.
 #![deny(missing_docs)]
 
+pub mod cluster;
 mod metrics;
 
-pub use metrics::{LatencyHistogram, LatencySummary, Metrics, SizeHistogram};
+pub use cluster::{Cluster, ClusterConfig, ClusterHandle, HashRing};
+pub use metrics::{
+    LatencyHistogram, LatencySummary, Metrics, SizeHistogram, SloPolicy, SloReport, SloRow,
+};
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -214,6 +226,14 @@ pub enum SubmitError {
     Busy,
     /// Server stopping; no new requests are accepted.
     ShuttingDown,
+    /// Cluster-level load shed: every eligible shard's queue was at
+    /// capacity (or draining), so the request was rejected outright.
+    /// A single [`Server`] never returns this — it is the
+    /// [`cluster::Cluster`] admission-control verdict after replica
+    /// spill is exhausted. Unlike [`SubmitError::Busy`] (retry the same
+    /// shard soon), `Overloaded` means the whole replica set is
+    /// saturated: back off, or drop the request.
+    Overloaded,
     /// `submit_graph` named a graph kind that was never installed.
     UnknownGraph(String),
     /// A graph input failed shape validation against the installed
@@ -1148,6 +1168,7 @@ mod tests {
                     Ok(rx) => rxs.push(rx),
                     Err(SubmitError::ShuttingDown) => return (rxs, true),
                     Err(SubmitError::Busy) => std::thread::yield_now(),
+                    Err(e) => panic!("unexpected {e:?}"),
                 }
             }
             (rxs, false)
@@ -1162,6 +1183,91 @@ mod tests {
                 .expect("accepted request must be answered despite shutdown race");
         }
         assert_eq!(metrics.total_count(), n);
+    }
+
+    #[test]
+    fn bounded_queue_drain_guarantee_completed_equals_accepted() {
+        // satellite: the shutdown drain guarantee re-verified under a
+        // deliberately tiny bounded queue, where most submits shed as
+        // Busy — `completed == accepted` must hold exactly, counting
+        // only the Ok submissions
+        let server = Server::start(ServerConfig {
+            workers: 2,
+            queue_depth: 4,
+            max_batch: 2,
+            max_wait: 0,
+        });
+        let wl = tiny_wl();
+        let epi = Epilogue::default();
+        let mut rxs = Vec::new();
+        let mut shed = 0u64;
+        for s in 0..200u64 {
+            match server.submit("edge", ConvInstance::synthetic(&wl, s), epi) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::Busy) => shed += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(shed > 0, "queue_depth=4 must shed under a 200-burst");
+        let accepted = rxs.len() as u64;
+        let metrics = server.shutdown();
+        // every accepted request answered, nothing invented for the shed
+        assert_eq!(metrics.total_count(), accepted);
+        for rx in rxs {
+            rx.try_recv().expect("accepted request must be answered by shutdown");
+        }
+    }
+
+    #[test]
+    fn shed_while_draining_race_keeps_accounting_exact() {
+        // satellite: submitters hammer a depth-2 queue *while* shutdown
+        // drains it. Every submit must resolve to exactly one of
+        // {answered, Busy, ShuttingDown} — a shed or refused request
+        // never consumes drain accounting, an accepted one is always
+        // answered.
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 2,
+            max_batch: 1,
+            max_wait: 0,
+        });
+        let handle = server.handle();
+        let submitter = std::thread::spawn(move || {
+            let wl = tiny_wl();
+            let epi = Epilogue::default();
+            let mut rxs = Vec::new();
+            let (mut busy, mut refused) = (0u64, 0u64);
+            for s in 0..1_000_000u64 {
+                match handle.submit("edge", ConvInstance::synthetic(&wl, s), epi) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(SubmitError::Busy) => {
+                        busy += 1;
+                        std::thread::yield_now();
+                    }
+                    Err(SubmitError::ShuttingDown) => {
+                        refused += 1;
+                        break;
+                    }
+                    Err(e) => panic!("unexpected {e:?}"),
+                }
+            }
+            (rxs, busy, refused)
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        let metrics = server.shutdown();
+        let (rxs, busy, refused) = submitter.join().unwrap();
+        assert!(busy > 0, "a depth-2 queue under hammer must shed");
+        assert_eq!(refused, 1, "the submitter must observe the cutoff");
+        assert_eq!(
+            metrics.total_count(),
+            rxs.len() as u64,
+            "drain accounting must count exactly the accepted set"
+        );
+        for rx in rxs {
+            let resp = rx.try_recv().expect("accepted request lost in shutdown race");
+            // and exactly once: the channel holds no duplicate
+            assert!(rx.try_recv().is_err(), "duplicate response for id {}", resp.id);
+        }
     }
 
     // ---- registry routing & hot reload -----------------------------------

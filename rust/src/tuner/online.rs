@@ -41,7 +41,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::serve::{Metrics, RegistrySnapshot, ServeHandle};
+use crate::registry::TunedEntry;
+use crate::serve::{ClusterHandle, Metrics, RegistrySnapshot, ServeHandle};
 use crate::workload::OpWorkload;
 use crate::zoo;
 
@@ -308,20 +309,28 @@ impl OnlineTuner {
         h.finish()
     }
 
-    /// Run one full cycle against a live server: plan, tune each picked
-    /// kind with a bounded warm-started session, and publish every
-    /// improvement as **one** atomic registry update (so the snapshot
-    /// version advances at most once per cycle). The publish goes
-    /// through [`ServeHandle::reload_registry`]'s sibling
-    /// `update_registry` — an in-place edit of the *current* registry —
-    /// so a reload that lands while the (slow) tuning phase runs is
-    /// merged with, never reverted by, this cycle's winners.
+    /// Run one full cycle against a live single server — see
+    /// [`OnlineTuner::run_cycle_on`]; `ServeHandle` is just one
+    /// [`RetuneSurface`].
     pub fn run_cycle(&mut self, handle: &ServeHandle) -> crate::Result<CycleReport> {
-        let snapshot = handle.registry_snapshot();
-        let tasks = self.plan(handle.metrics(), &snapshot);
-        let kinds_observed = handle.metrics().kinds().len();
+        self.run_cycle_on(handle)
+    }
 
-        let mut winners: Vec<(String, crate::registry::TunedEntry)> = Vec::new();
+    /// Run one full cycle against any serving surface: plan, tune each
+    /// picked kind with a bounded warm-started session, and publish
+    /// every improvement as **one** atomic registry update per shard (so
+    /// each snapshot version advances at most once per cycle). The
+    /// publish goes through the surface's `update_registry` — an
+    /// in-place edit of the *current* registry — so a reload that lands
+    /// while the (slow) tuning phase runs is merged with, never reverted
+    /// by, this cycle's winners.
+    pub fn run_cycle_on<S: RetuneSurface>(&mut self, surface: &S) -> crate::Result<CycleReport> {
+        let snapshot = surface.retune_snapshot();
+        let metrics = surface.retune_metrics();
+        let tasks = self.plan(&metrics, &snapshot);
+        let kinds_observed = metrics.kinds().len();
+
+        let mut winners: Vec<(String, TunedEntry)> = Vec::new();
         let mut outcomes = Vec::with_capacity(tasks.len());
         for task in tasks {
             let wl = self.workloads[&task.kind].clone();
@@ -358,13 +367,8 @@ impl OnlineTuner {
             self.last_kind = Some(task.kind);
         }
 
-        let published_version = (!winners.is_empty()).then(|| {
-            handle.update_registry(|registry| {
-                for (kind, entry) in winners {
-                    registry.insert(&kind, entry);
-                }
-            })
-        });
+        let published_version =
+            (!winners.is_empty()).then(|| surface.retune_publish(winners));
         self.cycle += 1;
         Ok(CycleReport { kinds_observed, outcomes, published_version })
     }
@@ -429,6 +433,63 @@ impl Drop for RetunerHandle {
     }
 }
 
+/// The serving surface one retune cycle drives: a registry snapshot to
+/// plan against, a metrics view of the live traffic, and an atomic
+/// publish path for the cycle's winners.
+///
+/// [`ServeHandle`] (one server) and [`ClusterHandle`] (a sharded
+/// cluster, where metrics are the cross-shard rollup and a publish
+/// reaches every shard's registry — staged copies of dead shards
+/// included) both implement it, so [`OnlineTuner::run_cycle_on`] retunes
+/// either deployment shape unchanged.
+pub trait RetuneSurface {
+    /// The registry snapshot tuning decisions are planned against.
+    fn retune_snapshot(&self) -> Arc<RegistrySnapshot>;
+    /// A snapshot of the traffic metrics observed so far.
+    fn retune_metrics(&self) -> Metrics;
+    /// Atomically merge the cycle's winners into the current registry;
+    /// returns the resulting snapshot version (the newest across shards
+    /// for a cluster).
+    fn retune_publish(&self, winners: Vec<(String, TunedEntry)>) -> u64;
+}
+
+impl RetuneSurface for ServeHandle {
+    fn retune_snapshot(&self) -> Arc<RegistrySnapshot> {
+        self.registry_snapshot()
+    }
+
+    fn retune_metrics(&self) -> Metrics {
+        self.metrics().clone()
+    }
+
+    fn retune_publish(&self, winners: Vec<(String, TunedEntry)>) -> u64 {
+        self.update_registry(|registry| {
+            for (kind, entry) in winners {
+                registry.insert(&kind, entry);
+            }
+        })
+    }
+}
+
+impl RetuneSurface for ClusterHandle {
+    fn retune_snapshot(&self) -> Arc<RegistrySnapshot> {
+        self.registry_snapshot()
+    }
+
+    fn retune_metrics(&self) -> Metrics {
+        self.metrics()
+    }
+
+    fn retune_publish(&self, winners: Vec<(String, TunedEntry)>) -> u64 {
+        let versions = self.update_registry(|registry| {
+            for (kind, entry) in &winners {
+                registry.insert(kind, entry.clone());
+            }
+        });
+        versions.into_iter().flatten().max().unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,7 +497,7 @@ mod tests {
     use crate::quant::Epilogue;
     use crate::registry::{ScheduleRegistry, TunedEntry};
     use crate::searchspace::ScheduleConfig;
-    use crate::serve::{Server, ServerConfig};
+    use crate::serve::{Cluster, ClusterConfig, Server, ServerConfig};
 
     /// Small workload whose legal space excludes the default schedule, so
     /// "the retuner published something better than the fallback" is
@@ -572,6 +633,48 @@ mod tests {
         assert_eq!(resp.schedule, published);
         assert_eq!(resp.registry_version, 2);
         server.shutdown();
+    }
+
+    #[test]
+    fn run_cycle_on_cluster_merges_shard_traffic_and_publishes_everywhere() {
+        let wl = tiny();
+        let cluster = Cluster::start(ClusterConfig {
+            shards: 2,
+            shard: ServerConfig { workers: 1, ..Default::default() },
+            hot_replicas: 2,
+            hot_kinds: vec![wl.name.clone()],
+            ..Default::default()
+        });
+        // hot kind: traffic round-robins across BOTH shards, so only the
+        // merged cross-shard rollup sees the full request count
+        let epi = Epilogue::default();
+        let rxs: Vec<_> = (0..6u64)
+            .map(|s| cluster.submit(&wl.name, ConvInstance::synthetic(&wl, s), epi).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert_eq!(cluster.metrics().summary(&wl.name).unwrap().count, 6);
+
+        let mut workloads = HashMap::new();
+        workloads.insert(wl.name.clone(), wl.clone());
+        let mut tuner = OnlineTuner::new(workloads, policy(48));
+        let report = tuner.run_cycle_on(&cluster.handle()).unwrap();
+        assert_eq!(report.outcomes.len(), 1);
+        assert!(report.outcomes[0].published);
+        assert_eq!(report.published_version, Some(2), "both shards reload 1 -> 2");
+
+        // the publish reached every shard: wherever the next request
+        // routes, it executes under the tuned (non-default) schedule
+        let published = cluster.registry_snapshot().schedule_for(&wl.name);
+        assert_ne!(published, ScheduleConfig::default());
+        let resp = cluster
+            .submit(&wl.name, ConvInstance::synthetic(&wl, 99), epi)
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert_eq!(resp.schedule, published);
+        cluster.shutdown();
     }
 
     #[test]
