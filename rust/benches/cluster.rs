@@ -12,8 +12,9 @@
 //! and their per-worker `ExecScratch` im2col caches stay warm (the same
 //! lever `BENCH_serving.json` shows for same-kind batching, applied
 //! spatially instead of temporally). The cost is the per-submit routing
-//! hop and less worker fungibility. `BENCH_cluster.json` (the artifact
-//! CI uploads) records both configurations.
+//! hop and less worker fungibility. `BENCH_cluster.json` at the repo
+//! root (the committed trajectory CI diffs and uploads) records both
+//! configurations.
 //!
 //! ```bash
 //! cargo bench --bench cluster
@@ -27,6 +28,10 @@ use tcconv::quant::Epilogue;
 use tcconv::serve::{Cluster, ClusterConfig, Server, ServerConfig, SubmitError};
 use tcconv::util::bench::{quick, section};
 use tcconv::util::{Json, Rng};
+
+/// Repo-root path for the committed trajectory (benches run from
+/// `rust/`; the committed artifacts live one level up).
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster.json");
 
 struct RunStats {
     label: &'static str,
@@ -196,6 +201,6 @@ fn main() {
         ("single_wall_s", Json::Num(best[0].wall_s)),
         ("cluster_wall_s", Json::Num(best[1].wall_s)),
     ]);
-    std::fs::write("BENCH_cluster.json", doc.to_string()).expect("writing BENCH_cluster.json");
-    println!("results written to BENCH_cluster.json");
+    std::fs::write(OUT_PATH, doc.to_string()).expect("writing BENCH_cluster.json");
+    println!("results written to {OUT_PATH}");
 }

@@ -9,12 +9,19 @@
 //! only variable is batching.
 //!
 //! Why batching wins on this substrate: each worker's `ExecScratch`
-//! caches the im2col gather map of the *last* shape executed. An
-//! unbatched mixed stream alternates kinds per worker, rebuilding the
-//! map almost every request; head-of-line batching runs same-kind
-//! requests back to back, paying the index resolution once per batch.
-//! The full `max_batch` sweep is written to `BENCH_serving.json` (the
-//! artifact CI uploads).
+//! caches the im2col gather map of the *last* shape executed, and every
+//! worker shares the server-wide prepacked-weight cache. An unbatched
+//! mixed stream alternates kinds per worker, rebuilding the map almost
+//! every request; head-of-line batching runs same-kind requests back to
+//! back, paying the index resolution once per batch and serving every
+//! GEMM from the prepacked panels.
+//!
+//! The run also times the pipelined microkernel against the pre-PR
+//! blocked GEMM on dense inputs (the committed per-batch latency
+//! trajectory), and closes with a roofline check: each kind's measured
+//! exec p50 must track its modeled traffic floor under one common scale.
+//! The full sweep is written to `BENCH_serving.json` **at the repo
+//! root** (the committed trajectory CI diffs and uploads).
 //!
 //! ```bash
 //! cargo bench --bench serving
@@ -24,10 +31,22 @@
 use std::time::Instant;
 
 use tcconv::conv::{ConvInstance, ConvWorkload};
+use tcconv::gemm::{
+    default_bn, gemm_i32_blocked_reference, gemm_i32_pipelined, PackedB, PipelineBufs,
+    PrepackStats,
+};
 use tcconv::quant::Epilogue;
 use tcconv::serve::{Server, ServerConfig, SubmitError};
-use tcconv::util::bench::{quick, section};
+use tcconv::sim::{
+    roofline_check, roofline_tolerance, roofline_us, GpuSpec, ProfileCache, RooflinePoint,
+};
+use tcconv::util::bench::{bench, quick, section};
 use tcconv::util::{Json, Rng};
+
+/// Repo-root path for the committed trajectory: benches run with
+/// `rust/` as their working directory, the committed artifacts live one
+/// level up.
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
 
 /// One timed configuration of the sweep.
 struct RunStats {
@@ -36,6 +55,11 @@ struct RunStats {
     wall_s: f64,
     rps: f64,
     mean_batch: f64,
+    /// Measured per-kind exec p50, microseconds (indexed like `kinds`;
+    /// NaN when a kind saw no traffic).
+    exec_p50_us: Vec<f64>,
+    /// Server-wide prepacked-weight cache counters at shutdown.
+    prepack: PrepackStats,
 }
 
 fn run_config(
@@ -70,14 +94,21 @@ fn run_config(
         rx.recv().expect("response lost");
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    let prepack = server.prepack_stats();
     let metrics = server.shutdown();
     let mean_batch = metrics.batch_histogram().mean();
+    let exec_p50_us = kinds
+        .iter()
+        .map(|w| metrics.summary(&w.name).map_or(f64::NAN, |s| s.exec_p50_us))
+        .collect();
     RunStats {
         max_batch,
         max_wait,
         wall_s,
         rps: stream.len() as f64 / wall_s,
         mean_batch,
+        exec_p50_us,
+        prepack,
     }
 }
 
@@ -103,6 +134,16 @@ fn main() {
         kinds.len()
     );
 
+    // Per-kind FIXED weights, per-request fresh activations — a deployed
+    // model's weights don't change between requests, and the server-wide
+    // prepack cache keys on the weight bytes: per-request random weights
+    // would re-pack every submit and measure nothing real.
+    let templates: Vec<ConvInstance> = kinds
+        .iter()
+        .enumerate()
+        .map(|(k, wl)| ConvInstance::synthetic(wl, 9000 + k as u64))
+        .collect();
+
     // pre-generate the request stream (seeded shuffle, so the unbatched
     // configuration really does alternate kinds per worker): generation
     // cost must not pollute the serving measurement
@@ -110,7 +151,10 @@ fn main() {
     let stream: Vec<(usize, ConvInstance)> = (0..requests)
         .map(|i| {
             let k = if i % 7 == 0 { rng.gen_range(kinds.len()) } else { i % kinds.len() };
-            (k, ConvInstance::synthetic(&kinds[k], i as u64))
+            let mut inst = ConvInstance::synthetic(&kinds[k], i as u64);
+            inst.w = templates[k].w.clone();
+            inst.bias = templates[k].bias.clone();
+            (k, inst)
         })
         .collect();
 
@@ -124,14 +168,14 @@ fn main() {
         let mut best: Option<RunStats> = None;
         for _ in 0..reps {
             let r = run_config(workers, max_batch, max_wait, &stream, &kinds);
-            if best.as_ref().map_or(true, |b| r.wall_s < b.wall_s) {
+            if best.as_ref().is_none_or(|b| r.wall_s < b.wall_s) {
                 best = Some(r);
             }
         }
         let r = best.unwrap();
         println!(
-            "max_batch {:>2} max_wait {:>2}: {:>8.1} req/s  ({:.3} s wall, mean co-batch {:.2})",
-            r.max_batch, r.max_wait, r.rps, r.wall_s, r.mean_batch
+            "max_batch {:>2} max_wait {:>2}: {:>8.1} req/s  ({:.3} s wall, mean co-batch {:.2}, prepack {}h/{}m)",
+            r.max_batch, r.max_wait, r.rps, r.wall_s, r.mean_batch, r.prepack.hits, r.prepack.misses
         );
         results.push(r);
     }
@@ -147,8 +191,63 @@ fn main() {
         "  -> target >= 1.5x: {}",
         if speedup >= 1.5 { "MET" } else { "MISSED" }
     );
+    // fixed weights + the shared cache: every run past the first packs
+    // nothing, so hits must dominate misses by the end of the sweep
+    println!(
+        "prepack cache (final run): {} hits, {} misses, {} entries, {} bytes",
+        batched.prepack.hits, batched.prepack.misses, batched.prepack.entries,
+        batched.prepack.bytes
+    );
 
-    // BENCH_serving.json: the trajectory CI uploads as an artifact
+    section("microkernel vs pre-PR blocked GEMM (dense inputs, same seed)");
+    // the committed per-batch latency trajectory: a dense mid-size GEMM,
+    // values seeded, the legacy blocked loop nest vs the pipelined
+    // prepacked microkernel — same operands, same accumulation order
+    // class (i32, so bit-identical results)
+    let (gm, gn, gk) = (256usize, 64usize, 144usize);
+    let mut grng = Rng::new(2024);
+    let ga: Vec<i8> = (0..gm * gk).map(|_| grng.gen_range(16) as i8 - 8).collect();
+    let gb: Vec<i8> = (0..gk * gn).map(|_| grng.gen_range(16) as i8 - 8).collect();
+    let mut c = vec![0i32; gm * gn];
+    let legacy = bench("blocked reference gemm (256x64x144)", || {
+        c.fill(0);
+        gemm_i32_blocked_reference(&ga, &gb, &mut c, gm, gn, gk, 32, 64);
+        std::hint::black_box(&c);
+    });
+    let legacy_out = c.clone();
+    let packed = PackedB::pack(&gb, gk, gn, 0, gn, default_bn(gn), 64);
+    let mut bufs = PipelineBufs::default();
+    let micro = bench("pipelined microkernel (prepacked)", || {
+        c.fill(0);
+        gemm_i32_pipelined(&ga, &packed, &mut c, gm, gn, 0, 32, &mut bufs);
+        std::hint::black_box(&c);
+    });
+    assert_eq!(c, legacy_out, "microkernel must be bit-identical to the reference");
+    let gemm_speedup = legacy.mean_us() / micro.mean_us();
+    println!("microkernel vs blocked reference: {gemm_speedup:.2}x per-batch latency");
+
+    section("roofline: measured exec p50 vs modeled traffic floor");
+    // one common scale must fit every kind: the interpreter is a constant
+    // factor above the modeled GPU, so a kind that drifts from the fleet
+    // scale means its hot path regressed (or the model broke)
+    let gpu = GpuSpec::t4();
+    let mut pcache = ProfileCache::default();
+    let points: Vec<RooflinePoint> = kinds
+        .iter()
+        .zip(&batched.exec_p50_us)
+        .filter(|(_, p)| p.is_finite())
+        .map(|(w, &measured_us)| RooflinePoint {
+            kind: w.name.clone(),
+            measured_us,
+            modeled_us: roofline_us(w, &gpu, &mut pcache),
+        })
+        .collect();
+    let roofline = roofline_check(&points, roofline_tolerance());
+    print!("{}", roofline.render());
+    assert!(roofline.pass(), "roofline divergence:\n{}", roofline.render());
+
+    // BENCH_serving.json: the trajectory CI diffs against the committed
+    // copy and uploads as an artifact
     let trajectory = Json::Arr(
         results
             .iter()
@@ -174,8 +273,14 @@ fn main() {
         ("unbatched_rps", Json::Num(unbatched.rps)),
         ("batched_rps", Json::Num(batched.rps)),
         ("speedup", Json::Num(speedup)),
+        ("legacy_gemm_us", Json::Num(legacy.mean_us())),
+        ("microkernel_gemm_us", Json::Num(micro.mean_us())),
+        ("microkernel_speedup", Json::Num(gemm_speedup)),
+        ("prepack_hits", Json::Num(batched.prepack.hits as f64)),
+        ("prepack_misses", Json::Num(batched.prepack.misses as f64)),
+        ("roofline", roofline.to_json()),
         ("trajectory", trajectory),
     ]);
-    std::fs::write("BENCH_serving.json", doc.to_string()).expect("writing BENCH_serving.json");
-    println!("trajectory written to BENCH_serving.json");
+    std::fs::write(OUT_PATH, doc.to_string()).expect("writing BENCH_serving.json");
+    println!("trajectory written to {OUT_PATH}");
 }

@@ -1,0 +1,94 @@
+//! CI bench gate: fail the build when a freshly-run bench trajectory
+//! regresses against the committed baseline.
+//!
+//! Usage: `bench_gate <baseline_dir> <fresh_dir>`
+//!
+//! For each gated `BENCH_*.json` the fresh run's ratio fields (throughput
+//! speedups — *not* absolute wall times, which vary too much across CI
+//! machines to gate on) must stay within 10% of the committed baseline,
+//! and the fresh serving trajectory's roofline verdict must pass. A
+//! missing baseline is skipped (first run of a new bench); a missing
+//! fresh file is an error — it means the bench did not run.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use tcconv::util::Json;
+
+/// A fresh ratio below `baseline * TOLERANCE` fails the gate.
+const TOLERANCE: f64 = 0.9;
+
+/// The gated trajectory files and their ratio fields.
+const GATES: &[(&str, &[&str])] = &[
+    ("BENCH_serving.json", &["speedup", "microkernel_speedup"]),
+    ("BENCH_cluster.json", &["ratio"]),
+];
+
+fn load(path: &Path) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    Json::parse(&text).ok()
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [baseline_dir, fresh_dir] = &args[..] else {
+        eprintln!("usage: bench_gate <baseline_dir> <fresh_dir>");
+        return ExitCode::from(2);
+    };
+    let mut failures = 0usize;
+    for &(file, fields) in GATES {
+        let fresh_path = Path::new(fresh_dir).join(file);
+        let Some(fresh) = load(&fresh_path) else {
+            eprintln!(
+                "bench_gate: {} missing or unparsable (bench did not run?)",
+                fresh_path.display()
+            );
+            failures += 1;
+            continue;
+        };
+        let baseline = load(&Path::new(baseline_dir).join(file));
+        if baseline.is_none() {
+            println!("bench_gate: {file}: no baseline; ratio gates skipped");
+        }
+        for &field in fields {
+            let Some(f) = fresh.req(field).ok().and_then(|v| v.as_f64()) else {
+                eprintln!("bench_gate: {file}: fresh run lacks field '{field}'");
+                failures += 1;
+                continue;
+            };
+            let Some(b) = baseline
+                .as_ref()
+                .and_then(|d| d.req(field).ok())
+                .and_then(|v| v.as_f64())
+            else {
+                println!("bench_gate: {file}:{field} = {f:.3} (no baseline)");
+                continue;
+            };
+            if f < b * TOLERANCE {
+                eprintln!(
+                    "bench_gate: REGRESSION {file}:{field} {f:.3} < {:.3} (baseline {b:.3} minus 10%)",
+                    b * TOLERANCE
+                );
+                failures += 1;
+            } else {
+                println!("bench_gate: ok {file}:{field} {f:.3} vs baseline {b:.3}");
+            }
+        }
+        // the serving trajectory also carries the roofline verdict
+        if let Ok(roofline) = fresh.req("roofline") {
+            match roofline.req("pass").ok().and_then(|v| v.as_bool()) {
+                Some(true) => println!("bench_gate: ok {file}: roofline pass"),
+                _ => {
+                    eprintln!("bench_gate: {file}: roofline check failed");
+                    failures += 1;
+                }
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("bench_gate: {failures} failure(s)");
+        return ExitCode::FAILURE;
+    }
+    println!("bench_gate: all gates passed");
+    ExitCode::SUCCESS
+}

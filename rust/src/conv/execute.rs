@@ -14,6 +14,11 @@
 //!   same genuine-index map the simulator counts with is used here to
 //!   stage data, proving the remap preserves semantics.
 
+use std::sync::Arc;
+
+use crate::gemm::{
+    default_bn, gemm_i32_pipelined, operand_fingerprint, GemmScratch, PrepackCache,
+};
 use crate::layout::{Layout, TensorDims};
 use crate::quant::{pack_int4_padded_into, Epilogue};
 
@@ -97,12 +102,27 @@ pub struct ExecScratch {
     /// the same map shifted by `g * in_channels_per_group` (groups are
     /// disjoint channel ranges of the same pixels).
     map: Vec<i64>,
+    /// Microkernel staging buffers plus the scratch-owned packed-weight
+    /// buffer for the uncached path.
+    gemm: GemmScratch,
+    /// Server-wide prepacked-weight cache, when this scratch serves
+    /// requests (see [`ExecScratch::set_prepack`]). `None` = pack into the
+    /// scratch-owned buffer per call.
+    prepack: Option<Arc<PrepackCache>>,
 }
 
 impl ExecScratch {
     /// Empty scratch; buffers grow to the first workload's sizes on use.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach the server-wide [`PrepackCache`]: subsequent executions look
+    /// their weight panels up by content fingerprint instead of re-packing
+    /// per call. Serving workers ([`crate::serve`]) attach their server's
+    /// shared cache; direct callers may share any cache they like.
+    pub fn set_prepack(&mut self, cache: Arc<PrepackCache>) {
+        self.prepack = Some(cache);
     }
 
     /// The i32 accumulator left by the most recent
@@ -265,9 +285,12 @@ pub fn qconv2d_accumulate_with(
     let (m, n_g, k_g) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
     let n = wl.out_channels;
 
-    // blocked i32 GEMM; the tuned schedule picks the blocking
+    // microkernel geometry from the tuned schedule's tile hierarchy,
+    // clamped to cache-sane bounds (block_n is a multiple of the 8-wide
+    // MMA atom by construction, and the clamp bounds preserve that)
     let bm = cfg.block_m().clamp(8, 64);
     let bk = cfg.block_k().clamp(32, 128);
+    let bn = cfg.block_n().clamp(8, 64).min(default_bn(n_g));
     scratch.acc.clear();
     scratch.acc.resize(m * n, 0);
     // resolve (or reuse) the shape's im2col gather map: a same-shape
@@ -277,21 +300,37 @@ pub fn qconv2d_accumulate_with(
         build_im2col_map(wl, &mut scratch.map);
         scratch.map_key = Some(key);
     }
+    // weight fingerprint, hoisted so grouped convs hash the operand once
+    // per call, not once per group (only computed when a cache is attached)
+    let fp = scratch.prepack.as_ref().map(|_| operand_fingerprint(w));
     for group in 0..wl.groups {
         im2col_group_from_map(wl, x, group, &scratch.map, &mut scratch.cols);
         debug_assert_eq!(scratch.cols.len(), m * k_g);
-        gemm_i32_blocked_group(
-            &scratch.cols,
-            w,
-            &mut scratch.acc,
-            m,
-            k_g,
-            n_g,
-            n,
-            group * n_g,
-            bm,
-            bk,
-        );
+        let col0 = group * n_g;
+        match (&scratch.prepack, fp) {
+            (Some(cache), Some(fp)) => {
+                // hot path: weight panels packed once per (weights,
+                // geometry) server-wide, shared across workers and shards
+                let packed = cache.get_or_pack(fp, w, k_g, n, col0, n_g, bn, bk);
+                gemm_i32_pipelined(
+                    &scratch.cols,
+                    &packed,
+                    &mut scratch.acc,
+                    m,
+                    n,
+                    col0,
+                    bm,
+                    &mut scratch.gemm.bufs,
+                );
+            }
+            _ => {
+                // uncached path: pack into the scratch-owned buffer
+                // (amortized across a same-kind batch's allocations only)
+                let GemmScratch { bufs, packed } = &mut scratch.gemm;
+                packed.pack_into(w, k_g, n, col0, n_g, bn, bk);
+                gemm_i32_pipelined(&scratch.cols, packed, &mut scratch.acc, m, n, col0, bm, bufs);
+            }
+        }
     }
 }
 
@@ -328,6 +367,35 @@ pub fn im2col_group_into(inst: &ConvInstance, group: usize, cols: &mut Vec<i8>) 
     }
 }
 
+/// Load accounting of one duplicate-aware im2col staging pass — the
+/// executable counterpart of the numbers the simulator charges for
+/// global->shared staging ([`crate::conv::TileStats`]): `shared_loads`
+/// must equal the whole-matrix `tile_stats(..).unique`, and
+/// `expanded_cells` its `total`. Returned by
+/// [`im2col_dup_aware_group_stats`] so the analysis layer can cross-check
+/// the model against an actual staging run instead of discarding the
+/// pass-1 counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DupStageStats {
+    /// Genuine feature elements loaded in pass 1 (each distinct source
+    /// element exactly once) — the duplicate-aware load count.
+    pub shared_loads: usize,
+    /// Cells of the expanded `m x k` im2col tile pass 2 materializes.
+    pub expanded_cells: usize,
+}
+
+impl DupStageStats {
+    /// Expanded-cell / shared-load ratio (>= 1 when any load happens):
+    /// the measured duplication the remap removed.
+    pub fn duplicate_factor(&self) -> f64 {
+        if self.shared_loads == 0 {
+            1.0
+        } else {
+            self.expanded_cells as f64 / self.shared_loads as f64
+        }
+    }
+}
+
 /// Duplicate-aware im2col of one channel group: stage only genuine
 /// elements into a compact buffer, then materialize the expanded tile by
 /// reading *through the genuine-index map* (Algorithm 1's shared-memory
@@ -335,6 +403,16 @@ pub fn im2col_group_into(inst: &ConvInstance, group: usize, cols: &mut Vec<i8>) 
 /// that equality is the proof the static remap is sound (for dilated and
 /// grouped lowering included).
 pub fn im2col_dup_aware_group(inst: &ConvInstance, group: usize) -> Vec<i8> {
+    im2col_dup_aware_group_stats(inst, group).0
+}
+
+/// [`im2col_dup_aware_group`] plus the pass-1 load accounting
+/// ([`DupStageStats`]) — the counter the analysis layer compares against
+/// the simulator's modeled staging traffic.
+pub fn im2col_dup_aware_group_stats(
+    inst: &ConvInstance,
+    group: usize,
+) -> (Vec<i8>, DupStageStats) {
     let wl = &inst.wl;
     let ix = wl.im2col_group(group);
     let (m, k) = (wl.gemm_m(), wl.gemm_k());
@@ -356,7 +434,6 @@ pub fn im2col_dup_aware_group(inst: &ConvInstance, group: usize) -> Vec<i8> {
             }
         }
     }
-    let _ = loads;
 
     // pass 2: compute pass — every read goes through get_genuine
     let mut cols = vec![0i8; m * k];
@@ -368,7 +445,7 @@ pub fn im2col_dup_aware_group(inst: &ConvInstance, group: usize) -> Vec<i8> {
             }
         }
     }
-    cols
+    (cols, DupStageStats { shared_loads: loads, expanded_cells: m * k })
 }
 
 /// Duplicate-aware im2col of group 0 — kept as the historical dense-conv
@@ -384,7 +461,14 @@ pub fn gemm_i32_blocked(a: &[i8], b: &[i8], c: &mut [i32], m: usize, n: usize, k
 }
 
 /// Blocked i32 GEMM with caller-chosen (bm, bk) blocking — the knob the
-/// tuned schedule drives on the CPU substrate.
+/// tuned schedule drives on the CPU substrate. Since the double-buffered
+/// microkernel landed this is a compatibility wrapper: it packs `b` and
+/// runs [`crate::gemm::gemm_i32_pipelined`], allocating its staging
+/// buffers per call. Hot paths hold a [`crate::gemm::GemmScratch`] (or a
+/// [`PrepackCache`]) and call the pipelined kernel directly. The old
+/// row-at-a-time body also zero-skipped `a` values, making latency a
+/// function of input sparsity; the microkernel is branch-free, so timings
+/// are input-independent (asserted in `benches/hotpath.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_i32_blocked_with(
     a: &[i8],
@@ -396,71 +480,10 @@ pub fn gemm_i32_blocked_with(
     bm: usize,
     bk: usize,
 ) {
-    let bm = bm.max(1);
-    let bk = bk.max(1);
-    for i0 in (0..m).step_by(bm) {
-        for k0 in (0..k).step_by(bk) {
-            let i1 = (i0 + bm).min(m);
-            let k1 = (k0 + bk).min(k);
-            for i in i0..i1 {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let av = arow[kk] as i32;
-                    if av == 0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        crow[j] += av * brow[j] as i32;
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// One group's blocked GEMM into a column slice of the full accumulator:
-/// `a` is the group's (m x k_g) im2col operand, `b` the whole
-/// `KH*KW*(I/G) x O` weight matrix of which this group owns columns
-/// `[col0, col0 + n_g)`, and `c` the full (m x n_total) accumulator the
-/// group writes its `n_g`-wide stripe of. With `groups == 1` (`col0 = 0`,
-/// `n_g == n_total`) this is exactly [`gemm_i32_blocked_with`].
-#[allow(clippy::too_many_arguments)]
-fn gemm_i32_blocked_group(
-    a: &[i8],
-    b: &[i8],
-    c: &mut [i32],
-    m: usize,
-    k_g: usize,
-    n_g: usize,
-    n_total: usize,
-    col0: usize,
-    bm: usize,
-    bk: usize,
-) {
-    let bm = bm.max(1);
-    let bk = bk.max(1);
-    for i0 in (0..m).step_by(bm) {
-        for k0 in (0..k_g).step_by(bk) {
-            let i1 = (i0 + bm).min(m);
-            let k1 = (k0 + bk).min(k_g);
-            for i in i0..i1 {
-                let arow = &a[i * k_g..(i + 1) * k_g];
-                let crow = &mut c[i * n_total + col0..i * n_total + col0 + n_g];
-                for kk in k0..k1 {
-                    let av = arow[kk] as i32;
-                    if av == 0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n_total + col0..kk * n_total + col0 + n_g];
-                    for j in 0..n_g {
-                        crow[j] += av * brow[j] as i32;
-                    }
-                }
-            }
-        }
-    }
+    let mut scratch = GemmScratch::new();
+    scratch.packed.pack_into(b, k, n, 0, n, default_bn(n), bk.max(1));
+    let GemmScratch { bufs, packed } = &mut scratch;
+    gemm_i32_pipelined(a, packed, c, m, n, 0, bm, bufs);
 }
 
 /// Re-layout an NHWC int8 map to NHWCnc (8x16 WMMA tiles contiguous),
@@ -653,6 +676,65 @@ mod tests {
             let mut naive = Vec::new();
             im2col_group_into(&inst, g, &mut naive);
             assert_eq!(im2col_dup_aware_group(&inst, g), naive, "group {g}");
+        }
+    }
+
+    #[test]
+    fn dup_stage_stats_match_simulator_tile_stats() {
+        // the surfaced pass-1 load counter is the same quantity the
+        // simulator models: whole-matrix tile_stats unique (loads) and
+        // total (expanded cells)
+        let cases = [
+            ConvWorkload::new("ds_plain", 1, 6, 6, 8, 8),
+            ConvWorkload::new("ds_grp", 1, 7, 7, 8, 8).with_groups(4).with_dilation(2),
+            ConvWorkload::new("ds_s2", 1, 8, 8, 8, 8).with_stride(2),
+        ];
+        for (i, wl) in cases.iter().enumerate() {
+            let inst = ConvInstance::synthetic(wl, 110 + i as u64);
+            for g in 0..wl.groups {
+                let (cols, stats) = im2col_dup_aware_group_stats(&inst, g);
+                let ix = wl.im2col_group(g);
+                let model = ix.tile_stats(0, wl.gemm_m(), 0, wl.gemm_k());
+                assert_eq!(stats.shared_loads, model.unique, "{} g{g}", wl.name);
+                assert_eq!(stats.expanded_cells, model.total, "{} g{g}", wl.name);
+                assert!(stats.duplicate_factor() >= 1.0);
+                let mut naive = Vec::new();
+                im2col_group_into(&inst, g, &mut naive);
+                assert_eq!(cols, naive, "{} g{g}", wl.name);
+            }
+        }
+    }
+
+    #[test]
+    fn prepack_cache_path_is_bit_identical_and_hits() {
+        // executing through an attached PrepackCache must produce the
+        // exact bits of the uncached path, and same-weight re-execution
+        // must hit instead of re-packing
+        let epi = Epilogue::default();
+        let cache = Arc::new(PrepackCache::new());
+        let mut cached = ExecScratch::new();
+        cached.set_prepack(Arc::clone(&cache));
+        let cases = [
+            ConvWorkload::new("pc_plain", 1, 8, 8, 8, 16),
+            ConvWorkload::new("pc_grp", 1, 7, 7, 8, 8).with_groups(4).with_dilation(2),
+        ];
+        let cfg = crate::searchspace::ScheduleConfig::default();
+        for (i, wl) in cases.iter().enumerate() {
+            let inst = ConvInstance::synthetic(wl, 130 + i as u64);
+            let want = qconv2d(&inst, &epi);
+            let first = qconv2d_scheduled_with(&inst, &epi, &cfg, &mut cached);
+            assert_eq!(first, want, "{} cold", wl.name);
+            let before = cache.stats();
+            let second = qconv2d_scheduled_with(&inst, &epi, &cfg, &mut cached);
+            assert_eq!(second, want, "{} warm", wl.name);
+            let after = cache.stats();
+            assert_eq!(after.misses, before.misses, "{}: warm run must not pack", wl.name);
+            assert_eq!(
+                after.hits,
+                before.hits + wl.groups as u64,
+                "{}: one hit per group",
+                wl.name
+            );
         }
     }
 

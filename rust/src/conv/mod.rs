@@ -18,9 +18,9 @@ mod im2col;
 
 pub use execute::{
     qconv2d, qconv2d_accumulate_with, qconv2d_scheduled, qconv2d_scheduled_with, ConvInstance,
-    ExecScratch,
+    DupStageStats, ExecScratch,
 };
-pub use im2col::{DuplicatesInfo, GemmCoord, Im2colIndex, SourceElem};
+pub use im2col::{DuplicatesInfo, GemmCoord, Im2colIndex, SourceElem, TileStats};
 
 // `Precision` moved to the operator-generic `workload` module (it applies
 // to any reduced-precision GEMM, not just convs); re-exported here so

@@ -1,0 +1,693 @@
+//! The software-pipelined, register-tiled i32 GEMM microkernel — the
+//! substrate-level model of the paper's operand-staging discipline
+//! (Choi et al. §3; Markidis et al., arXiv:1803.04014: Tensor Core
+//! throughput lives or dies by operand staging).
+//!
+//! Three pieces, mirroring the GPU kernel structure on this CPU substrate:
+//!
+//! * [`PackedB`] — the weight operand re-laid-out into contiguous
+//!   `(block_k x block_n)` panels (zero-padded to the 8-wide micro-tile),
+//!   the analogue of the kernel's shared-memory weight staging. Packing is
+//!   separated from multiplying so it can be hoisted out of the hot loop
+//!   entirely (see [`PrepackCache`]).
+//! * [`gemm_i32_pipelined`] — the microkernel: per M-row-block it stages
+//!   the **next** A panel into one of two ping-pong staging buffers while
+//!   the **current** panel multiplies (the software pipeline / double
+//!   buffer), accumulating into an explicit register tile of
+//!   [`MICRO_N`]-wide i32 lanes that only touches the accumulator strip
+//!   once per panel — not once per K step like a row-at-a-time loop nest.
+//!   The inner loop is **branch-free**: latency depends on the operand
+//!   *shape*, never on its values (no data-dependent zero skipping), so
+//!   measured timings are comparable across inputs of any sparsity.
+//! * [`PrepackCache`] — the server-wide prepacked-weight cache: INT4
+//!   weight panels are packed once and shared across `serve::Server`
+//!   workers, `serve::Cluster` shards and direct-op submits. Entries are
+//!   keyed by a fingerprint of the weight *values* plus the full panel
+//!   geometry, so a hit is always bit-correct by construction; a registry
+//!   hot reload additionally [`PrepackCache::invalidate`]s the cache so
+//!   schedules retired by the reload cannot pin stale panel geometries.
+//!
+//! Numerics: i32 addition is associative and commutative, so any
+//! accumulation order — tiled, pipelined, or row-at-a-time — produces
+//! identical bits. The conformance harness pins [`gemm_i32_pipelined`]
+//! bit-equal to [`gemm_i32_blocked_reference`] across the seeded
+//! ~50-workload suite.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use crate::quant::operand_fingerprint;
+
+/// Width of the microkernel's register tile: one [`MICRO_N`]-wide lane of
+/// i32 accumulators is carried in registers across the whole K extent of a
+/// panel. Matches the 8-column WMMA atom (`MMA_N`), so packed panel widths
+/// are exactly the schedule's N-tile granularity.
+pub const MICRO_N: usize = 8;
+
+/// The B (weight) operand of one group's GEMM, re-laid-out into
+/// contiguous `(block_k x block_n)` panels — the CPU analogue of staging
+/// weight tiles into shared memory. Columns are zero-padded up to the
+/// [`MICRO_N`] micro-tile so the microkernel's inner loop never branches
+/// on a ragged edge (padding lanes multiply by zero and are never stored).
+#[derive(Debug, Default, Clone)]
+pub struct PackedB {
+    /// Panel-major data: panels ordered `(k_tile, j_tile)` row-major, each
+    /// panel `height x width` row-major (height = its K extent, width =
+    /// its padded N extent).
+    data: Vec<i8>,
+    /// Byte offset of each `(k_tile, j_tile)` panel in `data`.
+    panel_off: Vec<usize>,
+    k: usize,
+    n_real: usize,
+    n_padded: usize,
+    bn: usize,
+    bk: usize,
+}
+
+impl PackedB {
+    /// An empty operand; [`PackedB::pack_into`] fills it in place.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pack columns `[col0, col0 + n_g)` of the row-major `k x n_total`
+    /// matrix `b` into `(bk x bn)` panels, reusing this value's buffers.
+    ///
+    /// `bn` must be a positive multiple of [`MICRO_N`]; `bk` must be
+    /// positive. The packed width is `n_g` padded up to [`MICRO_N`]
+    /// (padding columns are zero).
+    pub fn pack_into(
+        &mut self,
+        b: &[i8],
+        k: usize,
+        n_total: usize,
+        col0: usize,
+        n_g: usize,
+        bn: usize,
+        bk: usize,
+    ) {
+        assert!(bn >= MICRO_N && bn % MICRO_N == 0, "bn {bn} not a multiple of {MICRO_N}");
+        assert!(bk >= 1, "bk must be >= 1");
+        assert!(col0 + n_g <= n_total, "column stripe out of range");
+        debug_assert!(b.len() >= k * n_total);
+        let n_padded = n_g.div_ceil(MICRO_N) * MICRO_N;
+        let j_tiles = n_padded.div_ceil(bn).max(1);
+        let k_tiles = k.div_ceil(bk).max(1);
+        self.k = k;
+        self.n_real = n_g;
+        self.n_padded = n_padded;
+        self.bn = bn;
+        self.bk = bk;
+        self.panel_off.clear();
+        self.data.clear();
+        self.data.reserve(k * n_padded);
+        for ks in 0..k_tiles {
+            let k0 = ks * bk;
+            let height = (k0 + bk).min(k) - k0;
+            for js in 0..j_tiles {
+                let j0 = js * bn;
+                let width = (j0 + bn).min(n_padded) - j0;
+                self.panel_off.push(self.data.len());
+                for kk in 0..height {
+                    let src_row = (k0 + kk) * n_total + col0;
+                    for jj in 0..width {
+                        let col = j0 + jj;
+                        // zero-pad the ragged N edge: padded lanes
+                        // multiply by zero in the microkernel
+                        let v = if col < n_g { b[src_row + col] } else { 0 };
+                        self.data.push(v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Allocating form of [`PackedB::pack_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack(
+        b: &[i8],
+        k: usize,
+        n_total: usize,
+        col0: usize,
+        n_g: usize,
+        bn: usize,
+        bk: usize,
+    ) -> Self {
+        let mut p = Self::new();
+        p.pack_into(b, k, n_total, col0, n_g, bn, bk);
+        p
+    }
+
+    /// One `(k_tile, j_tile)` panel, `height * width` row-major.
+    fn panel(&self, ks: usize, js: usize, height: usize, width: usize) -> &[i8] {
+        let j_tiles = self.n_padded.div_ceil(self.bn).max(1);
+        let off = self.panel_off[ks * j_tiles + js];
+        &self.data[off..off + height * width]
+    }
+
+    /// Accumulation depth this operand was packed for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Real (unpadded) output columns.
+    pub fn n_real(&self) -> usize {
+        self.n_real
+    }
+
+    /// Packed width (`n_real` padded up to [`MICRO_N`]).
+    pub fn n_padded(&self) -> usize {
+        self.n_padded
+    }
+
+    /// The `(bn, bk)` panel geometry.
+    pub fn geometry(&self) -> (usize, usize) {
+        (self.bn, self.bk)
+    }
+
+    /// Bytes held by the packed panels (cache accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// The microkernel's reusable staging buffers: the two ping-pong A-panel
+/// buffers the software pipeline alternates between, and the
+/// `block_m x n_padded` i32 accumulator strip the register tiles spill
+/// into once per panel.
+#[derive(Debug, Default)]
+pub struct PipelineBufs {
+    /// Ping-pong A panels: while panel `cur` multiplies, the next K step's
+    /// panel is staged into `cur ^ 1`.
+    a: [Vec<i8>; 2],
+    /// Row-block accumulator strip (`rows x n_padded`).
+    acc: Vec<i32>,
+}
+
+/// Reusable GEMM scratch: the pipeline's staging buffers plus a
+/// [`PackedB`] reused by callers that pack per call (no [`PrepackCache`]
+/// attached — e.g. direct one-shot execution or graph nodes).
+#[derive(Debug, Default)]
+pub struct GemmScratch {
+    /// Staging buffers for [`gemm_i32_pipelined`].
+    pub(crate) bufs: PipelineBufs,
+    /// Reused packed-operand buffer for the uncached path.
+    pub(crate) packed: PackedB,
+}
+
+impl GemmScratch {
+    /// Empty scratch; buffers grow to the first GEMM's sizes on use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Stage one `rows x height` A panel (row stride `bk` in the panel) from
+/// the row-major `m x k` operand — the pipeline's "load the next panel
+/// while the current one multiplies" copy.
+fn pack_a_panel(
+    a: &[i8],
+    k: usize,
+    i0: usize,
+    rows: usize,
+    k0: usize,
+    height: usize,
+    bk: usize,
+    panel: &mut [i8],
+) {
+    for r in 0..rows {
+        let src = (i0 + r) * k + k0;
+        panel[r * bk..r * bk + height].copy_from_slice(&a[src..src + height]);
+    }
+}
+
+/// Multiply one staged A panel (`rows x height`, row stride `bk`) by one
+/// packed B panel (`height x width`), accumulating into the strip's
+/// columns `[j0, j0 + width)`. The inner loop carries a [`MICRO_N`]-wide
+/// i32 register tile across the whole `height` extent — branch-free, no
+/// data-dependent skipping — and touches the accumulator strip exactly
+/// once per `(row, micro-column)` pair.
+#[allow(clippy::too_many_arguments)]
+fn multiply_panel(
+    apanel: &[i8],
+    bpanel: &[i8],
+    acc: &mut [i32],
+    rows: usize,
+    height: usize,
+    bk: usize,
+    np: usize,
+    j0: usize,
+    width: usize,
+) {
+    debug_assert_eq!(width % MICRO_N, 0);
+    for r in 0..rows {
+        let arow = &apanel[r * bk..r * bk + height];
+        for jr in (0..width).step_by(MICRO_N) {
+            let mut tile = [0i32; MICRO_N];
+            for (kk, &av) in arow.iter().enumerate() {
+                let av = av as i32;
+                let brow = &bpanel[kk * width + jr..kk * width + jr + MICRO_N];
+                for (t, &bv) in tile.iter_mut().zip(brow) {
+                    *t += av * bv as i32;
+                }
+            }
+            let dst = &mut acc[r * np + j0 + jr..r * np + j0 + jr + MICRO_N];
+            for (d, t) in dst.iter_mut().zip(tile) {
+                *d += t;
+            }
+        }
+    }
+}
+
+/// The software-pipelined, register-tiled i32 GEMM:
+/// `(m x k) i8 . PackedB -> c[:, col0..col0 + n_real] (+=)`, where `c` is
+/// row-major with row stride `n_total`.
+///
+/// Structure (per `bm`-row block): stage A panel 0, then for every K step
+/// stage the **next** A panel into the other ping-pong buffer before
+/// multiplying the current one against that step's packed B panels —
+/// the double-buffered pipeline of `ordered double buffering` GPU
+/// mainloops. `(bm, bn, bk)` come from the tuned schedule: `bm` is passed
+/// here, `(bn, bk)` were fixed when `b` was packed.
+///
+/// Accumulates (`+=`) into `c`, preserving the blocked-GEMM contract:
+/// callers zero `c` first, grouped convolutions write disjoint column
+/// stripes of one accumulator.
+pub fn gemm_i32_pipelined(
+    a: &[i8],
+    b: &PackedB,
+    c: &mut [i32],
+    m: usize,
+    n_total: usize,
+    col0: usize,
+    bm: usize,
+    bufs: &mut PipelineBufs,
+) {
+    let bm = bm.max(1);
+    let (k, np, n_real) = (b.k, b.n_padded, b.n_real);
+    let (bn, bk) = (b.bn, b.bk);
+    debug_assert!(a.len() >= m * k);
+    debug_assert!(col0 + n_real <= n_total);
+    let j_tiles = np.div_ceil(bn).max(1);
+    let k_tiles = k.div_ceil(bk).max(1);
+    bufs.acc.resize(bm * np, 0);
+    for p in &mut bufs.a {
+        p.resize(bm * bk, 0);
+    }
+
+    for i0 in (0..m).step_by(bm) {
+        let rows = (i0 + bm).min(m) - i0;
+        bufs.acc[..rows * np].fill(0);
+        let mut cur = 0usize;
+        let first_h = bk.min(k);
+        pack_a_panel(a, k, i0, rows, 0, first_h, bk, &mut bufs.a[cur]);
+        for ks in 0..k_tiles {
+            let k0 = ks * bk;
+            let height = (k0 + bk).min(k) - k0;
+            // software pipeline: stage K step ks+1 while step ks multiplies
+            if ks + 1 < k_tiles {
+                let nk0 = (ks + 1) * bk;
+                let nh = (nk0 + bk).min(k) - nk0;
+                pack_a_panel(a, k, i0, rows, nk0, nh, bk, &mut bufs.a[cur ^ 1]);
+            }
+            let apanel = &bufs.a[cur];
+            for js in 0..j_tiles {
+                let j0 = js * bn;
+                let width = (j0 + bn).min(np) - j0;
+                let bpanel = b.panel(ks, js, height, width);
+                multiply_panel(
+                    apanel,
+                    bpanel,
+                    &mut bufs.acc,
+                    rows,
+                    height,
+                    bk,
+                    np,
+                    j0,
+                    width,
+                );
+            }
+            cur ^= 1;
+        }
+        // spill the strip's real columns into the caller's accumulator
+        for r in 0..rows {
+            let crow = &mut c[(i0 + r) * n_total + col0..(i0 + r) * n_total + col0 + n_real];
+            let srow = &bufs.acc[r * np..r * np + n_real];
+            for (cv, &sv) in crow.iter_mut().zip(srow) {
+                *cv += sv;
+            }
+        }
+    }
+}
+
+/// Default packed-panel width for callers without a tuned schedule: the
+/// padded operand width, capped at the largest block the schedule space
+/// uses on this substrate.
+pub fn default_bn(n: usize) -> usize {
+    (n.div_ceil(MICRO_N) * MICRO_N).clamp(MICRO_N, 64)
+}
+
+/// The pre-pipeline blocked loop nest, zero-skip-free — kept as the
+/// conformance oracle and the bench baseline the microkernel is measured
+/// against. Accumulates (`+=`) into `c` like every GEMM here; identical
+/// bits to [`gemm_i32_pipelined`] by i32 associativity/commutativity.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_blocked_reference(
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    bm: usize,
+    bk: usize,
+) {
+    let bm = bm.max(1);
+    let bk = bk.max(1);
+    for i0 in (0..m).step_by(bm) {
+        for k0 in (0..k).step_by(bk) {
+            let i1 = (i0 + bm).min(m);
+            let k1 = (k0 + bk).min(k);
+            for i in i0..i1 {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    // no zero-skip: latency must not depend on operand
+                    // values (post-ReLU INT4 activations are heavily zero)
+                    let av = arow[kk] as i32;
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j] as i32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server-wide prepacked-weight cache
+// ---------------------------------------------------------------------------
+
+/// Everything a packed operand's bits depend on: the weight values (by
+/// fingerprint + length), the GEMM stripe and the panel geometry. Because
+/// the key covers the *values*, a cache hit is bit-correct by
+/// construction — a stale-cache serve is impossible, reload or not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PrepackKey {
+    fingerprint: u64,
+    len: usize,
+    k: usize,
+    n_total: usize,
+    col0: usize,
+    n_g: usize,
+    bn: usize,
+    bk: usize,
+}
+
+/// Counters of one [`PrepackCache`]'s lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrepackStats {
+    /// Lookups served from the cache (the pack work skipped).
+    pub hits: u64,
+    /// Lookups that had to pack (first sight of a weight/geometry pair).
+    pub misses: u64,
+    /// Entries dropped by [`PrepackCache::invalidate`] over the cache's
+    /// lifetime (each registry hot reload clears the whole cache).
+    pub invalidations: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Packed bytes currently resident.
+    pub bytes: usize,
+}
+
+/// Server-wide prepacked-weight cache: INT4 weight operands are packed
+/// into [`PackedB`] panels **once** and shared — across the workers of a
+/// [`crate::serve::Server`], across every shard of a
+/// [`crate::serve::Cluster`] (shards are constructed over one shared
+/// cache), and with direct-op submits through any scratch the cache is
+/// attached to.
+///
+/// Correctness never depends on invalidation: the key fingerprints the
+/// weight values and the full panel geometry, so an entry can only ever
+/// be returned for exactly the operand it was packed from. Registry hot
+/// reloads still [`PrepackCache::invalidate`] the cache — a reload
+/// changes tuned schedules, hence panel geometries, and the packs the old
+/// schedules pinned would otherwise stay resident forever.
+#[derive(Debug, Default)]
+pub struct PrepackCache {
+    map: Mutex<HashMap<PrepackKey, Arc<PackedB>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl PrepackCache {
+    /// An empty cache, ready to share (`Arc::new(PrepackCache::new())`).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The packed form of columns `[col0, col0 + n_g)` of the `k x
+    /// n_total` weight matrix `b` under panel geometry `(bn, bk)` —
+    /// served from the cache when this exact operand was packed before,
+    /// packed (and retained) otherwise. `fingerprint` must be
+    /// [`operand_fingerprint`]`(b)`; callers hoist it so grouped convs
+    /// hash the weights once, not once per group.
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_or_pack(
+        &self,
+        fingerprint: u64,
+        b: &[i8],
+        k: usize,
+        n_total: usize,
+        col0: usize,
+        n_g: usize,
+        bn: usize,
+        bk: usize,
+    ) -> Arc<PackedB> {
+        let key = PrepackKey { fingerprint, len: b.len(), k, n_total, col0, n_g, bn, bk };
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        // pack outside the lock: packing is the expensive part, and two
+        // racing packers of the same key produce identical bits anyway
+        let packed = Arc::new(PackedB::pack(b, k, n_total, col0, n_g, bn, bk));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map.lock().unwrap().insert(key, Arc::clone(&packed));
+        packed
+    }
+
+    /// Drop every entry (the registry-hot-reload hook); returns how many
+    /// were evicted. In-flight executions holding an `Arc<PackedB>`
+    /// finish on their packed operand — eviction only unpins memory.
+    pub fn invalidate(&self) -> usize {
+        let mut map = self.map.lock().unwrap();
+        let evicted = map.len();
+        map.clear();
+        self.invalidations.fetch_add(evicted as u64, Ordering::Relaxed);
+        evicted
+    }
+
+    /// Lifetime counters and current residency.
+    pub fn stats(&self) -> PrepackStats {
+        let map = self.map.lock().unwrap();
+        PrepackStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            entries: map.len(),
+            bytes: map.values().map(|p| p.bytes()).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{check, Rng};
+
+    fn random_operands(rng: &mut Rng, m: usize, n: usize, k: usize) -> (Vec<i8>, Vec<i8>) {
+        let a = (0..m * k).map(|_| rng.gen_range(16) as i8 - 8).collect();
+        let b = (0..k * n).map(|_| rng.gen_range(16) as i8 - 8).collect();
+        (a, b)
+    }
+
+    fn naive(a: &[i8], b: &[i8], m: usize, n: usize, k: usize) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    c[i * n + j] += a[i * k + kk] as i32 * b[kk * n + j] as i32;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn pipelined_matches_naive_on_ragged_shapes() {
+        // ragged everything: m, n, k deliberately not multiples of the
+        // blocking, so edge panels, padded lanes and short K tails all run
+        let mut rng = Rng::new(7);
+        for &(m, n, k, bm, bn, bk) in &[
+            (1usize, 1usize, 1usize, 8usize, 8usize, 32usize),
+            (5, 3, 7, 8, 8, 32),
+            (17, 12, 33, 8, 8, 32),
+            (64, 24, 96, 16, 16, 32),
+            (33, 40, 100, 32, 24, 48),
+            (100, 7, 65, 64, 64, 128),
+        ] {
+            let (a, b) = random_operands(&mut rng, m, n, k);
+            let want = naive(&a, &b, m, n, k);
+            let packed = PackedB::pack(&b, k, n, 0, n, bn, bk);
+            let mut got = vec![0i32; m * n];
+            let mut bufs = PipelineBufs::default();
+            gemm_i32_pipelined(&a, &packed, &mut got, m, n, 0, bm, &mut bufs);
+            assert_eq!(got, want, "m={m} n={n} k={k} bm={bm} bn={bn} bk={bk}");
+        }
+    }
+
+    #[test]
+    fn prop_pipelined_bit_equals_blocked_reference() {
+        check::forall(40, |rng| {
+            let m = 1 + rng.gen_range(40);
+            let n = 1 + rng.gen_range(40);
+            let k = 1 + rng.gen_range(80);
+            let bm = 1 + rng.gen_range(64);
+            let bn = MICRO_N * (1 + rng.gen_range(8));
+            let bk = 1 + rng.gen_range(128);
+            let (a, b) = random_operands(rng, m, n, k);
+            let mut want = vec![0i32; m * n];
+            gemm_i32_blocked_reference(&a, &b, &mut want, m, n, k, bm, bk);
+            let packed = PackedB::pack(&b, k, n, 0, n, bn, bk);
+            let mut got = vec![0i32; m * n];
+            gemm_i32_pipelined(&a, &packed, &mut got, m, n, 0, bm, &mut PipelineBufs::default());
+            assert_eq!(got, want, "m={m} n={n} k={k} bm={bm} bn={bn} bk={bk}");
+        });
+    }
+
+    #[test]
+    fn column_stripe_accumulates_like_grouped_gemm() {
+        // two groups writing disjoint stripes of one accumulator, each
+        // packed from its own column range of the shared weight matrix
+        let mut rng = Rng::new(11);
+        let (m, n_g, k_g, groups) = (10, 6, 20, 2);
+        let n_total = n_g * groups;
+        let b: Vec<i8> = (0..k_g * n_total).map(|_| rng.gen_range(16) as i8 - 8).collect();
+        let mut c = vec![0i32; m * n_total];
+        let mut want = vec![0i32; m * n_total];
+        let mut bufs = PipelineBufs::default();
+        for g in 0..groups {
+            let a: Vec<i8> = (0..m * k_g).map(|_| rng.gen_range(16) as i8 - 8).collect();
+            let col0 = g * n_g;
+            let packed = PackedB::pack(&b, k_g, n_total, col0, n_g, 8, 32);
+            gemm_i32_pipelined(&a, &packed, &mut c, m, n_total, col0, 8, &mut bufs);
+            for i in 0..m {
+                for j in 0..n_g {
+                    for kk in 0..k_g {
+                        want[i * n_total + col0 + j] +=
+                            a[i * k_g + kk] as i32 * b[kk * n_total + col0 + j] as i32;
+                    }
+                }
+            }
+        }
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn pipelined_accumulates_into_nonzero_c() {
+        // the += contract: pre-existing accumulator contents survive
+        let mut rng = Rng::new(3);
+        let (m, n, k) = (6, 9, 14);
+        let (a, b) = random_operands(&mut rng, m, n, k);
+        let base: Vec<i32> = (0..m * n).map(|i| i as i32 * 13 - 40).collect();
+        let mut got = base.clone();
+        let packed = PackedB::pack(&b, k, n, 0, n, 16, 8);
+        gemm_i32_pipelined(&a, &packed, &mut got, m, n, 0, 4, &mut PipelineBufs::default());
+        let want: Vec<i32> =
+            naive(&a, &b, m, n, k).iter().zip(&base).map(|(x, y)| x + y).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn packed_b_pads_columns_with_zeros() {
+        let b: Vec<i8> = (1..=6).map(|v| v as i8).collect(); // 2x3
+        let p = PackedB::pack(&b, 2, 3, 0, 3, 8, 32);
+        assert_eq!(p.n_real(), 3);
+        assert_eq!(p.n_padded(), 8);
+        assert_eq!(p.geometry(), (8, 32));
+        assert_eq!(p.bytes(), 2 * 8);
+        // panel rows: real columns then zero padding
+        assert_eq!(&p.data[..8], &[1, 2, 3, 0, 0, 0, 0, 0]);
+        assert_eq!(&p.data[8..], &[4, 5, 6, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_bit_invariant() {
+        let mut rng = Rng::new(21);
+        let mut scratch = GemmScratch::new();
+        for &(m, n, k) in &[(20usize, 12usize, 40usize), (8, 8, 8), (33, 17, 90)] {
+            let (a, b) = random_operands(&mut rng, m, n, k);
+            let want = naive(&a, &b, m, n, k);
+            scratch.packed.pack_into(&b, k, n, 0, n, default_bn(n), 32);
+            let GemmScratch { bufs, packed } = &mut scratch;
+            let mut got = vec![0i32; m * n];
+            gemm_i32_pipelined(&a, packed, &mut got, m, n, 0, 16, bufs);
+            assert_eq!(got, want, "{m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn prepack_cache_hits_on_same_weights_and_misses_on_changed() {
+        let cache = PrepackCache::new();
+        let mut rng = Rng::new(9);
+        let (k, n) = (12, 8);
+        let b1: Vec<i8> = (0..k * n).map(|_| rng.gen_range(16) as i8 - 8).collect();
+        let fp1 = operand_fingerprint(&b1);
+        let p1 = cache.get_or_pack(fp1, &b1, k, n, 0, n, 8, 32);
+        let p2 = cache.get_or_pack(fp1, &b1, k, n, 0, n, 8, 32);
+        assert!(Arc::ptr_eq(&p1, &p2), "same weights+geometry must hit");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+
+        // different weight values: the fingerprint key forces a fresh pack
+        // — this is why a stale-cache serve is impossible by construction
+        let mut b2 = b1.clone();
+        b2[5] = b2[5].wrapping_add(1);
+        let p3 = cache.get_or_pack(operand_fingerprint(&b2), &b2, k, n, 0, n, 8, 32);
+        assert!(!Arc::ptr_eq(&p1, &p3));
+        // different geometry also misses
+        let _ = cache.get_or_pack(fp1, &b1, k, n, 0, n, 8, 64);
+        assert_eq!(cache.stats().entries, 3);
+        assert!(cache.stats().bytes > 0);
+    }
+
+    #[test]
+    fn prepack_cache_invalidate_clears_and_counts() {
+        let cache = PrepackCache::new();
+        let b = vec![1i8; 32 * 8];
+        let fp = operand_fingerprint(&b);
+        let held = cache.get_or_pack(fp, &b, 32, 8, 0, 8, 8, 32);
+        assert_eq!(cache.invalidate(), 1);
+        let s = cache.stats();
+        assert_eq!((s.entries, s.bytes, s.invalidations), (0, 0, 1));
+        // in-flight holders keep their packed operand alive
+        assert_eq!(held.n_real(), 8);
+        // next lookup re-packs (miss), and produces identical bits
+        let repacked = cache.get_or_pack(fp, &b, 32, 8, 0, 8, 8, 32);
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(repacked.data, held.data);
+    }
+
+    #[test]
+    fn default_bn_is_padded_and_capped() {
+        assert_eq!(default_bn(1), 8);
+        assert_eq!(default_bn(8), 8);
+        assert_eq!(default_bn(12), 16);
+        assert_eq!(default_bn(64), 64);
+        assert_eq!(default_bn(512), 64);
+    }
+}

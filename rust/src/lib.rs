@@ -84,6 +84,7 @@
 
 pub mod conv;
 pub mod costmodel;
+pub mod gemm;
 pub mod graph;
 pub mod util;
 pub mod explore;

@@ -13,8 +13,9 @@ mod pack;
 mod warp;
 
 pub use pack::{
-    clip_int4, pack_int4, pack_int4_into, pack_int4_padded, pack_int4_padded_into,
-    requantize, unpack_int4, Epilogue, RequantParams, INT4_MAX, INT4_MIN, PACK_FACTOR,
+    clip_int4, operand_fingerprint, pack_int4, pack_int4_into, pack_int4_padded,
+    pack_int4_padded_into, requantize, unpack_int4, Epilogue, RequantParams, INT4_MAX,
+    INT4_MIN, PACK_FACTOR,
 };
 pub use warp::{warp_pack_int4, warp_shuffle_down, WarpRegisterFile, WARP_SIZE};
 

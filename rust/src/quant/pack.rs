@@ -89,6 +89,22 @@ pub fn unpack_int4(words: &[i32]) -> Vec<i32> {
     out
 }
 
+/// Content fingerprint of a quantized operand (FNV-1a 64 over the raw
+/// bytes). This is the identity the server-wide prepacked-weight cache
+/// keys on: two weight tensors with the same fingerprint, length and
+/// panel geometry pack to identical bits, so a cache hit can never serve
+/// stale numerics — see [`crate::gemm::PrepackCache`].
+pub fn operand_fingerprint(values: &[i8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &v in values {
+        h ^= (v as u8) as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 /// The post-convolution epilogue of §3.2.2: bias add -> optional ReLU ->
 /// requantize to INT4. The *placement* of this epilogue (before vs after
 /// the shared-memory store) is what the `reg_packing` schedule flag moves;
@@ -319,6 +335,16 @@ mod tests {
                 assert!((INT4_MIN..=INT4_MAX).contains(&v));
             }
         });
+    }
+
+    #[test]
+    fn operand_fingerprint_discriminates_values_and_order() {
+        let a = vec![1i8, 2, 3, -4];
+        assert_eq!(operand_fingerprint(&a), operand_fingerprint(&a));
+        assert_ne!(operand_fingerprint(&a), operand_fingerprint(&[1, 2, 3, 4]));
+        assert_ne!(operand_fingerprint(&a), operand_fingerprint(&[2, 1, 3, -4]));
+        // FNV-1a of the empty input is the offset basis, not zero
+        assert_ne!(operand_fingerprint(&[]), 0);
     }
 
     // ----- RequantParams / saturation-edge coverage ------------------------

@@ -209,6 +209,10 @@ struct ClusterInner {
     spilled: AtomicU64,
     /// Requests rejected with [`SubmitError::Overloaded`].
     shed: AtomicU64,
+    /// ONE prepacked-weight cache shared by every shard (and every
+    /// restarted shard): a weight packed on any shard is a hit on all of
+    /// them, and any shard's registry reload invalidates fleet-wide.
+    prepack: Arc<crate::gemm::PrepackCache>,
 }
 
 impl ClusterInner {
@@ -387,7 +391,11 @@ impl ClusterHandle {
         if guard.server.is_some() {
             return false;
         }
-        let server = Server::from_registry(self.inner.cfg.shard.clone(), guard.registry.clone());
+        let server = Server::from_registry_with_prepack(
+            self.inner.cfg.shard.clone(),
+            guard.registry.clone(),
+            Arc::clone(&self.inner.prepack),
+        );
         for (topo, weights, epi) in self.inner.graphs.lock().unwrap().values() {
             // cannot fail: the first install validated this graph
             let _ = server.install_graph(topo.clone(), weights.clone(), *epi);
@@ -480,6 +488,13 @@ impl ClusterHandle {
         self.inner.spilled.load(Ordering::Relaxed)
     }
 
+    /// Counters of the fleet-wide prepacked-weight cache (one cache
+    /// shared by every shard — see
+    /// [`Server::from_registry_with_prepack`]).
+    pub fn prepack_stats(&self) -> crate::gemm::PrepackStats {
+        self.inner.prepack.stats()
+    }
+
     /// Requests currently queued across all live shards.
     pub fn queue_len(&self) -> usize {
         self.inner
@@ -537,10 +552,18 @@ impl Cluster {
     pub fn from_registry(mut cfg: ClusterConfig, registry: ScheduleRegistry) -> Self {
         cfg.shards = cfg.shards.max(1);
         let ring = HashRing::new(cfg.shards, cfg.vnodes, cfg.seed);
+        // one prepack cache for the whole fleet: shards serve the same
+        // kinds (ring reroutes on kill/restart), so per-shard caches
+        // would pack every weight `shards` times over
+        let prepack = Arc::new(crate::gemm::PrepackCache::new());
         let slots = (0..cfg.shards)
             .map(|_| {
                 Mutex::new(ShardSlot {
-                    server: Some(Server::from_registry(cfg.shard.clone(), registry.clone())),
+                    server: Some(Server::from_registry_with_prepack(
+                        cfg.shard.clone(),
+                        registry.clone(),
+                        Arc::clone(&prepack),
+                    )),
                     registry: registry.clone(),
                 })
             })
@@ -556,6 +579,7 @@ impl Cluster {
             archived: Mutex::new(Vec::new()),
             spilled: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            prepack,
         });
         Self { handle: ClusterHandle { inner } }
     }
@@ -662,6 +686,11 @@ impl Cluster {
     /// See [`ClusterHandle::spill_count`].
     pub fn spill_count(&self) -> u64 {
         self.handle.spill_count()
+    }
+
+    /// See [`ClusterHandle::prepack_stats`].
+    pub fn prepack_stats(&self) -> crate::gemm::PrepackStats {
+        self.handle.prepack_stats()
     }
 
     /// See [`ClusterHandle::queue_len`].

@@ -96,6 +96,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::gemm::{PrepackCache, PrepackStats};
 use crate::graph::{GraphInput, GraphPlan, GraphScratch, GraphTopology, GraphWeights};
 use crate::quant::{Epilogue, RequantParams};
 use crate::registry::ScheduleRegistry;
@@ -296,6 +297,14 @@ struct Shared {
     registry: Mutex<Arc<RegistrySnapshot>>,
     /// Installed whole-network graphs, keyed by `graph:<net>` kind.
     graphs: Mutex<HashMap<String, Arc<GraphDef>>>,
+    /// Server-wide prepacked-weight cache: every worker's scratch resolves
+    /// weight panels through it, so INT4 weights are packed once per
+    /// (weights, geometry) — not once per request. Invalidated on every
+    /// registry reload/update (a reload retires tuned schedules, hence
+    /// panel geometries); entries are content-keyed, so staleness can
+    /// affect memory only, never numerics. A [`Cluster`] passes ONE cache
+    /// to all its shards via [`Server::from_registry_with_prepack`].
+    prepack: Arc<PrepackCache>,
 }
 
 impl Shared {
@@ -397,9 +406,15 @@ impl Shared {
     }
 
     fn reload(&self, registry: ScheduleRegistry) -> u64 {
-        let mut slot = self.registry.lock().unwrap();
-        let version = slot.version + 1;
-        *slot = Arc::new(RegistrySnapshot { version, registry });
+        let version = {
+            let mut slot = self.registry.lock().unwrap();
+            let version = slot.version + 1;
+            *slot = Arc::new(RegistrySnapshot { version, registry });
+            version
+        };
+        // retired schedules pinned their panel geometries; drop the packs
+        // (in-flight batches holding Arc<PackedB> finish unaffected)
+        self.prepack.invalidate();
         version
     }
 
@@ -408,11 +423,15 @@ impl Shared {
     /// swap (unlike cloning a snapshot, mutating it for a while, and
     /// reloading the stale clone).
     fn update(&self, f: impl FnOnce(&mut ScheduleRegistry)) -> u64 {
-        let mut slot = self.registry.lock().unwrap();
-        let mut registry = slot.registry.clone();
-        f(&mut registry);
-        let version = slot.version + 1;
-        *slot = Arc::new(RegistrySnapshot { version, registry });
+        let version = {
+            let mut slot = self.registry.lock().unwrap();
+            let mut registry = slot.registry.clone();
+            f(&mut registry);
+            let version = slot.version + 1;
+            *slot = Arc::new(RegistrySnapshot { version, registry });
+            version
+        };
+        self.prepack.invalidate();
         version
     }
 }
@@ -510,6 +529,12 @@ impl ServeHandle {
     pub fn completed(&self) -> u64 {
         self.shared.completed.load(Ordering::SeqCst)
     }
+
+    /// Hit/miss/invalidation counters of the server's prepacked-weight
+    /// cache (see [`Server::prepack_stats`]).
+    pub fn prepack_stats(&self) -> PrepackStats {
+        self.shared.prepack.stats()
+    }
 }
 
 impl Server {
@@ -524,6 +549,19 @@ impl Server {
     /// [`ScheduleRegistry::load`]ed from the file `repro tune-net` wrote);
     /// kinds missing from the registry fall back to the default schedule.
     pub fn from_registry(cfg: ServerConfig, registry: ScheduleRegistry) -> Self {
+        Self::from_registry_with_prepack(cfg, registry, Arc::new(PrepackCache::new()))
+    }
+
+    /// [`Server::from_registry`] sharing a caller-owned
+    /// [`PrepackCache`]: weights packed by one server are reused by every
+    /// other server on the same cache — how a [`Cluster`] gives all its
+    /// shards one cache, and how a restarted shard inherits the fleet's
+    /// warm packs.
+    pub fn from_registry_with_prepack(
+        cfg: ServerConfig,
+        registry: ScheduleRegistry,
+        prepack: Arc<PrepackCache>,
+    ) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
@@ -536,6 +574,7 @@ impl Server {
             next_id: AtomicU64::new(1),
             registry: Mutex::new(Arc::new(RegistrySnapshot { version: 1, registry })),
             graphs: Mutex::new(HashMap::new()),
+            prepack,
         });
         let metrics = Arc::new(Metrics::new());
         let workers = (0..cfg.workers.max(1))
@@ -668,6 +707,15 @@ impl Server {
         self.shared.completed.load(Ordering::SeqCst)
     }
 
+    /// Hit/miss/invalidation counters of the server's prepacked-weight
+    /// cache: `hits` are weight packs the cache skipped, `misses` the
+    /// packs it performed, `invalidations` entries dropped by registry
+    /// reloads. On a cluster-shared cache ([`Cluster`]) the counters
+    /// aggregate every shard.
+    pub fn prepack_stats(&self) -> PrepackStats {
+        self.shared.prepack.stats()
+    }
+
     /// Stop accepting, drain, and join the workers.
     ///
     /// Drain guarantee: every request `submit` ever returned `Ok` for is
@@ -776,6 +824,9 @@ fn worker_loop(
     worker: usize,
 ) {
     let mut scratch = OpScratch::new();
+    // all workers share the server's prepack cache: the first worker to
+    // see a (weights, geometry) pair packs it, everyone else hits
+    scratch.set_prepack(Arc::clone(&shared.prepack));
     let mut gscratch = GraphScratch::new();
     let tick = Duration::from_micros(BATCH_WAIT_TICK_US);
     loop {

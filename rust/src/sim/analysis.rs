@@ -6,9 +6,11 @@
 
 use std::collections::HashMap;
 
+use super::GpuSpec;
 use crate::layout;
 use crate::searchspace::{ScheduleConfig, MMA_M, MMA_N};
-use crate::workload::Workload;
+use crate::util::Json;
+use crate::workload::{Precision, Workload};
 
 // The profile struct lives with the operator abstraction (each operator
 // computes its own); re-exported here because this module is its main
@@ -223,6 +225,208 @@ pub fn analyze(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Roofline check: measured hot path vs modeled traffic floor
+// ---------------------------------------------------------------------------
+
+/// M-row-block granularity the roofline's cold-traffic profile is taken
+/// at. Fixed (rather than read from the tuned schedule) so a kind's
+/// modeled floor never moves when its schedule is retuned — the roofline
+/// models the *problem*, not the schedule — and so the profile stays
+/// cheap: one [`Workload::row_block_profile`] at a single block height,
+/// amortized by the [`ProfileCache`], instead of an exact duplicate
+/// enumeration over the whole M axis.
+pub const ROOFLINE_BLOCK_M: usize = 64;
+
+/// Analytic lower bound on the workload's runtime, microseconds: the
+/// slower of its compute ceiling (MAC count over the GPU's
+/// precision-matched tensor-core rate) and its memory ceiling (cold
+/// operand + output bytes over DRAM bandwidth). Deliberately
+/// schedule-free — unlike [`analyze`] it never judges tile legality, so
+/// it is defined for every workload shape, including ragged-M bench
+/// kinds no legal `block_m` divides.
+///
+/// Absolute microseconds only mean something on the modeled GPU; the
+/// interpreter that *measures* the hot path runs on a CPU at some
+/// unknown constant factor above this floor. [`roofline_check`] therefore
+/// compares *shapes*: it fits one common scale across kinds and flags
+/// kinds whose measured/modeled ratio deviates from that scale.
+pub fn roofline_us(wl: &dyn Workload, gpu: &GpuSpec, cache: &mut ProfileCache) -> f64 {
+    let eb = wl.precision().element_bytes();
+    let groups = wl.groups() as f64;
+    let (m, n, k) = (wl.gemm_m(), wl.gemm_n(), wl.gemm_k());
+
+    // compute ceiling: ops() is MACs x2
+    let macs = wl.ops() as f64 / 2.0;
+    let macs_per_cycle = match wl.precision() {
+        Precision::Int4 => gpu.int4_macs_per_cycle,
+        Precision::Int8 => gpu.int8_macs_per_cycle,
+    };
+    let t_compute_us = macs / (macs_per_cycle * gpu.sms as f64 * gpu.clock_ghz * 1e3);
+
+    // memory ceiling: every distinct byte crosses DRAM once — features
+    // duplicate-elided per row-block (the best any schedule can do),
+    // weights and the packed output whole.
+    let prof = cache.profile(wl, ROOFLINE_BLOCK_M);
+    let n_row_blocks = m.div_ceil(ROOFLINE_BLOCK_M).max(1) as f64;
+    let feature_bytes = prof.unique_per_row_block * n_row_blocks * groups * eb;
+    let weight_bytes = (k * n) as f64 * groups * eb;
+    let output_bytes = (m * n) as f64 * groups * eb;
+    let t_memory_us = (feature_bytes + weight_bytes + output_bytes) / (gpu.dram_gbps * 1e3);
+
+    t_compute_us.max(t_memory_us)
+}
+
+/// One (kind, measured latency, modeled floor) sample fed to
+/// [`roofline_check`].
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    /// Registry/serving kind the measurement belongs to.
+    pub kind: String,
+    /// Measured hot-path latency, microseconds.
+    pub measured_us: f64,
+    /// Modeled floor from [`roofline_us`], microseconds.
+    pub modeled_us: f64,
+}
+
+/// One kind's verdict inside a [`RooflineReport`].
+#[derive(Debug, Clone)]
+pub struct RooflineRow {
+    /// Registry/serving kind.
+    pub kind: String,
+    /// Measured hot-path latency, microseconds.
+    pub measured_us: f64,
+    /// Modeled floor, microseconds.
+    pub modeled_us: f64,
+    /// `measured_us / modeled_us`.
+    pub ratio: f64,
+    /// Symmetric deviation of this kind's ratio from the fleet-wide
+    /// scale: `max(ratio / scale, scale / ratio)`, always >= 1.
+    pub deviation: f64,
+    /// Whether the deviation exceeded the report's tolerance.
+    pub flagged: bool,
+}
+
+/// Verdict of one roofline pass over a set of measured kinds.
+#[derive(Debug, Clone)]
+pub struct RooflineReport {
+    /// Per-kind verdicts, in input order.
+    pub rows: Vec<RooflineRow>,
+    /// Geometric-mean measured/modeled ratio — the fitted constant
+    /// factor between the measuring substrate and the modeled GPU.
+    pub scale: f64,
+    /// Maximum accepted deviation from `scale`.
+    pub tolerance: f64,
+}
+
+impl RooflineReport {
+    /// Whether every kind's measured latency tracks the modeled floor to
+    /// within the tolerance.
+    pub fn pass(&self) -> bool {
+        self.rows.iter().all(|r| !r.flagged)
+    }
+
+    /// Human-readable table, one line per kind, flagged kinds marked.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "roofline: scale x{:.2}, tolerance {:.1}, {}\n",
+            self.scale,
+            self.tolerance,
+            if self.pass() { "pass" } else { "FAIL" }
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "  {:<28} measured {:>10.1} us  modeled {:>8.2} us  dev x{:.2}{}\n",
+                r.kind,
+                r.measured_us,
+                r.modeled_us,
+                r.deviation,
+                if r.flagged { "  << FLAGGED" } else { "" }
+            ));
+        }
+        out
+    }
+
+    /// JSON object for the committed `BENCH_*.json` trajectory files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scale", Json::Num(self.scale)),
+            ("tolerance", Json::Num(self.tolerance)),
+            ("pass", Json::Bool(self.pass())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("kind", Json::Str(r.kind.clone())),
+                                ("measured_us", Json::Num(r.measured_us)),
+                                ("modeled_us", Json::Num(r.modeled_us)),
+                                ("deviation", Json::Num(r.deviation)),
+                                ("flagged", Json::Bool(r.flagged)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Fit one common measured/modeled scale across `points` (geometric mean
+/// of the ratios) and flag every kind whose ratio deviates from it by
+/// more than `tolerance` in either direction. A single point always
+/// passes (its ratio *is* the scale); a degenerate point (non-finite or
+/// non-positive ratio) is flagged outright and excluded from the fit.
+pub fn roofline_check(points: &[RooflinePoint], tolerance: f64) -> RooflineReport {
+    let ratios: Vec<f64> = points
+        .iter()
+        .map(|p| if p.modeled_us > 0.0 { p.measured_us / p.modeled_us } else { f64::NAN })
+        .collect();
+    let finite: Vec<f64> =
+        ratios.iter().copied().filter(|r| r.is_finite() && *r > 0.0).collect();
+    let scale = if finite.is_empty() {
+        1.0
+    } else {
+        (finite.iter().map(|r| r.ln()).sum::<f64>() / finite.len() as f64).exp()
+    };
+    let rows = points
+        .iter()
+        .zip(&ratios)
+        .map(|(p, &ratio)| {
+            let (deviation, flagged) = if ratio.is_finite() && ratio > 0.0 {
+                let dev = (ratio / scale).max(scale / ratio);
+                (dev, dev > tolerance)
+            } else {
+                (f64::INFINITY, true)
+            };
+            RooflineRow {
+                kind: p.kind.clone(),
+                measured_us: p.measured_us,
+                modeled_us: p.modeled_us,
+                ratio,
+                deviation,
+                flagged,
+            }
+        })
+        .collect();
+    RooflineReport { rows, scale, tolerance }
+}
+
+/// Roofline deviation tolerance: `ROOFLINE_TOL` env var, default 8.0.
+/// Wide on purpose — the measuring interpreter's per-kind constant is
+/// not perfectly flat (cache effects, allocator) and the check exists to
+/// catch order-of-magnitude hot-path regressions (a kind suddenly 20x
+/// off its floor), not 20% drift.
+pub fn roofline_tolerance() -> f64 {
+    std::env::var("ROOFLINE_TOL")
+        .ok()
+        .and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|t| t.is_finite() && *t > 1.0)
+        .unwrap_or(8.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -417,5 +621,115 @@ mod tests {
         assert!((a.dram_bytes - off.dram_bytes).abs() < 1.0);
         // grid covers the raw GEMM exactly
         assert_eq!(a.n_blocks, (1024 / cfg.block_m()) * (768 / cfg.block_n()));
+    }
+
+    #[test]
+    fn roofline_is_finite_for_every_shape_including_ragged_m() {
+        // unlike analyze(), the roofline must accept shapes with no legal
+        // block_m at all — the edge-net bench kinds have M = 196 and 49
+        let gpu = GpuSpec::t4();
+        let mut cache = ProfileCache::default();
+        let shapes = [
+            ConvWorkload::new("rg196", 1, 14, 14, 128, 128), // M = 196
+            ConvWorkload::new("rg49", 1, 7, 7, 256, 256),    // M = 49
+            ConvWorkload::resnet50_stage(2, 8),
+            ConvWorkload::new("rgg", 8, 56, 56, 128, 128).with_groups(32),
+            ConvWorkload::new("rgd", 8, 28, 28, 192, 192).depthwise(),
+        ];
+        for wl in &shapes {
+            let t = roofline_us(wl, &gpu, &mut cache);
+            assert!(t.is_finite() && t > 0.0, "{}: {t}", wl.name());
+        }
+        let mm = MatmulWorkload::new("rl_mm", 1024, 768, 768);
+        let t = roofline_us(&mm, &gpu, &mut cache);
+        assert!(t.is_finite() && t > 0.0);
+    }
+
+    #[test]
+    fn roofline_scales_with_work_and_respects_both_ceilings() {
+        let gpu = GpuSpec::t4();
+        let mut cache = ProfileCache::default();
+        // 8x the batch -> 8x the MACs and ~8x the cold feature/output
+        // bytes: the floor must grow substantially, whichever ceiling binds
+        let b1 = roofline_us(&ConvWorkload::resnet50_stage(2, 1), &gpu, &mut cache);
+        let b8 = roofline_us(&ConvWorkload::resnet50_stage(2, 8), &gpu, &mut cache);
+        assert!(b8 > b1 * 4.0, "batch8 {b8} vs batch1 {b1}");
+        // the roofline is a *floor*: the full simulator (launch overhead,
+        // bounded overlap, occupancy) can never beat it
+        let wl = ConvWorkload::resnet50_stage(2, 8);
+        let sim = crate::sim::Simulator::noiseless(GpuSpec::t4());
+        let m = sim.measure_once(&wl, &ScheduleConfig::default());
+        assert!(m.feasible);
+        let floor = roofline_us(&wl, &gpu, &mut cache);
+        assert!(m.runtime_us >= floor, "sim {} vs floor {}", m.runtime_us, floor);
+    }
+
+    #[test]
+    fn roofline_check_passes_consistent_points_and_flags_outliers() {
+        // a fleet whose measured latencies are all ~1000x the modeled
+        // floor is *consistent*: one scale fits, nothing flagged
+        let mk = |kind: &str, modeled: f64, factor: f64| RooflinePoint {
+            kind: kind.into(),
+            measured_us: modeled * factor,
+            modeled_us: modeled,
+        };
+        let good = [
+            mk("conv:a", 10.0, 900.0),
+            mk("conv:b", 55.0, 1100.0),
+            mk("conv:c", 3.0, 1000.0),
+        ];
+        let rep = roofline_check(&good, 8.0);
+        assert!(rep.pass(), "{}", rep.render());
+        assert!(rep.rows.iter().all(|r| r.deviation < 1.3));
+        assert!((rep.scale - 1000.0).abs() / 1000.0 < 0.1);
+
+        // one kind 100x off the common scale must be flagged — and only it
+        let bad = [good[0].clone(), good[1].clone(), mk("conv:slow", 3.0, 100_000.0)];
+        let rep = roofline_check(&bad, 8.0);
+        assert!(!rep.pass());
+        let flagged: Vec<&str> =
+            rep.rows.iter().filter(|r| r.flagged).map(|r| r.kind.as_str()).collect();
+        assert_eq!(flagged, vec!["conv:slow"], "{}", rep.render());
+        assert!(rep.render().contains("FLAGGED"));
+
+        // degenerate rows are flagged outright, never poison the fit
+        let rep = roofline_check(
+            &[good[0].clone(), mk("conv:zero", 0.0, 1.0)],
+            8.0,
+        );
+        assert!(!rep.pass());
+        assert!(rep.rows[1].flagged && !rep.rows[0].flagged);
+
+        // a single point is its own scale: always passes
+        assert!(roofline_check(&good[..1], 8.0).pass());
+        // and an empty fleet passes vacuously
+        assert!(roofline_check(&[], 8.0).pass());
+    }
+
+    #[test]
+    fn roofline_report_json_roundtrips() {
+        let points = [RooflinePoint {
+            kind: "conv:x".into(),
+            measured_us: 5000.0,
+            modeled_us: 5.0,
+        }];
+        let rep = roofline_check(&points, 8.0);
+        let parsed = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(parsed.req("pass").unwrap().as_bool(), Some(true));
+        let rows = parsed.req("rows").unwrap();
+        let row0 = match rows {
+            Json::Arr(v) => &v[0],
+            _ => panic!("rows must be an array"),
+        };
+        assert_eq!(row0.req("kind").unwrap().as_str(), Some("conv:x"));
+        assert_eq!(row0.req("modeled_us").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn roofline_tolerance_defaults_sane() {
+        // no env override in the test environment: the default is wide
+        // (order-of-magnitude detector, not a drift detector)
+        let t = roofline_tolerance();
+        assert!(t >= 2.0, "{t}");
     }
 }

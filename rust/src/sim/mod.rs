@@ -17,7 +17,10 @@ mod measure;
 mod occupancy;
 pub mod pool;
 
-pub use analysis::{analyze, ProfileCache, TrafficAnalysis, ACC_BYTES, INT4_BYTES};
+pub use analysis::{
+    analyze, roofline_check, roofline_tolerance, roofline_us, ProfileCache, RooflinePoint,
+    RooflineReport, RooflineRow, TrafficAnalysis, ACC_BYTES, INT4_BYTES, ROOFLINE_BLOCK_M,
+};
 pub use gpu::GpuSpec;
 pub use measure::{CachedMeasurer, Measurer, SimMeasurer};
 pub use occupancy::{occupancy, BlockResources, Limiter, Occupancy};

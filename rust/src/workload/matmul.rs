@@ -4,19 +4,24 @@
 //! kernel shape the paper's tile/warp search space was built for, minus
 //! the im2col lowering (related work — Bhaskaracharya et al., Markidis et
 //! al. — treats this as the canonical Tensor Core workload). Execution
-//! reuses the conv executor's blocked i32 GEMM
-//! ([`crate::conv::execute::gemm_i32_blocked_with`]) and the padded INT4
-//! packing ([`crate::quant::pack_int4_padded_into`]), so matmul numerics
-//! inherit the conv path's golden-validated integer pipeline.
+//! reuses the conv executor's pipelined i32 microkernel
+//! ([`crate::gemm::gemm_i32_pipelined`], prepack-cache aware) and the
+//! padded INT4 packing ([`crate::quant::pack_int4_padded_into`]), so
+//! matmul numerics inherit the conv path's golden-validated integer
+//! pipeline.
 //!
 //! Unlike a convolution — whose per-group GEMM is padded up to the MMA
 //! atom before legality is judged — a matmul's tile legality is judged on
 //! the **raw (M, N, K)**: there is no im2col structure to hide padding
 //! behind, so a shape either tiles exactly or admits no schedule.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
-use crate::conv::execute::gemm_i32_blocked_with;
+use crate::gemm::{
+    default_bn, gemm_i32_pipelined, operand_fingerprint, GemmScratch, PrepackCache,
+};
 use crate::quant::{pack_int4_padded_into, Epilogue};
 use crate::searchspace::ScheduleConfig;
 use crate::util::Json;
@@ -172,12 +177,24 @@ impl MatmulInstance {
 pub struct MatmulScratch {
     acc: Vec<i32>,
     rowbuf: Vec<i32>,
+    /// Microkernel staging buffers plus the scratch-owned packed-weight
+    /// buffer for the uncached path (mirrors the conv executor's scratch).
+    gemm: GemmScratch,
+    /// Server-wide prepacked-weight cache, when attached (see
+    /// [`MatmulScratch::set_prepack`]).
+    prepack: Option<Arc<PrepackCache>>,
 }
 
 impl MatmulScratch {
     /// Empty scratch; buffers grow to the first workload's sizes on use.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach the server-wide [`PrepackCache`] — same contract as
+    /// [`crate::conv::ExecScratch::set_prepack`].
+    pub fn set_prepack(&mut self, cache: Arc<PrepackCache>) {
+        self.prepack = Some(cache);
     }
 
     /// The i32 accumulator left by the most recent
@@ -251,13 +268,22 @@ pub fn qmatmul_accumulate_with(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
 
-    // blocked i32 GEMM, blocking steered by the tuned schedule (clamped
-    // to cache-sane bounds, matching the conv executor's policy)
+    // pipelined microkernel, geometry steered by the tuned schedule
+    // (clamped to cache-sane bounds, matching the conv executor's policy)
     let bm = cfg.block_m().clamp(8, 64);
     let bk = cfg.block_k().clamp(32, 128);
+    let bn = cfg.block_n().clamp(8, 64).min(default_bn(n));
     scratch.acc.clear();
     scratch.acc.resize(m * n, 0);
-    gemm_i32_blocked_with(a, b, &mut scratch.acc, m, n, k, bm, bk);
+    if let Some(cache) = &scratch.prepack {
+        let fp = operand_fingerprint(b);
+        let packed = cache.get_or_pack(fp, b, k, n, 0, n, bn, bk);
+        gemm_i32_pipelined(a, &packed, &mut scratch.acc, m, n, 0, bm, &mut scratch.gemm.bufs);
+    } else {
+        let GemmScratch { bufs, packed } = &mut scratch.gemm;
+        packed.pack_into(b, k, n, 0, n, bn, bk);
+        gemm_i32_pipelined(a, packed, &mut scratch.acc, m, n, 0, bm, bufs);
+    }
 }
 
 #[cfg(test)]

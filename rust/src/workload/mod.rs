@@ -676,6 +676,16 @@ impl OpScratch {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Attach the server-wide prepacked-weight cache to both operator
+    /// halves: subsequent executions resolve their weight panels through
+    /// [`crate::gemm::PrepackCache::get_or_pack`] instead of re-packing
+    /// per call. Serving workers attach their server's shared cache once
+    /// at startup.
+    pub fn set_prepack(&mut self, cache: std::sync::Arc<crate::gemm::PrepackCache>) {
+        self.conv.set_prepack(std::sync::Arc::clone(&cache));
+        self.matmul.set_prepack(cache);
+    }
 }
 
 #[cfg(test)]

@@ -557,3 +557,92 @@ mod im2col_algebra {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// microkernel conformance: the pipelined GEMM pinned bit-equal to the
+// pre-pipeline blocked loop nest, and the prepacked executor path pinned
+// bit-equal to the uncached one
+// ---------------------------------------------------------------------------
+
+mod microkernel_conformance {
+    use std::sync::Arc;
+
+    use super::{random_workload, Rng, ScheduleConfig};
+    use tcconv::conv::{qconv2d, qconv2d_scheduled_with, ConvInstance, ExecScratch};
+    use tcconv::gemm::{
+        gemm_i32_blocked_reference, gemm_i32_pipelined, operand_fingerprint, PackedB,
+        PipelineBufs, PrepackCache, MICRO_N,
+    };
+    use tcconv::quant::Epilogue;
+
+    #[test]
+    fn conformance_pipelined_gemm_bit_equals_blocked_reference() {
+        // 50 seeded shapes x random tile geometry: the microkernel's
+        // tiled, double-buffered accumulation order must produce the
+        // exact bits of the old row-at-a-time blocked loop nest (i32
+        // addition is associative and commutative, so any divergence is
+        // an indexing bug, not rounding)
+        let mut rng = Rng::new(0x6E44_C0DE);
+        let mut bufs = PipelineBufs::default();
+        for case in 0..50 {
+            let m = 1 + rng.gen_range(48);
+            let n = 1 + rng.gen_range(40);
+            let k = 1 + rng.gen_range(96);
+            let bm = 1 + rng.gen_range(64);
+            let bn = MICRO_N * (1 + rng.gen_range(8));
+            let bk = 1 + rng.gen_range(128);
+            let a: Vec<i8> = (0..m * k).map(|_| rng.gen_range(16) as i8 - 8).collect();
+            let b: Vec<i8> = (0..k * n).map(|_| rng.gen_range(16) as i8 - 8).collect();
+            let mut want = vec![0i32; m * n];
+            gemm_i32_blocked_reference(&a, &b, &mut want, m, n, k, bm, bk);
+            let packed = PackedB::pack(&b, k, n, 0, n, bn, bk);
+            let mut got = vec![0i32; m * n];
+            gemm_i32_pipelined(&a, &packed, &mut got, m, n, 0, bm, &mut bufs);
+            assert_eq!(
+                got, want,
+                "case {case}: m={m} n={n} k={k} bm={bm} bn={bn} bk={bk}"
+            );
+            // the prepacked path is the same kernel over a cached pack:
+            // byte-identical panels, hence identical bits — and a second
+            // lookup must hit, not re-pack
+            let cache = PrepackCache::new();
+            let fp = operand_fingerprint(&b);
+            let cached = cache.get_or_pack(fp, &b, k, n, 0, n, bn, bk);
+            let mut via_cache = vec![0i32; m * n];
+            gemm_i32_pipelined(&a, &cached, &mut via_cache, m, n, 0, bm, &mut bufs);
+            assert_eq!(via_cache, want, "case {case}: prepacked path diverged");
+            let again = cache.get_or_pack(fp, &b, k, n, 0, n, bn, bk);
+            assert!(Arc::ptr_eq(&cached, &again), "case {case}: expected a cache hit");
+            assert_eq!(cache.stats().misses, 1, "case {case}");
+        }
+    }
+
+    #[test]
+    fn conformance_prepacked_executor_matches_uncached_across_random_stream() {
+        // a serving worker's view: one scratch with the server-wide cache
+        // attached, fed an arbitrary workload stream. Every result must be
+        // bit-identical to the uncached executor, and re-serving the same
+        // weights must hit the cache (zero additional packs)
+        let mut rng = Rng::new(0x9A9A_51DE);
+        let cache = Arc::new(PrepackCache::new());
+        let mut scratch = ExecScratch::new();
+        scratch.set_prepack(Arc::clone(&cache));
+        let epi = Epilogue::default();
+        for case in 0..24 {
+            let wl = random_workload(&mut rng, case);
+            let inst = ConvInstance::synthetic(&wl, 4_400 + case as u64);
+            let want = qconv2d(&inst, &epi);
+            let got =
+                qconv2d_scheduled_with(&inst, &epi, &ScheduleConfig::default(), &mut scratch);
+            assert_eq!(got, want, "{wl:?}");
+            let before = cache.stats();
+            let again =
+                qconv2d_scheduled_with(&inst, &epi, &ScheduleConfig::default(), &mut scratch);
+            assert_eq!(again, want, "{wl:?}");
+            let after = cache.stats();
+            assert_eq!(after.misses, before.misses, "re-serve re-packed: {wl:?}");
+            assert!(after.hits > before.hits, "re-serve missed the cache: {wl:?}");
+        }
+        assert!(cache.stats().entries > 0);
+    }
+}

@@ -603,3 +603,65 @@ fn empty_registry_server_equals_plain_start() {
     a.shutdown();
     b.shutdown();
 }
+
+#[test]
+fn registry_reload_invalidates_prepack_cache_and_never_serves_stale_packs() {
+    // the server-wide prepacked-weight cache across a hot reload: fixed
+    // weights hit the cache, a reload flushes it (and counts the
+    // eviction), post-reload traffic re-packs bit-identically, and a
+    // different weight set under the same shape can never be served a
+    // stale pack — the cache key fingerprints the weight values
+    let wl = tiny_wl();
+    let server = Server::from_registry(
+        ServerConfig { workers: 2, max_batch: 4, ..Default::default() },
+        ScheduleRegistry::new(),
+    );
+    let epi = Epilogue::default();
+    let base = ConvInstance::synthetic(&wl, 77);
+    let want = qconv2d(&base, &epi);
+    for _ in 0..2 {
+        let resp = server.submit(&wl.name, base.clone(), epi).unwrap().recv().unwrap();
+        assert_eq!(resp.packed_output, want);
+    }
+    let s0 = server.prepack_stats();
+    assert!(s0.misses >= 1 && s0.entries >= 1, "{s0:?}");
+    assert!(s0.hits >= 1, "second serve of the same weights must hit: {s0:?}");
+
+    // hot reload: the cache is flushed, the eviction is counted
+    let mut registry = ScheduleRegistry::new();
+    registry.insert(
+        &wl.name,
+        TunedEntry {
+            config: ScheduleConfig {
+                blk_col_warps: 1,
+                warp_col_tiles: 1,
+                chunk: 1,
+                ..Default::default()
+            },
+            runtime_us: 1.0,
+            trials: 1,
+            explorer: "test".into(),
+        },
+    );
+    let version = server.reload_registry(registry);
+    assert_eq!(version, 2);
+    let s1 = server.prepack_stats();
+    assert_eq!(s1.entries, 0, "reload must flush the prepack cache: {s1:?}");
+    assert!(s1.invalidations > s0.invalidations, "{s1:?} vs {s0:?}");
+
+    // post-reload traffic re-packs (a fresh miss) and stays bit-identical
+    let resp = server.submit(&wl.name, base.clone(), epi).unwrap().recv().unwrap();
+    assert_eq!(resp.packed_output, want, "post-reload numerics changed");
+    let s2 = server.prepack_stats();
+    assert!(s2.misses > s1.misses, "post-reload serve must re-pack: {s2:?}");
+
+    // same shape, different weights: must produce *those* weights' bits
+    let mut other = base.clone();
+    other.w = ConvInstance::synthetic(&wl, 12345).w;
+    let want_other = qconv2d(&other, &epi);
+    assert_ne!(want_other, want, "distinct weights must give distinct outputs");
+    let resp = server.submit(&wl.name, other, epi).unwrap().recv().unwrap();
+    assert_eq!(resp.packed_output, want_other, "stale pack served for changed weights");
+
+    server.shutdown();
+}
