@@ -22,6 +22,7 @@ const TOLERANCE: f64 = 0.9;
 const GATES: &[(&str, &[&str])] = &[
     ("BENCH_serving.json", &["speedup", "microkernel_speedup"]),
     ("BENCH_cluster.json", &["ratio"]),
+    ("BENCH_graph.json", &["speedup"]),
 ];
 
 fn load(path: &Path) -> Option<Json> {

@@ -41,7 +41,25 @@ pub trait CostModel {
     fn predict_config(&self, wl: &dyn Workload, cfg: &ScheduleConfig) -> f64 {
         self.predict(&featurize(wl, cfg))
     }
+
+    /// Pretrain from already-featurized `(features, runtime_us)` rows —
+    /// transfer priors from earlier sessions or the accumulated
+    /// [`crate::tuner::cache::TuneCache`] entries, fit *before* a cold
+    /// session takes its first measurement. A no-op below
+    /// [`PRETRAIN_MIN_ROWS`] rows (a rank objective needs pairs to
+    /// compare; fitting on fewer would encode noise as signal).
+    fn pretrain(&mut self, rows: &[(Vec<f64>, f64)]) {
+        if rows.len() < PRETRAIN_MIN_ROWS {
+            return;
+        }
+        let xs: Vec<Vec<f64>> = rows.iter().map(|(x, _)| x.clone()).collect();
+        let ys: Vec<f64> = rows.iter().map(|(_, y)| *y).collect();
+        self.train(&xs, &ys);
+    }
 }
+
+/// Fewest prior rows [`CostModel::pretrain`] will fit on.
+pub const PRETRAIN_MIN_ROWS: usize = 4;
 
 impl CostModel for Gbt {
     fn predict(&self, feats: &[f64]) -> f64 {
@@ -118,6 +136,19 @@ mod tests {
         }
         let acc = correct as f64 / total as f64;
         assert!(acc > 0.7, "held-out rank accuracy {acc} (n={total})");
+    }
+
+    #[test]
+    fn pretrain_fits_from_rows_and_skips_tiny_priors() {
+        let mut model = Gbt::new(GbtParams { n_trees: 5, seed: 1, ..Default::default() });
+        let tiny: Vec<(Vec<f64>, f64)> =
+            (0..PRETRAIN_MIN_ROWS - 1).map(|i| (vec![i as f64], i as f64)).collect();
+        CostModel::pretrain(&mut model, &tiny);
+        assert!(!CostModel::is_trained(&model), "below the row floor: no fit");
+        let rows: Vec<(Vec<f64>, f64)> =
+            (0..16).map(|i| (vec![i as f64, (i * i) as f64], 100.0 - i as f64)).collect();
+        CostModel::pretrain(&mut model, &rows);
+        assert!(CostModel::is_trained(&model));
     }
 
     #[test]

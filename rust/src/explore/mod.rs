@@ -181,12 +181,51 @@ pub(crate) fn fill_random(
     target.saturating_sub(out.len())
 }
 
+/// The warm-start seed set around a cached schedule: the schedule itself
+/// (when it encodes into and is legal in `space`) plus up to `count - 1`
+/// distinct legal one-knob mutants of it. This is how a
+/// [`crate::tuner::cache::TuneCache`] nearest-shape hit re-enters a new
+/// shape's search: the tuner front-loads its first proposal round with
+/// this neighborhood instead of starting from uniform random.
+///
+/// Deterministic for a given `rng` state; may return fewer than `count`
+/// seeds (a depthwise-sized space has few distinct neighbors), and
+/// returns an empty vec when the cached schedule does not encode into
+/// `space` at all — the caller then simply cold-starts.
+pub fn neighborhood(
+    space: &SearchSpace,
+    cfg: &crate::searchspace::ScheduleConfig,
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<Genotype> {
+    let Some(center) = space.encode(cfg) else {
+        return Vec::new();
+    };
+    let mut out = Vec::with_capacity(count);
+    let mut seen: HashSet<Genotype> = HashSet::new();
+    if space.is_legal(&center) {
+        seen.insert(center.clone());
+        out.push(center.clone());
+    }
+    // mutate_one_knob re-rolls until legal, so every draw is usable;
+    // cap the attempts so a space with few distinct neighbors terminates
+    let mut guard = 0;
+    while out.len() < count && guard < 50 * count.max(1) {
+        guard += 1;
+        let g = space.mutate_one_knob(&center, rng);
+        if space.is_legal(&g) && seen.insert(g.clone()) {
+            out.push(g);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::conv::ConvWorkload;
     use crate::costmodel::{Gbt, GbtParams};
-    use crate::searchspace::SpaceOptions;
+    use crate::searchspace::{ScheduleConfig, SpaceOptions};
 
     fn space() -> SearchSpace {
         SearchSpace::for_workload(&ConvWorkload::resnet50_stage(2, 8), SpaceOptions::default())
@@ -282,6 +321,28 @@ mod tests {
             assert!(!measured.contains(g));
             assert!(sp.is_legal(g));
         }
+    }
+
+    #[test]
+    fn neighborhood_centers_on_the_seed_and_stays_legal() {
+        let sp = space();
+        let mut rng = Rng::new(9);
+        let center_g = sp.random_legal(&mut rng);
+        let center = sp.decode(&center_g);
+        let seeds = neighborhood(&sp, &center, 12, &mut rng);
+        assert!(!seeds.is_empty());
+        assert_eq!(seeds[0], center_g, "the cached schedule itself leads");
+        let mut uniq = seeds.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
+        for g in &seeds {
+            assert!(sp.is_legal(g));
+            assert!(SearchSpace::distance(g, &center_g) <= 1, "one-knob neighborhood");
+        }
+        // a config outside the knob domain yields no seeds (cold start)
+        let wild = ScheduleConfig { chunk: 16, ..Default::default() };
+        assert!(neighborhood(&sp, &wild, 8, &mut rng).is_empty());
     }
 
     #[test]

@@ -118,3 +118,7 @@ pub struct MigrationDoctests;
 #[cfg(doctest)]
 #[doc = include_str!("../../docs/SERVING.md")]
 pub struct ServingGuideDoctests;
+
+#[cfg(doctest)]
+#[doc = include_str!("../../docs/TUNING.md")]
+pub struct TuningGuideDoctests;

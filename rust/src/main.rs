@@ -29,7 +29,7 @@ use tcconv::searchspace::{SearchSpace, SpaceOptions};
 use tcconv::serve::{Cluster, ClusterConfig, Server, ServerConfig, SloPolicy, SubmitError};
 use tcconv::sim::{GpuSpec, Simulator};
 use tcconv::tuner::online::{OnlineTuner, RetunePolicy};
-use tcconv::tuner::{Session, SessionResult};
+use tcconv::tuner::{CacheHandle, Session, SessionResult};
 use tcconv::workload::OpWorkload;
 use tcconv::zoo;
 
@@ -81,12 +81,24 @@ USAGE: repro <command> [--flag value ...]
 COMMANDS
   tune      --stage 2..5 [--trials 500] [--explorer diversity|sa|random|exhaustive]
             [--seed N] [--jobs 1] [--out schedule.json]
+            [--tune-cache cache.json] [--multi-fidelity]
             --jobs N measures each candidate batch on N worker threads
             (bit-identical results, shorter wall-clock)
+            --multi-fidelity screens a wide candidate field with cheap
+            low-rep sim rungs (successive halving) and spends
+            full-fidelity measurements only on the survivors; the
+            command prints the low/full measurement ledger afterwards.
+            --tune-cache consults and updates a persistent
+            cross-session cache keyed by a problem fingerprint: an
+            exact hit serves the tuned schedule with ZERO
+            measurements, a near miss warm-starts the explorer from
+            the nearest cached neighbor (corrupt cache files are
+            rejected and rebuilt, never trusted)
   tune-net  [--net resnet50|resnet50+transitions|resnet18|vgg16|mobilenet_v2|
              resnext50|deeplab_head|bert_base|all]
             [--trials 240] [--batch 8] [--explorer diversity] [--seed N]
-            [--jobs 1] [--out schedules.json]   (--model is a synonym of --net)
+            [--jobs 1] [--out schedules.json] [--tune-cache cache.json]
+            [--multi-fidelity]   (--model is a synonym of --net)
             tunes every distinct layer of the model zoo — dense 3x3 convs
             plus the grouped (resnext50), depthwise+pointwise
             (mobilenet_v2) and dilated (deeplab_head) conv families, and
@@ -96,6 +108,7 @@ COMMANDS
   serve     [--registry schedules.json] [--workers 4] [--requests 16]
             [--max-batch 8] [--max-wait 2] [--graph resnet50]
             [--retune] [--retune-trials 96] [--retune-jobs 2]
+            [--tune-cache cache.json] [--multi-fidelity]
             [--shards 2] [--replicas 1] [--slo-p99-us 50000]
             [--registry-out improved.json]
             loads the registry and routes synthetic requests through the
@@ -113,7 +126,11 @@ COMMANDS
             Session on --retune-jobs measurement workers and improvements
             publish via registry hot-reload (a second burst then shows the
             effect; graph traffic counts toward its member layers, and the
-            plan recompiles against the new registry).
+            plan recompiles against the new registry). With --retune,
+            --tune-cache lets the cycle consult/update the persistent
+            tune cache (a warm cache republishes known schedules with
+            zero measurements) and --multi-fidelity makes each retune
+            session screen candidates with cheap sim rungs first.
             --registry-out persists the final (possibly improved) registry.
             With --retune or --graph, a missing --registry file starts
             empty instead of erroring.
@@ -168,6 +185,20 @@ fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> u64 {
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// `--tune-cache <path>`: open the persistent cross-session tune cache.
+/// A missing file is a normal cold start; a corrupt or truncated file is
+/// rejected and rebuilt with a warning (the cache is a performance hint,
+/// never load-bearing state, so corruption must not abort the command).
+fn tune_cache_of(flags: &HashMap<String, String>) -> Option<CacheHandle> {
+    let path = flags.get("tune-cache")?;
+    let cache = CacheHandle::open(path);
+    if cache.was_rebuilt() {
+        eprintln!("warning: tune cache {path} was corrupt; rejected and rebuilt from scratch");
+    }
+    println!("tune cache {path}: {} entry(ies) loaded", cache.len());
+    Some(cache)
+}
+
 /// `--explorer` through the shared `ExplorerKind::from_str` shim (the
 /// same parser the benches' `EXPLORER=` env selector uses); unknown names
 /// error, listing the valid options.
@@ -184,6 +215,8 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let seed = flag_u64(flags, "seed", 0);
     let jobs = flag_usize(flags, "jobs", 1);
     let explorer = explorer_of(flags)?;
+    let cache = tune_cache_of(flags);
+    let multi = flags.contains_key("multi-fidelity");
     let wl = ConvWorkload::resnet50_stage(stage, 8);
     println!(
         "tuning {} (gemm {}x{}x{}) for {trials} trials, explorer={}, jobs={jobs}",
@@ -193,12 +226,18 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         wl.gemm_k(),
         explorer.name()
     );
-    let res = Session::for_workload(&wl)
+    let mut builder = Session::for_workload(&wl)
         .trials(trials)
         .seed(seed)
         .parallelism(jobs)
-        .explorer(explorer.name())
-        .run()?;
+        .explorer(explorer.name());
+    if let Some(c) = &cache {
+        builder = builder.tune_cache(c.clone());
+    }
+    if multi {
+        builder = builder.multi_fidelity();
+    }
+    let res = builder.run()?;
     println!(
         "best: {:.2} us ({:.1} GFLOPS) after {} trials",
         res.best.runtime_us,
@@ -206,6 +245,20 @@ fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         res.best.trials_used
     );
     println!("schedule: {}", res.best.config.brief());
+    if res.cache_hit() {
+        println!("tune cache: exact fingerprint hit — served without a single measurement");
+    } else if let Some(b) = res.budget() {
+        println!(
+            "measurement budget: {} low-fidelity sim passes screened the field, \
+             {} full-fidelity measurements across {} rung(s)",
+            b.low_total(),
+            b.full_total(),
+            b.rungs().len()
+        );
+    }
+    if let Some(c) = &cache {
+        println!("tune cache now holds {} entry(ies)", c.len());
+    }
     if let Some(path) = flags.get("out") {
         std::fs::write(path, res.best.config.to_json().to_string())?;
         println!("schedule JSON written to {path} (feed to aot.py --schedule-json)");
@@ -225,6 +278,8 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let seed = flag_u64(flags, "seed", 0);
     let jobs = flag_usize(flags, "jobs", 1);
     let explorer = explorer_of(flags)?;
+    let cache = tune_cache_of(flags);
+    let multi = flags.contains_key("multi-fidelity");
     let out = flags.get("out").cloned().unwrap_or_else(|| "schedules.json".into());
 
     let nets = if model == "all" {
@@ -268,12 +323,19 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             if let Some(p) = &prior {
                 builder = builder.transfer_from(p);
             }
+            if let Some(c) = &cache {
+                builder = builder.tune_cache(c.clone());
+            }
+            if multi {
+                builder = builder.multi_fidelity();
+            }
             let res = builder.run()?;
             println!(
-                "  {:<28} {:>8.2} us  {}",
+                "  {:<28} {:>8.2} us  {}{}",
                 kind,
                 res.best.runtime_us,
-                res.best.config.brief()
+                res.best.config.brief(),
+                if res.cache_hit() { "  [tune-cache hit]" } else { "" }
             );
             registry.insert(&kind, res.registry_entry());
             prior = Some(res);
@@ -286,6 +348,13 @@ fn cmd_tune_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
          (load with `repro serve --registry {out}` or Server::from_registry)",
         registry.len()
     );
+    if let Some(c) = &cache {
+        println!(
+            "tune cache now holds {} entry(ies) — rerunning tune-net against it \
+             serves exact-shape hits with zero measurements",
+            c.len()
+        );
+    }
     Ok(())
 }
 
@@ -413,20 +482,25 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 trials: retune_trials,
                 jobs: retune_jobs,
                 max_kinds_per_cycle: kinds.len().max(1),
+                multi_fidelity: flags.contains_key("multi-fidelity"),
                 ..Default::default()
             },
         );
+        if let Some(cache) = tune_cache_of(flags) {
+            tuner = tuner.with_tune_cache(cache);
+        }
         let report = tuner.run_cycle(&server.handle())?;
         for o in &report.outcomes {
             println!(
-                "  {:<22} {:?}: tuned {:.2} us (prev {}) -> {}",
+                "  {:<22} {:?}: tuned {:.2} us (prev {}) -> {}{}",
                 o.kind,
                 o.reason,
                 o.tuned_runtime_us,
                 o.previous_runtime_us
                     .map(|p| format!("{p:.2} us"))
                     .unwrap_or_else(|| "fallback".into()),
-                if o.published { "published" } else { "kept previous" }
+                if o.published { "published" } else { "kept previous" },
+                if o.cache_hit { " (tune-cache hit: zero measurements)" } else { "" }
             );
         }
         match report.published_version {
@@ -592,20 +666,25 @@ fn serve_graph(
                 trials: retune_trials,
                 jobs: retune_jobs,
                 max_kinds_per_cycle: topo.node_count(),
+                multi_fidelity: flags.contains_key("multi-fidelity"),
                 ..Default::default()
             },
         );
+        if let Some(cache) = tune_cache_of(flags) {
+            tuner = tuner.with_tune_cache(cache);
+        }
         let report = tuner.run_cycle(&server.handle())?;
         for o in &report.outcomes {
             println!(
-                "  {:<22} {:?}: tuned {:.2} us (prev {}) -> {}",
+                "  {:<22} {:?}: tuned {:.2} us (prev {}) -> {}{}",
                 o.kind,
                 o.reason,
                 o.tuned_runtime_us,
                 o.previous_runtime_us
                     .map(|p| format!("{p:.2} us"))
                     .unwrap_or_else(|| "fallback".into()),
-                if o.published { "published" } else { "kept previous" }
+                if o.published { "published" } else { "kept previous" },
+                if o.cache_hit { " (tune-cache hit: zero measurements)" } else { "" }
             );
         }
         match report.published_version {
@@ -810,20 +889,25 @@ fn serve_cluster(
                 trials: retune_trials,
                 jobs: retune_jobs,
                 max_kinds_per_cycle: (kinds.len() + 8).max(1),
+                multi_fidelity: flags.contains_key("multi-fidelity"),
                 ..Default::default()
             },
         );
+        if let Some(cache) = tune_cache_of(flags) {
+            tuner = tuner.with_tune_cache(cache);
+        }
         let report = tuner.run_cycle_on(&cluster.handle())?;
         for o in &report.outcomes {
             println!(
-                "  {:<22} {:?}: tuned {:.2} us (prev {}) -> {}",
+                "  {:<22} {:?}: tuned {:.2} us (prev {}) -> {}{}",
                 o.kind,
                 o.reason,
                 o.tuned_runtime_us,
                 o.previous_runtime_us
                     .map(|p| format!("{p:.2} us"))
                     .unwrap_or_else(|| "fallback".into()),
-                if o.published { "published" } else { "kept previous" }
+                if o.published { "published" } else { "kept previous" },
+                if o.cache_hit { " (tune-cache hit: zero measurements)" } else { "" }
             );
         }
         match report.published_version {

@@ -130,6 +130,33 @@ impl SearchSpace {
         }
     }
 
+    /// Invert [`SearchSpace::decode`]: the genotype whose knob values
+    /// reproduce `cfg`, or `None` when a value falls outside the knob
+    /// domain (e.g. a hand-written config with `chunk: 16`) or — with
+    /// pinned flags — when `cfg`'s flags contradict the pins. This is
+    /// how a cached schedule from a *neighboring* shape re-enters this
+    /// shape's space as a warm-start seed.
+    pub fn encode(&self, cfg: &ScheduleConfig) -> Option<Genotype> {
+        let fields: [usize; 6] = [
+            cfg.blk_row_warps,
+            cfg.blk_col_warps,
+            cfg.warp_row_tiles,
+            cfg.warp_col_tiles,
+            cfg.chunk,
+            cfg.reorder_inner,
+        ];
+        let flags = [cfg.dup_aware, cfg.reg_packing, cfg.nhwcnc_layout];
+        if !self.opts.search_opt_flags && flags != self.opts.pinned_flags {
+            return None;
+        }
+        let mut g = Genotype::with_capacity(self.knobs.len());
+        for (i, knob) in self.knobs.iter().enumerate() {
+            let value = if i < fields.len() { fields[i] } else { flags[i - fields.len()] as usize };
+            g.push(knob.values.iter().position(|&v| v == value)? as u8);
+        }
+        Some(g)
+    }
+
     /// Genotype from a flat index (row-major over knob values).
     pub fn from_index(&self, mut idx: usize) -> Genotype {
         let mut g = vec![0u8; self.knobs.len()];
@@ -246,6 +273,34 @@ mod tests {
         let g = s.from_index(12345 % s.cardinality());
         assert_eq!(g.len(), s.n_knobs());
         let _ = s.decode(&g); // must not panic
+    }
+
+    #[test]
+    fn encode_inverts_decode() {
+        let s = space();
+        let mut rng = Rng::new(3);
+        for _ in 0..64 {
+            let g = s.random_legal(&mut rng);
+            let cfg = s.decode(&g);
+            assert_eq!(s.encode(&cfg), Some(g));
+        }
+        // out-of-domain values don't encode
+        let wild = ScheduleConfig { chunk: 16, ..Default::default() };
+        assert_eq!(s.encode(&wild), None);
+        // pinned-flag spaces reject configs contradicting the pins
+        let pinned = SearchSpace::for_workload(
+            &ConvWorkload::resnet50_stage(2, 8),
+            SpaceOptions::baseline(),
+        );
+        assert_eq!(pinned.encode(&ScheduleConfig::default()), None, "default flags are all-on");
+        let off = ScheduleConfig {
+            dup_aware: false,
+            reg_packing: false,
+            nhwcnc_layout: false,
+            ..Default::default()
+        };
+        let g = pinned.encode(&off).expect("matching pins encode");
+        assert_eq!(pinned.decode(&g), off);
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! Measurement fidelity and the budget ledger.
+//!
+//! Multi-fidelity tuning (successive halving) spends most of its
+//! candidates on **cheap low-rep simulated passes** and reserves
+//! full-fidelity measurement for the surviving distinctive candidates.
+//! The claims that makes ("10x fewer full measurements at equal
+//! quality") are only checkable if every measurement is *counted*, so
+//! the [`MeasureBudget`] ledger is threaded through
+//! [`crate::sim::Measurer`]: each implementor reports every pass it
+//! actually performs, at the fidelity it performed it, attributed to
+//! the halving rung that requested it. Counters are atomic and
+//! order-independent, so the ledger is exact under `--jobs`
+//! parallelism (a parallel batch books the same totals as a serial
+//! one).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::Json;
+
+/// How carefully a candidate is measured.
+///
+/// `Low(reps)` models a quick profiling pass: `reps` short repetitions
+/// whose mean still carries substantial noise (the per-rep jitter is
+/// [`LOW_FIDELITY_NOISE`]x the full-fidelity sigma, so averaging a few
+/// reps narrows but never matches a full measurement). `Full` is the
+/// standard simulator measurement. Both are deterministic per
+/// `(workload, config, seed)` — fidelity is part of the jitter key, so
+/// equal seeds replay equal rungs bit-for-bit, serial or parallel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fidelity {
+    /// Cheap simulated pass averaging `reps` noisy repetitions.
+    Low(u32),
+    /// The standard full-fidelity measurement.
+    Full,
+}
+
+impl Fidelity {
+    /// How many measurement passes this fidelity performs per candidate
+    /// (what the ledger books): `reps` for a low pass, 1 for full.
+    pub fn passes(self) -> usize {
+        match self {
+            Fidelity::Low(reps) => reps.max(1) as usize,
+            Fidelity::Full => 1,
+        }
+    }
+
+    /// Ledger/provenance tag: `"low"` or `"full"`.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Fidelity::Low(_) => "low",
+            Fidelity::Full => "full",
+        }
+    }
+}
+
+/// Noise inflation of a single low-fidelity rep relative to the
+/// simulator's full-fidelity `noise_sigma` (a quick pass is much
+/// noisier than a settled measurement).
+pub const LOW_FIDELITY_NOISE: f64 = 4.0;
+
+/// Per-rung measurement counts (one row of the ledger).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RungCounts {
+    /// Low-fidelity sim passes booked against this rung.
+    pub low: usize,
+    /// Full-fidelity measurements booked against this rung.
+    pub full: usize,
+}
+
+#[derive(Default)]
+struct BudgetInner {
+    low: AtomicUsize,
+    full: AtomicUsize,
+    rung: AtomicUsize,
+    rungs: Mutex<Vec<RungCounts>>,
+}
+
+/// The measurement ledger: every sim/full pass any [`crate::sim::Measurer`]
+/// performs is counted here, attributed to the rung that was current
+/// when it ran.
+///
+/// Cloning shares the ledger (it is an `Arc` internally) — a session
+/// hands one clone to its measurer and keeps another to read the
+/// totals afterwards. All counters are atomic; totals are exact and
+/// identical whether a batch ran serially or across a
+/// [`crate::sim::MeasurePool`].
+#[derive(Clone, Default)]
+pub struct MeasureBudget {
+    inner: Arc<BudgetInner>,
+}
+
+impl std::fmt::Debug for MeasureBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MeasureBudget")
+            .field("low", &self.low_total())
+            .field("full", &self.full_total())
+            .field("rungs", &self.rungs().len())
+            .finish()
+    }
+}
+
+impl MeasureBudget {
+    /// A fresh, empty ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Attribute subsequent counts to rung `r` (rungs are created on
+    /// demand; the tuner advances this before each halving rung).
+    pub fn set_rung(&self, r: usize) {
+        self.inner.rung.store(r, Ordering::Relaxed);
+    }
+
+    /// The rung currently being charged.
+    pub fn current_rung(&self) -> usize {
+        self.inner.rung.load(Ordering::Relaxed)
+    }
+
+    /// Book `candidates` measured at `fidelity` against the current
+    /// rung (a `Low(r)` candidate books `r` passes).
+    pub fn count(&self, fidelity: Fidelity, candidates: usize) {
+        let passes = fidelity.passes() * candidates;
+        if passes == 0 {
+            return;
+        }
+        let rung = self.current_rung();
+        match fidelity {
+            Fidelity::Low(_) => self.inner.low.fetch_add(passes, Ordering::Relaxed),
+            Fidelity::Full => self.inner.full.fetch_add(passes, Ordering::Relaxed),
+        };
+        let mut rungs = self.inner.rungs.lock().unwrap();
+        if rungs.len() <= rung {
+            rungs.resize(rung + 1, RungCounts::default());
+        }
+        match fidelity {
+            Fidelity::Low(_) => rungs[rung].low += passes,
+            Fidelity::Full => rungs[rung].full += passes,
+        }
+    }
+
+    /// Total low-fidelity sim passes booked so far.
+    pub fn low_total(&self) -> usize {
+        self.inner.low.load(Ordering::Relaxed)
+    }
+
+    /// Total full-fidelity measurements booked so far.
+    pub fn full_total(&self) -> usize {
+        self.inner.full.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-rung rows.
+    pub fn rungs(&self) -> Vec<RungCounts> {
+        self.inner.rungs.lock().unwrap().clone()
+    }
+
+    /// The ledger as JSON (what CI uploads next to the bench
+    /// trajectories): totals plus one `{rung, low, full}` row per rung.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rungs()
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                Json::obj(vec![
+                    ("rung", Json::Num(i as f64)),
+                    ("low", Json::Num(r.low as f64)),
+                    ("full", Json::Num(r.full as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("low_total", Json::Num(self.low_total() as f64)),
+            ("full_total", Json::Num(self.full_total() as f64)),
+            ("rungs", Json::Arr(rows)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_attribute_to_the_current_rung() {
+        let b = MeasureBudget::new();
+        b.count(Fidelity::Low(1), 8);
+        b.set_rung(1);
+        b.count(Fidelity::Low(4), 2); // 8 passes
+        b.set_rung(2);
+        b.count(Fidelity::Full, 3);
+        assert_eq!(b.low_total(), 16);
+        assert_eq!(b.full_total(), 3);
+        let rungs = b.rungs();
+        assert_eq!(rungs.len(), 3);
+        assert_eq!(rungs[0], RungCounts { low: 8, full: 0 });
+        assert_eq!(rungs[1], RungCounts { low: 8, full: 0 });
+        assert_eq!(rungs[2], RungCounts { low: 0, full: 3 });
+    }
+
+    #[test]
+    fn clones_share_the_ledger() {
+        let a = MeasureBudget::new();
+        let b = a.clone();
+        b.count(Fidelity::Full, 5);
+        assert_eq!(a.full_total(), 5);
+    }
+
+    #[test]
+    fn json_carries_totals_and_rows() {
+        let b = MeasureBudget::new();
+        b.count(Fidelity::Low(2), 4);
+        b.set_rung(1);
+        b.count(Fidelity::Full, 1);
+        let j = b.to_json();
+        assert_eq!(j.req("low_total").unwrap().as_usize(), Some(8));
+        assert_eq!(j.req("full_total").unwrap().as_usize(), Some(1));
+        assert_eq!(j.req("rungs").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn fidelity_passes_and_tags() {
+        assert_eq!(Fidelity::Low(4).passes(), 4);
+        assert_eq!(Fidelity::Low(0).passes(), 1);
+        assert_eq!(Fidelity::Full.passes(), 1);
+        assert_eq!(Fidelity::Low(1).tag(), "low");
+        assert_eq!(Fidelity::Full.tag(), "full");
+    }
+}

@@ -28,7 +28,7 @@ use std::sync::Mutex;
 use crate::searchspace::ScheduleConfig;
 use crate::workload::OpWorkload;
 
-use super::{Measurement, ProfileCache, Simulator};
+use super::{Fidelity, MeasureBudget, Measurement, ProfileCache, Simulator};
 
 /// A measurement substrate: produces the ground-truth cost of one schedule.
 ///
@@ -51,6 +51,33 @@ pub trait Measurer {
         cfgs.iter().map(|c| self.measure(wl, c)).collect()
     }
 
+    /// Measure a batch at a chosen [`Fidelity`].
+    ///
+    /// Multi-fidelity tuning issues its cheap pruning rungs through this
+    /// entry point. The default ignores the fidelity and delegates to
+    /// [`Measurer::measure_batch`] (a substrate that cannot measure
+    /// cheaply simply measures fully — correct, just not cheaper);
+    /// fidelity-aware substrates ([`SimMeasurer`],
+    /// [`ParallelMeasurer`](super::ParallelMeasurer)) override it.
+    fn measure_batch_at(
+        &mut self,
+        wl: &OpWorkload,
+        cfgs: &[ScheduleConfig],
+        fidelity: Fidelity,
+    ) -> Vec<Measurement> {
+        let _ = fidelity;
+        self.measure_batch(wl, cfgs)
+    }
+
+    /// Attach a [`MeasureBudget`] ledger: every measurement the substrate
+    /// performs from now on is booked against it. The default drops the
+    /// ledger (an unaware substrate under-counts rather than crashes);
+    /// decorators like [`CachedMeasurer`] forward it inward so only
+    /// measurements that actually run are counted — memo hits are free.
+    fn attach_budget(&mut self, budget: MeasureBudget) {
+        let _ = budget;
+    }
+
     /// Substrate name for logs and reports.
     fn name(&self) -> &str {
         "measurer"
@@ -61,12 +88,13 @@ pub trait Measurer {
 pub struct SimMeasurer {
     sim: Simulator,
     cache: ProfileCache,
+    budget: Option<MeasureBudget>,
 }
 
 impl SimMeasurer {
     /// Wrap `sim` with a fresh profile cache.
     pub fn new(sim: Simulator) -> Self {
-        Self { sim, cache: ProfileCache::default() }
+        Self { sim, cache: ProfileCache::default(), budget: None }
     }
 
     /// Convenience for `TunerOptions { measurer: .. }` call sites.
@@ -88,7 +116,26 @@ impl Default for SimMeasurer {
 
 impl Measurer for SimMeasurer {
     fn measure(&mut self, wl: &OpWorkload, cfg: &ScheduleConfig) -> Measurement {
+        if let Some(b) = &self.budget {
+            b.count(Fidelity::Full, 1);
+        }
         self.sim.measure(wl, cfg, &mut self.cache)
+    }
+
+    fn measure_batch_at(
+        &mut self,
+        wl: &OpWorkload,
+        cfgs: &[ScheduleConfig],
+        fidelity: Fidelity,
+    ) -> Vec<Measurement> {
+        if let Some(b) = &self.budget {
+            b.count(fidelity, cfgs.len());
+        }
+        cfgs.iter().map(|c| self.sim.measure_at(wl, c, &mut self.cache, fidelity)).collect()
+    }
+
+    fn attach_budget(&mut self, budget: MeasureBudget) {
+        self.budget = Some(budget);
     }
 
     fn name(&self) -> &str {
@@ -108,7 +155,7 @@ impl Simulator {
 /// meaningfully inflating the footprint.
 const MEMO_STRIPES: usize = 16;
 
-type MemoKey = (OpWorkload, ScheduleConfig);
+type MemoKey = (OpWorkload, ScheduleConfig, Fidelity);
 
 /// Lock-striped memoization map: `MEMO_STRIPES` independently locked
 /// shards, selected by key hash. All operations take `&self` (interior
@@ -153,11 +200,15 @@ pub struct CachedMeasurer {
     name: String,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    last_batch_hits: AtomicUsize,
+    last_batch_misses: AtomicUsize,
 }
 
 impl CachedMeasurer {
-    /// Memoize `inner`: repeated (workload, config) measurements are
-    /// answered from memory.
+    /// Memoize `inner`: repeated (workload, config, fidelity)
+    /// measurements are answered from memory. Fidelity is part of the
+    /// key — a cheap low-rep pass never masquerades as a full
+    /// measurement (or vice versa).
     pub fn new(inner: Box<dyn Measurer>) -> Self {
         let name = format!("cached({})", inner.name());
         Self {
@@ -166,6 +217,8 @@ impl CachedMeasurer {
             name,
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
+            last_batch_hits: AtomicUsize::new(0),
+            last_batch_misses: AtomicUsize::new(0),
         }
     }
 
@@ -178,11 +231,26 @@ impl CachedMeasurer {
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
     }
+
+    /// Memo hits of the most recent `measure_batch`/`measure_batch_at`
+    /// call. The old implementation folded these into the running
+    /// totals only, so a caller could not tell which *batch* was served
+    /// from memory — the budget ledger needs exactly that attribution
+    /// (hits are free; only forwarded misses are real measurements).
+    pub fn last_batch_hits(&self) -> usize {
+        self.last_batch_hits.load(Ordering::Relaxed)
+    }
+
+    /// Misses of the most recent batch call — the candidates that were
+    /// forwarded to the inner substrate as one batch.
+    pub fn last_batch_misses(&self) -> usize {
+        self.last_batch_misses.load(Ordering::Relaxed)
+    }
 }
 
 impl Measurer for CachedMeasurer {
     fn measure(&mut self, wl: &OpWorkload, cfg: &ScheduleConfig) -> Measurement {
-        let key = (wl.clone(), *cfg);
+        let key = (wl.clone(), *cfg, Fidelity::Full);
         if let Some(m) = self.memo.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return m;
@@ -194,10 +262,19 @@ impl Measurer for CachedMeasurer {
     }
 
     fn measure_batch(&mut self, wl: &OpWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
+        self.measure_batch_at(wl, cfgs, Fidelity::Full)
+    }
+
+    fn measure_batch_at(
+        &mut self,
+        wl: &OpWorkload,
+        cfgs: &[ScheduleConfig],
+        fidelity: Fidelity,
+    ) -> Vec<Measurement> {
         let mut out: Vec<Option<Measurement>> = vec![None; cfgs.len()];
         let mut miss_idx = Vec::new();
         for (i, cfg) in cfgs.iter().enumerate() {
-            match self.memo.get(&(wl.clone(), *cfg)) {
+            match self.memo.get(&(wl.clone(), *cfg, fidelity)) {
                 Some(m) => {
                     self.hits.fetch_add(1, Ordering::Relaxed);
                     out[i] = Some(m);
@@ -205,19 +282,29 @@ impl Measurer for CachedMeasurer {
                 None => miss_idx.push(i),
             }
         }
+        // per-batch attribution: exactly which slice of this batch was
+        // free (memo) vs forwarded — the inner substrate books only the
+        // misses against any attached budget, so the ledger stays exact
+        self.last_batch_hits.store(cfgs.len() - miss_idx.len(), Ordering::Relaxed);
+        self.last_batch_misses.store(miss_idx.len(), Ordering::Relaxed);
         if !miss_idx.is_empty() {
             // one inner batch for all misses: a parallel inner substrate
             // keeps its full fan-out
             let miss_cfgs: Vec<ScheduleConfig> = miss_idx.iter().map(|&i| cfgs[i]).collect();
-            let measured = self.inner.measure_batch(wl, &miss_cfgs);
+            let measured = self.inner.measure_batch_at(wl, &miss_cfgs, fidelity);
             debug_assert_eq!(measured.len(), miss_cfgs.len());
             for (&i, m) in miss_idx.iter().zip(measured) {
                 self.misses.fetch_add(1, Ordering::Relaxed);
-                self.memo.insert((wl.clone(), cfgs[i]), m.clone());
+                self.memo.insert((wl.clone(), cfgs[i], fidelity), m.clone());
                 out[i] = Some(m);
             }
         }
         out.into_iter().map(|m| m.expect("every candidate answered")).collect()
+    }
+
+    fn attach_budget(&mut self, budget: MeasureBudget) {
+        // forward inward: memo hits must stay free in the ledger
+        self.inner.attach_budget(budget);
     }
 
     fn name(&self) -> &str {
@@ -341,6 +428,38 @@ mod tests {
         assert_eq!(cached.misses(), 3);
         // order preserved: batch[0] is a's memoized value
         assert_eq!(batch[0].runtime_us, cached.measure(&wl, &a).runtime_us);
+    }
+
+    #[test]
+    fn batch_attribution_is_exact_and_memo_hits_stay_off_the_ledger() {
+        use crate::sim::MeasureBudget;
+        let mut cached = CachedMeasurer::new(SimMeasurer::boxed(Simulator::default()));
+        let budget = MeasureBudget::new();
+        cached.attach_budget(budget.clone());
+        let wl = stage(3);
+        let a = ScheduleConfig::default();
+        let b = ScheduleConfig { chunk: 1, ..a };
+        let c = ScheduleConfig { chunk: 4, ..a };
+
+        cached.measure_batch(&wl, &[a, b]);
+        assert_eq!((cached.last_batch_hits(), cached.last_batch_misses()), (0, 2));
+        assert_eq!(budget.full_total(), 2);
+
+        // [a, c]: a is a memo hit — free in the ledger, attributed per batch
+        cached.measure_batch(&wl, &[a, c]);
+        assert_eq!((cached.last_batch_hits(), cached.last_batch_misses()), (1, 1));
+        assert_eq!(budget.full_total(), 3, "memo hit must not book a measurement");
+
+        // a low-fidelity pass of `a` is a distinct memo key (miss), and
+        // books low passes — never a full one
+        cached.measure_batch_at(&wl, &[a], Fidelity::Low(4));
+        assert_eq!((cached.last_batch_hits(), cached.last_batch_misses()), (0, 1));
+        assert_eq!(budget.low_total(), 4);
+        assert_eq!(budget.full_total(), 3);
+        // ...and repeating it is a pure memo hit
+        cached.measure_batch_at(&wl, &[a], Fidelity::Low(4));
+        assert_eq!((cached.last_batch_hits(), cached.last_batch_misses()), (1, 0));
+        assert_eq!(budget.low_total(), 4);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! rely on, not absolute microseconds.
 
 mod analysis;
+mod budget;
 mod gpu;
 mod measure;
 mod occupancy;
@@ -21,6 +22,7 @@ pub use analysis::{
     analyze, roofline_check, roofline_tolerance, roofline_us, ProfileCache, RooflinePoint,
     RooflineReport, RooflineRow, TrafficAnalysis, ACC_BYTES, INT4_BYTES, ROOFLINE_BLOCK_M,
 };
+pub use budget::{Fidelity, MeasureBudget, RungCounts, LOW_FIDELITY_NOISE};
 pub use gpu::GpuSpec;
 pub use measure::{CachedMeasurer, Measurer, SimMeasurer};
 pub use occupancy::{occupancy, BlockResources, Limiter, Occupancy};
@@ -256,20 +258,73 @@ impl Simulator {
         self.measure(wl, cfg, &mut ProfileCache::default())
     }
 
+    /// Simulate one schedule at a chosen [`Fidelity`].
+    ///
+    /// `Full` is exactly [`Simulator::measure`]. `Low(reps)` models a
+    /// quick profiling pass: the noiseless analytic time perturbed by
+    /// the mean of `reps` independent jitters, each
+    /// [`LOW_FIDELITY_NOISE`]x noisier than a full measurement — cheap,
+    /// rough, and still a pure deterministic function of `(workload,
+    /// config, seed, fidelity)`, so rung replays and parallel batches
+    /// stay bit-identical to serial ones.
+    pub fn measure_at(
+        &self,
+        wl: &dyn Workload,
+        cfg: &ScheduleConfig,
+        cache: &mut ProfileCache,
+        fidelity: Fidelity,
+    ) -> Measurement {
+        match fidelity {
+            Fidelity::Full => self.measure(wl, cfg, cache),
+            Fidelity::Low(reps) => {
+                let clean = Simulator { noise_sigma: 0.0, ..self.clone() };
+                let mut m = clean.measure(wl, cfg, cache);
+                if !m.feasible || self.noise_sigma <= 0.0 {
+                    return m;
+                }
+                let reps = reps.max(1);
+                let sigma = self.noise_sigma * LOW_FIDELITY_NOISE;
+                let mean: f64 = (0..reps)
+                    .map(|rep| self.jitter(wl, cfg, sigma, LOW_FIDELITY_SALT ^ rep as u64))
+                    .sum::<f64>()
+                    / reps as f64;
+                m.runtime_us *= mean;
+                m
+            }
+        }
+    }
+
     /// Deterministic multiplicative jitter in [exp(-3σ), exp(3σ)] keyed by
     /// (workload, config, seed) — repeated measurement of the same config
     /// returns the same value, like a stable hardware measurement mean.
     fn noise(&self, wl: &dyn Workload, cfg: &ScheduleConfig) -> f64 {
+        self.jitter(wl, cfg, self.noise_sigma, 0)
+    }
+
+    /// The jitter primitive behind [`Simulator::noise`]: a pure hash of
+    /// `(workload name, config, seed, salt)` mapped to a multiplicative
+    /// factor with spread `sigma`. `salt = 0` is the full-fidelity
+    /// measurement; low-fidelity reps salt the key so their draws are
+    /// independent of the full one (and of each other) while staying
+    /// deterministic.
+    fn jitter(&self, wl: &dyn Workload, cfg: &ScheduleConfig, sigma: f64, salt: u64) -> f64 {
         let mut h = DefaultHasher::new();
         wl.name().hash(&mut h);
         cfg.hash(&mut h);
         self.seed.hash(&mut h);
+        if salt != 0 {
+            salt.hash(&mut h);
+        }
         let u = (h.finish() >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
         // inverse-CDF-ish triangular approximation of a normal
         let z = (u - 0.5) * 3.46; // +-1.73 sigma-ish uniform spread
-        (self.noise_sigma * z).exp()
+        (sigma * z).exp()
     }
 }
+
+/// Salt keying low-fidelity rep jitters apart from the full-fidelity
+/// draw (`salt = LOW_FIDELITY_SALT ^ rep`).
+const LOW_FIDELITY_SALT: u64 = 0x10F1_DE11_7700_0000;
 
 fn infeasible() -> Measurement {
     Measurement {
@@ -403,6 +458,38 @@ mod tests {
             .measure_once(&wl, &ScheduleConfig::default())
             .runtime_us;
         assert!((a / clean - 1.0).abs() < 0.06);
+    }
+
+    #[test]
+    fn low_fidelity_is_deterministic_noisier_and_converges_with_reps() {
+        let mut sim = Simulator::default();
+        sim.noise_sigma = 0.015;
+        let wl = stage(3);
+        let cfg = ScheduleConfig::default();
+        let mut cache = ProfileCache::default();
+        let a = sim.measure_at(&wl, &cfg, &mut cache, Fidelity::Low(1)).runtime_us;
+        let b = sim.measure_at(&wl, &cfg, &mut cache, Fidelity::Low(1)).runtime_us;
+        assert_eq!(a, b, "low fidelity is a pure function of (wl, cfg, seed)");
+        let full = sim.measure_at(&wl, &cfg, &mut cache, Fidelity::Full).runtime_us;
+        assert_ne!(a, full, "low pass draws its own jitter");
+        // averaging reps narrows the low-fidelity error toward the clean time
+        let clean = Simulator::noiseless(GpuSpec::t4()).measure_once(&wl, &cfg).runtime_us;
+        let err1 = (a / clean - 1.0).abs();
+        let err64 = (sim.measure_at(&wl, &cfg, &mut cache, Fidelity::Low(64)).runtime_us
+            / clean
+            - 1.0)
+            .abs();
+        assert!(err1 < 0.25, "single low rep stays bounded: {err1}");
+        assert!(err64 < err1 + 0.03, "64-rep mean is no wilder than one rep");
+        // a noiseless simulator's low pass is exactly the clean time
+        let quiet = Simulator::noiseless(GpuSpec::t4());
+        assert_eq!(
+            quiet.measure_at(&wl, &cfg, &mut cache, Fidelity::Low(4)).runtime_us,
+            clean
+        );
+        // infeasible schedules are infeasible at every fidelity
+        let bad = ScheduleConfig { blk_col_warps: 8, warp_col_tiles: 8, ..Default::default() };
+        assert!(!sim.measure_at(&stage(2), &bad, &mut cache, Fidelity::Low(2)).feasible);
     }
 
     #[test]

@@ -45,7 +45,7 @@ use std::sync::Mutex;
 use crate::searchspace::ScheduleConfig;
 use crate::workload::OpWorkload;
 
-use super::{Measurement, Measurer, ProfileCache, Simulator};
+use super::{Fidelity, MeasureBudget, Measurement, Measurer, ProfileCache, Simulator};
 
 /// A scoped worker pool for embarrassingly parallel batches.
 ///
@@ -151,6 +151,13 @@ pub struct ParallelMeasurer {
     /// each stripe is only ever locked by its own worker during a batch,
     /// so the mutexes are uncontended and exist purely to satisfy `Sync`.
     caches: Vec<Mutex<ProfileCache>>,
+    /// Per-worker lifetime measurement counts (candidate claims), same
+    /// index scheme as `caches`. The counts the workers used to discard:
+    /// their sum is exactly the number of candidates measured, however
+    /// the work-stealing cursor distributed them, which is what makes
+    /// the budget ledger exact under `--jobs`.
+    worker_counts: Vec<AtomicUsize>,
+    budget: Option<MeasureBudget>,
     name: String,
 }
 
@@ -159,8 +166,9 @@ impl ParallelMeasurer {
     pub fn new(sim: Simulator, jobs: usize) -> Self {
         let pool = MeasurePool::new(jobs);
         let caches = (0..pool.workers()).map(|_| Mutex::new(ProfileCache::default())).collect();
+        let worker_counts = (0..pool.workers()).map(|_| AtomicUsize::new(0)).collect();
         let name = format!("parallel(sim x{})", pool.workers());
-        Self { sim, pool, caches, name }
+        Self { sim, pool, caches, worker_counts, budget: None, name }
     }
 
     /// Convenience for `TunerOptions { measurer: .. }` call sites.
@@ -177,25 +185,64 @@ impl ParallelMeasurer {
     pub fn simulator(&self) -> &Simulator {
         &self.sim
     }
+
+    /// How many candidates each worker has measured over this
+    /// measurer's lifetime (claims from the work-stealing cursor; single
+    /// `measure` calls book on worker 0). Sums to the total candidate
+    /// count regardless of how the stealing distributed the work.
+    pub fn worker_counts(&self) -> Vec<usize> {
+        self.worker_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    fn fan_out(
+        &self,
+        wl: &OpWorkload,
+        cfgs: &[ScheduleConfig],
+        fidelity: Fidelity,
+    ) -> Vec<Measurement> {
+        if let Some(b) = &self.budget {
+            b.count(fidelity, cfgs.len());
+        }
+        let sim = &self.sim;
+        let caches = &self.caches;
+        let counts = &self.worker_counts;
+        self.pool.run_with(
+            cfgs.len(),
+            |w| w,
+            |w, i| {
+                counts[*w].fetch_add(1, Ordering::Relaxed);
+                let mut cache = caches[*w].lock().unwrap();
+                sim.measure_at(wl, &cfgs[i], &mut cache, fidelity)
+            },
+        )
+    }
 }
 
 impl Measurer for ParallelMeasurer {
     fn measure(&mut self, wl: &OpWorkload, cfg: &ScheduleConfig) -> Measurement {
+        if let Some(b) = &self.budget {
+            b.count(Fidelity::Full, 1);
+        }
+        self.worker_counts[0].fetch_add(1, Ordering::Relaxed);
         let mut cache = self.caches[0].lock().unwrap();
         self.sim.measure(wl, cfg, &mut cache)
     }
 
     fn measure_batch(&mut self, wl: &OpWorkload, cfgs: &[ScheduleConfig]) -> Vec<Measurement> {
-        let sim = &self.sim;
-        let caches = &self.caches;
-        self.pool.run_with(
-            cfgs.len(),
-            |w| w,
-            |w, i| {
-                let mut cache = caches[*w].lock().unwrap();
-                sim.measure(wl, &cfgs[i], &mut cache)
-            },
-        )
+        self.fan_out(wl, cfgs, Fidelity::Full)
+    }
+
+    fn measure_batch_at(
+        &mut self,
+        wl: &OpWorkload,
+        cfgs: &[ScheduleConfig],
+        fidelity: Fidelity,
+    ) -> Vec<Measurement> {
+        self.fan_out(wl, cfgs, fidelity)
+    }
+
+    fn attach_budget(&mut self, budget: MeasureBudget) {
+        self.budget = Some(budget);
     }
 
     fn name(&self) -> &str {
@@ -278,6 +325,47 @@ mod tests {
         assert_eq!(want, got, "parallel fan-out must reproduce serial bit-for-bit");
         assert_eq!(parallel.jobs(), 4);
         assert_eq!(parallel.name(), "parallel(sim x4)");
+    }
+
+    #[test]
+    fn serial_and_parallel_budgets_book_identical_counts() {
+        // satellite fix: the ledger must be exact under --jobs. Run the
+        // same low+full measurement sequence through a serial SimMeasurer
+        // and a 4-way ParallelMeasurer: ledger totals must match exactly,
+        // and the parallel per-worker counts must sum to the candidate
+        // count however the stealing distributed them.
+        let wl: OpWorkload = ConvWorkload::resnet50_stage(2, 8).into();
+        let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
+        let mut rng = Rng::new(23);
+        let cfgs: Vec<ScheduleConfig> =
+            (0..32).map(|_| space.decode(&space.random_legal(&mut rng))).collect();
+        let sim = Simulator { noise_sigma: 0.02, seed: 5, ..Default::default() };
+
+        let run = |m: &mut dyn Measurer| {
+            let budget = MeasureBudget::new();
+            m.attach_budget(budget.clone());
+            budget.set_rung(0);
+            let low = m.measure_batch_at(&wl, &cfgs, Fidelity::Low(4));
+            budget.set_rung(1);
+            let full = m.measure_batch_at(&wl, &cfgs[..8], Fidelity::Full);
+            (budget, low, full)
+        };
+        let mut serial = SimMeasurer::new(sim.clone());
+        let mut parallel = ParallelMeasurer::new(sim, 4);
+        let (sb, slow, sfull) = run(&mut serial);
+        let (pb, plow, pfull) = run(&mut parallel);
+
+        assert_eq!(sb.low_total(), pb.low_total());
+        assert_eq!(sb.full_total(), pb.full_total());
+        assert_eq!(sb.rungs(), pb.rungs(), "per-rung attribution matches too");
+        assert_eq!(sb.low_total(), 32 * 4);
+        assert_eq!(sb.full_total(), 8);
+        // measurements themselves stay bit-identical at every fidelity
+        let us = |v: &[Measurement]| v.iter().map(|m| m.runtime_us).collect::<Vec<_>>();
+        assert_eq!(us(&slow), us(&plow));
+        assert_eq!(us(&sfull), us(&pfull));
+        // the surfaced per-worker counts account for every candidate
+        assert_eq!(parallel.worker_counts().iter().sum::<usize>(), 32 + 8);
     }
 
     #[test]

@@ -1,0 +1,628 @@
+//! The cross-session tune cache: a durable, fingerprint-keyed store of
+//! tuned schedules with provenance.
+//!
+//! Tuning cost is the barrier to "every shape a user sends gets tuned" —
+//! a [`crate::tuner::Session`] spends hundreds of measurements per
+//! shape, and a fleet re-pays that bill for every process, every
+//! restart, every near-duplicate shape. The [`TuneCache`] amortizes it
+//! across sessions the way the schedule registry amortizes it across
+//! requests:
+//!
+//! * the key is a **[`Fingerprint`]** — operator family + the GEMM
+//!   legality shape with each dimension *anchored* (bucketed up to the
+//!   next power of two, the same shape-bucketing trick durable autotune
+//!   caches use) + precision + groups. Near-identical shapes share a
+//!   bucket; distinct precisions or group counts never collide.
+//! * an **exact fingerprint hit** (with the cached schedule still legal
+//!   for the concrete shape) serves the schedule with **zero
+//!   measurements**;
+//! * a **nearest-anchor miss** (same operator/precision/groups,
+//!   different bucket) warm-starts the explorer from the cached
+//!   schedule's one-knob neighborhood instead of uniform random;
+//! * every entry carries **provenance** — trials spent, measurement
+//!   fidelity, source session seed, and the registry schema version in
+//!   force when it was written — so a served schedule is auditable back
+//!   to the session that earned it.
+//!
+//! The JSON artifact is versioned like the schedule registry, and a
+//! corrupted or truncated file is **rejected and rebuilt** (the cache is
+//! an accelerator, never a correctness dependency — garbage in the file
+//! must never become garbage in the serving path).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::costmodel::featurize;
+use crate::registry::REGISTRY_VERSION;
+use crate::searchspace::ScheduleConfig;
+use crate::util::Json;
+use crate::workload::{OpWorkload, Precision, Workload};
+
+/// Schema version written by [`TuneCache::to_json`].
+pub const TUNE_CACHE_VERSION: usize = 1;
+
+/// Anchor one GEMM dimension: bucket up to the next power of two (and
+/// at least 1), so shapes that differ only by ragged edges share a key.
+fn anchor_dim(d: usize) -> usize {
+    d.max(1).next_power_of_two()
+}
+
+/// The problem identity a tuned schedule transfers across: operator
+/// family, anchored GEMM shape, precision, and group count.
+///
+/// Anchoring reuses the [`Workload::profile_key`] idea (hash the
+/// operator tag plus the shape) but buckets each legality-GEMM dimension
+/// up to its power-of-two anchor first — `M = 25088` and `M = 25000`
+/// land on the same key, while `Int4` vs `Int8` or `groups = 1` vs `32`
+/// never can (they are distinct key components, not hashed away).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    /// Operator family tag (`"conv"`, `"matmul"`).
+    pub op: String,
+    /// Anchored (M, N, K) of the workload's legality GEMM.
+    pub anchor: (usize, usize, usize),
+    /// Reduced-precision data type.
+    pub precision: Precision,
+    /// Group count (per-group GEMMs tune differently from dense ones).
+    pub groups: usize,
+}
+
+impl Fingerprint {
+    /// The fingerprint of one workload.
+    pub fn of(wl: &OpWorkload) -> Self {
+        let (m, n, k) = wl.legality_gemm();
+        Self {
+            op: wl.op_name().to_string(),
+            anchor: (anchor_dim(m), anchor_dim(n), anchor_dim(k)),
+            precision: wl.precision(),
+            groups: wl.groups(),
+        }
+    }
+
+    /// The JSON map key: human-readable, sorted stably, collision-free
+    /// across precisions and groups by construction.
+    pub fn key(&self) -> String {
+        let (m, n, k) = self.anchor;
+        format!("{}:m{}:n{}:k{}:{}:g{}", self.op, m, n, k, self.precision.tag(), self.groups)
+    }
+
+    /// The fingerprint as a hash — the [`Workload::profile_key`]-style
+    /// u64 form, for callers that want a compact cache key.
+    pub fn hash_key(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.op.hash(&mut h);
+        self.anchor.hash(&mut h);
+        self.precision.tag().hash(&mut h);
+        self.groups.hash(&mut h);
+        h.finish()
+    }
+
+    /// Log-space distance between two fingerprints' anchors, or `None`
+    /// when they differ in operator, precision, or groups (schedules
+    /// never transfer across those — a warm start from the wrong
+    /// precision would seed the search with an illegal tile geometry).
+    pub fn anchor_distance(&self, other: &Fingerprint) -> Option<u32> {
+        if self.op != other.op
+            || self.precision != other.precision
+            || self.groups != other.groups
+        {
+            return None;
+        }
+        let d = |a: usize, b: usize| {
+            (a.trailing_zeros() as i64 - b.trailing_zeros() as i64).unsigned_abs() as u32
+        };
+        let (am, an, ak) = self.anchor;
+        let (bm, bn, bk) = other.anchor;
+        Some(d(am, bm) + d(an, bn) + d(ak, bk))
+    }
+}
+
+/// One cached tuning result: the schedule plus full provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    /// The workload the session actually tuned (the bucket's concrete
+    /// representative — also what GBT pretraining featurizes).
+    pub workload: OpWorkload,
+    /// The best schedule that session found.
+    pub config: ScheduleConfig,
+    /// Its tuned (simulated) runtime, microseconds.
+    pub runtime_us: f64,
+    /// Full-fidelity trials the source session spent earning it.
+    pub trials: usize,
+    /// Measurement fidelity provenance: `"multi"` (successive halving)
+    /// or `"flat"` (every candidate measured fully).
+    pub fidelity: String,
+    /// Seed of the source session (replays the tune bit-for-bit).
+    pub seed: u64,
+    /// [`crate::registry::REGISTRY_VERSION`] in force when written.
+    pub registry_version: usize,
+}
+
+impl CacheEntry {
+    /// The fingerprint this entry files under.
+    pub fn fingerprint(&self) -> Fingerprint {
+        Fingerprint::of(&self.workload)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", self.workload.as_workload().to_json()),
+            ("schedule", self.config.to_json()),
+            ("runtime_us", Json::Num(self.runtime_us)),
+            ("trials", Json::Num(self.trials as f64)),
+            ("fidelity", Json::Str(self.fidelity.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("registry_version", Json::Num(self.registry_version as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            workload: OpWorkload::from_json(j.req("workload")?)?,
+            config: ScheduleConfig::from_json(j.req("schedule")?)?,
+            runtime_us: j
+                .req("runtime_us")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("runtime_us not a number"))?,
+            trials: j.get("trials").and_then(Json::as_usize).unwrap_or(0),
+            fidelity: j
+                .get("fidelity")
+                .and_then(Json::as_str)
+                .unwrap_or("flat")
+                .to_string(),
+            seed: j.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
+            registry_version: j
+                .get("registry_version")
+                .and_then(Json::as_usize)
+                .unwrap_or(REGISTRY_VERSION),
+        })
+    }
+}
+
+/// `{fingerprint → tuned schedule + provenance}` — the durable
+/// cross-session store (see the module docs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuneCache {
+    entries: BTreeMap<String, CacheEntry>,
+}
+
+impl TuneCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// How many fingerprint buckets hold an entry.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Every `(fingerprint key, entry)` pair, sorted by key.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &CacheEntry)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// File `entry` under its fingerprint. A bucket keeps its
+    /// best-known result: an existing entry is replaced only by a
+    /// strictly faster one (or an equal-runtime one earned with more
+    /// trials). Returns whether the entry was stored.
+    pub fn insert(&mut self, entry: CacheEntry) -> bool {
+        let key = entry.fingerprint().key();
+        match self.entries.get(&key) {
+            Some(old)
+                if old.runtime_us < entry.runtime_us
+                    || (old.runtime_us == entry.runtime_us && old.trials >= entry.trials) =>
+            {
+                false
+            }
+            _ => {
+                self.entries.insert(key, entry);
+                true
+            }
+        }
+    }
+
+    /// Exact-fingerprint lookup.
+    pub fn lookup(&self, fp: &Fingerprint) -> Option<&CacheEntry> {
+        self.entries.get(&fp.key())
+    }
+
+    /// The closest entry by anchor distance among those sharing `fp`'s
+    /// operator, precision, and groups — the warm-start donor for a
+    /// miss. Ties break on the smaller key, so the choice is
+    /// deterministic across sessions.
+    pub fn nearest(&self, fp: &Fingerprint) -> Option<(&CacheEntry, u32)> {
+        self.entries
+            .values()
+            .filter_map(|e| fp.anchor_distance(&e.fingerprint()).map(|d| (e, d)))
+            .min_by_key(|(e, d)| (*d, e.fingerprint().key()))
+    }
+
+    /// Featurized `(features, runtime_us)` rows from every entry — the
+    /// GBT pretraining prior a cold session can fit before its first
+    /// measurement (the feature space carries workload context dims, so
+    /// rows transfer across shapes and operators).
+    pub fn pretrain_rows(&self) -> Vec<(Vec<f64>, f64)> {
+        self.entries
+            .values()
+            .map(|e| (featurize(e.workload.as_workload(), &e.config), e.runtime_us))
+            .collect()
+    }
+
+    // ----- JSON interchange ------------------------------------------------
+
+    /// Serialize to the versioned JSON schema.
+    pub fn to_json(&self) -> Json {
+        let entries: BTreeMap<String, Json> =
+            self.entries.iter().map(|(k, v)| (k.clone(), v.to_json())).collect();
+        Json::obj(vec![
+            ("version", Json::Num(TUNE_CACHE_VERSION as f64)),
+            ("entries", Json::Obj(entries)),
+        ])
+    }
+
+    /// Parse the versioned schema; rejects unknown versions, malformed
+    /// entries, and entries whose stored workload does not reproduce
+    /// the key they are filed under (a swapped or hand-edited entry
+    /// must not serve under the wrong fingerprint).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let version = j
+            .req("version")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("tune-cache version not an integer"))?;
+        if version != TUNE_CACHE_VERSION {
+            bail!("unsupported tune-cache version {version} (want {TUNE_CACHE_VERSION})");
+        }
+        let entries = j
+            .req("entries")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("'entries' not an object"))?;
+        let mut out = Self::new();
+        for (key, entry) in entries {
+            let entry = CacheEntry::from_json(entry)
+                .with_context(|| format!("tune-cache entry '{key}'"))?;
+            let expect = entry.fingerprint().key();
+            if *key != expect {
+                bail!("tune-cache entry '{key}' does not match its workload ('{expect}')");
+            }
+            out.entries.insert(key.clone(), entry);
+        }
+        Ok(out)
+    }
+
+    /// Write the cache to a JSON file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing tune cache {path:?}"))
+    }
+
+    /// Load a cache file, strictly: any read/parse/schema failure is an
+    /// error (use [`TuneCache::load_or_rebuild`] on the consult path).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tune cache {path:?}"))?;
+        Self::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing tune cache {path:?}"))
+    }
+
+    /// The consult-path loader: a missing file is a normal cold start
+    /// (empty cache, `rebuilt = false`); a present-but-corrupt or
+    /// truncated file is **rejected and rebuilt** (empty cache,
+    /// `rebuilt = true`) — never a panic, never garbage served as a
+    /// schedule.
+    pub fn load_or_rebuild(path: impl AsRef<Path>) -> (Self, bool) {
+        let path = path.as_ref();
+        if !path.exists() {
+            return (Self::new(), false);
+        }
+        match Self::load(path) {
+            Ok(cache) => (cache, false),
+            Err(_) => (Self::new(), true),
+        }
+    }
+}
+
+/// A shareable handle on one [`TuneCache`]: sessions, the online tuner,
+/// and the CLI all consult and update the same store through clones of
+/// one handle, and [`CacheHandle::persist`] writes it back to its
+/// backing file (if any) atomically with respect to other handle users.
+#[derive(Clone)]
+pub struct CacheHandle {
+    inner: Arc<Mutex<TuneCache>>,
+    path: Option<PathBuf>,
+    rebuilt: bool,
+}
+
+impl std::fmt::Debug for CacheHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CacheHandle")
+            .field("len", &self.len())
+            .field("path", &self.path)
+            .field("rebuilt", &self.rebuilt)
+            .finish()
+    }
+}
+
+impl CacheHandle {
+    /// A process-local cache with no backing file ([`CacheHandle::persist`]
+    /// is a no-op).
+    pub fn in_memory() -> Self {
+        Self { inner: Arc::new(Mutex::new(TuneCache::new())), path: None, rebuilt: false }
+    }
+
+    /// Open (or start) the cache at `path` via
+    /// [`TuneCache::load_or_rebuild`] — corruption is absorbed, not
+    /// propagated; check [`CacheHandle::was_rebuilt`] to report it.
+    pub fn open(path: impl Into<PathBuf>) -> Self {
+        let path = path.into();
+        let (cache, rebuilt) = TuneCache::load_or_rebuild(&path);
+        Self { inner: Arc::new(Mutex::new(cache)), path: Some(path), rebuilt }
+    }
+
+    /// Whether opening found a corrupt file and started fresh.
+    pub fn was_rebuilt(&self) -> bool {
+        self.rebuilt
+    }
+
+    /// The backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Whether the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    /// Exact-fingerprint lookup (cloned out of the shared store).
+    pub fn lookup(&self, fp: &Fingerprint) -> Option<CacheEntry> {
+        self.inner.lock().unwrap().lookup(fp).cloned()
+    }
+
+    /// Nearest warm-start donor for `fp` (see [`TuneCache::nearest`]).
+    pub fn nearest(&self, fp: &Fingerprint) -> Option<(CacheEntry, u32)> {
+        self.inner.lock().unwrap().nearest(fp).map(|(e, d)| (e.clone(), d))
+    }
+
+    /// File an entry (see [`TuneCache::insert`]).
+    pub fn insert(&self, entry: CacheEntry) -> bool {
+        self.inner.lock().unwrap().insert(entry)
+    }
+
+    /// GBT pretraining rows from the whole store.
+    pub fn pretrain_rows(&self) -> Vec<(Vec<f64>, f64)> {
+        self.inner.lock().unwrap().pretrain_rows()
+    }
+
+    /// A point-in-time copy of the store (for inspection and tests).
+    pub fn snapshot(&self) -> TuneCache {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Write the store back to its backing file; a no-op for
+    /// [`CacheHandle::in_memory`] handles.
+    pub fn persist(&self) -> Result<()> {
+        match &self.path {
+            Some(path) => self.inner.lock().unwrap().save(path),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::util::Rng;
+    use crate::workload::MatmulWorkload;
+
+    fn entry_for(wl: impl Into<OpWorkload>, runtime_us: f64, trials: usize) -> CacheEntry {
+        CacheEntry {
+            workload: wl.into(),
+            config: ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, ..Default::default() },
+            runtime_us,
+            trials,
+            fidelity: "multi".to_string(),
+            seed: 7,
+            registry_version: REGISTRY_VERSION,
+        }
+    }
+
+    #[test]
+    fn anchoring_buckets_nearby_shapes_together() {
+        // property: for seeded random conv shapes, two workloads whose
+        // legality-GEMM dims share power-of-two buckets share an anchor
+        // key, and shapes in different buckets never do
+        let mut rng = Rng::new(11);
+        for _ in 0..64 {
+            let h = 7 + rng.gen_range(50);
+            let c_in = 8 * (1 + rng.gen_range(64));
+            let c_out = 8 * (1 + rng.gen_range(64));
+            let a = ConvWorkload::new("fp_a", 1, h, h, c_in, c_out);
+            let b = ConvWorkload::new("fp_b", 1, h, h, c_in, c_out);
+            let fa = Fingerprint::of(&a.into());
+            let fb = Fingerprint::of(&b.into());
+            // identical shapes under different names: same bucket
+            assert_eq!(fa.key(), fb.key());
+            assert_eq!(fa.hash_key(), fb.hash_key());
+            assert_eq!(fa.anchor_distance(&fb), Some(0));
+        }
+        // ragged shapes anchor up: stage2's M = 25088 buckets at 32768
+        let big = ConvWorkload::resnet50_stage(2, 8);
+        let m = big.gemm_m();
+        let fa = Fingerprint::of(&big.clone().into());
+        assert_eq!(fa.anchor.0, m.next_power_of_two());
+        // different anchors -> different keys (never a silent merge)
+        let small = ConvWorkload::resnet50_stage(5, 8);
+        let fb = Fingerprint::of(&small.into());
+        assert_ne!(fa.key(), fb.key());
+        assert!(fa.anchor_distance(&fb).unwrap() > 0);
+    }
+
+    #[test]
+    fn precisions_and_groups_never_collide() {
+        let base = ConvWorkload::new("fp_p", 8, 28, 28, 64, 64);
+        let f4 = Fingerprint::of(&base.clone().into());
+        let f8 = Fingerprint::of(&base.clone().with_precision(Precision::Int8).into());
+        assert_ne!(f4.key(), f8.key());
+        assert_eq!(f4.anchor_distance(&f8), None, "no transfer across precisions");
+        let fg = Fingerprint::of(&base.clone().with_groups(4).into());
+        assert_ne!(f4.key(), fg.key());
+        assert_eq!(f4.anchor_distance(&fg), None, "no transfer across groups");
+        // operators are namespaced apart even on an identical GEMM
+        let mm = MatmulWorkload::new("fp_mm", 6272, 64, 576);
+        let fm = Fingerprint::of(&mm.into());
+        assert_ne!(f4.key(), fm.key());
+        assert_eq!(f4.anchor_distance(&fm), None);
+    }
+
+    #[test]
+    fn insert_keeps_the_best_entry_per_bucket() {
+        let mut cache = TuneCache::new();
+        let wl = ConvWorkload::new("best", 8, 28, 28, 64, 64);
+        assert!(cache.insert(entry_for(wl.clone(), 50.0, 32)));
+        assert!(!cache.insert(entry_for(wl.clone(), 60.0, 64)), "slower never replaces");
+        assert!(cache.insert(entry_for(wl.clone(), 40.0, 16)), "faster replaces");
+        assert!(cache.insert(entry_for(wl.clone(), 40.0, 64)), "equal + more trials replaces");
+        assert!(!cache.insert(entry_for(wl.clone(), 40.0, 64)), "identical does not");
+        assert_eq!(cache.len(), 1);
+        let fp = Fingerprint::of(&wl.into());
+        assert_eq!(cache.lookup(&fp).unwrap().trials, 64);
+    }
+
+    #[test]
+    fn nearest_prefers_the_closest_anchor_deterministically() {
+        let mut cache = TuneCache::new();
+        // three conv buckets at increasing channel widths
+        cache.insert(entry_for(ConvWorkload::new("n64", 8, 28, 28, 64, 64), 10.0, 8));
+        cache.insert(entry_for(ConvWorkload::new("n256", 8, 28, 28, 256, 256), 20.0, 8));
+        let probe = Fingerprint::of(&ConvWorkload::new("probe", 8, 28, 28, 96, 96).into());
+        assert!(cache.lookup(&probe).is_none(), "96 channels is its own bucket");
+        let (donor, d) = cache.nearest(&probe).expect("same op/prec/groups exists");
+        // 96's K axis (864 -> 1024) matches the 64-channel bucket's
+        // (576 -> 1024) exactly; only N differs by one octave
+        assert_eq!(donor.workload.name(), "n64");
+        assert_eq!(d, 1);
+        // a 192-channel probe sits on 256's side of every axis
+        let probe2 = Fingerprint::of(&ConvWorkload::new("probe2", 8, 28, 28, 192, 192).into());
+        let (donor2, d2) = cache.nearest(&probe2).unwrap();
+        assert_eq!(donor2.workload.name(), "n256");
+        assert_eq!(d2, 1);
+        // a probe with no compatible entry gets nothing
+        let mm = Fingerprint::of(&MatmulWorkload::new("probe_mm", 512, 512, 512).into());
+        assert!(cache.nearest(&mm).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries_and_provenance() {
+        let mut cache = TuneCache::new();
+        cache.insert(entry_for(ConvWorkload::resnet50_stage(2, 8), 51.25, 48));
+        cache.insert(entry_for(MatmulWorkload::new("rt_mm", 1024, 768, 768), 99.5, 16));
+        let text = cache.to_json().to_string();
+        let back = TuneCache::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cache);
+        let (_, e) = back.iter().next().unwrap();
+        assert_eq!(e.fidelity, "multi");
+        assert_eq!(e.seed, 7);
+        assert_eq!(e.registry_version, REGISTRY_VERSION);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_files_are_rejected_and_rebuilt() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("tcconv_tunecache_corrupt_test.json");
+
+        // a valid cache round-trips through disk
+        let mut cache = TuneCache::new();
+        cache.insert(entry_for(ConvWorkload::resnet50_stage(3, 8), 33.0, 24));
+        cache.save(&path).unwrap();
+        let (loaded, rebuilt) = TuneCache::load_or_rebuild(&path);
+        assert_eq!(loaded, cache);
+        assert!(!rebuilt);
+
+        // truncation: chop the file mid-entry
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let (empty, rebuilt) = TuneCache::load_or_rebuild(&path);
+        assert!(empty.is_empty(), "truncated file must not serve partial garbage");
+        assert!(rebuilt);
+
+        // outright garbage
+        std::fs::write(&path, "not json at all {{{").unwrap();
+        let (empty, rebuilt) = TuneCache::load_or_rebuild(&path);
+        assert!(empty.is_empty() && rebuilt);
+
+        // wrong version is rejected by the strict loader too
+        std::fs::write(&path, r#"{"version": 99, "entries": {}}"#).unwrap();
+        assert!(TuneCache::load(&path).is_err());
+
+        // an entry filed under a key its workload does not reproduce is
+        // rejected (hand-edited / swapped entries must not serve)
+        let mut honest = TuneCache::new();
+        honest.insert(entry_for(ConvWorkload::resnet50_stage(3, 8), 33.0, 24));
+        let honest_json = honest.to_json().to_string();
+        let swapped = honest_json.replacen(":g1", ":g2", 1);
+        assert_ne!(swapped, honest_json);
+        std::fs::write(&path, swapped).unwrap();
+        assert!(TuneCache::load(&path).is_err());
+        let (empty, rebuilt) = TuneCache::load_or_rebuild(&path);
+        assert!(empty.is_empty() && rebuilt);
+
+        // a missing file is a cold start, not a rebuild
+        std::fs::remove_file(&path).ok();
+        let (cold, rebuilt) = TuneCache::load_or_rebuild(&path);
+        assert!(cold.is_empty() && !rebuilt);
+    }
+
+    #[test]
+    fn handle_shares_one_store_and_persists() {
+        let path = std::env::temp_dir().join("tcconv_tunecache_handle_test.json");
+        std::fs::remove_file(&path).ok();
+        let handle = CacheHandle::open(&path);
+        assert!(!handle.was_rebuilt());
+        let clone = handle.clone();
+        clone.insert(entry_for(ConvWorkload::resnet50_stage(4, 8), 12.0, 8));
+        assert_eq!(handle.len(), 1, "clones share the store");
+        handle.persist().unwrap();
+        let reopened = CacheHandle::open(&path);
+        assert_eq!(reopened.len(), 1);
+        let fp = Fingerprint::of(&ConvWorkload::resnet50_stage(4, 8).into());
+        assert!(reopened.lookup(&fp).is_some());
+        std::fs::remove_file(&path).ok();
+        // in-memory handles persist as a no-op
+        let mem = CacheHandle::in_memory();
+        mem.insert(entry_for(ConvWorkload::resnet50_stage(4, 8), 12.0, 8));
+        mem.persist().unwrap();
+        assert_eq!(mem.path(), None);
+    }
+
+    #[test]
+    fn pretrain_rows_featurize_every_entry() {
+        let mut cache = TuneCache::new();
+        cache.insert(entry_for(ConvWorkload::resnet50_stage(2, 8), 51.0, 8));
+        cache.insert(entry_for(MatmulWorkload::new("pre_mm", 1024, 768, 768), 88.0, 8));
+        let rows = cache.pretrain_rows();
+        assert_eq!(rows.len(), 2);
+        for (x, y) in &rows {
+            assert_eq!(x.len(), crate::costmodel::FEATURE_DIM);
+            assert!(*y > 0.0);
+        }
+    }
+}

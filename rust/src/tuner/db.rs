@@ -55,6 +55,14 @@ impl MeasureDb {
         &self.seen
     }
 
+    /// The measured set unioned with `extra` — the exclusion set a
+    /// multi-fidelity round hands its explorer: candidates screened out
+    /// by a cheap rung never entered the database, but must not be
+    /// re-proposed either.
+    pub fn measured_union(&self, extra: &HashSet<Genotype>) -> HashSet<Genotype> {
+        self.seen.union(extra).cloned().collect()
+    }
+
     /// The recorded runtime of `g`, if it was measured.
     pub fn runtime_of(&self, g: &Genotype) -> Option<f64> {
         self.index.get(g).map(|&i| self.rows[i].2)
@@ -105,5 +113,16 @@ mod tests {
     #[test]
     fn empty_db_has_no_best() {
         assert!(MeasureDb::new().best().is_none());
+    }
+
+    #[test]
+    fn measured_union_merges_without_mutating() {
+        let mut db = MeasureDb::new();
+        db.record(g(&[0]), ScheduleConfig::default(), 30.0);
+        let extra: HashSet<Genotype> = [g(&[0]), g(&[1])].into_iter().collect();
+        let union = db.measured_union(&extra);
+        assert_eq!(union.len(), 2, "overlap counted once");
+        assert!(union.contains(&g(&[0])) && union.contains(&g(&[1])));
+        assert_eq!(db.measured_set().len(), 1, "db untouched");
     }
 }

@@ -24,18 +24,35 @@
 //! [`crate::serve::Server`]'s metrics for hot or schedule-less request
 //! kinds, retunes them with bounded warm-started sessions, and publishes
 //! the winners through the server's registry hot-reload path.
+//!
+//! Measurement *spend* has two levers beyond parallelism. Within a
+//! session, [`Tuner::tune_halving`] replaces the flat
+//! measure-everything-fully loop with successive halving: a wide
+//! candidate field is pruned through cheap low-rep simulation rungs
+//! ([`Fidelity::Low`]) and only the surviving distinctive candidates pay
+//! for full-fidelity measurement — every sim and full pass booked, per
+//! rung, in a [`MeasureBudget`] ledger. Across sessions, the
+//! [`cache::TuneCache`] persists tuned schedules keyed by an anchored
+//! problem fingerprint, so a repeat shape costs zero measurements and a
+//! near-miss warm-starts from its neighbor's schedule.
 
+pub mod cache;
 mod db;
 mod history;
 pub mod online;
 mod session;
 
+pub use cache::{CacheEntry, CacheHandle, Fingerprint, TuneCache, TUNE_CACHE_VERSION};
 pub use db::MeasureDb;
 pub use history::{History, TrialRecord};
 pub use session::{Session, SessionBuilder, SessionResult};
 
 // Re-export the measurement seam here too: tuning code is its main client.
-pub use crate::sim::{CachedMeasurer, Measurer, ParallelMeasurer, SimMeasurer};
+pub use crate::sim::{
+    CachedMeasurer, Fidelity, MeasureBudget, Measurer, ParallelMeasurer, RungCounts, SimMeasurer,
+};
+
+use std::collections::HashSet;
 
 use crate::costmodel::{featurize, CostModel, Gbt, GbtParams};
 use crate::explore::{Explorer, ExplorerKind};
@@ -78,6 +95,46 @@ impl Default for TunerOptions {
     }
 }
 
+/// Successive-halving knobs for [`Tuner::tune_halving`].
+#[derive(Debug, Clone, Copy)]
+pub struct HalvingOptions {
+    /// Candidates entering each round's first rung; `0` = 8x the
+    /// session batch size (the halving advantage comes from screening a
+    /// much wider field than a flat round could afford to measure).
+    pub field: usize,
+    /// Cull factor per rung: each rung keeps `ceil(entrants / eta)`.
+    pub eta: usize,
+    /// Cheap simulation rungs before the full-fidelity rung. Rung `r`
+    /// measures at [`Fidelity::Low`]`(eta^r)` — later rungs average
+    /// more reps, so the noise shrinks as the stakes rise.
+    pub low_rungs: usize,
+}
+
+impl Default for HalvingOptions {
+    fn default() -> Self {
+        Self { field: 0, eta: 4, low_rungs: 2 }
+    }
+}
+
+/// One rung of one successive-halving round: who entered, at what
+/// fidelity, and who survived (in rank order). Equal seeds must replay
+/// equal records bit-for-bit — the multi-fidelity determinism invariant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RungRecord {
+    /// Halving round this rung belongs to.
+    pub round: usize,
+    /// Global rung index — the row key into
+    /// [`MeasureBudget::rungs`]' ledger.
+    pub rung: usize,
+    /// Fidelity every entrant was measured at.
+    pub fidelity: Fidelity,
+    /// Candidates measured in this rung.
+    pub entrants: usize,
+    /// Genotypes promoted to the next rung (for the final full rung:
+    /// the candidates actually measured), best-ranked first.
+    pub survivors: Vec<Genotype>,
+}
+
 /// Best schedule found by a tuning session.
 #[derive(Debug, Clone)]
 pub struct TuneResult {
@@ -86,10 +143,15 @@ pub struct TuneResult {
     /// Its measured (simulated) runtime, microseconds.
     pub runtime_us: f64,
     /// Measurements actually spent (≤ `n_trials`; less if the legal
-    /// space was exhausted).
+    /// space was exhausted). Only *full-fidelity* measurements count —
+    /// low-fidelity screening passes are tracked in the
+    /// [`MeasureBudget`] ledger, not here.
     pub trials_used: usize,
     /// Full per-trial log (Fig. 14's tuning curve).
     pub history: History,
+    /// Per-rung screening log ([`Tuner::tune_halving`] only; empty for
+    /// flat sessions).
+    pub rungs: Vec<RungRecord>,
 }
 
 /// One tuning session over one workload (any operator). Every
@@ -110,6 +172,12 @@ pub struct Tuner {
     /// includes workload-context dims, so one model ranks across convs
     /// (AutoTVM "accelerate[s] the process using transfer learning").
     prior: Vec<(Vec<f64>, f64)>,
+    /// Ledger every measurement is booked against (when attached); the
+    /// tuner advances its rung pointer so rows attribute per rung.
+    budget: Option<MeasureBudget>,
+    /// Genotypes injected ahead of the explorer's first proposals — the
+    /// cache warm start (a nearest-anchor schedule's neighborhood).
+    warm_seeds: Vec<Genotype>,
 }
 
 impl Tuner {
@@ -156,7 +224,25 @@ impl Tuner {
             n_trials,
             batch_size,
             prior: Vec::new(),
+            budget: None,
+            warm_seeds: Vec::new(),
         }
+    }
+
+    /// Attach a [`MeasureBudget`]: forwarded into the measurement
+    /// substrate (so every sim/full pass is booked) and kept here so
+    /// [`Tuner::tune_halving`] can advance the rung pointer.
+    pub fn attach_budget(&mut self, budget: MeasureBudget) {
+        self.measurer.attach_budget(budget.clone());
+        self.budget = Some(budget);
+    }
+
+    /// Inject warm-start candidates measured (or screened) ahead of the
+    /// explorer's own proposals in the first round. Already-measured
+    /// seeds and duplicates are skipped; seeds beyond the first round's
+    /// size are dropped (they are hints, not obligations).
+    pub fn set_warm_seeds(&mut self, seeds: Vec<Genotype>) {
+        self.warm_seeds = seeds;
     }
 
     /// Warm-start from another workload's measurement database: its
@@ -175,14 +261,13 @@ impl Tuner {
         self
     }
 
-    /// Install pre-featurized transfer rows (the [`Session`] path); trains
-    /// the model right away once there is enough data.
+    /// Install pre-featurized transfer rows (the [`Session`] path):
+    /// pretrains the model right away ([`CostModel::pretrain`], which
+    /// skips priors too small to rank on) and keeps the rows in every
+    /// subsequent retraining set.
     pub fn set_prior(&mut self, rows: Vec<(Vec<f64>, f64)>) {
         self.prior = rows;
-        if self.prior.len() >= 4 {
-            let (xs, ys): (Vec<Vec<f64>>, Vec<f64>) = self.prior.iter().cloned().unzip();
-            self.model.train(&xs, &ys);
-        }
+        self.model.pretrain(&self.prior);
     }
 
     /// The search space this tuner explores.
@@ -204,18 +289,46 @@ impl Tuner {
     /// Run one explore→measure→train round; returns how many configs were
     /// measured (0 = space exhausted).
     pub fn step(&mut self, history: &mut History) -> usize {
-        let batch = self.explorer.propose(
-            self.model.as_ref(),
-            self.db.measured_set(),
-            self.batch_size,
-            &mut self.rng,
-        );
+        let batch = self.propose_round(self.batch_size, &HashSet::new());
         if batch.is_empty() {
             return 0;
         }
         let measured = self.measure_batch(&batch, history);
         self.retrain();
         measured
+    }
+
+    /// One round's candidates: warm seeds first (drained once, deduped
+    /// against everything measured or screened), then explorer proposals
+    /// for the remainder. With no seeds and no screened set this is
+    /// byte-for-byte the old proposal path — same borrows, same RNG
+    /// stream — so flat sessions replay unchanged.
+    fn propose_round(&mut self, want: usize, screened: &HashSet<Genotype>) -> Vec<Genotype> {
+        if self.warm_seeds.is_empty() && screened.is_empty() {
+            return self.explorer.propose(
+                self.model.as_ref(),
+                self.db.measured_set(),
+                want,
+                &mut self.rng,
+            );
+        }
+        let mut exclude = self.db.measured_union(screened);
+        let mut batch: Vec<Genotype> = Vec::new();
+        for g in std::mem::take(&mut self.warm_seeds) {
+            if batch.len() < want && exclude.insert(g.clone()) {
+                batch.push(g);
+            }
+        }
+        if batch.len() < want {
+            let more = self.explorer.propose(
+                self.model.as_ref(),
+                &exclude,
+                want - batch.len(),
+                &mut self.rng,
+            );
+            batch.extend(more);
+        }
+        batch
     }
 
     /// Measure one proposal batch through the substrate's batch entry
@@ -263,7 +376,93 @@ impl Tuner {
             runtime_us: rt,
             trials_used: self.db.len(),
             history,
+            rungs: Vec::new(),
         }
+    }
+
+    /// Run the session with successive halving: each round screens a
+    /// wide candidate field through `opts.low_rungs` cheap low-rep
+    /// simulation rungs — rung `r` at [`Fidelity::Low`]`(eta^r)`,
+    /// keeping the best `ceil(entrants / eta)` each time — and only the
+    /// surviving distinctive candidates reach the full-fidelity rung
+    /// that spends real `n_trials` budget and trains the model.
+    ///
+    /// Low-fidelity results *rank*, they are never *recorded*: the
+    /// database, history, and cost-model training set hold full-fidelity
+    /// numbers only, and screened-out candidates are excluded from
+    /// re-proposal for the rest of the session. Everything is booked in
+    /// the attached [`MeasureBudget`] per rung, and the per-rung
+    /// survivor lists come back in [`TuneResult::rungs`] — equal seeds
+    /// replay them bit-for-bit.
+    pub fn tune_halving(&mut self, opts: HalvingOptions) -> TuneResult {
+        let eta = opts.eta.max(2);
+        let field = if opts.field == 0 { self.batch_size * 8 } else { opts.field };
+        let mut history = History::new(self.explorer.name());
+        let mut rungs: Vec<RungRecord> = Vec::new();
+        let mut screened: HashSet<Genotype> = HashSet::new();
+        let mut round = 0;
+        while self.db.len() < self.n_trials {
+            let mut entrants = self.propose_round(field, &screened);
+            if entrants.is_empty() {
+                break;
+            }
+            for r in 0..opts.low_rungs {
+                if entrants.len() <= 1 {
+                    break;
+                }
+                let fidelity = Fidelity::Low(eta.pow(r as u32) as u32);
+                let rung = rungs.len();
+                if let Some(b) = &self.budget {
+                    b.set_rung(rung);
+                }
+                let cfgs: Vec<ScheduleConfig> =
+                    entrants.iter().map(|g| self.space.decode(g)).collect();
+                let ms = self.measurer.measure_batch_at(&self.wl, &cfgs, fidelity);
+                debug_assert_eq!(ms.len(), entrants.len());
+                // rank: feasible before infeasible, faster before slower,
+                // proposal order as the deterministic tiebreak
+                let mut order: Vec<usize> = (0..entrants.len()).collect();
+                order.sort_by(|&a, &b| {
+                    let ka = ((!ms[a].feasible) as u8, ms[a].runtime_us);
+                    let kb = ((!ms[b].feasible) as u8, ms[b].runtime_us);
+                    ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+                });
+                let keep = entrants.len().div_ceil(eta).max(1);
+                screened.extend(entrants.iter().cloned());
+                let survivors: Vec<Genotype> =
+                    order[..keep].iter().map(|&i| entrants[i].clone()).collect();
+                rungs.push(RungRecord {
+                    round,
+                    rung,
+                    fidelity,
+                    entrants: entrants.len(),
+                    survivors: survivors.clone(),
+                });
+                entrants = survivors;
+            }
+            // final rung: full fidelity on the survivors, truncated to the
+            // remaining real-measurement budget
+            entrants.truncate(self.n_trials - self.db.len());
+            if entrants.is_empty() {
+                break;
+            }
+            let rung = rungs.len();
+            if let Some(b) = &self.budget {
+                b.set_rung(rung);
+            }
+            let measured = self.measure_batch(&entrants, &mut history);
+            rungs.push(RungRecord {
+                round,
+                rung,
+                fidelity: Fidelity::Full,
+                entrants: measured,
+                survivors: entrants,
+            });
+            self.retrain();
+            round += 1;
+        }
+        let (config, runtime_us) = self.db.best().expect("tuner measured nothing");
+        TuneResult { config, runtime_us, trials_used: self.db.len(), history, rungs }
     }
 }
 
@@ -449,6 +648,74 @@ mod tests {
         let a: Vec<f64> = serial.history.records().iter().map(|r| r.runtime_us).collect();
         let b: Vec<f64> = parallel.history.records().iter().map(|r| r.runtime_us).collect();
         assert_eq!(a, b, "full measurement sequence must match trial-for-trial");
+    }
+
+    #[test]
+    fn halving_books_every_rung_and_replays_bit_for_bit() {
+        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let run = |seed: u64| {
+            let budget = MeasureBudget::new();
+            let mut t = Tuner::new(&wl, quick_opts(ExplorerKind::DiversityAware, 48, seed));
+            t.attach_budget(budget.clone());
+            (t.tune_halving(HalvingOptions::default()), budget)
+        };
+        let (res, budget) = run(11);
+
+        // the ledger's full-fidelity count IS the trial count — halving's
+        // claim is auditable by counter, not by clock
+        assert_eq!(budget.full_total(), res.trials_used);
+        assert!(res.trials_used <= 48);
+        assert!(budget.low_total() > 0, "screening rungs ran");
+        // screening touched a wider field than the full budget paid for
+        let screened: usize = res
+            .rungs
+            .iter()
+            .filter(|r| matches!(r.fidelity, Fidelity::Low(_)))
+            .map(|r| r.entrants)
+            .sum();
+        assert!(screened > res.trials_used);
+
+        // each RungRecord row reconciles against the ledger row it names
+        let rows = budget.rungs();
+        assert_eq!(rows.len(), res.rungs.len());
+        for rec in &res.rungs {
+            let row = rows[rec.rung];
+            match rec.fidelity {
+                Fidelity::Low(reps) => {
+                    assert_eq!(row.low, rec.entrants * reps.max(1) as usize);
+                    assert_eq!(row.full, 0);
+                }
+                Fidelity::Full => {
+                    assert_eq!(row.full, rec.entrants);
+                    assert_eq!(row.low, 0);
+                }
+            }
+            assert!(rec.survivors.len() <= rec.entrants);
+        }
+
+        // equal seeds replay identical rung survivors, bit for bit
+        let (res2, _) = run(11);
+        assert_eq!(res.rungs, res2.rungs);
+        assert_eq!(res.config, res2.config);
+        assert_eq!(res.runtime_us, res2.runtime_us);
+        // a different seed screens a different field
+        let (res3, _) = run(12);
+        assert_ne!(res.rungs, res3.rungs);
+    }
+
+    #[test]
+    fn warm_seeds_lead_the_first_round_once() {
+        let wl = ConvWorkload::resnet50_stage(4, 8);
+        let space = SearchSpace::for_workload(&wl, SpaceOptions::default());
+        let mut rng = Rng::new(17);
+        let seed_g = space.random_legal(&mut rng);
+        let mut t = Tuner::new(&wl, quick_opts(ExplorerKind::DiversityAware, 32, 17));
+        t.set_warm_seeds(vec![seed_g.clone(), seed_g.clone()]);
+        let res = t.tune();
+        assert!(t.db().contains(&seed_g), "warm seed was measured");
+        // duplicate seed injected once; first trial is the seed's config
+        assert_eq!(res.history.records()[0].config, space.decode(&seed_g));
+        assert_eq!(res.trials_used, t.db().len());
     }
 
     #[test]

@@ -46,6 +46,7 @@ use crate::serve::{ClusterHandle, Metrics, RegistrySnapshot, ServeHandle};
 use crate::workload::OpWorkload;
 use crate::zoo;
 
+use super::cache::CacheHandle;
 use super::{Session, SessionResult};
 
 /// When and how hard the online tuner retunes.
@@ -75,6 +76,12 @@ pub struct RetunePolicy {
     /// Exploration module, by registry name (same names as
     /// `repro tune --explorer`).
     pub explorer: String,
+    /// Tune with successive halving ([`SessionBuilder::multi_fidelity`](
+    /// crate::tuner::SessionBuilder::multi_fidelity)): cheap low-rep
+    /// rungs screen a wide field and only distinctive survivors spend
+    /// the session's `trials` budget — the right trade for a re-tuner
+    /// running beside live serving.
+    pub multi_fidelity: bool,
 }
 
 impl Default for RetunePolicy {
@@ -87,6 +94,7 @@ impl Default for RetunePolicy {
             min_improvement: 0.0,
             seed: 0,
             explorer: "diversity-aware".to_string(),
+            multi_fidelity: false,
         }
     }
 }
@@ -126,6 +134,9 @@ pub struct RetuneOutcome {
     pub previous_runtime_us: Option<f64>,
     /// Whether the result was good enough to publish.
     pub published: bool,
+    /// Whether the session was served from the cross-session
+    /// [`TuneCache`](crate::tuner::TuneCache) with zero measurements.
+    pub cache_hit: bool,
 }
 
 /// Summary of one [`OnlineTuner::run_cycle`].
@@ -163,6 +174,10 @@ pub struct OnlineTuner {
     /// The kind most recently retuned (its session seeds the next
     /// kind's transfer).
     last_kind: Option<String>,
+    /// Cross-session tune cache every retune session consults and
+    /// updates (exact hits cost zero measurements — a restarted
+    /// re-tuner never re-pays for shapes an earlier process tuned).
+    cache: Option<CacheHandle>,
     cycle: u64,
 }
 
@@ -192,8 +207,19 @@ impl OnlineTuner {
             policy,
             priors: HashMap::new(),
             last_kind: None,
+            cache: None,
             cycle: 0,
         }
+    }
+
+    /// Consult and update a cross-session
+    /// [`TuneCache`](crate::tuner::TuneCache) in every retune session:
+    /// exact fingerprint hits publish with zero measurements, misses
+    /// warm-start from their nearest anchored neighbor, and every
+    /// cycle's winners are persisted for the next process.
+    pub fn with_tune_cache(mut self, cache: CacheHandle) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     /// Convenience: resolve kinds against every layer of the model
@@ -344,6 +370,12 @@ impl OnlineTuner {
             if let Some(prev) = self.last_kind.as_ref().and_then(|k| self.priors.get(k)) {
                 builder = builder.transfer_from(prev);
             }
+            if let Some(cache) = &self.cache {
+                builder = builder.tune_cache(cache.clone());
+            }
+            if self.policy.multi_fidelity {
+                builder = builder.multi_fidelity();
+            }
             let res = builder.run()?;
 
             let previous_runtime_us = snapshot.registry().get(&task.kind).map(|e| e.runtime_us);
@@ -362,6 +394,7 @@ impl OnlineTuner {
                 tuned_runtime_us: res.best.runtime_us,
                 previous_runtime_us,
                 published,
+                cache_hit: res.cache_hit(),
             });
             self.priors.insert(task.kind.clone(), res);
             self.last_kind = Some(task.kind);
@@ -846,6 +879,58 @@ mod tests {
         assert_eq!(server.registry_version(), 2);
         // the next plan lookup recompiles against the published registry
         assert_eq!(server.graph_plan("gr_net").unwrap().tuned_nodes(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shared_tune_cache_makes_the_second_retuner_free() {
+        // two re-tuner "processes" sharing one cache: the first pays for
+        // the tune; the second serves the same shape from the cache with
+        // zero measurements and publishes the identical schedule
+        let wl = tiny();
+        let cache = crate::tuner::CacheHandle::in_memory();
+        let run = |cache: crate::tuner::CacheHandle| {
+            let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+            drive(&server, &wl, 4);
+            let mut workloads = HashMap::new();
+            workloads.insert(wl.name.clone(), wl.clone());
+            let mut tuner = OnlineTuner::new(workloads, policy(32)).with_tune_cache(cache);
+            let report = tuner.run_cycle(&server.handle()).unwrap();
+            let schedule = server.schedule_for(&wl.name);
+            server.shutdown();
+            (report.outcomes[0].clone(), schedule)
+        };
+        let (first, sched1) = run(cache.clone());
+        assert!(!first.cache_hit);
+        assert!(first.published);
+        assert_eq!(cache.len(), 1);
+        let (second, sched2) = run(cache.clone());
+        assert!(second.cache_hit, "same fingerprint: served from the cache");
+        assert!(second.published, "fresh server had no entry to beat");
+        assert_eq!(second.tuned_runtime_us, first.tuned_runtime_us);
+        assert_eq!(sched1, sched2);
+    }
+
+    #[test]
+    fn multi_fidelity_policy_screens_before_spending() {
+        let wl = tiny();
+        let server = Server::start(ServerConfig { workers: 1, ..Default::default() });
+        drive(&server, &wl, 4);
+        let mut workloads = HashMap::new();
+        workloads.insert(wl.name.clone(), wl.clone());
+        let mut tuner = OnlineTuner::new(
+            workloads,
+            RetunePolicy { multi_fidelity: true, ..policy(32) },
+        );
+        let report = tuner.run_cycle(&server.handle()).unwrap();
+        assert_eq!(report.outcomes.len(), 1);
+        assert!(report.outcomes[0].published);
+        // the session ran halving: its budget ledger shows cheap passes
+        let res = tuner.priors.values().next().unwrap();
+        let budget = res.budget().expect("multi-fidelity sessions carry a ledger");
+        assert!(budget.low_total() > 0);
+        assert!(budget.full_total() <= 32);
+        assert!(!res.best.rungs.is_empty());
         server.shutdown();
     }
 

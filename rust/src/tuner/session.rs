@@ -41,12 +41,14 @@
 
 use crate::costmodel::{featurize, CostModel};
 use crate::explore::{Explorer, ExplorerRegistry};
-use crate::registry::TunedEntry;
+use crate::registry::{TunedEntry, REGISTRY_VERSION};
 use crate::searchspace::{SearchSpace, SpaceOptions};
-use crate::sim::Measurer;
+use crate::sim::{MeasureBudget, Measurer};
+use crate::util::Rng;
 use crate::workload::OpWorkload;
 
-use super::{MeasureDb, TuneResult, Tuner, TunerOptions};
+use super::cache::{CacheEntry, CacheHandle, Fingerprint};
+use super::{HalvingOptions, History, MeasureDb, TuneResult, Tuner, TunerOptions};
 
 /// Entry point for the fluent API.
 pub struct Session;
@@ -68,6 +70,9 @@ impl Session {
             measurer: None,
             model: None,
             prior: Vec::new(),
+            cache: None,
+            halving: None,
+            budget: None,
         }
     }
 }
@@ -85,6 +90,9 @@ pub struct SessionBuilder {
     measurer: Option<Box<dyn Measurer>>,
     model: Option<Box<dyn CostModel>>,
     prior: Vec<(Vec<f64>, f64)>,
+    cache: Option<CacheHandle>,
+    halving: Option<HalvingOptions>,
+    budget: Option<MeasureBudget>,
 }
 
 impl SessionBuilder {
@@ -179,6 +187,43 @@ impl SessionBuilder {
         self
     }
 
+    /// Consult and update a cross-session
+    /// [`TuneCache`](crate::tuner::TuneCache) through `cache`. On an
+    /// exact fingerprint hit (with the cached schedule still legal for
+    /// this concrete shape) the session returns it with **zero
+    /// measurements**; on a nearest-anchor miss the explorer is
+    /// warm-started from the neighbor schedule's one-knob neighborhood
+    /// and the cost model pretrains on the cache's accumulated rows.
+    /// The session's own result is inserted and persisted on completion.
+    pub fn tune_cache(mut self, cache: CacheHandle) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Tune with successive halving at the default
+    /// [`HalvingOptions`]: cheap low-rep simulation rungs prune a wide
+    /// candidate field, and only surviving distinctive candidates are
+    /// measured at full fidelity (see [`Tuner::tune_halving`]).
+    pub fn multi_fidelity(self) -> Self {
+        self.halving(HalvingOptions::default())
+    }
+
+    /// Tune with successive halving at explicit knobs.
+    pub fn halving(mut self, opts: HalvingOptions) -> Self {
+        self.halving = Some(opts);
+        self
+    }
+
+    /// Attach a [`MeasureBudget`] ledger: every low- and full-fidelity
+    /// measurement this session performs is booked against it, per
+    /// rung. Multi-fidelity sessions get a fresh ledger automatically;
+    /// pass one explicitly to share it (or read it) from outside —
+    /// it is also available on the result via [`SessionResult::budget`].
+    pub fn budget(mut self, budget: MeasureBudget) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
     /// Build the tuner and run the full session.
     pub fn run(self) -> crate::Result<SessionResult> {
         let Self {
@@ -192,7 +237,10 @@ impl SessionBuilder {
             registry,
             measurer,
             model,
-            prior,
+            mut prior,
+            cache,
+            halving,
+            budget,
         } = self;
         let search_space = SearchSpace::for_workload(&wl, space);
         // untileable workloads (possible since raw-legality matmuls: a
@@ -207,6 +255,53 @@ impl SessionBuilder {
                 crate::workload::Workload::legality_gemm(&wl),
             );
         }
+        // every multi-fidelity session carries a ledger, caller-shared or not
+        let budget = budget.or_else(|| halving.map(|_| MeasureBudget::new()));
+
+        // consult the cross-session cache before spending anything
+        let fp = Fingerprint::of(&wl);
+        let mut warm_seeds = Vec::new();
+        if let Some(cache) = &cache {
+            if let Some(entry) = cache.lookup(&fp) {
+                let (m, n, k) = crate::workload::Workload::legality_gemm(&wl);
+                // two concrete shapes can share an anchor bucket, so the
+                // exact hit still proves the schedule tiles *this* shape
+                if entry.config.is_legal_for(m, n, k) {
+                    let best = TuneResult {
+                        config: entry.config,
+                        runtime_us: entry.runtime_us,
+                        // provenance of the accumulated spend, not of this
+                        // session: zero *new* measurements were taken (the
+                        // attached budget ledger stays at zero to prove it)
+                        trials_used: entry.trials,
+                        history: History::new("tune-cache"),
+                        rungs: Vec::new(),
+                    };
+                    return Ok(SessionResult {
+                        workload: wl,
+                        best,
+                        db: MeasureDb::new(),
+                        explorer_name: "tune-cache".to_string(),
+                        budget,
+                        cache_hit: true,
+                    });
+                }
+            }
+            // miss: warm-start from the nearest anchored neighbor's
+            // schedule (its one-knob neighborhood leads the first round)
+            // and pretrain the cost model on everything the cache knows
+            if let Some((donor, _)) = cache.nearest(&fp) {
+                let mut rng = Rng::new(seed ^ 0x5EED);
+                warm_seeds = crate::explore::neighborhood(
+                    &search_space,
+                    &donor.config,
+                    batch_size,
+                    &mut rng,
+                );
+            }
+            prior.extend(cache.pretrain_rows());
+        }
+
         // provenance: the canonical registry name this session selected
         // (Explorer::name() may differ for custom modules)
         let explorer_name = registry
@@ -233,12 +328,35 @@ impl SessionBuilder {
         // assemble directly with the space already built for the registry
         // lookup (Tuner::with_explorer would re-derive the identical one)
         let mut tuner = Tuner::assemble(wl.clone(), search_space, explorer, opts);
+        if let Some(b) = &budget {
+            tuner.attach_budget(b.clone());
+        }
+        if !warm_seeds.is_empty() {
+            tuner.set_warm_seeds(warm_seeds);
+        }
         if !prior.is_empty() {
             tuner.set_prior(prior);
         }
-        let best = tuner.tune();
+        let best = match halving {
+            Some(opts) => tuner.tune_halving(opts),
+            None => tuner.tune(),
+        };
         let db = tuner.into_db();
-        Ok(SessionResult { workload: wl, best, db, explorer_name })
+        // write back: file this session's result under its fingerprint
+        // (kept only if it beats the bucket's best) and persist
+        if let Some(cache) = &cache {
+            cache.insert(CacheEntry {
+                workload: wl.clone(),
+                config: best.config,
+                runtime_us: best.runtime_us,
+                trials: best.trials_used,
+                fidelity: if halving.is_some() { "multi" } else { "flat" }.to_string(),
+                seed,
+                registry_version: REGISTRY_VERSION,
+            });
+            cache.persist()?;
+        }
+        Ok(SessionResult { workload: wl, best, db, explorer_name, budget, cache_hit: false })
     }
 }
 
@@ -251,12 +369,27 @@ pub struct SessionResult {
     db: MeasureDb,
     /// Canonical registry name the session's explorer was selected by.
     explorer_name: String,
+    budget: Option<MeasureBudget>,
+    cache_hit: bool,
 }
 
 impl SessionResult {
     /// The workload this session tuned.
     pub fn workload(&self) -> &OpWorkload {
         &self.workload
+    }
+
+    /// The measurement-budget ledger this session booked against, if one
+    /// was attached (always present for multi-fidelity sessions). On a
+    /// cache hit the ledger is untouched — zero of everything.
+    pub fn budget(&self) -> Option<&MeasureBudget> {
+        self.budget.as_ref()
+    }
+
+    /// Whether the result was served from the
+    /// [`TuneCache`](crate::tuner::TuneCache) with zero measurements.
+    pub fn cache_hit(&self) -> bool {
+        self.cache_hit
     }
 
     /// The namespaced registry kind of the tuned workload (`conv:<name>`
@@ -456,6 +589,74 @@ mod tests {
             .to_string();
         assert!(err.contains("matmul:untileable"), "{err}");
         assert!(err.contains("no legal schedule"), "{err}");
+    }
+
+    #[test]
+    fn cache_hit_serves_with_zero_measurements() {
+        let wl = ConvWorkload::resnet50_stage(3, 8);
+        let cache = crate::tuner::CacheHandle::in_memory();
+        let cold = Session::for_workload(&wl)
+            .trials(48)
+            .seed(9)
+            .measurer(Simulator { seed: 9, ..Default::default() }.into_measurer())
+            .tune_cache(cache.clone())
+            .run()
+            .unwrap();
+        assert!(!cold.cache_hit());
+        assert_eq!(cache.len(), 1, "cold result filed under its fingerprint");
+
+        // same shape, different seed: exact hit, zero measurements —
+        // proven by the attached ledger, not inferred from timing
+        let budget = MeasureBudget::new();
+        let warm = Session::for_workload(&wl)
+            .trials(48)
+            .seed(10)
+            .measurer(Simulator { seed: 10, ..Default::default() }.into_measurer())
+            .tune_cache(cache.clone())
+            .budget(budget.clone())
+            .run()
+            .unwrap();
+        assert!(warm.cache_hit());
+        assert_eq!(warm.best.config, cold.best.config);
+        assert_eq!(warm.best.runtime_us, cold.best.runtime_us);
+        assert_eq!(warm.best.trials_used, cold.best.trials_used, "provenance of the spend");
+        assert_eq!(budget.full_total() + budget.low_total(), 0);
+        assert!(warm.db().is_empty());
+        assert_eq!(warm.explorer_name(), "tune-cache");
+        assert_eq!(warm.registry_entry().explorer, "tune-cache");
+    }
+
+    #[test]
+    fn near_miss_warm_starts_from_the_nearest_neighbor() {
+        // 64-channel donor, 128-channel probe: different anchor buckets
+        // (no exact hit), but every donor-legal schedule tiles the probe
+        // too, so the donor's best config leads the probe's first round
+        let donor_wl = ConvWorkload::new("warm_donor", 8, 28, 28, 64, 64);
+        let probe_wl = ConvWorkload::new("warm_probe", 8, 28, 28, 128, 128);
+        let cache = crate::tuner::CacheHandle::in_memory();
+        let donor = Session::for_workload(&donor_wl)
+            .trials(48)
+            .seed(2)
+            .measurer(Simulator { seed: 2, ..Default::default() }.into_measurer())
+            .tune_cache(cache.clone())
+            .run()
+            .unwrap();
+        let probe = Session::for_workload(&probe_wl)
+            .trials(32)
+            .seed(2)
+            .measurer(Simulator { seed: 2, ..Default::default() }.into_measurer())
+            .tune_cache(cache.clone())
+            .run()
+            .unwrap();
+        assert!(!probe.cache_hit(), "different anchor bucket is a miss");
+        // replay the session's warm-seed computation: the first trial is
+        // the first of the donor schedule's one-knob neighborhood
+        let space = SearchSpace::for_workload(&probe_wl, SpaceOptions::default());
+        let mut rng = crate::util::Rng::new(2 ^ 0x5EED);
+        let seeds = crate::explore::neighborhood(&space, &donor.best.config, 32, &mut rng);
+        assert!(!seeds.is_empty(), "donor schedule encodes into the probe's space");
+        assert_eq!(probe.best.history.records()[0].config, space.decode(&seeds[0]));
+        assert_eq!(cache.len(), 2, "the probe's own result was filed too");
     }
 
     #[test]
