@@ -72,6 +72,7 @@ fn run_single(
         queue_depth: 256,
         max_batch: 4,
         max_wait: 0,
+        ..Default::default()
     });
     let epi = Epilogue::default();
     let t0 = Instant::now();
@@ -113,6 +114,7 @@ fn run_cluster(
             queue_depth: 256,
             max_batch: 4,
             max_wait: 0,
+            ..Default::default()
         },
         replicas: 1,
         hot_replicas: 2,

@@ -140,6 +140,7 @@ fn main() {
         queue_depth: 256,
         max_batch: 8,
         max_wait: 0,
+        ..Default::default()
     });
     let kind = server
         .install_graph(topo.clone(), weights.clone(), epi)

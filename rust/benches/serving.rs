@@ -74,6 +74,7 @@ fn run_config(
         queue_depth: 256,
         max_batch,
         max_wait,
+        ..Default::default()
     });
     let epi = Epilogue::default();
     let t0 = Instant::now();

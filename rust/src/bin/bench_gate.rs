@@ -9,6 +9,12 @@
 //! and the fresh serving trajectory's roofline verdict must pass. A
 //! missing baseline is skipped (first run of a new bench); a missing
 //! fresh file is an error — it means the bench did not run.
+//!
+//! Before any ratio is compared, both sides are schema-validated: every
+//! gated field must be present, numeric, finite, and positive. A NaN or
+//! zero baseline would otherwise neutralize the gate silently (`fresh <
+//! NaN * 0.9` is false for every fresh value), so a malformed committed
+//! trajectory is a build failure, not a free pass.
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -28,6 +34,21 @@ const GATES: &[(&str, &[&str])] = &[
 fn load(path: &Path) -> Option<Json> {
     let text = std::fs::read_to_string(path).ok()?;
     Json::parse(&text).ok()
+}
+
+/// Extract a gated ratio field, validating the schema: present, numeric,
+/// finite, and strictly positive. Anything else is a gate failure on
+/// whichever side carried it.
+fn ratio_of(doc: &Json, field: &str) -> Result<f64, String> {
+    let v = doc
+        .req(field)
+        .ok()
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("field '{field}' missing or not a number"))?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(format!("field '{field}' = {v} is not finite and positive"));
+    }
+    Ok(v)
 }
 
 fn main() -> ExitCode {
@@ -52,18 +73,27 @@ fn main() -> ExitCode {
             println!("bench_gate: {file}: no baseline; ratio gates skipped");
         }
         for &field in fields {
-            let Some(f) = fresh.req(field).ok().and_then(|v| v.as_f64()) else {
-                eprintln!("bench_gate: {file}: fresh run lacks field '{field}'");
-                failures += 1;
-                continue;
+            let f = match ratio_of(&fresh, field) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("bench_gate: {file}: fresh {e}");
+                    failures += 1;
+                    continue;
+                }
             };
-            let Some(b) = baseline
-                .as_ref()
-                .and_then(|d| d.req(field).ok())
-                .and_then(|v| v.as_f64())
-            else {
-                println!("bench_gate: {file}:{field} = {f:.3} (no baseline)");
-                continue;
+            let b = match baseline.as_ref() {
+                None => {
+                    println!("bench_gate: {file}:{field} = {f:.3} (no baseline)");
+                    continue;
+                }
+                Some(doc) => match ratio_of(doc, field) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        eprintln!("bench_gate: {file}: baseline {e}");
+                        failures += 1;
+                        continue;
+                    }
+                },
             };
             if f < b * TOLERANCE {
                 eprintln!(

@@ -33,6 +33,8 @@
 //! bit-equal to [`gemm_i32_blocked_reference`] across the seeded
 //! ~50-workload suite.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};

@@ -30,6 +30,7 @@
 //! (`Epilogue::apply` delegates to `RequantParams::apply` with residual
 //! 0) and pinned by [`reference_forward`] plus the conformance harness.
 #![deny(missing_docs)]
+#![forbid(unsafe_code)]
 
 use anyhow::{anyhow, bail};
 
@@ -542,6 +543,35 @@ impl GraphPlan {
     /// The schedule node `i` executes under.
     pub fn schedule_of(&self, i: usize) -> ScheduleConfig {
         self.nodes[i].schedule
+    }
+
+    /// `(offset, len)` of node `i`'s activation in the arena — the
+    /// planner's committed assignment, exposed so the independent arena
+    /// prover ([`crate::verify::arena`]) can cross-check it.
+    pub fn slot_of(&self, i: usize) -> (usize, usize) {
+        self.nodes[i].slot
+    }
+
+    /// Node `i`'s plan-owned per-output-channel bias values — the
+    /// concrete range the value-range analysis bounds the epilogue with.
+    pub fn bias_of(&self, i: usize) -> &[i32] {
+        &self.nodes[i].bias
+    }
+
+    /// The fused epilogue every node applies (one epilogue per plan —
+    /// [`GraphPlan::compile`] takes a single [`RequantParams`]).
+    pub fn epilogue(&self) -> RequantParams {
+        self.nodes.first().map(|n| n.epi).unwrap_or_default()
+    }
+
+    /// Fault-injection hook: overwrite node `i`'s arena slot with an
+    /// arbitrary `(offset, len)`. Executing such a plan is undefined in
+    /// the sense that activations may corrupt each other — this exists
+    /// solely so mutation-style tests can hand [`crate::verify`] a
+    /// structurally corrupt plan and assert the prover catches it
+    /// *statically*, without ever executing the plan.
+    pub fn override_slot(&mut self, i: usize, slot: (usize, usize)) {
+        self.nodes[i].slot = slot;
     }
 
     /// Packed words one forward pass returns (per-row padded packing of

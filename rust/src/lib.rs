@@ -81,6 +81,11 @@
 //! kinds with bounded warm-started sessions, and publishes improvements
 //! through that reload path — serving gets faster while it runs.
 #![deny(missing_docs)]
+// Unsafe audit (docs/VERIFY.md): the crate's single unsafe block lives in
+// `runtime` behind the `pjrt` feature and carries a SAFETY comment; every
+// other module that needs no unsafe forbids it outright, and any future
+// unsafe fn must spell out its internal unsafe operations.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod conv;
 pub mod costmodel;
@@ -95,6 +100,7 @@ pub mod report;
 pub mod runtime;
 pub mod searchspace;
 pub mod serve;
+pub mod verify;
 pub mod workload;
 pub mod zoo;
 pub mod sim;
@@ -122,3 +128,7 @@ pub struct ServingGuideDoctests;
 #[cfg(doctest)]
 #[doc = include_str!("../../docs/TUNING.md")]
 pub struct TuningGuideDoctests;
+
+#[cfg(doctest)]
+#[doc = include_str!("../../docs/VERIFY.md")]
+pub struct VerifyGuideDoctests;

@@ -9,7 +9,8 @@
 //!   fig15     accumulated-speedup ablation
 //!   fig16     marginal-speedup ablation
 //!   explain   Fig. 2-style walkthrough of a searched schedule
-//!   verify    execute every AOT artifact via PJRT, compare to goldens
+//!   verify    statically audit registries/tune-caches/graph plans, or
+//!             execute every AOT artifact via PJRT vs goldens
 //!
 //! Arg parsing is hand-rolled (no clap offline); flags are `--key value`.
 
@@ -20,7 +21,7 @@ use std::process::ExitCode;
 use tcconv::conv::ConvWorkload;
 use tcconv::costmodel::{CostModel, Gbt, GbtParams};
 use tcconv::explore::ExplorerKind;
-use tcconv::graph::{reference_forward, GraphInput, GraphTopology, GraphWeights};
+use tcconv::graph::{reference_forward, GraphInput, GraphPlan, GraphTopology, GraphWeights};
 use tcconv::quant::{Epilogue, RequantParams};
 use tcconv::registry::ScheduleRegistry;
 use tcconv::report::{self, experiments};
@@ -29,7 +30,7 @@ use tcconv::searchspace::{SearchSpace, SpaceOptions};
 use tcconv::serve::{Cluster, ClusterConfig, Server, ServerConfig, SloPolicy, SubmitError};
 use tcconv::sim::{GpuSpec, Simulator};
 use tcconv::tuner::online::{OnlineTuner, RetunePolicy};
-use tcconv::tuner::{CacheHandle, Session, SessionResult};
+use tcconv::tuner::{CacheHandle, Session, SessionResult, TuneCache};
 use tcconv::workload::OpWorkload;
 use tcconv::zoo;
 
@@ -110,7 +111,7 @@ COMMANDS
             [--retune] [--retune-trials 96] [--retune-jobs 2]
             [--tune-cache cache.json] [--multi-fidelity]
             [--shards 2] [--replicas 1] [--slo-p99-us 50000]
-            [--registry-out improved.json]
+            [--registry-out improved.json] [--verify]
             loads the registry and routes synthetic requests through the
             worker pool using the tuned schedule per kind; reports per-kind
             latency, end-to-end latency / batch-size / queue-depth
@@ -143,12 +144,27 @@ COMMANDS
             or VIOLATED per kind). Composes with --graph (the network
             installs on every shard) and --retune (one cluster-wide
             cycle, winners published to every shard's registry)
+            --verify runs the static artifact analyzer before serving:
+            the registry (and, with --graph, the compiled plan; with
+            --tune-cache, the cache file) is audited against the tile /
+            range / arena invariant catalogue and any error-severity
+            finding refuses to serve instead of deploying the artifact
   table1    [--trials 500] [--seed N]
   fig14     [--trials 500] [--seeds 3]
   fig15     (accumulated ablation)
   fig16     (marginal ablation)
   explain   --stage 2..5  (show the searched schedule's tile hierarchy)
   verify    [--artifacts artifacts] (PJRT-execute AOT HLO vs python goldens)
+            [--registry schedules.json] [--tune-cache cache.json]
+            [--net resnet50|...|all] [--batch 1]
+            with --registry/--tune-cache/--net, runs the STATIC artifact
+            analyzer instead: every schedule is re-derived against the
+            MMA-atom, tile-divisibility and smem/register-footprint
+            invariants, accumulator ranges are interval-checked through
+            the fused epilogue, and each --net graph plan's activation
+            arena is re-proven alias-free by an independent liveness
+            derivation. Warnings print but pass; any error-severity
+            finding exits nonzero (CI runs this over committed artifacts)
 "
     );
 }
@@ -189,12 +205,25 @@ fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> u64 {
 /// A missing file is a normal cold start; a corrupt or truncated file is
 /// rejected and rebuilt with a warning (the cache is a performance hint,
 /// never load-bearing state, so corruption must not abort the command).
+/// With `--verify` the file is additionally run through the
+/// `tcconv::verify` static analyzer and rejected — with the findings
+/// report printed — if any entry carries an error-severity finding.
 fn tune_cache_of(flags: &HashMap<String, String>) -> Option<CacheHandle> {
     let path = flags.get("tune-cache")?;
-    let cache = CacheHandle::open(path);
-    if cache.was_rebuilt() {
-        eprintln!("warning: tune cache {path} was corrupt; rejected and rebuilt from scratch");
-    }
+    let cache = if flags.contains_key("verify") {
+        let (cache, report) = CacheHandle::open_verified(path);
+        if cache.was_rebuilt() {
+            eprintln!("warning: tune cache {path} rejected and rebuilt; findings:");
+            eprint!("{}", report.render());
+        }
+        cache
+    } else {
+        let cache = CacheHandle::open(path);
+        if cache.was_rebuilt() {
+            eprintln!("warning: tune cache {path} was corrupt; rejected and rebuilt from scratch");
+        }
+        cache
+    };
     println!("tune cache {path}: {} entry(ies) loaded", cache.len());
     Some(cache)
 }
@@ -403,6 +432,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let max_batch = flag_usize(flags, "max-batch", 8);
     let max_wait = flag_usize(flags, "max-wait", 2);
     let graph_net = flags.get("graph").cloned();
+    let verify = flags.contains_key("verify");
     let retune = flags.contains_key("retune");
     let retune_trials = flag_usize(flags, "retune-trials", 96);
     let retune_jobs = flag_usize(flags, "retune-jobs", 2);
@@ -463,10 +493,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "no registry kind matches a zoo workload (was the registry written by tune-net?)"
     );
 
-    let server = Server::from_registry(
-        ServerConfig { workers, queue_depth: 256, max_batch, max_wait },
+    // --verify: the registry is statically audited (`tcconv::verify`)
+    // before any worker spawns; an Error-severity finding refuses serving
+    let server = Server::try_from_registry(
+        ServerConfig {
+            workers,
+            queue_depth: 256,
+            max_batch,
+            max_wait,
+            verify_artifacts: verify,
+        },
         registry,
-    );
+    )?;
+    if verify {
+        println!("--verify: registry audit passed (no error-severity findings)");
+    }
     println!(
         "serving {requests} synthetic requests across {} kinds, {workers} workers \
          (max_batch {max_batch}, max_wait {max_wait})",
@@ -608,12 +649,24 @@ fn serve_graph(
     let topo = GraphTopology::from_network(&network);
     let weights = GraphWeights::synthetic(&topo, 7);
     let epi = RequantParams::default();
+    let verify = flags.contains_key("verify");
 
-    let server = Server::from_registry(
-        ServerConfig { workers, queue_depth: 256, max_batch, max_wait },
+    // --verify audits the registry before spawning and makes
+    // install_graph refuse any plan with an error-severity finding
+    let server = Server::try_from_registry(
+        ServerConfig {
+            workers,
+            queue_depth: 256,
+            max_batch,
+            max_wait,
+            verify_artifacts: verify,
+        },
         registry,
-    );
+    )?;
     let kind = server.install_graph(topo.clone(), weights.clone(), epi)?;
+    if verify {
+        println!("--verify: registry and graph-plan audits passed");
+    }
     let plan = server.graph_plan(net).expect("graph just installed");
     println!(
         "installed {kind}: {} layers, {} fused epilogues ({} residual adds fused), \
@@ -806,7 +859,23 @@ fn serve_cluster(
         None => None,
     };
     let retune = flags.contains_key("retune");
+    let verify = flags.contains_key("verify");
     let graph_net = flags.get("graph").cloned();
+
+    // --verify: audit once up front and bail BEFORE any shard spawns —
+    // Cluster::from_registry is infallible, so a strict shard config
+    // would otherwise panic instead of reporting the findings
+    if verify {
+        let report = tcconv::verify::Verifier::new()
+            .audit_registry(&registry, &tcconv::verify::zoo_workloads(1));
+        anyhow::ensure!(
+            report.passed(),
+            "--verify refuses the registry: {} error finding(s)\n{}",
+            report.error_count(),
+            report.render()
+        );
+        println!("--verify: registry audit passed (no error-severity findings)");
+    }
 
     // resolve traffic kinds exactly like the single-server path
     let zoo_by_kind: HashMap<String, OpWorkload> = zoo::all_networks(1)
@@ -832,7 +901,13 @@ fn serve_cluster(
     let cluster = Cluster::from_registry(
         ClusterConfig {
             shards,
-            shard: ServerConfig { workers, queue_depth, max_batch, max_wait },
+            shard: ServerConfig {
+                workers,
+                queue_depth,
+                max_batch,
+                max_wait,
+                verify_artifacts: verify,
+            },
             replicas,
             hot_replicas,
             ..Default::default()
@@ -1035,6 +1110,14 @@ fn cmd_explain(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_verify(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    // --registry / --tune-cache / --net select the static-analysis mode;
+    // the original PJRT golden-replay mode runs otherwise
+    if flags.contains_key("registry")
+        || flags.contains_key("tune-cache")
+        || flags.contains_key("net")
+    {
+        return cmd_verify_static(flags);
+    }
     let dir = PathBuf::from(
         flags
             .get("artifacts")
@@ -1055,5 +1138,79 @@ fn cmd_verify(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         }
     }
     println!("all artifacts verified");
+    Ok(())
+}
+
+/// `verify --registry R --tune-cache C --net N|all`: the static-analysis
+/// mode. Each named artifact runs through the [`tcconv::verify`] prover —
+/// schedules re-derived against the MMA-atom / tile-divisibility /
+/// footprint invariants, accumulator ranges interval-checked end to end
+/// through the fused epilogue, graph-plan arenas re-proven alias-free by
+/// an independent liveness derivation — and the process exits nonzero if
+/// any artifact carries an Error-severity finding (warnings are printed
+/// but do not fail the run).
+fn cmd_verify_static(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use tcconv::verify::{invariant, zoo_workloads, Finding, Report, Severity, Verifier};
+
+    let batch = flag_usize(flags, "batch", 1);
+    let mut verifier = Verifier::new();
+    let mut errors = 0usize;
+    let mut warns = 0usize;
+    let mut tally = |label: String, report: &Report| {
+        println!("{label}:");
+        print!("{}", report.render());
+        errors += report.error_count();
+        warns += report.warn_count();
+    };
+
+    // graph plans below compile against the loaded registry so the audit
+    // sees exactly the schedules a `serve --graph` would deploy
+    let registry = match flags.get("registry") {
+        Some(path) => {
+            let registry = ScheduleRegistry::load(path)?;
+            let report = verifier.audit_registry(&registry, &zoo_workloads(batch));
+            tally(format!("registry {path} ({} entries)", registry.len()), &report);
+            registry
+        }
+        None => ScheduleRegistry::new(),
+    };
+
+    if let Some(path) = flags.get("tune-cache") {
+        anyhow::ensure!(
+            std::path::Path::new(path).exists(),
+            "tune cache {path} does not exist"
+        );
+        let (cache, _, report) = TuneCache::load_or_rebuild_verified(path);
+        tally(format!("tune cache {path} ({} entries)", cache.len()), &report);
+    }
+
+    if let Some(net) = flags.get("net") {
+        let nets = if net == "all" {
+            zoo::all_networks(batch)
+        } else {
+            vec![zoo::by_name(net, batch)?]
+        };
+        for network in &nets {
+            let topo = GraphTopology::from_network(network);
+            let weights = GraphWeights::synthetic(&topo, 7);
+            let label = format!("graph plan '{}' ({} layers)", network.name, topo.node_count());
+            match GraphPlan::compile(&topo, &weights, &registry, RequantParams::default()) {
+                Ok(plan) => tally(label, &verifier.audit_graph_plan(&plan)),
+                Err(e) => {
+                    let mut report = Report::new();
+                    report.push(Finding {
+                        severity: Severity::Error,
+                        invariant: invariant::PLAN_COMPILE,
+                        artifact: format!("graph '{}'", network.name),
+                        detail: format!("{e:#}"),
+                    });
+                    tally(label, &report);
+                }
+            }
+        }
+    }
+
+    println!("verify: {errors} error-severity, {warns} warn-severity finding(s)");
+    anyhow::ensure!(errors == 0, "{errors} error-severity finding(s)");
     Ok(())
 }

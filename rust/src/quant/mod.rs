@@ -9,6 +9,8 @@
 //! the shuffle-based packing algorithm of Fig. 9/10 lane-for-lane, which is
 //! how we validate the *algorithm* (not just the layout) without CUDA.
 
+#![forbid(unsafe_code)]
+
 mod pack;
 mod warp;
 

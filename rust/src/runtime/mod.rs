@@ -198,6 +198,10 @@ impl LoadedConv {
 /// NativeType impl; go through untyped data).
 #[cfg(feature = "pjrt")]
 fn literal_s8(data: &[i8], shape: &[usize]) -> xla::Literal {
+    // SAFETY: i8 and u8 have identical size and alignment, so reading the
+    // i8 slice's buffer as u8 is a valid same-length reinterpretation; the
+    // pointer and length come straight from a live `&[i8]`, and the
+    // borrow's lifetime pins the allocation for as long as `bytes` lives.
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
     xla::Literal::create_from_shape_and_untyped_data(

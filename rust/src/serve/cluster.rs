@@ -951,7 +951,7 @@ mod tests {
         // every accepted request must still be answered exactly once
         let cluster = Cluster::start(ClusterConfig {
             shards: 2,
-            shard: ServerConfig { workers: 1, queue_depth: 2, max_batch: 1, max_wait: 0 },
+            shard: ServerConfig { workers: 1, queue_depth: 2, max_batch: 1, ..Default::default() },
             ..Default::default()
         });
         let wl = ConvWorkload::new("cl_big", 1, 24, 24, 32, 32); // slow: piles up

@@ -80,6 +80,7 @@
 //! load-shedding ([`SubmitError::Overloaded`]) when every eligible
 //! shard's bounded queue is full — see the module docs.
 #![deny(missing_docs)]
+#![forbid(unsafe_code)]
 
 pub mod cluster;
 mod metrics;
@@ -95,6 +96,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+use anyhow::bail;
 
 use crate::gemm::{PrepackCache, PrepackStats};
 use crate::graph::{GraphInput, GraphPlan, GraphScratch, GraphTopology, GraphWeights};
@@ -124,11 +127,21 @@ pub struct ServerConfig {
     /// latency-first; bursty traffic benefits from a few ticks of slack
     /// (`repro serve --max-wait`).
     pub max_wait: usize,
+    /// Strict artifact mode (`repro serve --verify`): run the
+    /// [`crate::verify`] static analyzer over every artifact before it
+    /// is deployed — the registry at [`Server::try_from_registry`] and
+    /// every trial-compiled plan at [`Server::install_graph`] — and
+    /// refuse (with the findings report in the error) anything carrying
+    /// an Error-severity finding. Off by default: verification walks
+    /// every registry entry against the zoo resolver, which is overhead
+    /// tests and benches that construct throwaway servers should not
+    /// pay.
+    pub verify_artifacts: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { workers: 4, queue_depth: 256, max_batch: 8, max_wait: 0 }
+        Self { workers: 4, queue_depth: 256, max_batch: 8, max_wait: 0, verify_artifacts: false }
     }
 }
 
@@ -305,6 +318,9 @@ struct Shared {
     /// affect memory only, never numerics. A [`Cluster`] passes ONE cache
     /// to all its shards via [`Server::from_registry_with_prepack`].
     prepack: Arc<PrepackCache>,
+    /// Strict artifact mode: statically verify every graph plan at
+    /// install time (see [`ServerConfig::verify_artifacts`]).
+    verify_artifacts: bool,
 }
 
 impl Shared {
@@ -355,6 +371,17 @@ impl Shared {
         let kind = format!("graph:{}", topo.name());
         let snapshot = self.snapshot();
         let plan = GraphPlan::compile(&topo, &weights, snapshot.registry(), epi)?;
+        if self.verify_artifacts {
+            let report = crate::verify::Verifier::new().audit_graph_plan(&plan);
+            if !report.passed() {
+                bail!(
+                    "strict mode refuses graph '{}': {} error finding(s)\n{}",
+                    topo.name(),
+                    report.error_count(),
+                    report.render()
+                );
+            }
+        }
         let def = Arc::new(GraphDef {
             topo,
             weights,
@@ -552,16 +579,62 @@ impl Server {
         Self::from_registry_with_prepack(cfg, registry, Arc::new(PrepackCache::new()))
     }
 
+    /// Fallible [`Server::from_registry`]: with
+    /// [`ServerConfig::verify_artifacts`] set, the registry is audited by
+    /// the [`crate::verify`] static analyzer against the zoo's batch-1
+    /// workload resolution first, and a registry carrying any
+    /// Error-severity finding is refused — the error message is the full
+    /// findings report. Without the flag this never fails.
+    pub fn try_from_registry(
+        cfg: ServerConfig,
+        registry: ScheduleRegistry,
+    ) -> crate::Result<Self> {
+        Self::try_from_registry_with_prepack(cfg, registry, Arc::new(PrepackCache::new()))
+    }
+
+    /// [`Server::try_from_registry`] sharing a caller-owned
+    /// [`PrepackCache`] (see [`Server::from_registry_with_prepack`]).
+    pub fn try_from_registry_with_prepack(
+        cfg: ServerConfig,
+        registry: ScheduleRegistry,
+        prepack: Arc<PrepackCache>,
+    ) -> crate::Result<Self> {
+        if cfg.verify_artifacts {
+            let report = crate::verify::Verifier::new()
+                .audit_registry(&registry, &crate::verify::zoo_workloads(1));
+            if !report.passed() {
+                bail!(
+                    "strict mode refuses registry: {} error finding(s)\n{}",
+                    report.error_count(),
+                    report.render()
+                );
+            }
+        }
+        Ok(Self::spawn(cfg, registry, prepack))
+    }
+
     /// [`Server::from_registry`] sharing a caller-owned
     /// [`PrepackCache`]: weights packed by one server are reused by every
     /// other server on the same cache — how a [`Cluster`] gives all its
     /// shards one cache, and how a restarted shard inherits the fleet's
     /// warm packs.
+    ///
+    /// # Panics
+    ///
+    /// With [`ServerConfig::verify_artifacts`] set, panics if the
+    /// registry fails the static audit — use
+    /// [`Server::try_from_registry_with_prepack`] to handle the findings
+    /// report instead.
     pub fn from_registry_with_prepack(
         cfg: ServerConfig,
         registry: ScheduleRegistry,
         prepack: Arc<PrepackCache>,
     ) -> Self {
+        Self::try_from_registry_with_prepack(cfg, registry, prepack)
+            .expect("registry failed artifact verification")
+    }
+
+    fn spawn(cfg: ServerConfig, registry: ScheduleRegistry, prepack: Arc<PrepackCache>) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
@@ -575,6 +648,7 @@ impl Server {
             registry: Mutex::new(Arc::new(RegistrySnapshot { version: 1, registry })),
             graphs: Mutex::new(HashMap::new()),
             prepack,
+            verify_artifacts: cfg.verify_artifacts,
         });
         let metrics = Arc::new(Metrics::new());
         let workers = (0..cfg.workers.max(1))
@@ -1136,6 +1210,7 @@ mod tests {
             queue_depth: 2,
             max_batch: 1,
             max_wait: 0,
+            ..Default::default()
         });
         let wl = ConvWorkload::new("big", 1, 24, 24, 32, 32); // slow enough to pile up
         let epi = Epilogue::default();
@@ -1166,6 +1241,7 @@ mod tests {
             queue_depth: 64,
             max_batch: 4,
             max_wait: 0,
+            ..Default::default()
         });
         let wl = tiny_wl();
         let epi = Epilogue::default();
@@ -1247,6 +1323,7 @@ mod tests {
             queue_depth: 4,
             max_batch: 2,
             max_wait: 0,
+            ..Default::default()
         });
         let wl = tiny_wl();
         let epi = Epilogue::default();
@@ -1281,6 +1358,7 @@ mod tests {
             queue_depth: 2,
             max_batch: 1,
             max_wait: 0,
+            ..Default::default()
         });
         let handle = server.handle();
         let submitter = std::thread::spawn(move || {
@@ -1679,7 +1757,13 @@ mod tests {
             reg.insert(kind, entry(*cfg));
         }
         let server = Server::from_registry(
-            ServerConfig { workers: 4, queue_depth: 512, max_batch: 4, max_wait: 2 },
+            ServerConfig {
+                workers: 4,
+                queue_depth: 512,
+                max_batch: 4,
+                max_wait: 2,
+                ..Default::default()
+            },
             reg,
         );
         let epi = Epilogue::default();

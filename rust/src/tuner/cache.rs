@@ -332,6 +332,44 @@ impl TuneCache {
             Err(_) => (Self::new(), true),
         }
     }
+
+    /// Strict-mode loader (`repro serve --verify` / `repro verify
+    /// --tune-cache`): [`TuneCache::load_or_rebuild`] plus a full
+    /// [`crate::verify`] static audit of every loaded entry. A cache that
+    /// fails to parse *or* carries any Error-severity finding (an illegal
+    /// schedule, an overflow-capable `gemm_k`, a nonsense runtime) is
+    /// rejected and rebuilt exactly like a corrupt file; the returned
+    /// [`Report`](crate::verify::Report) says why — parse failures become
+    /// an `artifact-parse` finding so the refusal is always reportable.
+    pub fn load_or_rebuild_verified(
+        path: impl AsRef<Path>,
+    ) -> (Self, bool, crate::verify::Report) {
+        use crate::verify::{invariant, Finding, Report, Severity, Verifier};
+        let path = path.as_ref();
+        if !path.exists() {
+            return (Self::new(), false, Report::new());
+        }
+        match Self::load(path) {
+            Ok(cache) => {
+                let report = Verifier::new().audit_tune_cache(&cache);
+                if report.passed() {
+                    (cache, false, report)
+                } else {
+                    (Self::new(), true, report)
+                }
+            }
+            Err(e) => {
+                let mut report = Report::new();
+                report.push(Finding {
+                    severity: Severity::Error,
+                    invariant: invariant::ARTIFACT_PARSE,
+                    artifact: format!("tune cache {path:?}"),
+                    detail: format!("{e:#}"),
+                });
+                (Self::new(), true, report)
+            }
+        }
+    }
 }
 
 /// A shareable handle on one [`TuneCache`]: sessions, the online tuner,
@@ -369,6 +407,18 @@ impl CacheHandle {
         let path = path.into();
         let (cache, rebuilt) = TuneCache::load_or_rebuild(&path);
         Self { inner: Arc::new(Mutex::new(cache)), path: Some(path), rebuilt }
+    }
+
+    /// Strict-mode [`CacheHandle::open`]: the file is additionally run
+    /// through the [`crate::verify`] static analyzer
+    /// ([`TuneCache::load_or_rebuild_verified`]), and a cache with any
+    /// Error-severity finding opens empty-and-rebuilt. The findings
+    /// report is returned alongside the handle so the caller can print
+    /// why a cache was refused.
+    pub fn open_verified(path: impl Into<PathBuf>) -> (Self, crate::verify::Report) {
+        let path = path.into();
+        let (cache, rebuilt, report) = TuneCache::load_or_rebuild_verified(&path);
+        (Self { inner: Arc::new(Mutex::new(cache)), path: Some(path), rebuilt }, report)
     }
 
     /// Whether opening found a corrupt file and started fresh.

@@ -1,0 +1,201 @@
+//! Arena aliasing prover: an independent re-derivation of activation
+//! liveness that cross-checks [`GraphPlan::compile`]'s first-fit arena
+//! planner.
+//!
+//! The planner and this prover share only the
+//! [`GraphTopology`](crate::graph::GraphTopology) — the prover recomputes
+//! every node's activation length from the workload shape algebra and
+//! every liveness interval from the consumer edges, then checks the
+//! plan's committed `(offset, len)` slots against them. Because the two
+//! implementations share no code path, a bug in the planner's free-list
+//! bookkeeping (or a hand-corrupted plan) shows up as a structured
+//! finding here instead of as silently-corrupt activations at serve
+//! time.
+//!
+//! Invariants proven, per plan:
+//!
+//! * [`ARENA_SLOT_SIZE`](super::invariant::ARENA_SLOT_SIZE) — node `i`'s
+//!   slot holds exactly its activation length.
+//! * [`ARENA_BOUNDS`](super::invariant::ARENA_BOUNDS) — every slot lies
+//!   inside `arena_len`.
+//! * [`ARENA_ALIASING`](super::invariant::ARENA_ALIASING) — if nodes `p`
+//!   and `i` are both live at any step, their slots are disjoint.
+//! * [`RESIDUAL_ALIASING`](super::invariant::RESIDUAL_ALIASING) — the
+//!   in-place residual clip-add at node `i` never reads a source slot
+//!   that overlaps the slot it writes.
+
+use super::{invariant, Finding, Report, Severity};
+use crate::graph::{GraphPlan, GraphTopology, NodeInput};
+use crate::workload::{OpWorkload, Workload};
+
+/// Activation elements a node produces — re-derived from the workload
+/// shape algebra (one GEMM row per output pixel, one column per output
+/// channel), deliberately *not* via the planner's own helpers.
+pub fn activation_len(wl: &OpWorkload) -> usize {
+    match wl {
+        OpWorkload::Conv(w) => w.gemm_m() * w.out_channels,
+        OpWorkload::Matmul(w) => w.m * w.n,
+    }
+}
+
+/// The last step at which each node's activation is read: the maximum
+/// consumer index over data-input edges and residual edges, or
+/// `usize::MAX` for graph outputs (live forever — their slots are what
+/// the response is packed from).
+pub fn last_uses(topo: &GraphTopology) -> Vec<usize> {
+    let n = topo.node_count();
+    let mut last = vec![0usize; n];
+    for (i, node) in topo.nodes().iter().enumerate() {
+        if let NodeInput::Node(p) = node.input {
+            last[p] = last[p].max(i);
+        }
+        if let Some(r) = node.residual {
+            last[r] = last[r].max(i);
+        }
+    }
+    for &o in &topo.outputs() {
+        last[o] = usize::MAX;
+    }
+    last
+}
+
+/// Half-open overlap test on `(offset, len)` slots. Zero-length slots
+/// overlap nothing.
+fn overlaps(a: (usize, usize), b: (usize, usize)) -> bool {
+    a.1 > 0 && b.1 > 0 && a.0 < b.0 + b.1 && b.0 < a.0 + a.1
+}
+
+/// Prove the plan's arena assignment safe (see the module docs for the
+/// invariant list). Findings land on `report`, attributed per node.
+pub(crate) fn audit_arena(plan: &GraphPlan, report: &mut Report) {
+    let topo = plan.topology();
+    let nodes = topo.nodes();
+    let last = last_uses(topo);
+    let arena_len = plan.arena_len();
+
+    for (i, node) in nodes.iter().enumerate() {
+        let artifact = format!("graph '{}' node {i} ({})", plan.name(), node.workload.kind());
+        let (off, len) = plan.slot_of(i);
+
+        let want = activation_len(&node.workload);
+        if len != want {
+            report.push(Finding {
+                severity: Severity::Error,
+                invariant: invariant::ARENA_SLOT_SIZE,
+                artifact: artifact.clone(),
+                detail: format!("slot holds {len} elements but the activation needs {want}"),
+            });
+        }
+
+        if off.checked_add(len).map_or(true, |end| end > arena_len) {
+            report.push(Finding {
+                severity: Severity::Error,
+                invariant: invariant::ARENA_BOUNDS,
+                artifact: artifact.clone(),
+                detail: format!("slot [{off}, {off}+{len}) exceeds arena of {arena_len} elements"),
+            });
+        }
+
+        // Disjointness against every earlier node still live while node i
+        // executes or afterwards: p's activation must survive past i's
+        // write (last_use[p] >= i) for the pair to be simultaneously live.
+        for (p, prev) in nodes.iter().enumerate().take(i) {
+            if last[p] < i {
+                continue;
+            }
+            let pslot = plan.slot_of(p);
+            if !overlaps((off, len), pslot) {
+                continue;
+            }
+            // an overlapping residual source is the sharper finding: the
+            // clip-add at i reads p's slot while writing its own
+            let is_residual = node.residual == Some(p);
+            report.push(Finding {
+                severity: Severity::Error,
+                invariant: if is_residual {
+                    invariant::RESIDUAL_ALIASING
+                } else {
+                    invariant::ARENA_ALIASING
+                },
+                artifact: artifact.clone(),
+                detail: format!(
+                    "slot [{}, {}) overlaps node {p} ({})'s live slot [{}, {}){}",
+                    off,
+                    off + len,
+                    prev.workload.kind(),
+                    pslot.0,
+                    pslot.0 + pslot.1,
+                    if is_residual { " (its residual source)" } else { "" }
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::graph::{GraphTopology, GraphWeights};
+    use crate::quant::RequantParams;
+    use crate::registry::ScheduleRegistry;
+    use crate::zoo;
+
+    fn chain3_with_residual() -> GraphTopology {
+        let mut topo = GraphTopology::new("chain3");
+        for i in 0..3 {
+            topo.add_layer(ConvWorkload::new(format!("c{i}"), 1, 6, 6, 8, 8));
+        }
+        topo.add_residual(0, 2).unwrap();
+        topo
+    }
+
+    fn plan_of(topo: &GraphTopology) -> GraphPlan {
+        let weights = GraphWeights::synthetic(topo, 7);
+        GraphPlan::compile(topo, &weights, &ScheduleRegistry::new(), RequantParams::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn last_uses_tracks_data_and_residual_edges() {
+        let topo = chain3_with_residual();
+        let last = last_uses(&topo);
+        // node 0 feeds node 1 AND is node 2's residual source
+        assert_eq!(last[0], 2);
+        assert_eq!(last[1], 2);
+        // node 2 is the graph output: live forever
+        assert_eq!(last[2], usize::MAX);
+    }
+
+    #[test]
+    fn compiled_plans_prove_clean() {
+        // the prover is a second implementation: it must agree with the
+        // first-fit planner on every zoo network
+        for net in zoo::all_networks(1) {
+            let topo = GraphTopology::from_network(&net);
+            let plan = plan_of(&topo);
+            let mut report = Report::new();
+            audit_arena(&plan, &mut report);
+            assert!(report.is_clean(), "{}: {}", net.name, report.render());
+        }
+    }
+
+    #[test]
+    fn overlap_is_half_open() {
+        assert!(overlaps((0, 4), (3, 4)));
+        assert!(!overlaps((0, 4), (4, 4)));
+        assert!(!overlaps((0, 0), (0, 4)));
+    }
+
+    #[test]
+    fn corrupted_slots_are_caught() {
+        let topo = chain3_with_residual();
+        let mut plan = plan_of(&topo);
+        // shrink node 1's slot by one element
+        let (off, len) = plan.slot_of(1);
+        plan.override_slot(1, (off, len - 1));
+        let mut report = Report::new();
+        audit_arena(&plan, &mut report);
+        assert!(report.has_error(invariant::ARENA_SLOT_SIZE), "{}", report.render());
+    }
+}

@@ -1,0 +1,466 @@
+//! Static artifact verification: prove schedules, tuned caches, and
+//! compiled graph plans safe **before** they are served.
+//!
+//! The stack's safety invariants — MMA-atom tile alignment, padded-GEMM
+//! divisibility, shared-memory/register footprint bounds, i32 accumulator
+//! headroom through the fused epilogue, and arena slot disjointness — are
+//! all decidable offline from the artifact alone, with no inputs and no
+//! execution. Until now they were enforced only dynamically (legality
+//! filters at tune time, bit-equality tests at CI time), so a hand-edited
+//! registry, a stale [`TuneCache`] entry, or a buggy arena plan surfaced
+//! at serve time or never. This module is the missing static half:
+//!
+//! * **Schedule auditor** ([`Verifier::audit_schedule`]) — for every
+//!   `(kind, ScheduleConfig)` pair in a [`ScheduleRegistry`] or
+//!   [`TuneCache`], re-derive the tile geometry and check knob sanity,
+//!   MMA-atom alignment, tile divisibility against the workload's
+//!   [`legality_gemm`](crate::workload::Workload::legality_gemm), and the
+//!   shared-memory/register footprint against the GPU's limits.
+//! * **Value-range analysis** ([`range`]) — interval arithmetic over the
+//!   quant pipeline proving the i32 accumulator cannot overflow for any
+//!   in-domain INT4 input given `gemm_k`, and that the fused
+//!   bias/ReLU/requantize/residual epilogue never wraps.
+//! * **Arena aliasing prover** ([`arena`]) — an independent second
+//!   implementation of activation liveness that cross-checks
+//!   [`GraphPlan::compile`]'s first-fit planner: no two simultaneously
+//!   live activations may share arena bytes, and a residual add may never
+//!   alias its destination.
+//!
+//! Every violation is a structured [`Finding`] naming the violated
+//! invariant (see [`invariant`]) — never a panic. [`Report`] aggregates
+//! findings per audit; any [`Severity::Error`] finding means the artifact
+//! must not serve. Strict mode
+//! ([`ServerConfig::verify_artifacts`](crate::serve::ServerConfig)) wires
+//! these audits into [`Server::try_from_registry`](crate::serve::Server),
+//! `install_graph`, and
+//! [`TuneCache::load_or_rebuild_verified`], and `repro verify` runs them
+//! from the CLI (nonzero exit on any Error).
+#![forbid(unsafe_code)]
+
+pub mod arena;
+pub mod range;
+mod schedule;
+
+pub use range::{Interval, DEFAULT_BIAS_BOUND};
+
+use std::collections::HashMap;
+
+use crate::graph::GraphPlan;
+use crate::registry::ScheduleRegistry;
+use crate::searchspace::ScheduleConfig;
+use crate::sim::{GpuSpec, ProfileCache};
+use crate::tuner::cache::TuneCache;
+use crate::workload::{OpWorkload, Workload};
+use crate::zoo;
+
+/// Names of the invariants the verifier proves. A [`Finding`] always
+/// carries exactly one of these, so callers (and the mutation-style
+/// tests) can match on *which* invariant an artifact violated.
+pub mod invariant {
+    /// Every tiling knob must be >= 1 (a zero knob collapses the derived
+    /// tile geometry and divides by zero downstream).
+    pub const SCHEDULE_KNOBS: &str = "schedule-knobs";
+    /// Block tile dims must be multiples of the precision's MMA atom
+    /// (8x8 output atom, K-group 32 for INT4 / 16 for INT8).
+    pub const MMA_ALIGNMENT: &str = "mma-atom-alignment";
+    /// The tile hierarchy must divide the workload's legality GEMM: N and
+    /// K exactly (Error — the kernel template's hard constraint); ragged
+    /// M is padded at execution, so an M violation is only a Warn.
+    pub const TILE_DIVISIBILITY: &str = "tile-divisibility";
+    /// A block's staged shared memory must fit the SM's capacity.
+    pub const SMEM_FOOTPRINT: &str = "smem-footprint";
+    /// Registers per thread (<= 255) and per block (<= the SM's file).
+    pub const REGISTER_FOOTPRINT: &str = "register-footprint";
+    /// A tuned runtime must be finite and positive.
+    pub const RUNTIME_SANITY: &str = "runtime-sanity";
+    /// A registry kind with no known workload cannot be audited (Warn).
+    pub const UNRESOLVED_KIND: &str = "unresolved-kind";
+    /// `accumulator_bits_required(gemm_k)` must fit the 32-bit MMA
+    /// accumulator (paper §3.2.1).
+    pub const ACCUMULATOR_WIDTH: &str = "accumulator-width";
+    /// No intermediate of the bias/ReLU/requantize epilogue may exceed
+    /// the i32 range for any in-domain INT4 input.
+    pub const EPILOGUE_OVERFLOW: &str = "epilogue-overflow";
+    /// A node's arena slot must hold exactly its activation length.
+    pub const ARENA_SLOT_SIZE: &str = "arena-slot-size";
+    /// Every arena slot must lie inside the arena allocation.
+    pub const ARENA_BOUNDS: &str = "arena-bounds";
+    /// Two simultaneously live activations must not share arena bytes.
+    pub const ARENA_ALIASING: &str = "arena-aliasing";
+    /// A residual source must never alias the slot it is added into.
+    pub const RESIDUAL_ALIASING: &str = "residual-aliasing";
+    /// The artifact file itself failed to parse.
+    pub const ARTIFACT_PARSE: &str = "artifact-parse";
+    /// A graph plan failed to compile at all.
+    pub const PLAN_COMPILE: &str = "plan-compile";
+}
+
+/// How bad a finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but safe to serve (e.g. padded ragged-M waste).
+    Warn,
+    /// The artifact violates a safety invariant and must not serve.
+    Error,
+}
+
+/// One violated (or suspect) invariant, attributed to one artifact.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Error or Warn.
+    pub severity: Severity,
+    /// The violated invariant's name (one of [`invariant`]).
+    pub invariant: &'static str,
+    /// Which artifact: `"registry entry 'conv:resnet50_stage2'"`,
+    /// `"graph 'resnet50' node 3 (conv:stage3)"`, ...
+    pub artifact: String,
+    /// What exactly is wrong, with the offending numbers.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} {:<20} {}: {}",
+            match self.severity {
+                Severity::Error => "ERROR",
+                Severity::Warn => "warn ",
+            },
+            self.invariant,
+            self.artifact,
+            self.detail
+        )
+    }
+}
+
+/// The outcome of one audit: every finding, in discovery order.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    findings: Vec<Finding>,
+}
+
+impl Report {
+    /// An empty (clean) report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one finding.
+    pub fn push(&mut self, f: Finding) {
+        self.findings.push(f);
+    }
+
+    /// Append every finding of `other`.
+    pub fn merge(&mut self, other: Report) {
+        self.findings.extend(other.findings);
+    }
+
+    /// Every finding, in discovery order.
+    pub fn findings(&self) -> &[Finding] {
+        &self.findings
+    }
+
+    /// How many findings are Errors.
+    pub fn error_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// How many findings are Warns.
+    pub fn warn_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warn).count()
+    }
+
+    /// No findings at all.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Whether the artifact may serve (no Error findings).
+    pub fn passed(&self) -> bool {
+        self.error_count() == 0
+    }
+
+    /// Whether any finding names `invariant` (at any severity).
+    pub fn has(&self, invariant: &str) -> bool {
+        self.findings.iter().any(|f| f.invariant == invariant)
+    }
+
+    /// Whether any **Error** finding names `invariant`.
+    pub fn has_error(&self, invariant: &str) -> bool {
+        self.findings
+            .iter()
+            .any(|f| f.invariant == invariant && f.severity == Severity::Error)
+    }
+
+    /// Human-readable multi-line rendering (one finding per line).
+    pub fn render(&self) -> String {
+        if self.findings.is_empty() {
+            return "no findings\n".to_string();
+        }
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// The static analyzer. Holds the GPU limits footprints are judged
+/// against and a [`ProfileCache`] so repeated audits of same-shaped
+/// workloads stay cheap.
+pub struct Verifier {
+    gpu: GpuSpec,
+    bias_bound: i64,
+    profiles: ProfileCache,
+}
+
+impl Default for Verifier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Verifier {
+    /// A verifier judging footprints against the default T4 spec and
+    /// value ranges against [`DEFAULT_BIAS_BOUND`].
+    pub fn new() -> Self {
+        Self::with_gpu(GpuSpec::t4())
+    }
+
+    /// A verifier judging footprints against `gpu`.
+    pub fn with_gpu(gpu: GpuSpec) -> Self {
+        Self { gpu, bias_bound: DEFAULT_BIAS_BOUND, profiles: ProfileCache::default() }
+    }
+
+    /// Override the bias magnitude bound used when the artifact carries
+    /// no concrete bias values (registry / tune-cache audits).
+    pub fn bias_bound(mut self, bound: i64) -> Self {
+        self.bias_bound = bound;
+        self
+    }
+
+    /// Audit one `(workload, schedule)` pair: knob sanity, MMA-atom
+    /// alignment, tile divisibility, and (when the geometry is fully
+    /// legal) the shared-memory/register footprint. Findings are
+    /// attributed to `artifact`.
+    pub fn audit_schedule(
+        &mut self,
+        artifact: &str,
+        wl: &OpWorkload,
+        cfg: &ScheduleConfig,
+        report: &mut Report,
+    ) {
+        schedule::audit_schedule(&self.gpu, &mut self.profiles, artifact, wl, cfg, report);
+    }
+
+    /// Audit the value ranges of one workload's accumulator and fused
+    /// epilogue under the default requantization parameters and the
+    /// verifier's bias bound.
+    pub fn audit_value_range(&self, artifact: &str, wl: &OpWorkload, report: &mut Report) {
+        range::audit_value_range(
+            artifact,
+            wl,
+            crate::quant::RequantParams::default(),
+            Interval::symmetric(self.bias_bound),
+            report,
+        );
+    }
+
+    /// Audit every entry of a schedule registry. `workloads` resolves a
+    /// registry kind to its concrete workload (see [`zoo_workloads`]);
+    /// kinds with no resolution get a [`invariant::UNRESOLVED_KIND`]
+    /// Warn — they cannot be proven either way.
+    pub fn audit_registry(
+        &mut self,
+        registry: &ScheduleRegistry,
+        workloads: &HashMap<String, OpWorkload>,
+    ) -> Report {
+        let mut report = Report::new();
+        for (kind, entry) in registry.iter() {
+            let artifact = format!("registry entry '{kind}'");
+            if !entry.runtime_us.is_finite() || entry.runtime_us <= 0.0 {
+                report.push(Finding {
+                    severity: Severity::Error,
+                    invariant: invariant::RUNTIME_SANITY,
+                    artifact: artifact.clone(),
+                    detail: format!(
+                        "tuned runtime {} us is not finite and positive",
+                        entry.runtime_us
+                    ),
+                });
+            }
+            match workloads.get(kind) {
+                Some(wl) => {
+                    self.audit_schedule(&artifact, wl, &entry.config, &mut report);
+                    self.audit_value_range(&artifact, wl, &mut report);
+                }
+                None => report.push(Finding {
+                    severity: Severity::Warn,
+                    invariant: invariant::UNRESOLVED_KIND,
+                    artifact,
+                    detail: "no known workload for this kind; schedule not auditable".into(),
+                }),
+            }
+        }
+        report
+    }
+
+    /// Audit every entry of a tune cache. Cache entries embed their
+    /// concrete workload, so every one is fully auditable.
+    pub fn audit_tune_cache(&mut self, cache: &TuneCache) -> Report {
+        let mut report = Report::new();
+        for (key, entry) in cache.iter() {
+            let artifact = format!("tune-cache entry '{key}'");
+            if !entry.runtime_us.is_finite() || entry.runtime_us <= 0.0 {
+                report.push(Finding {
+                    severity: Severity::Error,
+                    invariant: invariant::RUNTIME_SANITY,
+                    artifact: artifact.clone(),
+                    detail: format!(
+                        "tuned runtime {} us is not finite and positive",
+                        entry.runtime_us
+                    ),
+                });
+            }
+            self.audit_schedule(&artifact, &entry.workload, &entry.config, &mut report);
+            self.audit_value_range(&artifact, &entry.workload, &mut report);
+        }
+        report
+    }
+
+    /// Audit one compiled graph plan: the arena aliasing proof, each
+    /// node's value ranges under the plan's actual epilogue and bias
+    /// values, and — for nodes executing a registry-tuned (non-default)
+    /// schedule — the full schedule audit. Fallback-schedule nodes skip
+    /// the divisibility check: the executor pads ragged tiles, and the
+    /// default schedule is exactly what untuned serving runs.
+    pub fn audit_graph_plan(&mut self, plan: &GraphPlan) -> Report {
+        let mut report = Report::new();
+        arena::audit_arena(plan, &mut report);
+        let epi = plan.epilogue();
+        for (i, node) in plan.topology().nodes().iter().enumerate() {
+            let artifact =
+                format!("graph '{}' node {i} ({})", plan.name(), node.workload.kind());
+            let bias = plan.bias_of(i);
+            let bias_iv = match (bias.iter().min(), bias.iter().max()) {
+                (Some(&lo), Some(&hi)) => Interval::new(lo as i64, hi as i64),
+                _ => Interval::point(0),
+            };
+            range::audit_value_range(&artifact, &node.workload, epi, bias_iv, &mut report);
+            let cfg = plan.schedule_of(i);
+            if cfg != ScheduleConfig::default() {
+                self.audit_schedule(&artifact, &node.workload, &cfg, &mut report);
+            }
+        }
+        report
+    }
+}
+
+/// Kind-to-workload resolution over the whole model zoo at `batch` — how
+/// registry audits (and the serving router) map a namespaced kind string
+/// back to its concrete shape.
+pub fn zoo_workloads(batch: usize) -> HashMap<String, OpWorkload> {
+    zoo::all_networks(batch)
+        .into_iter()
+        .flat_map(|n| n.layers)
+        .map(|l| (l.workload.kind(), l.workload))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::TunedEntry;
+
+    #[test]
+    fn report_accounting() {
+        let mut r = Report::new();
+        assert!(r.is_clean() && r.passed());
+        r.push(Finding {
+            severity: Severity::Warn,
+            invariant: invariant::TILE_DIVISIBILITY,
+            artifact: "a".into(),
+            detail: "d".into(),
+        });
+        assert!(!r.is_clean() && r.passed());
+        assert!(r.has(invariant::TILE_DIVISIBILITY));
+        assert!(!r.has_error(invariant::TILE_DIVISIBILITY));
+        r.push(Finding {
+            severity: Severity::Error,
+            invariant: invariant::SMEM_FOOTPRINT,
+            artifact: "b".into(),
+            detail: "d".into(),
+        });
+        assert_eq!((r.error_count(), r.warn_count()), (1, 1));
+        assert!(!r.passed());
+        assert!(r.render().contains("smem-footprint"));
+    }
+
+    #[test]
+    fn tuned_registry_entries_audit_clean() {
+        // what tune-net writes: legal schedules for zoo workloads
+        let workloads = zoo_workloads(1);
+        let mut reg = ScheduleRegistry::new();
+        let wl = &workloads["conv:resnet50_stage2"];
+        let cfg = ScheduleConfig { blk_row_warps: 1, warp_row_tiles: 1, ..Default::default() };
+        let (m, n, k) = wl.legality_gemm();
+        assert!(cfg.is_legal_for(m, n, k));
+        reg.insert(
+            "conv:resnet50_stage2",
+            TunedEntry { config: cfg, runtime_us: 10.0, trials: 8, explorer: "t".into() },
+        );
+        let report = Verifier::new().audit_registry(&reg, &workloads);
+        assert!(report.passed(), "{}", report.render());
+    }
+
+    #[test]
+    fn unresolved_kind_is_a_warn_not_an_error() {
+        let mut reg = ScheduleRegistry::new();
+        reg.insert(
+            "conv:not_in_any_zoo",
+            TunedEntry {
+                config: ScheduleConfig::default(),
+                runtime_us: 1.0,
+                trials: 1,
+                explorer: "t".into(),
+            },
+        );
+        let report = Verifier::new().audit_registry(&reg, &zoo_workloads(1));
+        assert!(report.passed());
+        assert!(report.has(invariant::UNRESOLVED_KIND));
+    }
+
+    #[test]
+    fn nonsense_runtime_is_an_error() {
+        let workloads = zoo_workloads(1);
+        let mut reg = ScheduleRegistry::new();
+        reg.insert(
+            "conv:resnet50_stage2",
+            TunedEntry {
+                config: ScheduleConfig {
+                    blk_row_warps: 1,
+                    warp_row_tiles: 1,
+                    ..Default::default()
+                },
+                runtime_us: f64::NAN,
+                trials: 8,
+                explorer: "t".into(),
+            },
+        );
+        let report = Verifier::new().audit_registry(&reg, &workloads);
+        assert!(report.has_error(invariant::RUNTIME_SANITY));
+    }
+
+    #[test]
+    fn zoo_resolution_covers_every_network() {
+        let map = zoo_workloads(1);
+        assert!(map.contains_key("conv:resnet50_stage2"));
+        assert!(map.keys().any(|k| k.starts_with("matmul:")));
+        // sanity: the resolver's kinds reproduce through Workload::kind
+        for (k, wl) in &map {
+            assert_eq!(*k, wl.kind());
+        }
+    }
+}

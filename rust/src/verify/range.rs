@@ -1,0 +1,250 @@
+//! Value-range analysis: interval arithmetic over the quant pipeline.
+//!
+//! Every operand entering a reduced-precision GEMM is a clipped INT4
+//! value in `[-8, 7]`, so one multiply-accumulate step contributes at
+//! most `[-56, 64]` (the extremes of `[-8,7] x [-8,7]`) to the i32
+//! accumulator. From the workload's per-group accumulation depth
+//! (`gemm_k()`) and the fused epilogue's parameters we can therefore
+//! bound — *statically, for any in-domain input* — every intermediate of
+//! the `acc + bias -> ReLU -> requantize(+round) -> residual` chain and
+//! prove none of the `wrapping_` operations in
+//! [`RequantParams::apply`](crate::quant::RequantParams::apply) can
+//! actually wrap. Plans where the bound exceeds `i32::MAX` (an inflated
+//! `gemm_k`, an absurd bias) are rejected with
+//! [`invariant::EPILOGUE_OVERFLOW`](super::invariant::EPILOGUE_OVERFLOW)
+//! or [`invariant::ACCUMULATOR_WIDTH`](super::invariant::ACCUMULATOR_WIDTH)
+//! findings.
+
+use super::{invariant, Finding, Report, Severity};
+use crate::quant::{accumulator_bits_required, RequantParams, INT4_MAX, INT4_MIN};
+use crate::workload::{OpWorkload, Workload};
+
+/// Per-step product extremes of two in-domain INT4 operands:
+/// `min/max over [-8,7] x [-8,7]`.
+const PRODUCT_MIN: i64 = (INT4_MIN as i64) * (INT4_MAX as i64); // -56
+/// See [`PRODUCT_MIN`]; the maximum is `(-8) * (-8) = 64`.
+const PRODUCT_MAX: i64 = (INT4_MIN as i64) * (INT4_MIN as i64); // 64
+
+/// Bias magnitude assumed when an artifact carries no concrete bias
+/// values (registry and tune-cache audits). Deployed biases are
+/// per-channel i32s folded from batch-norm — `2^20` is orders of
+/// magnitude beyond anything real while still leaving the analysis
+/// meaningful headroom to catch inflated-`gemm_k` artifacts.
+pub const DEFAULT_BIAS_BOUND: i64 = 1 << 20;
+
+/// A closed integer interval `[lo, hi]`, the abstract domain of the
+/// analysis. Arithmetic is exact in i64, which comfortably contains
+/// every bound reachable from i32 quantities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    /// Inclusive lower bound.
+    pub lo: i64,
+    /// Inclusive upper bound.
+    pub hi: i64,
+}
+
+impl Interval {
+    /// The interval `[lo, hi]` (normalized so `lo <= hi`).
+    pub fn new(lo: i64, hi: i64) -> Self {
+        Self { lo: lo.min(hi), hi: lo.max(hi) }
+    }
+
+    /// The single point `[v, v]`.
+    pub fn point(v: i64) -> Self {
+        Self { lo: v, hi: v }
+    }
+
+    /// `[-mag, mag]`.
+    pub fn symmetric(mag: i64) -> Self {
+        let mag = mag.abs();
+        Self { lo: -mag, hi: mag }
+    }
+
+    /// Interval sum.
+    pub fn add(self, o: Self) -> Self {
+        Self { lo: self.lo + o.lo, hi: self.hi + o.hi }
+    }
+
+    /// The image under `max(0, _)`.
+    pub fn relu(self) -> Self {
+        Self { lo: self.lo.max(0), hi: self.hi.max(0) }
+    }
+
+    /// The image under an arithmetic right shift (monotone, so
+    /// endpoint-wise).
+    pub fn shr(self, shift: u32) -> Self {
+        Self { lo: self.lo >> shift, hi: self.hi >> shift }
+    }
+
+    /// Largest absolute value in the interval.
+    pub fn magnitude(self) -> i64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// Whether every value fits an i32 (i.e. no `wrapping_` op on it can
+    /// wrap).
+    pub fn fits_i32(self) -> bool {
+        self.lo >= i32::MIN as i64 && self.hi <= i32::MAX as i64
+    }
+}
+
+/// The accumulator's reachable interval for any in-domain INT4 input:
+/// `gemm_k` (the per-group reduction depth — grouping divides the depth,
+/// never multiplies it) steps of `[-56, 64]` each. Padded K lanes hold
+/// zeros and contribute nothing, so the unpadded depth is the tight
+/// bound.
+pub fn accumulator_interval(wl: &OpWorkload) -> Interval {
+    let k = wl.gemm_k() as i64;
+    Interval { lo: PRODUCT_MIN * k, hi: PRODUCT_MAX * k }
+}
+
+/// Prove the i32 accumulator and every epilogue intermediate in range
+/// for `wl` under epilogue `epi` with biases drawn from `bias`. Emits
+/// [`invariant::ACCUMULATOR_WIDTH`] / [`invariant::EPILOGUE_OVERFLOW`]
+/// Error findings on `report` when the proof fails.
+pub(crate) fn audit_value_range(
+    artifact: &str,
+    wl: &OpWorkload,
+    epi: RequantParams,
+    bias: Interval,
+    report: &mut Report,
+) {
+    // paper §3.2.1: required accumulator width for a k-deep INT4 dot
+    let k = wl.gemm_k().max(1);
+    let bits = accumulator_bits_required(k);
+    if bits > 32 {
+        report.push(Finding {
+            severity: Severity::Error,
+            invariant: invariant::ACCUMULATOR_WIDTH,
+            artifact: artifact.to_string(),
+            detail: format!(
+                "gemm_k={k} needs a {bits}-bit accumulator; the MMA accumulator is 32-bit"
+            ),
+        });
+    }
+
+    let acc = accumulator_interval(wl);
+    if !acc.fits_i32() {
+        report.push(Finding {
+            severity: Severity::Error,
+            invariant: invariant::EPILOGUE_OVERFLOW,
+            artifact: artifact.to_string(),
+            detail: format!(
+                "accumulator range [{}, {}] exceeds i32 before the epilogue (gemm_k={k})",
+                acc.lo, acc.hi
+            ),
+        });
+        // everything downstream is already unsound; one finding is enough
+        return;
+    }
+
+    // acc.wrapping_add(bias)
+    let biased = acc.add(bias);
+    if !biased.fits_i32() {
+        report.push(Finding {
+            severity: Severity::Error,
+            invariant: invariant::EPILOGUE_OVERFLOW,
+            artifact: artifact.to_string(),
+            detail: format!(
+                "acc + bias range [{}, {}] wraps i32 (bias in [{}, {}])",
+                biased.lo, biased.hi, bias.lo, bias.hi
+            ),
+        });
+        return;
+    }
+
+    // optional ReLU, then requantize's round-to-nearest additive term
+    let pre_round = if epi.relu { biased.relu() } else { biased };
+    if epi.shift > 0 {
+        let round = Interval::point(1i64 << (epi.shift - 1));
+        let rounded = pre_round.add(round);
+        if !rounded.fits_i32() {
+            report.push(Finding {
+                severity: Severity::Error,
+                invariant: invariant::EPILOGUE_OVERFLOW,
+                artifact: artifact.to_string(),
+                detail: format!(
+                    "requantize rounding term 2^{} pushes [{}, {}] past i32",
+                    epi.shift - 1,
+                    rounded.lo,
+                    rounded.hi
+                ),
+            });
+            return;
+        }
+        // after the shift the value is clipped to [-8, 7]; the residual
+        // add of another INT4 stays within [-16, 15] and is re-clipped —
+        // statically in range, nothing left to prove
+        debug_assert!(rounded.shr(epi.shift).magnitude() <= i32::MAX as i64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::MatmulWorkload;
+
+    fn wl(k: usize) -> OpWorkload {
+        OpWorkload::Matmul(MatmulWorkload::new("t", 64, 64, k))
+    }
+
+    #[test]
+    fn interval_algebra() {
+        let a = Interval::new(5, -3);
+        assert_eq!(a, Interval { lo: -3, hi: 5 });
+        assert_eq!(a.add(Interval::point(2)), Interval { lo: -1, hi: 7 });
+        assert_eq!(a.relu(), Interval { lo: 0, hi: 5 });
+        assert_eq!(Interval::symmetric(-4), Interval { lo: -4, hi: 4 });
+        assert_eq!(Interval::new(-17, 9).shr(2), Interval { lo: -5, hi: 2 });
+        assert_eq!(Interval::new(-17, 9).magnitude(), 17);
+        assert!(Interval::point(i32::MAX as i64).fits_i32());
+        assert!(!Interval::point(i32::MAX as i64 + 1).fits_i32());
+    }
+
+    #[test]
+    fn realistic_depth_proves_clean() {
+        let mut r = Report::new();
+        audit_value_range(
+            "t",
+            &wl(4608), // resnet stage-4 class depth
+            RequantParams::default(),
+            Interval::symmetric(DEFAULT_BIAS_BOUND),
+            &mut r,
+        );
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn inflated_k_breaks_both_width_and_range() {
+        let mut r = Report::new();
+        audit_value_range(
+            "t",
+            &wl(1 << 26),
+            RequantParams::default(),
+            Interval::point(0),
+            &mut r,
+        );
+        assert!(r.has_error(crate::verify::invariant::ACCUMULATOR_WIDTH));
+        assert!(r.has_error(crate::verify::invariant::EPILOGUE_OVERFLOW));
+    }
+
+    #[test]
+    fn bias_alone_can_push_past_i32() {
+        // accumulator near the top of i32: k chosen so 64k is big but fits
+        let k = (i32::MAX as usize) / 64 - 10;
+        let mut r = Report::new();
+        audit_value_range(
+            "t",
+            &wl(k),
+            RequantParams::default(),
+            Interval::symmetric(1 << 20),
+            &mut r,
+        );
+        assert!(r.has_error(crate::verify::invariant::EPILOGUE_OVERFLOW));
+        // same workload with a zero bias is provable (modulo width)
+        let mut r2 = Report::new();
+        let epi = RequantParams { relu: true, shift: 0 };
+        audit_value_range("t", &wl(k), epi, Interval::point(0), &mut r2);
+        assert!(!r2.has(crate::verify::invariant::EPILOGUE_OVERFLOW), "{}", r2.render());
+    }
+}

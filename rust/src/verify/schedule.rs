@@ -1,0 +1,225 @@
+//! Schedule auditor: re-derive a `(workload, ScheduleConfig)` pair's
+//! tile geometry and prove it deployable.
+//!
+//! Checks run in dependency order — each later check is only meaningful
+//! (and only safe to compute) once the earlier ones hold:
+//!
+//! 1. **Knob sanity** — every tiling knob >= 1. A zero knob collapses
+//!    the derived `block_*` geometry to zero and every divisibility
+//!    check after it would divide by zero, so a violation here stops the
+//!    audit of this pair.
+//! 2. **MMA-atom alignment** — `block_m/n` are multiples of the 8x8 MMA
+//!    output atom and `block_k` of the precision's K-group (32 for INT4,
+//!    16 for INT8). The knob encoding makes M/N alignment structural,
+//!    but the auditor re-derives it rather than trusting the encoding —
+//!    that is the point of a second implementation.
+//! 3. **Tile divisibility** against [`legality_gemm`]: N and K must
+//!    divide exactly (Error — the kernel template's hard constraint);
+//!    ragged M is padded at execution ([`ScheduleConfig::padded_m`]), so
+//!    an M violation is a Warn (wasted pad work, never unsoundness).
+//! 4. **Footprint bounds** — only when the geometry is fully legal
+//!    (the traffic model asserts legality), the derived shared-memory
+//!    footprint must fit the SM and the register footprint must fit both
+//!    the 255-per-thread ISA limit and the SM's register file after
+//!    granule rounding.
+//!
+//! [`legality_gemm`]: crate::workload::Workload::legality_gemm
+
+use super::{invariant, Finding, Report, Severity};
+use crate::searchspace::{ScheduleConfig, MMA_M, MMA_N};
+use crate::sim::{analyze, GpuSpec, ProfileCache};
+use crate::workload::{OpWorkload, Workload};
+
+/// Register allocation granule (Turing): per-thread counts round up to
+/// this before the register file is divided. Mirrors the occupancy
+/// model's constant — re-stated here so the auditor remains an
+/// independent derivation.
+const REG_GRANULE: usize = 8;
+
+/// Per-thread architectural register ceiling.
+const REGS_PER_THREAD_MAX: usize = 255;
+
+pub(crate) fn audit_schedule(
+    gpu: &GpuSpec,
+    profiles: &mut ProfileCache,
+    artifact: &str,
+    wl: &OpWorkload,
+    cfg: &ScheduleConfig,
+    report: &mut Report,
+) {
+    // 1. knob sanity — everything below divides by the derived geometry
+    let knobs = [
+        ("blk_row_warps", cfg.blk_row_warps),
+        ("blk_col_warps", cfg.blk_col_warps),
+        ("warp_row_tiles", cfg.warp_row_tiles),
+        ("warp_col_tiles", cfg.warp_col_tiles),
+        ("chunk", cfg.chunk),
+    ];
+    let zero_knobs: Vec<&str> =
+        knobs.iter().filter(|(_, v)| *v == 0).map(|(name, _)| *name).collect();
+    if !zero_knobs.is_empty() {
+        report.push(Finding {
+            severity: Severity::Error,
+            invariant: invariant::SCHEDULE_KNOBS,
+            artifact: artifact.to_string(),
+            detail: format!("zero tiling knob(s) {}: no tile geometry derivable", zero_knobs.join(", ")),
+        });
+        return;
+    }
+
+    let (bm, bn, bk) = (cfg.block_m(), cfg.block_n(), cfg.block_k());
+    let mma_k = wl.precision().mma_k();
+
+    // 2. MMA-atom alignment
+    if bm % MMA_M != 0 || bn % MMA_N != 0 || bk % mma_k != 0 {
+        report.push(Finding {
+            severity: Severity::Error,
+            invariant: invariant::MMA_ALIGNMENT,
+            artifact: artifact.to_string(),
+            detail: format!(
+                "block tile {bm}x{bn}x{bk} is not a multiple of the {MMA_M}x{MMA_N} (K-group {mma_k}) MMA atom"
+            ),
+        });
+        return;
+    }
+
+    // 3. tile divisibility against the padded legality GEMM
+    let (m, n, k) = wl.legality_gemm();
+    let mut nk_violated = false;
+    for (dim, total, tile, hard) in
+        [("M", m, bm, false), ("N", n, bn, true), ("K", k, bk, true)]
+    {
+        if total % tile == 0 {
+            continue;
+        }
+        nk_violated |= hard;
+        report.push(Finding {
+            severity: if hard { Severity::Error } else { Severity::Warn },
+            invariant: invariant::TILE_DIVISIBILITY,
+            artifact: artifact.to_string(),
+            detail: if hard {
+                format!("{dim}={total} is not divisible by block_{}={tile}", dim.to_lowercase())
+            } else {
+                format!(
+                    "ragged {dim}={total} under block_m={tile}: padded to {} at execution",
+                    cfg.padded_m(total)
+                )
+            },
+        });
+    }
+    if nk_violated || m % bm != 0 {
+        // the traffic model requires full legality; geometry-dependent
+        // footprints are identical for the padded-M shape, so a ragged-M
+        // skip loses nothing, while an N/K violation already condemns
+        // the schedule
+        return;
+    }
+
+    // 4. footprint bounds on the fully-legal geometry
+    let t = analyze(wl, cfg, profiles);
+    if t.smem_bytes_per_block > gpu.smem_per_sm {
+        report.push(Finding {
+            severity: Severity::Error,
+            invariant: invariant::SMEM_FOOTPRINT,
+            artifact: artifact.to_string(),
+            detail: format!(
+                "block stages {} B of shared memory; the SM has {} B",
+                t.smem_bytes_per_block, gpu.smem_per_sm
+            ),
+        });
+    }
+    let regs_rounded = t.regs_per_thread.div_ceil(REG_GRANULE) * REG_GRANULE;
+    let regs_per_block = regs_rounded * cfg.threads_per_block();
+    if t.regs_per_thread > REGS_PER_THREAD_MAX || regs_per_block > gpu.regs_per_sm {
+        report.push(Finding {
+            severity: Severity::Error,
+            invariant: invariant::REGISTER_FOOTPRINT,
+            artifact: artifact.to_string(),
+            detail: format!(
+                "{} regs/thread ({} rounded) x {} threads = {} regs/block vs {}-reg ISA limit and {}-reg SM file",
+                t.regs_per_thread,
+                regs_rounded,
+                cfg.threads_per_block(),
+                regs_per_block,
+                REGS_PER_THREAD_MAX,
+                gpu.regs_per_sm
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvWorkload;
+    use crate::verify::{Report, Verifier};
+    use crate::workload::MatmulWorkload;
+
+    fn stage2() -> OpWorkload {
+        OpWorkload::Conv(ConvWorkload::resnet50_stage(2, 8))
+    }
+
+    fn audit(wl: &OpWorkload, cfg: &ScheduleConfig) -> Report {
+        let mut report = Report::new();
+        Verifier::new().audit_schedule("t", wl, cfg, &mut report);
+        report
+    }
+
+    #[test]
+    fn legal_schedule_is_clean() {
+        let report = audit(&stage2(), &ScheduleConfig::default());
+        assert!(report.is_clean(), "{}", report.render());
+    }
+
+    #[test]
+    fn zero_knob_is_reported_not_a_panic() {
+        let cfg = ScheduleConfig { chunk: 0, ..Default::default() };
+        let report = audit(&stage2(), &cfg);
+        assert!(report.has_error(invariant::SCHEDULE_KNOBS), "{}", report.render());
+        assert_eq!(report.findings().len(), 1, "knob failure must stop this pair's audit");
+    }
+
+    #[test]
+    fn misaligned_n_tile_is_an_error() {
+        // block_n = 3*1*8 = 24 does not divide stage2's N=64
+        let cfg = ScheduleConfig { blk_col_warps: 3, warp_col_tiles: 1, ..Default::default() };
+        let report = audit(&stage2(), &cfg);
+        assert!(report.has_error(invariant::TILE_DIVISIBILITY), "{}", report.render());
+    }
+
+    #[test]
+    fn ragged_m_is_only_a_warn() {
+        // M = 784 at batch 1 is ragged under block_m = 32
+        let wl = OpWorkload::Conv(ConvWorkload::resnet50_stage(3, 1));
+        let (m, _, _) = wl.legality_gemm();
+        let cfg = ScheduleConfig::default();
+        assert_ne!(m % cfg.block_m(), 0, "fixture must be ragged");
+        let report = audit(&wl, &cfg);
+        assert!(report.passed(), "{}", report.render());
+        assert!(report.has(invariant::TILE_DIVISIBILITY));
+        assert_eq!(report.warn_count(), 1);
+    }
+
+    #[test]
+    fn oversized_tile_breaks_a_footprint_bound() {
+        // a giant fully-legal tile must trip smem and/or register bounds
+        let wl = OpWorkload::Matmul(MatmulWorkload::new("big", 4096, 4096, 4096));
+        let cfg = ScheduleConfig {
+            blk_row_warps: 4,
+            blk_col_warps: 4,
+            warp_row_tiles: 8,
+            warp_col_tiles: 8,
+            chunk: 16,
+            ..Default::default()
+        };
+        let (m, n, k) = wl.legality_gemm();
+        assert!(cfg.is_legal_for(m, n, k));
+        let report = audit(&wl, &cfg);
+        assert!(
+            report.has_error(invariant::SMEM_FOOTPRINT)
+                || report.has_error(invariant::REGISTER_FOOTPRINT),
+            "{}",
+            report.render()
+        );
+    }
+}

@@ -152,7 +152,13 @@ fn run_scenario(seed: u64) -> ScenarioResult {
     let mut rng = Rng::new(seed);
     let cluster = Cluster::start(ClusterConfig {
         shards: SHARDS,
-        shard: ServerConfig { workers: 2, queue_depth: 64, max_batch: 4, max_wait: 0 },
+        shard: ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            max_batch: 4,
+            max_wait: 0,
+            ..Default::default()
+        },
         replicas: 1,
         hot_replicas: 2,
         hot_kinds: vec![conv_a().name.clone()],

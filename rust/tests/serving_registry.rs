@@ -133,7 +133,13 @@ fn parallel_tune_to_multiworker_serve_end_to_end() {
     let tuned = parallel.best.config;
 
     let server = Server::from_registry(
-        ServerConfig { workers: 4, queue_depth: 128, max_batch: 4, max_wait: 0 },
+        ServerConfig {
+            workers: 4,
+            queue_depth: 128,
+            max_batch: 4,
+            max_wait: 0,
+            ..Default::default()
+        },
         registry,
     );
     let epi = Epilogue::default();
@@ -199,7 +205,13 @@ fn grouped_and_dilated_kinds_tune_persist_and_serve_end_to_end() {
     assert_eq!(loaded, registry, "grouped/dilated entries survive the JSON roundtrip");
 
     let server = Server::from_registry(
-        ServerConfig { workers: 2, queue_depth: 64, max_batch: 4, max_wait: 2 },
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            max_batch: 4,
+            max_wait: 2,
+            ..Default::default()
+        },
         loaded,
     );
     let epi = Epilogue::default();
@@ -362,7 +374,13 @@ fn mixed_conv_and_matmul_registry_serves_both_operators() {
     assert_eq!(kinds, vec!["conv:tiny_serve", "matmul:rt_mm_mixed"]);
 
     let server = Server::from_registry(
-        ServerConfig { workers: 2, queue_depth: 64, max_batch: 4, max_wait: 2 },
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            max_batch: 4,
+            max_wait: 2,
+            ..Default::default()
+        },
         loaded,
     );
     let epi = Epilogue::default();

@@ -1,0 +1,163 @@
+//! Mutation-style end-to-end tests for the `tcconv::verify` static
+//! analyzer: start from a known-good artifact, corrupt exactly ONE field,
+//! and assert (a) the verifier reports exactly the violated invariant and
+//! (b) strict-mode serving refuses to deploy the corrupted artifact.
+//!
+//! Each test is one mutation from ISSUE-10's catalogue: a misaligned tile
+//! in a schedule registry, an inflated `gemm_k` in a tune-cache entry, a
+//! shrunk arena slot, and an aliased residual source in a graph plan.
+
+use tcconv::conv::ConvWorkload;
+use tcconv::graph::{GraphPlan, GraphTopology, GraphWeights};
+use tcconv::quant::RequantParams;
+use tcconv::registry::{ScheduleRegistry, TunedEntry, REGISTRY_VERSION};
+use tcconv::searchspace::ScheduleConfig;
+use tcconv::serve::{Server, ServerConfig};
+use tcconv::tuner::{CacheEntry, CacheHandle, TuneCache};
+use tcconv::verify::{invariant, zoo_workloads, Verifier};
+use tcconv::workload::{MatmulWorkload, OpWorkload};
+
+/// A three-conv chain with a residual edge 0 -> 2 — the smallest topology
+/// that exercises data edges, a residual edge, and arena slot reuse.
+fn chain3_with_residual() -> GraphTopology {
+    let mut topo = GraphTopology::new("chain3");
+    for i in 0..3 {
+        topo.add_layer(ConvWorkload::new(format!("c{i}"), 1, 6, 6, 8, 8));
+    }
+    topo.add_residual(0, 2).unwrap();
+    topo
+}
+
+fn compiled_chain3() -> GraphPlan {
+    let topo = chain3_with_residual();
+    let weights = GraphWeights::synthetic(&topo, 7);
+    GraphPlan::compile(&topo, &weights, &ScheduleRegistry::new(), RequantParams::default())
+        .unwrap()
+}
+
+fn entry_with(config: ScheduleConfig) -> TunedEntry {
+    TunedEntry { config, runtime_us: 100.0, trials: 16, explorer: "test".into() }
+}
+
+#[test]
+fn misaligned_tile_in_registry_is_caught_and_strict_serve_refuses() {
+    // mutation: block_n = 3*1*8 = 24 does not divide stage2's N = 64
+    let bad = ScheduleConfig { blk_col_warps: 3, warp_col_tiles: 1, ..Default::default() };
+    let mut registry = ScheduleRegistry::new();
+    registry.insert("conv:resnet50_stage2", entry_with(bad));
+
+    let report = Verifier::new().audit_registry(&registry, &zoo_workloads(1));
+    assert!(report.has_error(invariant::TILE_DIVISIBILITY), "{}", report.render());
+    assert_eq!(report.error_count(), 1, "exactly the mutated field: {}", report.render());
+
+    // strict mode refuses to even spawn workers, naming the invariant
+    let strict = ServerConfig { verify_artifacts: true, ..Default::default() };
+    let err = Server::try_from_registry(strict, registry.clone())
+        .err()
+        .expect("strict serve must refuse the misaligned schedule");
+    assert!(
+        format!("{err:#}").contains(invariant::TILE_DIVISIBILITY),
+        "refusal must name the violated invariant: {err:#}"
+    );
+
+    // without the flag the same registry still constructs (the gate is
+    // opt-in; unresolved legality falls back at execution time)
+    let server = Server::try_from_registry(ServerConfig::default(), registry).unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn inflated_gemm_k_cache_entry_is_caught_and_rejected_on_open() {
+    // mutation: gemm_k inflated to 2^26 — divisible by block_k = 64, so
+    // every tile check passes and only the value-range analysis can see
+    // that 64 * 2^26 no longer fits the i32 accumulator
+    let big = OpWorkload::Matmul(MatmulWorkload::new("big", 64, 64, 1 << 26));
+    let mut cache = TuneCache::new();
+    cache.insert(CacheEntry {
+        workload: big,
+        config: ScheduleConfig::default(),
+        runtime_us: 10.0,
+        trials: 4,
+        fidelity: "flat".into(),
+        seed: 0,
+        registry_version: REGISTRY_VERSION,
+    });
+
+    let report = Verifier::new().audit_tune_cache(&cache);
+    assert!(report.has_error(invariant::ACCUMULATOR_WIDTH), "{}", report.render());
+    assert!(report.has_error(invariant::EPILOGUE_OVERFLOW), "{}", report.render());
+
+    // a verified open refuses the whole file and starts fresh
+    let path = std::env::temp_dir().join("tcconv_verify_inflated_k_cache.json");
+    cache.save(&path).unwrap();
+    let (reloaded, rebuilt, report) = TuneCache::load_or_rebuild_verified(&path);
+    assert!(rebuilt, "strict open must reject the poisoned cache");
+    assert!(reloaded.is_empty());
+    assert!(report.has_error(invariant::ACCUMULATOR_WIDTH));
+
+    let (handle, report) = CacheHandle::open_verified(&path);
+    assert!(handle.was_rebuilt());
+    assert_eq!(handle.len(), 0);
+    assert!(!report.passed());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn shrunk_arena_slot_is_exactly_the_reported_finding() {
+    let mut plan = compiled_chain3();
+    // mutation: shrink node 1's arena slot by one element
+    let (off, len) = plan.slot_of(1);
+    plan.override_slot(1, (off, len - 1));
+
+    let report = Verifier::new().audit_graph_plan(&plan);
+    assert!(report.has_error(invariant::ARENA_SLOT_SIZE), "{}", report.render());
+    assert_eq!(report.error_count(), 1, "exactly the mutated field: {}", report.render());
+}
+
+#[test]
+fn aliased_residual_slot_is_exactly_the_reported_finding() {
+    let mut plan = compiled_chain3();
+    // mutation: node 2 writes into its own residual source's slot
+    plan.override_slot(2, plan.slot_of(0));
+
+    let report = Verifier::new().audit_graph_plan(&plan);
+    assert!(report.has_error(invariant::RESIDUAL_ALIASING), "{}", report.render());
+    assert_eq!(report.error_count(), 1, "exactly the mutated field: {}", report.render());
+}
+
+#[test]
+fn strict_server_refuses_an_illegal_graph_plan_at_install() {
+    // a non-default schedule whose block_n = 32 cannot divide the chain's
+    // padded N = 8 — illegal for every node of the graph. The kind is not
+    // in the zoo, so the registry audit alone only warns (unresolved) and
+    // the server constructs; the graph-plan audit must catch it.
+    let bad = ScheduleConfig { warp_row_tiles: 1, ..Default::default() };
+    assert_ne!(bad, ScheduleConfig::default());
+    let mut registry = ScheduleRegistry::new();
+    registry.insert("conv:c0", entry_with(bad));
+
+    let strict = ServerConfig { verify_artifacts: true, ..Default::default() };
+    let server = Server::try_from_registry(strict, registry)
+        .expect("unresolved kinds are warnings, not refusals");
+
+    let topo = chain3_with_residual();
+    let weights = GraphWeights::synthetic(&topo, 7);
+    let err = server
+        .install_graph(topo, weights, RequantParams::default())
+        .err()
+        .expect("strict install must refuse the illegal plan");
+    assert!(
+        format!("{err:#}").contains(invariant::TILE_DIVISIBILITY),
+        "refusal must name the violated invariant: {err:#}"
+    );
+    server.shutdown();
+
+    // positive control: with no poisoned entry the same strict server
+    // installs the same topology cleanly
+    let strict = ServerConfig { verify_artifacts: true, ..Default::default() };
+    let server = Server::try_from_registry(strict, ScheduleRegistry::new()).unwrap();
+    let topo = chain3_with_residual();
+    let weights = GraphWeights::synthetic(&topo, 7);
+    server.install_graph(topo, weights, RequantParams::default()).unwrap();
+    server.shutdown();
+}
